@@ -1,0 +1,49 @@
+//! "Free-tier Colab" scenario: the paper's headline claim is running
+//! Mixtral-8x7B interactively on a T4 at ~2 tokens/s. This example runs
+//! the tiny testbed with timing translated to Mixtral-8x7B geometry on
+//! the T4 profile and prints a Table-2-style row, comparing the full
+//! algorithm against naive offloading.
+//!
+//! ```bash
+//! cargo run --release --example colab_t4_sim
+//! ```
+
+use moe_offload::config::{HardwareProfile, OffloadPolicy, QuantScheme, SimScale};
+use moe_offload::harness;
+
+fn main() -> anyhow::Result<()> {
+    let dir = harness::artifacts_dir()?;
+    let tokens = harness::chat_tokens(&dir, 64)?;
+    let profile = HardwareProfile::t4_colab();
+
+    println!("=== T4 (free Colab tier) — Mixtral-8x7B geometry, 2-bit experts ===\n");
+    let mut results = Vec::new();
+    for (label, policy) in [
+        ("full algorithm (LRU k=4 + spec 2)", OffloadPolicy::Full { cache_k: 4, spec_n: 2 }),
+        ("naive offloading (whole layer)", OffloadPolicy::Naive),
+    ] {
+        let mut engine = harness::build_engine(
+            &dir,
+            QuantScheme::Hqq { bits: 4 },
+            QuantScheme::Hqq { bits: 2 },
+            policy,
+            profile.clone(),
+            SimScale::Mixtral,
+        )?;
+        harness::run_teacher_forced(&mut engine, &tokens)?;
+        let tps = engine.run.tokens_per_s_sim();
+        println!(
+            "{label:38} {tps:.3} tok/s   (hit ratio {:.1}%, {:.1} GB moved/100 tok)",
+            engine.run.hit_ratio() * 100.0,
+            engine.run.total_bytes() as f64 / 1e9 * (100.0 / tokens.len() as f64),
+        );
+        results.push(tps);
+    }
+    println!(
+        "\nspeedup: {:.2}x (paper Table 2, T4 2-bit: 2.09 vs 0.66 ≈ 3.2x)\n\
+         interactive threshold (~2 tok/s): {}",
+        results[0] / results[1],
+        if results[0] >= 1.5 { "MET" } else { "NOT MET" }
+    );
+    Ok(())
+}

@@ -1,0 +1,130 @@
+//! End-to-end serving driver (the DESIGN.md validation workload): boot the
+//! full stack — artifacts → PJRT runtime → engine → coordinator → TCP
+//! server — then fire a batch of chat requests at the socket and report
+//! latency/throughput percentiles.
+//!
+//! ```bash
+//! cargo run --release --example e2e_serving
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Instant;
+
+use moe_offload::config::{HardwareProfile, OffloadPolicy, QuantScheme, ServingConfig, SimScale};
+use moe_offload::config::Manifest;
+use moe_offload::coordinator::{server::Server, Coordinator};
+use moe_offload::engine::MoeEngine;
+use moe_offload::harness;
+use moe_offload::model::ModelWeights;
+use moe_offload::util::json::Json;
+
+const PROMPTS: &[&str] = &[
+    "what is a mixture of experts model",
+    "explain how an LRU cache works",
+    "why is my program slow",
+    "what does quantization do to a neural network",
+    "how does speculative loading help",
+    "can I run large models on a laptop",
+    "what is the difference between ram and vram",
+    "what is perplexity",
+];
+
+fn main() -> anyhow::Result<()> {
+    let dir = harness::artifacts_dir()?;
+    let dir2 = dir.clone();
+
+    // 1. boot the full stack
+    let coordinator = Arc::new(Coordinator::new(
+        move || -> moe_offload::Result<MoeEngine> {
+            let manifest = Manifest::load(&dir2)?;
+            let weights = ModelWeights::load(
+                &manifest.config,
+                &dir2.join("weights.npz"),
+                QuantScheme::Hqq { bits: 4 },
+                QuantScheme::Hqq { bits: 3 },
+            )?;
+            let serving = ServingConfig {
+                policy: OffloadPolicy::Full { cache_k: 2, spec_n: 2 },
+                expert_quant: QuantScheme::Hqq { bits: 3 },
+                attn_quant: QuantScheme::Hqq { bits: 4 },
+                sim_scale: SimScale::Tiny,
+                ..Default::default()
+            };
+            MoeEngine::new(&manifest, weights, &serving, HardwareProfile::rtx3060())
+        },
+        99,
+    ));
+    let server = Server::bind("127.0.0.1:0", Arc::clone(&coordinator))?;
+    let addr = server.local_addr()?;
+    std::thread::spawn(move || {
+        let _ = server.serve(Some(1));
+    });
+    println!("=== e2e serving: {} requests against {addr} ===\n", PROMPTS.len());
+
+    // 2. drive the socket like a client would
+    let mut conn = TcpStream::connect(addr)?;
+    let reader = BufReader::new(conn.try_clone()?);
+    let mut lines = reader.lines();
+    let mut latencies = Vec::new();
+    let mut first_token_lats = Vec::new();
+    let mut total_new_tokens = 0usize;
+    let t_all = Instant::now();
+
+    for prompt in PROMPTS {
+        let t0 = Instant::now();
+        writeln!(
+            conn,
+            r#"{{"prompt":"{prompt}","max_tokens":32,"temperature":0.9}}"#
+        )?;
+        conn.flush()?;
+        let mut first_token = None;
+        loop {
+            let line = lines.next().expect("server closed")?;
+            let v = Json::parse(&line)?;
+            match v.get("type").and_then(Json::as_str) {
+                Some("token") => {
+                    first_token.get_or_insert_with(|| t0.elapsed().as_secs_f64());
+                }
+                Some("done") => {
+                    let lat = t0.elapsed().as_secs_f64();
+                    let n = v.get("new_tokens").unwrap().as_usize().unwrap();
+                    total_new_tokens += n;
+                    latencies.push(lat);
+                    first_token_lats.push(first_token.unwrap_or(lat));
+                    println!(
+                        "  {prompt:52} {n:>3} tok  {lat:>6.2}s  ttft {:>5.2}s",
+                        first_token.unwrap_or(lat)
+                    );
+                    break;
+                }
+                _ => anyhow::bail!("unexpected line: {line}"),
+            }
+        }
+    }
+    let wall = t_all.elapsed().as_secs_f64();
+
+    // 3. report
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    first_token_lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |v: &[f64], q: f64| v[((v.len() - 1) as f64 * q) as usize];
+    println!(
+        "\nthroughput : {:.2} tokens/s end-to-end ({} tokens / {:.1}s wall)\n\
+         latency    : p50 {:.2}s  p90 {:.2}s  max {:.2}s\n\
+         ttft       : p50 {:.2}s  p90 {:.2}s\n\
+         server     : {} ok / {} requests, mean request {:.2}s",
+        total_new_tokens as f64 / wall,
+        total_new_tokens,
+        wall,
+        pct(&latencies, 0.5),
+        pct(&latencies, 0.9),
+        latencies.last().unwrap(),
+        pct(&first_token_lats, 0.5),
+        pct(&first_token_lats, 0.9),
+        coordinator.metrics.counter("requests_ok"),
+        coordinator.metrics.counter("requests_started"),
+        coordinator.metrics.histogram_mean("request_latency_s"),
+    );
+    Ok(())
+}

@@ -1,0 +1,161 @@
+"""AOT pipeline: lower every decode module to HLO *text* artifacts.
+
+HLO text — NOT ``lowered.compiler_ir("hlo")`` protos or ``.serialize()`` —
+is the interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids that the rust crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Every module is lowered with ``return_tuple=True`` so the rust side unwraps
+a tuple uniformly. Outputs:
+
+    artifacts/
+      embed.hlo.txt  attn.hlo.txt  prefill_attn.hlo.txt
+      gate.hlo.txt   prefill_gate.hlo.txt
+      expert.hlo.txt prefill_expert.hlo.txt
+      expert_q{2,3,4}.hlo.txt  prefill_expert_q{2,3,4}.hlo.txt
+      lm_head.hlo.txt
+      manifest.json   (model config + per-module arg shapes/dtypes)
+
+Usage: python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as model_mod
+from .config import TINY, ModelConfig
+
+F32 = jnp.float32
+U8 = jnp.uint8
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring).
+
+    CRITICAL: default HLO printing elides large constants as ``{...}``,
+    which xla_extension 0.5.1's text parser silently mis-parses (it fills
+    the tensor with the first element — rotary-embedding frequency tables
+    become all-ones). Print with ``print_large_constants``.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # new-style metadata attributes (source_end_line etc.) are rejected by
+    # the 0.5.1 text parser — strip metadata entirely.
+    opts.print_metadata = False
+    text = comp.get_hlo_module().to_string(opts)
+    assert "{...}" not in text, "elided constants survived printing"
+    return text
+
+
+def _spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def module_table(cfg: ModelConfig) -> dict[str, tuple]:
+    """(fn, example_args) per artifact. Quantized experts get one module per
+    bit-width only because scale/zero *shapes* are bitwidth-independent but
+    we keep separate artifacts anyway: the rust side keys executables by
+    scheme, and future sub-byte packed layouts would diverge per bit."""
+    D, V, E = cfg.d_model, cfg.vocab_size, cfg.n_experts
+    FF, S, g = cfg.d_ff, cfg.max_seq, cfg.group_size
+    C = cfg.prefill_chunk
+    kv_cache = _spec((S, cfg.n_kv_heads, cfg.head_dim))
+
+    def attn_args(t):
+        x = _spec((t, D))
+        return (
+            x, _spec((D,)), _spec((D, cfg.q_dim)), _spec((D, cfg.kv_dim)),
+            _spec((D, cfg.kv_dim)), _spec((cfg.q_dim, D)), kv_cache, kv_cache,
+            _spec((), I32),
+        )
+
+    def expert_args(t):
+        return (_spec((t, D)), _spec((D, FF)), _spec((D, FF)), _spec((FF, D)))
+
+    def group_for(bits):
+        # paper §4.2: 2-bit uses group size 16; 3/4-bit use the model group
+        return min(16, g) if bits == 2 else g
+
+    def expert_q_args(t, bits):
+        gb = group_for(bits)
+        qup, sup = _spec((D, FF), U8), _spec((D // gb, FF))
+        qdn, sdn = _spec((FF, D), U8), _spec((FF // gb, D))
+        return (_spec((t, D)), qup, sup, sup, qup, sup, sup, qdn, sdn, sdn)
+
+    mods = {
+        "embed": (model_mod.embed_mod, (_spec((1,), I32), _spec((V, D)))),
+        "attn": (functools.partial(model_mod.attn_mod, cfg=cfg), attn_args(1)),
+        "prefill_attn": (
+            functools.partial(model_mod.prefill_attn_mod, cfg=cfg), attn_args(C)),
+        "gate": (
+            functools.partial(model_mod.gate_mod, cfg=cfg),
+            (_spec((1, D)), _spec((D,)), _spec((D, E)))),
+        "prefill_gate": (
+            functools.partial(model_mod.gate_mod, cfg=cfg),
+            (_spec((C, D)), _spec((D,)), _spec((D, E)))),
+        "expert": (functools.partial(model_mod.expert_mod, cfg=cfg), expert_args(1)),
+        "prefill_expert": (
+            functools.partial(model_mod.expert_mod, cfg=cfg), expert_args(C)),
+        "lm_head": (
+            functools.partial(model_mod.lm_head_mod, cfg=cfg),
+            (_spec((1, D)), _spec((D,)), _spec((D, V)))),
+        "prefill_lm_head": (
+            functools.partial(model_mod.lm_head_mod, cfg=cfg),
+            (_spec((C, D)), _spec((D,)), _spec((D, V)))),
+    }
+    for bits in (2, 3, 4):
+        fn = functools.partial(model_mod.expert_q_mod, cfg=cfg, group_size=group_for(bits))
+        mods[f"expert_q{bits}"] = (fn, expert_q_args(1, bits))
+        mods[f"prefill_expert_q{bits}"] = (fn, expert_q_args(C, bits))
+    return mods
+
+
+def describe(args) -> list[dict]:
+    return [{"shape": list(a.shape), "dtype": a.dtype.name} for a in args]
+
+
+def build(cfg: ModelConfig, out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"config": json.loads(cfg.to_json()), "modules": {}}
+    for name, (fn, args) in module_table(cfg).items():
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["modules"][name] = {
+            "file": f"{name}.hlo.txt",
+            "args": describe(args),
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+            "bytes": len(text),
+        }
+        print(f"lowered {name:24s} {len(text):>9d} chars")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", type=str, default="../artifacts")
+    args = ap.parse_args()
+    build(TINY, args.out)
+
+
+if __name__ == "__main__":
+    main()

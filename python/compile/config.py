@@ -1,0 +1,75 @@
+"""Model configuration shared by the trainer, the AOT pipeline and tests.
+
+The rust side reads the JSON emitted into ``artifacts/manifest.json`` — keep
+field names stable (they are mirrored by ``rust/src/config/model.rs``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Mixtral-architecture decoder, scaled to tiny-corpus size.
+
+    Same architecture class as Mixtral-8x7B (GQA + rotary + RMSNorm +
+    top-2-of-8 SwiGLU experts); dimensions scaled so the model trains on CPU
+    in minutes. The offloading system's behaviour depends on the
+    architecture (residual stream, per-layer routing), not on absolute size.
+    """
+
+    vocab_size: int = 256          # byte-level tokenizer
+    d_model: int = 128
+    n_layers: int = 6
+    n_heads: int = 4
+    n_kv_heads: int = 2            # GQA, like Mixtral
+    head_dim: int = 32
+    d_ff: int = 256                # per-expert FFN width
+    n_experts: int = 8
+    top_k: int = 2
+    max_seq: int = 512
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    group_size: int = 32           # quantization group size (along input dim)
+    prefill_chunk: int = 16        # chunked-prefill module width
+
+    def __post_init__(self) -> None:
+        assert self.n_heads % self.n_kv_heads == 0
+        assert self.d_model % self.group_size == 0
+        assert self.d_ff % self.group_size == 0
+        assert self.top_k <= self.n_experts
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), indent=2)
+
+    @staticmethod
+    def from_json(text: str) -> "ModelConfig":
+        return ModelConfig(**json.loads(text))
+
+
+TINY = ModelConfig()
+
+# An even smaller config for fast property-based tests.
+TEST = ModelConfig(
+    d_model=64,
+    n_layers=2,
+    n_heads=2,
+    n_kv_heads=1,
+    head_dim=16,
+    d_ff=64,
+    n_experts=4,
+    top_k=2,
+    max_seq=64,
+    group_size=16,
+    prefill_chunk=8,
+)

@@ -1,0 +1,130 @@
+"""Corpus construction for the tiny-model trainer and the evaluation suite.
+
+Substitutions (DESIGN.md): the paper evaluates on WikiText2 / C4 perplexity
+and OpenAssistant conversations. Without those datasets we build two
+disjoint-domain corpora from text that ships with the environment, plus a
+deterministic synthetic chat corpus:
+
+* corpus A ("prose")  — English prose: Python's LICENSE/docstring text.
+* corpus B ("code")   — Python source code from the standard library.
+* chat corpus         — templated multi-turn conversations (OpenAssistant
+  stand-in) generated with a seeded RNG.
+
+Everything is byte-level (vocab 256) and fully deterministic.
+"""
+
+from __future__ import annotations
+
+import glob
+import io
+import os
+import random
+import sysconfig
+import tokenize
+
+MAX_PROSE_BYTES = 400_000
+MAX_CODE_BYTES = 400_000
+
+
+def _stdlib_dir() -> str:
+    return sysconfig.get_paths()["stdlib"]
+
+
+def _docstrings_of(path: str) -> list[str]:
+    """Extract string/comment tokens from a python file (prose-ish text)."""
+    out = []
+    try:
+        with open(path, "rb") as f:
+            for tok in tokenize.tokenize(f.readline):
+                if tok.type == tokenize.STRING and len(tok.string) > 80:
+                    out.append(tok.string.strip("\"' \n"))
+    except Exception:
+        pass
+    return out
+
+
+def build_prose_corpus() -> bytes:
+    """Corpus A: English prose (LICENSE text + long stdlib docstrings)."""
+    parts = []
+    lib = _stdlib_dir()
+    lic = os.path.join(lib, "LICENSE.txt")
+    if os.path.exists(lic):
+        parts.append(open(lic, "r", errors="ignore").read())
+    for name in sorted(glob.glob(os.path.join(lib, "*.py"))):
+        parts.extend(_docstrings_of(name))
+        if sum(len(p) for p in parts) > MAX_PROSE_BYTES:
+            break
+    text = "\n\n".join(parts)
+    return _to_bytes(text)[:MAX_PROSE_BYTES]
+
+
+def build_code_corpus() -> bytes:
+    """Corpus B: python source text (different domain than corpus A)."""
+    parts = []
+    lib = _stdlib_dir()
+    for name in sorted(glob.glob(os.path.join(lib, "*.py")), reverse=True):
+        try:
+            parts.append(open(name, "r", errors="ignore").read())
+        except OSError:
+            continue
+        if sum(len(p) for p in parts) > MAX_CODE_BYTES:
+            break
+    return _to_bytes("\n".join(parts))[:MAX_CODE_BYTES]
+
+
+_CHAT_TOPICS = [
+    ("how do I sort a list in python", "use the sorted function or the list sort method"),
+    ("what is a mixture of experts model", "a sparse model where a gating function picks a few expert layers per token"),
+    ("explain how an LRU cache works", "it evicts the least recently used entry when capacity is exceeded"),
+    ("why is my program slow", "profile it first, then optimize the hottest function"),
+    ("what does quantization do to a neural network", "it stores weights in fewer bits to save memory and bandwidth"),
+    ("how does speculative loading help", "it guesses which experts are needed next and fetches them early"),
+    ("what is the difference between ram and vram", "ram is host memory while vram sits on the graphics card"),
+    ("how large is the mixtral model", "about forty seven billion parameters of which experts are most"),
+    ("can I run large models on a laptop", "yes with offloading and aggressive quantization of the experts"),
+    ("what is perplexity", "the exponential of the average negative log likelihood per token"),
+]
+
+
+def build_chat_corpus(n_conversations: int = 64, seed: int = 7) -> bytes:
+    """Synthetic OpenAssistant stand-in: templated multi-turn chats."""
+    rng = random.Random(seed)
+    convs = []
+    for _ in range(n_conversations):
+        turns = []
+        for _ in range(rng.randint(2, 5)):
+            q, a = rng.choice(_CHAT_TOPICS)
+            turns.append(f"<user> {q}?\n<assistant> {a}.\n")
+        convs.append("".join(turns))
+    return _to_bytes("\n".join(convs))
+
+
+def _to_bytes(text: str) -> bytes:
+    """ASCII-fold so every byte is < 128 (keeps the byte LM well-posed)."""
+    return text.encode("ascii", errors="replace")
+
+
+def train_eval_split(corpus: bytes, eval_frac: float = 0.1) -> tuple[bytes, bytes]:
+    cut = int(len(corpus) * (1.0 - eval_frac))
+    return corpus[:cut], corpus[cut:]
+
+
+def write_corpora(out_dir: str) -> dict:
+    """Materialise all corpora under ``out_dir``; returns a size manifest."""
+    os.makedirs(out_dir, exist_ok=True)
+    prose = build_prose_corpus()
+    code = build_code_corpus()
+    chat = build_chat_corpus()
+    prose_train, prose_eval = train_eval_split(prose)
+    code_train, code_eval = train_eval_split(code)
+    files = {
+        "prose_train.bin": prose_train,
+        "prose_eval.bin": prose_eval,
+        "code_train.bin": code_train,
+        "code_eval.bin": code_eval,
+        "chat.bin": chat,
+    }
+    for name, blob in files.items():
+        with open(os.path.join(out_dir, name), "wb") as f:
+            f.write(blob)
+    return {k: len(v) for k, v in files.items()}

@@ -1,0 +1,49 @@
+"""Generate cross-language test fixtures: expected decode logits from the
+trained weights, via the pure-jnp decode reference. The rust integration
+tests (rust/tests/engine_numerics.rs) replay the same tokens through the
+full PJRT engine (FP16 schemes) and must match.
+
+Usage: python -m compile.fixtures --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as model_mod
+from .config import TINY
+from .train import unflatten_params
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", type=str, default="../artifacts")
+    ap.add_argument("--n-tokens", type=int, default=10)
+    args = ap.parse_args()
+
+    flat = dict(np.load(os.path.join(args.out, "weights.npz")))
+    params = unflatten_params(flat, TINY)
+
+    prompt = "<user> what is a mixture of experts model?\n<assistant> "
+    tokens = jnp.array([ord(c) for c in prompt[: args.n_tokens]], jnp.int32)
+    logits = model_mod.decode_reference(params, tokens, TINY)  # [T, V]
+
+    fixture = {
+        "prompt_tokens": [int(t) for t in tokens],
+        "argmax": [int(i) for i in jnp.argmax(logits, -1)],
+        # first 8 logits of each position for tight numeric comparison
+        "logits_head": [[float(x) for x in row[:8]] for row in np.asarray(logits)],
+    }
+    path = os.path.join(args.out, "decode_fixture.json")
+    with open(path, "w") as f:
+        json.dump(fixture, f)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

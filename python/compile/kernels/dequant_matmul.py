@@ -1,0 +1,105 @@
+"""L1 Pallas kernel: fused group-dequant + SwiGLU expert FFN.
+
+This is the quantized-offloading hot path: expert weights arrive on the
+device as uint8 codes plus per-group (scale, zero) — only the codes cross
+the host→device link at 2/3/4 logical bits per weight — and are expanded to
+f32 *inside the kernel*, one VMEM-resident tile at a time. f32 weights never
+exist in HBM, which is exactly the memory-traffic property the paper's HQQ
+CUDA kernels provide on GPU.
+
+Group layout: groups of ``group_size`` run along each weight's input
+dimension, so a ``[D, block_ff]`` code tile needs a ``[D/g, block_ff]``
+scale/zero tile — the BlockSpec index maps keep them aligned.
+
+Dequant is pure VPU work ((c - zero) * scale over a [G, g, bf] view); the
+MXU consumes the expanded tile immediately. interpret=True (CPU plugin);
+TPU efficiency is estimated analytically in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_FF = 128
+
+
+def _dequant_tile(codes, scale, zero, group_size: int):
+    """Expand a [In, Out] uint8 tile with [In/g, Out] scale/zero to f32."""
+    n_in, n_out = codes.shape
+    g = n_in // group_size
+    c = codes.astype(jnp.float32).reshape(g, group_size, n_out)
+    w = (c - zero[:, None, :]) * scale[:, None, :]
+    return w.reshape(n_in, n_out)
+
+
+def _make_kernel(group_size: int):
+    def kernel(x_ref, q1_ref, s1_ref, z1_ref, q3_ref, s3_ref, z3_ref,
+               q2_ref, s2_ref, z2_ref, o_ref):
+        @pl.when(pl.program_id(0) == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        x = x_ref[...]
+        w1 = _dequant_tile(q1_ref[...], s1_ref[...], z1_ref[...], group_size)
+        w3 = _dequant_tile(q3_ref[...], s3_ref[...], z3_ref[...], group_size)
+        w2 = _dequant_tile(q2_ref[...], s2_ref[...], z2_ref[...], group_size)
+        up = x @ w1
+        gate = x @ w3
+        h = up * jax.nn.sigmoid(up) * gate
+        o_ref[...] += h @ w2
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("group_size", "block_ff"))
+def dequant_swiglu(x, q1, s1, z1, q3, s3, z3, q2, s2, z2, *,
+                   group_size: int, block_ff: int | None = None) -> jax.Array:
+    """Fused dequant + SwiGLU.
+
+    x: [T, D] f32.
+    q1/q3: uint8 [D, FF], s1/z1/s3/z3: f32 [D/g, FF]   (up/gate projections)
+    q2:    uint8 [FF, D], s2/z2:       f32 [FF/g, D]   (down projection)
+    Returns [T, D] f32.
+    """
+    t, d = x.shape
+    ff = q1.shape[1]
+    if block_ff is None:
+        block_ff = min(ff, DEFAULT_BLOCK_FF)
+    assert ff % block_ff == 0 and block_ff % group_size == 0
+    gd = d // group_size
+    gbf = block_ff // group_size
+    grid = ff // block_ff
+
+    return pl.pallas_call(
+        _make_kernel(group_size),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((t, d), lambda i: (0, 0)),
+            pl.BlockSpec((d, block_ff), lambda i: (0, i)),       # q1
+            pl.BlockSpec((gd, block_ff), lambda i: (0, i)),      # s1
+            pl.BlockSpec((gd, block_ff), lambda i: (0, i)),      # z1
+            pl.BlockSpec((d, block_ff), lambda i: (0, i)),       # q3
+            pl.BlockSpec((gd, block_ff), lambda i: (0, i)),      # s3
+            pl.BlockSpec((gd, block_ff), lambda i: (0, i)),      # z3
+            pl.BlockSpec((block_ff, d), lambda i: (i, 0)),       # q2
+            pl.BlockSpec((gbf, d), lambda i: (i, 0)),            # s2
+            pl.BlockSpec((gbf, d), lambda i: (i, 0)),            # z2
+        ],
+        out_specs=pl.BlockSpec((t, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), x.dtype),
+        interpret=True,
+    )(x, q1, s1, z1, q3, s3, z3, q2, s2, z2)
+
+
+def vmem_bytes(d: int, ff: int, group_size: int, t: int = 1,
+               block_ff: int = DEFAULT_BLOCK_FF) -> int:
+    """Analytic VMEM footprint of one grid step (perf-model input)."""
+    codes = 3 * d * block_ff            # uint8 tiles
+    meta = 2 * 3 * (d // group_size) * block_ff * 4
+    expanded = 3 * d * block_ff * 4     # dequantized f32 tiles
+    act = (2 * t * d + t * block_ff) * 4
+    return codes + meta + expanded + act

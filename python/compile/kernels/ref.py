@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These define the ground-truth numerics; pytest asserts the Pallas kernels
+(interpret=True) match them to float32 tolerance. The rust-side quantizer
+(``rust/src/quant/hqq.rs``) mirrors ``quantize_group`` bit-for-bit — the
+cross-language fixture test pins that down.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def swiglu_ref(x: jax.Array, w1: jax.Array, w3: jax.Array, w2: jax.Array) -> jax.Array:
+    """SwiGLU FFN: (silu(x @ w1) * (x @ w3)) @ w2. x: [T, D]."""
+    return (silu(x @ w1) * (x @ w3)) @ w2
+
+
+def dequant_ref(codes: jax.Array, scale: jax.Array, zero: jax.Array, group_size: int) -> jax.Array:
+    """Affine group dequantization along the first (input) dimension.
+
+    codes: uint8 [In, Out]; scale/zero: f32 [In // group_size, Out].
+    w[i, j] = (codes[i, j] - zero[g, j]) * scale[g, j],  g = i // group_size.
+    """
+    n_in, n_out = codes.shape
+    g = n_in // group_size
+    c = codes.astype(jnp.float32).reshape(g, group_size, n_out)
+    w = (c - zero[:, None, :]) * scale[:, None, :]
+    return w.reshape(n_in, n_out)
+
+
+def dequant_swiglu_ref(x, q1, s1, z1, q3, s3, z3, q2, s2, z2, group_size: int) -> jax.Array:
+    """Oracle for the fused dequant + SwiGLU kernel."""
+    w1 = dequant_ref(q1, s1, z1, group_size)
+    w3 = dequant_ref(q3, s3, z3, group_size)
+    w2 = dequant_ref(q2, s2, z2, group_size)
+    return swiglu_ref(x, w1, w3, w2)
+
+
+def quantize_group(w: np.ndarray, bits: int, group_size: int):
+    """Plain affine min/max group quantization (the HQQ starting point).
+
+    Returns (codes uint8 [In, Out], scale f32 [G, Out], zero f32 [G, Out]).
+    Groups run along the input (first) dimension, matching how weight panels
+    stream through the kernel. The rust HQQ quantizer starts from this exact
+    estimate before its half-quadratic refinement.
+    """
+    n_in, n_out = w.shape
+    assert n_in % group_size == 0
+    g = n_in // group_size
+    wg = w.reshape(g, group_size, n_out).astype(np.float64)
+    wmin = wg.min(axis=1)                      # [G, Out]
+    wmax = wg.max(axis=1)
+    qmax = float(2**bits - 1)
+    scale = (wmax - wmin) / qmax
+    scale = np.where(scale <= 1e-12, 1.0, scale)
+    zero = -wmin / scale
+    codes = np.clip(np.round(wg / scale[:, None, :] + zero[:, None, :]), 0, qmax)
+    return (
+        codes.reshape(n_in, n_out).astype(np.uint8),
+        scale.astype(np.float32),
+        zero.astype(np.float32),
+    )

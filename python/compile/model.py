@@ -1,0 +1,338 @@
+"""L2: Mixtral-architecture MoE decoder in pure JAX.
+
+Two views of the same model:
+
+* ``forward_train`` — full-sequence forward used by the trainer and as the
+  numerical oracle for the decode modules. Computes every expert densely and
+  masks to the top-k so it stays vectorised (fine at tiny scale).
+* ``*_mod`` functions — the per-module decode path that ``aot.py`` lowers to
+  individual HLO artifacts. Weights are explicit arguments so one compiled
+  executable serves every layer / expert. The rust engine chains these,
+  owning the expert schedule (that is the paper's contribution).
+
+The expert FFN modules call the Pallas kernels from ``kernels/`` so they
+lower into the artifact HLO; everything else is plain jnp.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .kernels import expert_mlp as _expert_kernel
+from .kernels import dequant_matmul as _dequant_kernel
+from .kernels import ref as _ref
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    """RMSNorm over the last axis."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * w).astype(x.dtype)
+
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """cos/sin tables for rotary embedding at the given integer positions.
+
+    Returns arrays of shape ``positions.shape + (head_dim // 2,)``.
+    """
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv_freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """Apply rotary embedding. ``x``: [..., n_heads, head_dim]; cos/sin
+    broadcast over the head axis (shape [..., 1, head_dim//2])."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def _repeat_kv(x: jax.Array, n_rep: int) -> jax.Array:
+    """[..., n_kv, hd] -> [..., n_kv * n_rep, hd] (GQA head sharing)."""
+    if n_rep == 1:
+        return x
+    return jnp.repeat(x, n_rep, axis=-2)
+
+
+def silu(x: jax.Array) -> jax.Array:
+    return x * jax.nn.sigmoid(x)
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+def init_params(rng: jax.Array, cfg: ModelConfig) -> dict:
+    """Initialise the parameter pytree (all float32)."""
+
+    def dense(key, fan_in, shape):
+        return jax.random.normal(key, shape, jnp.float32) / jnp.sqrt(fan_in)
+
+    keys = iter(jax.random.split(rng, 4 + cfg.n_layers * 8))
+    params = {
+        "embed": jax.random.normal(next(keys), (cfg.vocab_size, cfg.d_model)) * 0.02,
+        "final_ln": jnp.ones((cfg.d_model,)),
+        "lm_head": dense(next(keys), cfg.d_model, (cfg.d_model, cfg.vocab_size)),
+        "layers": [],
+    }
+    for _ in range(cfg.n_layers):
+        layer = {
+            "attn_ln": jnp.ones((cfg.d_model,)),
+            "wq": dense(next(keys), cfg.d_model, (cfg.d_model, cfg.q_dim)),
+            "wk": dense(next(keys), cfg.d_model, (cfg.d_model, cfg.kv_dim)),
+            "wv": dense(next(keys), cfg.d_model, (cfg.d_model, cfg.kv_dim)),
+            "wo": dense(next(keys), cfg.q_dim, (cfg.q_dim, cfg.d_model)),
+            "mlp_ln": jnp.ones((cfg.d_model,)),
+            "w_gate": dense(next(keys), cfg.d_model, (cfg.d_model, cfg.n_experts)),
+            "w1": dense(next(keys), cfg.d_model, (cfg.n_experts, cfg.d_model, cfg.d_ff)),
+            "w3": dense(next(keys), cfg.d_model, (cfg.n_experts, cfg.d_model, cfg.d_ff)),
+            "w2": dense(next(keys), cfg.d_ff, (cfg.n_experts, cfg.d_ff, cfg.d_model)),
+        }
+        params["layers"].append(layer)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# training-time forward (full sequence, dense experts masked to top-k)
+# ---------------------------------------------------------------------------
+
+def attention_full(layer: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Causal self-attention over a full sequence. x: [B, T, D]."""
+    B, T, _ = x.shape
+    h = rmsnorm(x, layer["attn_ln"], cfg.norm_eps)
+    q = (h @ layer["wq"]).reshape(B, T, cfg.n_heads, cfg.head_dim)
+    k = (h @ layer["wk"]).reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
+    v = (h @ layer["wv"]).reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
+
+    pos = jnp.arange(T)
+    cos, sin = rope_angles(pos, cfg.head_dim, cfg.rope_theta)
+    cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+    q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    k, v = _repeat_kv(k, n_rep), _repeat_kv(v, n_rep)
+
+    scores = jnp.einsum("bthd,bshd->bhts", q, k) / jnp.sqrt(cfg.head_dim)
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhts,bshd->bthd", probs, v).reshape(B, T, cfg.q_dim)
+    return x + out @ layer["wo"]
+
+
+def moe_full(layer: dict, x: jax.Array, cfg: ModelConfig) -> tuple[jax.Array, jax.Array]:
+    """Top-k MoE FFN over a full sequence. Returns (output, router_probs).
+
+    router_probs: full softmax over experts [B, T, E] — used by the
+    load-balancing loss and by the activation-trace tooling.
+    """
+    h = rmsnorm(x, layer["mlp_ln"], cfg.norm_eps)
+    logits = h @ layer["w_gate"]                       # [B, T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # top-k mask, then renormalise over the selected experts (Mixtral style:
+    # softmax over the top-k logits == renormalised top-k softmax probs).
+    top_vals, _ = jax.lax.top_k(probs, cfg.top_k)
+    thresh = top_vals[..., -1:]
+    mask = probs >= thresh
+    weights = jnp.where(mask, probs, 0.0)
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+
+    # dense expert compute, masked — vectorised over experts.
+    up = jnp.einsum("btd,edf->btef", h, layer["w1"])
+    gate = jnp.einsum("btd,edf->btef", h, layer["w3"])
+    act = silu(up) * gate
+    expert_out = jnp.einsum("btef,efd->bted", act, layer["w2"])
+    out = jnp.einsum("bted,bte->btd", expert_out, weights)
+    return x + out, probs
+
+
+def forward_train(params: dict, tokens: jax.Array, cfg: ModelConfig) -> tuple[jax.Array, jax.Array]:
+    """Full forward. tokens: [B, T] int32 -> (logits [B, T, V], router_probs [L, B, T, E])."""
+    x = params["embed"][tokens]
+    all_probs = []
+    for layer in params["layers"]:
+        x = attention_full(layer, x, cfg)
+        x, probs = moe_full(layer, x, cfg)
+        all_probs.append(probs)
+    x = rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    return x @ params["lm_head"], jnp.stack(all_probs)
+
+
+def loss_fn(params: dict, tokens: jax.Array, cfg: ModelConfig,
+            aux_weight: float = 0.01) -> tuple[jax.Array, dict]:
+    """Next-token cross-entropy + Switch-style load-balancing auxiliary loss."""
+    logits, router_probs = forward_train(params, tokens[:, :-1], cfg)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1).mean()
+
+    # load balancing: fraction of tokens routed to each expert (top-1 proxy)
+    # times mean router prob, summed over experts, per layer.
+    top1 = jnp.argmax(router_probs, axis=-1)                      # [L, B, T]
+    frac = jnp.mean(
+        jax.nn.one_hot(top1, cfg.n_experts, dtype=jnp.float32), axis=(1, 2)
+    )                                                             # [L, E]
+    mean_prob = jnp.mean(router_probs, axis=(1, 2))               # [L, E]
+    aux = cfg.n_experts * jnp.sum(frac * mean_prob, axis=-1).mean()
+    return nll + aux_weight * aux, {"nll": nll, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode-path modules (lowered individually by aot.py)
+# ---------------------------------------------------------------------------
+# Conventions: x is [1, D]; the KV cache is [max_seq, n_kv_heads, head_dim]
+# per layer, held by the rust engine and passed/returned each call; ``pos``
+# is a scalar int32 giving the index of the token being decoded.
+
+def embed_mod(token: jax.Array, embed: jax.Array) -> jax.Array:
+    """(token i32[1], embed [V, D]) -> x [1, D]."""
+    return embed[token]
+
+
+def attn_mod(x, attn_ln, wq, wk, wv, wo, k_cache, v_cache, pos, *, cfg: ModelConfig):
+    """Single-token attention block with residual. Returns (x', k', v')."""
+    h = rmsnorm(x, attn_ln, cfg.norm_eps)
+    q = (h @ wq).reshape(1, cfg.n_heads, cfg.head_dim)
+    k = (h @ wk).reshape(1, cfg.n_kv_heads, cfg.head_dim)
+    v = (h @ wv).reshape(1, cfg.n_kv_heads, cfg.head_dim)
+
+    cos, sin = rope_angles(pos[None], cfg.head_dim, cfg.rope_theta)
+    cos, sin = cos[:, None, :], sin[:, None, :]
+    q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k, (pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v, (pos, 0, 0))
+
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    ks = _repeat_kv(k_cache, n_rep)                    # [S, H, hd]
+    vs = _repeat_kv(v_cache, n_rep)
+
+    scores = jnp.einsum("qhd,shd->hqs", q, ks) / jnp.sqrt(cfg.head_dim)
+    valid = jnp.arange(cfg.max_seq) <= pos
+    scores = jnp.where(valid[None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("hqs,shd->qhd", probs, vs).reshape(1, cfg.q_dim)
+    return x + out @ wo, k_cache, v_cache
+
+
+def prefill_attn_mod(x, attn_ln, wq, wk, wv, wo, k_cache, v_cache, pos0, *, cfg: ModelConfig):
+    """Chunked-prefill attention: x is [C, D], positions pos0..pos0+C-1.
+
+    Padding convention: callers may pad the chunk; padded queries produce
+    garbage rows that the engine discards, and padded keys land at positions
+    beyond the valid range where the causal/absolute-position mask hides
+    them until they are overwritten by the next chunk.
+    """
+    C = x.shape[0]
+    h = rmsnorm(x, attn_ln, cfg.norm_eps)
+    q = (h @ wq).reshape(C, cfg.n_heads, cfg.head_dim)
+    k = (h @ wk).reshape(C, cfg.n_kv_heads, cfg.head_dim)
+    v = (h @ wv).reshape(C, cfg.n_kv_heads, cfg.head_dim)
+
+    positions = pos0 + jnp.arange(C)
+    cos, sin = rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+    cos, sin = cos[:, None, :], sin[:, None, :]
+    q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k, (pos0, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v, (pos0, 0, 0))
+
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    ks = _repeat_kv(k_cache, n_rep)
+    vs = _repeat_kv(v_cache, n_rep)
+
+    scores = jnp.einsum("qhd,shd->hqs", q, ks) / jnp.sqrt(cfg.head_dim)
+    key_pos = jnp.arange(cfg.max_seq)
+    mask = key_pos[None, None, :] <= positions[None, :, None]
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("hqs,shd->qhd", probs, vs).reshape(C, cfg.q_dim)
+    return x + out @ wo, k_cache, v_cache
+
+
+def gate_mod(x, mlp_ln, w_gate, *, cfg: ModelConfig):
+    """Router logits: (x [T, D]) -> (logits [T, E], h [T, D]).
+
+    Also returns the normed hidden state ``h`` — the engine feeds the same
+    ``h`` to the expert modules. For speculative loading (paper §3.2) the
+    engine re-invokes this module with the NEXT layer's (mlp_ln, w_gate) on
+    the CURRENT layer's residual — residual-stream continuity makes that a
+    good guess of the next layer's routing.
+    """
+    h = rmsnorm(x, mlp_ln, cfg.norm_eps)
+    return h @ w_gate, h
+
+
+def expert_mod(h, w1, w3, w2, *, cfg: ModelConfig) -> jax.Array:
+    """One expert's SwiGLU FFN on normed hidden state h [T, D] (Pallas L1)."""
+    return _expert_kernel.swiglu(h, w1, w3, w2)
+
+
+def expert_q_mod(h, q1, s1, z1, q3, s3, z3, q2, s2, z2, *, cfg: ModelConfig,
+                 group_size: int | None = None) -> jax.Array:
+    """Quantized expert: fused group-dequant + SwiGLU (Pallas L1).
+
+    ``q*`` are uint8 codes; ``s*``/``z*`` are per-group scale/zero with
+    groups along each weight's input dimension. ``group_size`` defaults to
+    the model's but is overridden per bit-width by the AOT pipeline (the
+    paper uses g=16 for 2-bit, g=64 for 3/4-bit).
+    """
+    g = group_size or cfg.group_size
+    return _dequant_kernel.dequant_swiglu(
+        h, q1, s1, z1, q3, s3, z3, q2, s2, z2, group_size=g
+    )
+
+
+def lm_head_mod(x, final_ln, lm_head, *, cfg: ModelConfig) -> jax.Array:
+    """(x [1, D]) -> logits [1, V]."""
+    return rmsnorm(x, final_ln, cfg.norm_eps) @ lm_head
+
+
+# ---------------------------------------------------------------------------
+# reference decode (pure jnp, used by tests to validate the module chain)
+# ---------------------------------------------------------------------------
+
+def decode_reference(params: dict, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Token-by-token decode using the *_mod chain with ref expert math.
+
+    Returns logits for every position: [T, V]. Tests compare this against
+    ``forward_train`` to prove the decode modules implement the same model.
+    """
+    T = int(tokens.shape[0])
+    caches = [
+        (
+            jnp.zeros((cfg.max_seq, cfg.n_kv_heads, cfg.head_dim)),
+            jnp.zeros((cfg.max_seq, cfg.n_kv_heads, cfg.head_dim)),
+        )
+        for _ in range(cfg.n_layers)
+    ]
+    outs = []
+    for t in range(T):
+        pos = jnp.int32(t)
+        x = embed_mod(tokens[t : t + 1], params["embed"])
+        for li, layer in enumerate(params["layers"]):
+            kc, vc = caches[li]
+            x, kc, vc = attn_mod(
+                x, layer["attn_ln"], layer["wq"], layer["wk"], layer["wv"],
+                layer["wo"], kc, vc, pos, cfg=cfg,
+            )
+            caches[li] = (kc, vc)
+            logits, h = gate_mod(x, layer["mlp_ln"], layer["w_gate"], cfg=cfg)
+            probs = jax.nn.softmax(logits, axis=-1)[0]
+            top_idx = jnp.argsort(-probs)[: cfg.top_k]
+            w = probs[top_idx]
+            w = w / w.sum()
+            y = jnp.zeros_like(x)
+            for j in range(cfg.top_k):
+                e = top_idx[j]
+                eo = _ref.swiglu_ref(h, layer["w1"][e], layer["w3"][e], layer["w2"][e])
+                y = y + w[j] * eo
+            x = x + y
+        outs.append(lm_head_mod(x, params["final_ln"], params["lm_head"], cfg=cfg)[0])
+    return jnp.stack(outs)

@@ -1,0 +1,155 @@
+"""Tiny-corpus trainer for the Mixtral-tiny model (build-time only).
+
+Trains the MoE decoder from ``model.py`` on a byte-level corpus for a few
+hundred AdamW steps — enough to get a non-degenerate router (the property
+the offloading system exploits) and a loss curve for EXPERIMENTS.md. Saves
+``artifacts/weights.npz`` (flat name->array map the rust NPZ reader loads)
+and ``artifacts/train_log.json``.
+
+Usage: python -m compile.train --steps 600 --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from . import model as model_mod
+from .config import TINY, ModelConfig
+
+
+def flatten_params(params: dict, cfg: ModelConfig) -> dict[str, np.ndarray]:
+    """Flatten the pytree into the rust-facing naming scheme."""
+    flat = {
+        "embed": params["embed"],
+        "final_ln": params["final_ln"],
+        "lm_head": params["lm_head"],
+    }
+    for i, layer in enumerate(params["layers"]):
+        for key, val in layer.items():
+            flat[f"layers.{i}.{key}"] = val
+    return {k: np.asarray(v, np.float32) for k, v in flat.items()}
+
+
+def unflatten_params(flat: dict, cfg: ModelConfig) -> dict:
+    params = {
+        "embed": jnp.asarray(flat["embed"]),
+        "final_ln": jnp.asarray(flat["final_ln"]),
+        "lm_head": jnp.asarray(flat["lm_head"]),
+        "layers": [],
+    }
+    for i in range(cfg.n_layers):
+        prefix = f"layers.{i}."
+        layer = {
+            k[len(prefix):]: jnp.asarray(v)
+            for k, v in flat.items()
+            if k.startswith(prefix)
+        }
+        params["layers"].append(layer)
+    return params
+
+
+def batches(corpus: np.ndarray, batch: int, seq: int, rng: np.random.Generator):
+    """Infinite stream of random [batch, seq+1] windows."""
+    n = len(corpus) - seq - 1
+    while True:
+        idx = rng.integers(0, n, size=batch)
+        yield np.stack([corpus[i : i + seq + 1] for i in idx]).astype(np.int32)
+
+
+def adamw_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "t": jnp.int32(0)}
+
+
+def adamw_update(params, grads, state, lr, *, b1=0.9, b2=0.95, eps=1e-8, wd=0.01):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mh = jax.tree.map(lambda m: m / (1 - b1**t), m)
+    vh = jax.tree.map(lambda v: v / (1 - b2**t), v)
+    new_params = jax.tree.map(
+        lambda p, mh, vh: p - lr * (mh / (jnp.sqrt(vh) + eps) + wd * p),
+        params, mh, vh,
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def train(cfg: ModelConfig, steps: int, batch: int, seq: int, out_dir: str,
+          lr: float = 3e-3, seed: int = 0, log_every: int = 20) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    corpus_dir = os.path.join(out_dir, "corpus")
+    sizes = data_mod.write_corpora(corpus_dir)
+    print(f"corpora: {sizes}")
+
+    prose = np.frombuffer(
+        open(os.path.join(corpus_dir, "prose_train.bin"), "rb").read(), np.uint8
+    )
+    code = np.frombuffer(
+        open(os.path.join(corpus_dir, "code_train.bin"), "rb").read(), np.uint8
+    )
+    # train on the mixture of both domains
+    corpus = np.concatenate([prose, code])
+
+    params = model_mod.init_params(jax.random.PRNGKey(seed), cfg)
+    opt = adamw_init(params)
+
+    @jax.jit
+    def step_fn(params, opt, tokens, lr):
+        (loss, aux), grads = jax.value_and_grad(
+            lambda p: model_mod.loss_fn(p, tokens, cfg), has_aux=True
+        )(params)
+        params, opt = adamw_update(params, grads, opt, lr)
+        return params, opt, loss, aux
+
+    rng = np.random.default_rng(seed)
+    stream = batches(corpus, batch, seq, rng)
+    log = []
+    t0 = time.time()
+    for step in range(steps):
+        warm = min(1.0, (step + 1) / 50)
+        cos = 0.5 * (1 + np.cos(np.pi * step / steps))
+        cur_lr = lr * warm * (0.1 + 0.9 * cos)
+        tokens = jnp.asarray(next(stream))
+        params, opt, loss, aux = step_fn(params, opt, tokens, cur_lr)
+        if step % log_every == 0 or step == steps - 1:
+            rec = {
+                "step": step,
+                "loss": float(loss),
+                "nll": float(aux["nll"]),
+                "aux": float(aux["aux"]),
+                "lr": float(cur_lr),
+                "elapsed_s": round(time.time() - t0, 1),
+            }
+            log.append(rec)
+            print(rec, flush=True)
+
+    flat = flatten_params(params, cfg)
+    np.savez(os.path.join(out_dir, "weights.npz"), **flat)
+    with open(os.path.join(out_dir, "train_log.json"), "w") as f:
+        json.dump({"config": json.loads(cfg.to_json()), "log": log,
+                   "corpora": sizes}, f, indent=2)
+    print(f"saved weights ({sum(v.size for v in flat.values())} params)")
+    return {"log": log}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=600)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--out", type=str, default="../artifacts")
+    args = ap.parse_args()
+    train(TINY, args.steps, args.batch, args.seq, args.out, lr=args.lr)
+
+
+if __name__ == "__main__":
+    main()

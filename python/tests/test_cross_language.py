@@ -1,0 +1,55 @@
+"""Cross-language pins: values the rust side hard-codes in its tests must
+match the python oracles that generated them."""
+
+import json
+import os
+
+import numpy as np
+
+from compile.kernels import ref
+
+
+def test_rust_hqq_fixture_matches():
+    """rust/src/quant/hqq.rs::matches_python_oracle_fixture pins these."""
+    data = np.array([((i * 7) % 16 - 8) / 4 for i in range(16)], np.float32)
+    w = data.reshape(8, 2)
+    codes, scale, zero = ref.quantize_group(w, 4, 4)
+    assert codes.flatten().tolist() == [
+        0, 15, 15, 10, 13, 5, 11, 0, 15, 15, 10, 10, 5, 5, 0, 0,
+    ]
+    np.testing.assert_allclose(
+        scale.flatten(), [0.23333333, 0.1, 0.1, 0.1], rtol=1e-6)
+    np.testing.assert_allclose(
+        zero.flatten(), [8.571428, 17.5, 15.0, -2.5], rtol=1e-5)
+
+
+def test_decode_fixture_is_current():
+    """artifacts/decode_fixture.json must match the shipped weights — if the
+    model is retrained, `make artifacts` must regenerate the fixture that
+    rust/tests/engine_numerics.rs replays."""
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    fixture_path = os.path.join(art, "decode_fixture.json")
+    weights_path = os.path.join(art, "weights.npz")
+    if not (os.path.exists(fixture_path) and os.path.exists(weights_path)):
+        import pytest
+
+        pytest.skip("artifacts not built")
+
+    import jax.numpy as jnp
+
+    from compile import model as model_mod
+    from compile.config import TINY
+    from compile.train import unflatten_params
+
+    fixture = json.load(open(fixture_path))
+    flat = dict(np.load(weights_path))
+    params = unflatten_params(flat, TINY)
+    tokens = jnp.array(fixture["prompt_tokens"], jnp.int32)
+    logits = model_mod.decode_reference(params, tokens, TINY)
+    got_argmax = [int(i) for i in jnp.argmax(logits, -1)]
+    assert got_argmax == fixture["argmax"], (
+        "fixture stale — run `python -m compile.fixtures --out ../artifacts`"
+    )
+    heads = np.array(fixture["logits_head"], np.float32)
+    np.testing.assert_allclose(
+        np.asarray(logits)[:, :8], heads, rtol=2e-3, atol=2e-3)

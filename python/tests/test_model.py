@@ -1,0 +1,180 @@
+"""L2 correctness: decode-module chain == full training forward, plus
+primitive-level properties (rotary, rmsnorm, router)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model as m
+from compile.config import TEST, ModelConfig
+
+settings.register_profile("ci", deadline=None, max_examples=10)
+settings.load_profile("ci")
+
+CFG = TEST
+
+
+def _params(seed=0, cfg=CFG):
+    return m.init_params(jax.random.PRNGKey(seed), cfg)
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+def test_rmsnorm_unit_scale():
+    x = jnp.array([[3.0, 4.0]])
+    y = m.rmsnorm(x, jnp.ones(2), 0.0)
+    np.testing.assert_allclose(
+        np.asarray(jnp.mean(y**2, -1)), 1.0, rtol=1e-5)
+
+
+@given(seed=st.integers(0, 1000), pos=st.integers(0, 63))
+def test_rope_preserves_norm(seed, pos):
+    rng = np.random.default_rng(seed)
+    x = jnp.array(rng.standard_normal((1, 2, 16)), jnp.float32)
+    cos, sin = m.rope_angles(jnp.array([pos]), 16, 10000.0)
+    y = m.apply_rope(x, cos[:, None, :], sin[:, None, :])
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(y), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1), rtol=1e-5)
+
+
+def test_rope_position_zero_is_identity():
+    x = jnp.ones((1, 2, 16))
+    cos, sin = m.rope_angles(jnp.array([0]), 16, 10000.0)
+    y = m.apply_rope(x, cos[:, None, :], sin[:, None, :])
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=1e-6)
+
+
+def test_rope_relative_property():
+    """<rope(q,p1), rope(k,p2)> depends only on p1 - p2."""
+    rng = np.random.default_rng(0)
+    q = jnp.array(rng.standard_normal((1, 1, 16)), jnp.float32)
+    k = jnp.array(rng.standard_normal((1, 1, 16)), jnp.float32)
+
+    def dot_at(pq, pk):
+        cq, sq = m.rope_angles(jnp.array([pq]), 16, 10000.0)
+        ck, sk = m.rope_angles(jnp.array([pk]), 16, 10000.0)
+        rq = m.apply_rope(q, cq[:, None, :], sq[:, None, :])
+        rk = m.apply_rope(k, ck[:, None, :], sk[:, None, :])
+        return float(jnp.sum(rq * rk))
+
+    assert abs(dot_at(5, 3) - dot_at(12, 10)) < 1e-4
+
+
+def test_router_probs_sum_to_one():
+    params = _params()
+    tokens = jnp.arange(12, dtype=jnp.int32)[None]
+    _, probs = m.forward_train(params, tokens, CFG)
+    np.testing.assert_allclose(np.asarray(probs.sum(-1)), 1.0, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode chain == train forward
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 100))
+def test_decode_reference_matches_forward_train(seed):
+    params = _params(seed)
+    rng = np.random.default_rng(seed)
+    tokens = jnp.array(rng.integers(0, CFG.vocab_size, 10), jnp.int32)
+    train_logits, _ = m.forward_train(params, tokens[None], CFG)
+    decode_logits = m.decode_reference(params, tokens, CFG)
+    np.testing.assert_allclose(
+        np.asarray(decode_logits), np.asarray(train_logits[0]),
+        rtol=2e-3, atol=2e-3)
+
+
+def test_prefill_attn_matches_sequential_decode():
+    """Chunked prefill must produce the same residual + cache as running
+    attn_mod token by token."""
+    params = _params(3)
+    layer = params["layers"][0]
+    rng = np.random.default_rng(3)
+    C = CFG.prefill_chunk
+    xs = jnp.array(rng.standard_normal((C, CFG.d_model)), jnp.float32)
+
+    kc = jnp.zeros((CFG.max_seq, CFG.n_kv_heads, CFG.head_dim))
+    vc = jnp.zeros_like(kc)
+    outs = []
+    for t in range(C):
+        y, kc, vc = m.attn_mod(
+            xs[t:t+1], layer["attn_ln"], layer["wq"], layer["wk"],
+            layer["wv"], layer["wo"], kc, vc, jnp.int32(t), cfg=CFG)
+        outs.append(y)
+    seq_out = jnp.concatenate(outs)
+
+    kc2 = jnp.zeros_like(kc)
+    vc2 = jnp.zeros_like(vc)
+    chunk_out, kc2, vc2 = m.prefill_attn_mod(
+        xs, layer["attn_ln"], layer["wq"], layer["wk"], layer["wv"],
+        layer["wo"], kc2, vc2, jnp.int32(0), cfg=CFG)
+
+    np.testing.assert_allclose(np.asarray(chunk_out), np.asarray(seq_out),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(kc2), np.asarray(kc),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(vc2), np.asarray(vc),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_prefill_padding_is_harmless():
+    """Padded tail tokens must not change valid-position outputs or the
+    cache rows that later decoding reads (positions < n_valid)."""
+    params = _params(4)
+    layer = params["layers"][0]
+    rng = np.random.default_rng(4)
+    C = CFG.prefill_chunk
+    n_valid = C - 3
+    xs = jnp.array(rng.standard_normal((C, CFG.d_model)), jnp.float32)
+    pad = jnp.array(rng.standard_normal((C, CFG.d_model)), jnp.float32)
+    xs_padded = jnp.concatenate([xs[:n_valid], pad[n_valid:]])
+
+    def run(x):
+        kc = jnp.zeros((CFG.max_seq, CFG.n_kv_heads, CFG.head_dim))
+        vc = jnp.zeros_like(kc)
+        return m.prefill_attn_mod(
+            x, layer["attn_ln"], layer["wq"], layer["wk"], layer["wv"],
+            layer["wo"], kc, vc, jnp.int32(0), cfg=CFG)
+
+    out_a, kc_a, vc_a = run(xs)
+    out_b, kc_b, vc_b = run(xs_padded)
+    np.testing.assert_allclose(np.asarray(out_a[:n_valid]),
+                               np.asarray(out_b[:n_valid]),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(kc_a[:n_valid]),
+                               np.asarray(kc_b[:n_valid]), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(vc_a[:n_valid]),
+                               np.asarray(vc_b[:n_valid]), atol=1e-6)
+
+
+def test_speculative_gate_signal_beats_chance():
+    """The paper's §3.2 heuristic: gate_{l+1} applied to layer-l residual
+    should predict layer-l+1's top experts much better than chance, even on
+    an untrained model (residual-stream continuity is architectural)."""
+    cfg = CFG
+    params = _params(7)
+    rng = np.random.default_rng(7)
+    tokens = jnp.array(rng.integers(0, cfg.vocab_size, 24), jnp.int32)[None]
+
+    # speculation from layer l-1's residual must match layer l's actual
+    # top-1 expert more often than the 1/E chance rate.
+    x = params["embed"][tokens]
+    correct = total = 0
+    resid = []
+    for layer in params["layers"]:
+        x = m.attention_full(layer, x, cfg)
+        resid.append(x)
+        x, probs = m.moe_full(layer, x, cfg)
+        if len(resid) >= 2:
+            nxt_layer = layer
+            spec_logits, _ = m.gate_mod(
+                resid[-2][0], nxt_layer["mlp_ln"], nxt_layer["w_gate"], cfg=cfg)
+            spec_top = np.asarray(jnp.argmax(spec_logits, -1))
+            act_top = np.asarray(jnp.argmax(probs[0], -1))
+            correct += (spec_top == act_top).sum()
+            total += len(act_top)
+    assert total > 0
+    assert correct / total > 1.2 / cfg.n_experts, (correct, total)

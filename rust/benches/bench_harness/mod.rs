@@ -1,0 +1,67 @@
+//! Minimal benchmark harness (criterion is not in the offline crate set).
+//!
+//! Measures wall time over adaptive iteration counts, reports mean /
+//! median / p95 and throughput. Used by all `cargo bench` targets
+//! (`harness = false` bins).
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p95: Duration,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>10} iters   mean {:>12?}   median {:>12?}   p95 {:>12?}",
+            self.name, self.iters, self.mean, self.median, self.p95
+        );
+    }
+
+    pub fn print_throughput(&self, items: f64, unit: &str) {
+        let per_s = items / self.mean.as_secs_f64();
+        println!(
+            "{:<44} mean {:>12?}   {:>12.1} {unit}/s",
+            self.name, self.mean, per_s
+        );
+    }
+}
+
+/// Run `f` repeatedly for ~`budget_ms`, after a warmup, and collect stats.
+pub fn bench(name: &str, budget_ms: u64, mut f: impl FnMut()) -> BenchResult {
+    // warmup
+    for _ in 0..3 {
+        f();
+    }
+    // estimate single-iteration cost
+    let t0 = Instant::now();
+    f();
+    let est = t0.elapsed().max(Duration::from_nanos(50));
+    let target = Duration::from_millis(budget_ms);
+    let iters = ((target.as_secs_f64() / est.as_secs_f64()).ceil() as u64).clamp(5, 100_000);
+
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    samples.sort();
+    let sum: Duration = samples.iter().sum();
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean: sum / iters as u32,
+        median: samples[samples.len() / 2],
+        p95: samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)],
+    }
+}
+
+/// `black_box` stand-in to defeat optimisation of pure computations.
+pub fn sink<T>(x: T) -> T {
+    std::hint::black_box(x)
+}

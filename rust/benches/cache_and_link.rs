@@ -1,0 +1,90 @@
+//! Benchmarks for the offloading control plane: LRU operations, cache
+//! manager decisions, the virtual timeline, and the copy engine. These are
+//! L3 hot-loop costs — they must be negligible against even the fastest
+//! simulated transfer (~100 µs).
+
+#[path = "bench_harness/mod.rs"]
+mod bench_harness;
+
+use std::sync::Arc;
+
+use bench_harness::{bench, sink};
+use moe_offload::cache::lru::LruSet;
+use moe_offload::cache::manager::CacheManager;
+use moe_offload::clock::Timeline;
+use moe_offload::config::{ModelConfig, QuantScheme};
+use moe_offload::memory::copy_engine::CopyEngine;
+use moe_offload::memory::device::{DeviceExpert, DeviceMemory};
+use moe_offload::memory::host::{ExpertId, HostExpertPool};
+use moe_offload::tensor::Tensor;
+use moe_offload::util::rng::Rng;
+
+fn main() {
+    println!("== cache / link / copy-engine benches ==");
+
+    // LRU touch at paper-typical k
+    let mut lru: LruSet<u16> = LruSet::new(4);
+    let mut i = 0u16;
+    let r = bench("lru_touch_k4", 200, || {
+        i = (i + 3) % 8;
+        sink(lru.touch(i));
+    });
+    r.print();
+
+    // cache manager full decision cycle
+    let mut mgr = CacheManager::new(6, 4, 4, DeviceMemory::new(u64::MAX, 0, 1));
+    let mut t = 0usize;
+    let r = bench("cache_manager_use+insert", 200, || {
+        t += 1;
+        let id = ExpertId::new(t % 6, (t * 5) % 8);
+        if matches!(
+            mgr.on_demand_use(id),
+            moe_offload::cache::manager::CacheEvent::Miss(_)
+        ) {
+            mgr.insert_loaded(
+                id,
+                DeviceExpert::Fp {
+                    w1: Tensor::zeros(vec![1, 1]),
+                    w3: Tensor::zeros(vec![1, 1]),
+                    w2: Tensor::zeros(vec![1, 1]),
+                },
+            )
+            .unwrap();
+        }
+    });
+    r.print();
+
+    // virtual timeline reservations
+    let mut tl = Timeline::new();
+    let r = bench("timeline_compute+transfer", 200, || {
+        tl.compute(1e-5, 0.0);
+        sink(tl.transfer(1e-4, 0.0));
+    });
+    r.print();
+
+    // copy engine round trip (stage a real tiny expert)
+    let mut cfg = ModelConfig::tiny();
+    cfg.n_layers = 1;
+    cfg.n_experts = 2;
+    let mut rng = Rng::new(5);
+    let pool = Arc::new(
+        HostExpertPool::build(&cfg, QuantScheme::Hqq { bits: 3 }, |_, _| {
+            let mut t = |shape: Vec<usize>| {
+                let n: usize = shape.iter().product();
+                Tensor::new((0..n).map(|_| rng.normal() as f32).collect(), shape).unwrap()
+            };
+            Ok((
+                t(vec![cfg.d_model, cfg.d_ff]),
+                t(vec![cfg.d_model, cfg.d_ff]),
+                t(vec![cfg.d_ff, cfg.d_model]),
+            ))
+        })
+        .unwrap(),
+    );
+    let mut ce = CopyEngine::new(pool, 4, 2);
+    let r = bench("copy_engine_stage_expert_roundtrip", 400, || {
+        let ticket = ce.submit(ExpertId::new(0, 0));
+        sink(ce.wait(ticket).unwrap());
+    });
+    r.print();
+}

@@ -1,0 +1,102 @@
+//! End-to-end engine benchmarks: per-token decode cost on the CPU testbed
+//! across policies and quantization schemes (one per Table 2 row), plus
+//! prefill chunk throughput. These drive the §Perf optimization loop.
+//!
+//! Requires `make artifacts`; exits cleanly otherwise.
+
+#[path = "bench_harness/mod.rs"]
+mod bench_harness;
+
+use bench_harness::bench;
+use moe_offload::config::{HardwareProfile, OffloadPolicy, QuantScheme, SimScale};
+use moe_offload::harness;
+
+fn main() {
+    let Ok(dir) = harness::artifacts_dir() else {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    };
+    let tokens = harness::chat_tokens(&dir, 512).expect("chat corpus");
+
+    println!("== engine decode benches (real PJRT CPU execution) ==");
+    for (name, policy) in [
+        ("full_k4_spec2", OffloadPolicy::Full { cache_k: 4, spec_n: 2 }),
+        ("lru_only_k4", OffloadPolicy::LruOnly { cache_k: 4 }),
+        ("on_demand", OffloadPolicy::OnDemand),
+        ("naive", OffloadPolicy::Naive),
+    ] {
+        let mut engine = harness::build_engine(
+            &dir,
+            QuantScheme::Hqq { bits: 4 },
+            QuantScheme::Hqq { bits: 3 },
+            policy,
+            HardwareProfile::rtx3060(),
+            SimScale::Tiny,
+        )
+        .unwrap();
+        let mut i = 0usize;
+        let r = bench(&format!("decode_token_{name}_q3"), 2500, || {
+            if engine.position() + 1 >= engine.weights.cfg.max_seq {
+                engine.reset_session(false);
+            }
+            engine.decode_step(tokens[i % tokens.len()]).unwrap();
+            i += 1;
+        });
+        r.print();
+    }
+
+    for bits in [2u8, 4] {
+        let mut engine = harness::build_engine(
+            &dir,
+            QuantScheme::Hqq { bits: 4 },
+            QuantScheme::Hqq { bits },
+            OffloadPolicy::Full { cache_k: 4, spec_n: 2 },
+            HardwareProfile::rtx3060(),
+            SimScale::Tiny,
+        )
+        .unwrap();
+        let mut i = 0usize;
+        let r = bench(&format!("decode_token_full_q{bits}"), 2500, || {
+            if engine.position() + 1 >= engine.weights.cfg.max_seq {
+                engine.reset_session(false);
+            }
+            engine.decode_step(tokens[i % tokens.len()]).unwrap();
+            i += 1;
+        });
+        r.print();
+    }
+
+    // prefill throughput (chunked path)
+    let mut engine = harness::build_engine(
+        &dir,
+        QuantScheme::Hqq { bits: 4 },
+        QuantScheme::Hqq { bits: 3 },
+        OffloadPolicy::Full { cache_k: 4, spec_n: 2 },
+        HardwareProfile::rtx3060(),
+        SimScale::Tiny,
+    )
+    .unwrap();
+    let chunk: Vec<u32> = tokens[..64].to_vec();
+    let r = bench("prefill_64_tokens_chunked", 4000, || {
+        engine.reset_session(false);
+        engine.prefill(&chunk).unwrap();
+    });
+    r.print();
+    println!(
+        "prefill tokens/s (wall): {:.1}",
+        64.0 / r.mean.as_secs_f64()
+    );
+
+    // host wall-time breakdown per module (perf-pass diagnostics)
+    println!("\nper-module host wall time (from the prefill engine):");
+    let mut entries: Vec<_> = engine.rt.stats.iter().collect();
+    entries.sort_by(|a, b| b.1.wall_s.partial_cmp(&a.1.wall_s).unwrap());
+    for (name, s) in entries {
+        println!(
+            "  {name:24} {:>8} calls  {:>9.3}s total  {:>9.1}µs/call",
+            s.calls,
+            s.wall_s,
+            s.wall_s / s.calls.max(1) as f64 * 1e6
+        );
+    }
+}

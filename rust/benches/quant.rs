@@ -1,0 +1,57 @@
+//! Benchmarks for the quantization substrate: HQQ fitting, bit-packing and
+//! dequantization — the host-side work on the expert transfer path.
+
+#[path = "bench_harness/mod.rs"]
+mod bench_harness;
+
+use bench_harness::{bench, sink};
+use moe_offload::quant::bitpack;
+use moe_offload::quant::hqq::{self, HqqConfig};
+use moe_offload::tensor::Tensor;
+use moe_offload::util::rng::Rng;
+
+fn random_weight(rng: &mut Rng, n_in: usize, n_out: usize) -> Tensor {
+    Tensor::new(
+        (0..n_in * n_out).map(|_| rng.normal() as f32 * 0.2).collect(),
+        vec![n_in, n_out],
+    )
+    .unwrap()
+}
+
+fn main() {
+    println!("== quant benches (tiny-model expert matrix 128x256) ==");
+    let mut rng = Rng::new(1);
+    let w = random_weight(&mut rng, 128, 256);
+
+    for bits in [2u8, 3, 4] {
+        let r = bench(&format!("hqq_quantize_{bits}bit_refined"), 300, || {
+            sink(hqq::quantize(&w, &HqqConfig::new(bits, 32)).unwrap());
+        });
+        r.print();
+        let r = bench(&format!("hqq_quantize_{bits}bit_plain"), 300, || {
+            sink(hqq::quantize(&w, &HqqConfig::plain(bits, 32)).unwrap());
+        });
+        r.print();
+    }
+
+    let q3 = hqq::quantize(&w, &HqqConfig::plain(3, 32)).unwrap();
+    let n = 128 * 256;
+    let codes = q3.unpack_codes().unwrap();
+
+    let r = bench("bitpack_pack_3bit_32k_codes", 300, || {
+        sink(bitpack::pack(&codes, 3).unwrap());
+    });
+    r.print_throughput(n as f64, "codes");
+
+    let mut buf = Vec::new();
+    let r = bench("bitpack_unpack_into_3bit_32k_codes", 300, || {
+        bitpack::unpack_into(&q3.packed, n, 3, &mut buf).unwrap();
+        sink(buf.len());
+    });
+    r.print_throughput(n as f64, "codes");
+
+    let r = bench("dequantize_full_matrix_3bit", 300, || {
+        sink(q3.dequantize().unwrap());
+    });
+    r.print_throughput(n as f64, "weights");
+}

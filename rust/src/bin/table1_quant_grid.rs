@@ -1,0 +1,116 @@
+//! TABLE 1: mixed-quantization grid — model size, held-out perplexity on
+//! two domains, and cloze accuracy, for attention × expert quantization
+//! schemes. Reproduces the paper's Table 1 (with the DESIGN.md
+//! substitutions: Wiki2→prose corpus, C4→code corpus, MMLU→cloze task).
+
+use moe_offload::config::{HardwareProfile, OffloadPolicy, QuantScheme, SimScale};
+use moe_offload::eval;
+use moe_offload::harness;
+use moe_offload::telemetry::Table;
+use moe_offload::util::cli::Cli;
+
+fn main() -> anyhow::Result<()> {
+    let args = Cli::new("table1_quant_grid", "Table 1: quantization grid")
+        .opt("windows", "3", "perplexity windows per corpus")
+        .opt("window", "96", "tokens per perplexity window")
+        .opt("cloze-items", "10", "cloze task items")
+        .flag("fast", "smaller grid (skip fp16 attention rows)")
+        .parse();
+
+    let dir = harness::artifacts_dir()?;
+    let prose = eval::load_corpus(&dir.join("corpus/prose_eval.bin"))?;
+    let code = eval::load_corpus(&dir.join("corpus/code_eval.bin"))?;
+
+    let attn_schemes: Vec<QuantScheme> = if args.has("fast") {
+        vec![QuantScheme::Hqq { bits: 4 }]
+    } else {
+        vec![
+            QuantScheme::Fp16,
+            QuantScheme::Hqq { bits: 4 },
+            QuantScheme::Hqq { bits: 3 },
+            QuantScheme::Hqq { bits: 2 },
+        ]
+    };
+    let expert_schemes = [
+        QuantScheme::Fp16,
+        QuantScheme::Hqq { bits: 4 },
+        QuantScheme::Hqq { bits: 3 },
+        QuantScheme::Hqq { bits: 2 },
+    ];
+
+    println!("TABLE 1 — mixed quantization: size vs quality");
+    println!(
+        "substitutions: Wiki2→prose corpus ppl, C4→code corpus ppl, MMLU→4-way cloze acc\n\
+         (tiny Mixtral-architecture model; sizes in MiB not GB)\n"
+    );
+    let mut table = Table::new(&[
+        "Attn quant",
+        "Experts quant",
+        "Size MiB",
+        "Prose ppl",
+        "Code ppl",
+        "Cloze acc",
+    ]);
+
+    for &attn in &attn_schemes {
+        for &expert in &expert_schemes {
+            let mut engine = harness::build_engine(
+                &dir,
+                attn,
+                expert,
+                OffloadPolicy::Full { cache_k: 4, spec_n: 2 },
+                HardwareProfile::a100_80gb(),
+                SimScale::Tiny,
+            )?;
+            let size_mib = engine.weights.total_bytes() as f64 / (1 << 20) as f64;
+            let ppl_prose = eval::perplexity(
+                &mut engine,
+                &prose,
+                args.get_usize("window"),
+                args.get_usize("windows"),
+            )?;
+            let ppl_code = eval::perplexity(
+                &mut engine,
+                &code,
+                args.get_usize("window"),
+                args.get_usize("windows"),
+            )?;
+            let cloze = eval::cloze_accuracy(
+                &mut engine,
+                &prose,
+                args.get_usize("cloze-items"),
+                48,
+                16,
+                17,
+            )?;
+            table.row(vec![
+                attn.label(),
+                expert.label(),
+                format!("{size_mib:.2}"),
+                format!("{ppl_prose:.3}"),
+                format!("{ppl_code:.3}"),
+                format!("{:.0}%", cloze * 100.0),
+            ]);
+        }
+    }
+    println!("{}", table.render());
+    println!(
+        "expected shape (paper): quality degrades slowly 16→4→3 bit and faster at 2 bit;\n\
+         quantizing EXPERTS costs less quality per byte saved than quantizing attention;\n\
+         experts dominate total size (≈{:.0}% here, 96.6% for Mixtral-8x7B).",
+        expert_fraction(&dir)? * 100.0
+    );
+    Ok(())
+}
+
+fn expert_fraction(dir: &std::path::Path) -> anyhow::Result<f64> {
+    let engine = harness::build_engine(
+        dir,
+        QuantScheme::Fp16,
+        QuantScheme::Fp16,
+        OffloadPolicy::OnDemand,
+        HardwareProfile::a100_80gb(),
+        SimScale::Tiny,
+    )?;
+    Ok(engine.weights.experts.total_bytes() as f64 / engine.weights.total_bytes() as f64)
+}

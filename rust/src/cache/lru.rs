@@ -1,0 +1,175 @@
+//! A small fixed-capacity LRU set (the per-layer expert cache).
+//!
+//! The paper keeps the k least-recently-used experts of every MoE layer on
+//! the GPU. Capacities are tiny (k ≤ 8 of E = 8 experts), so a VecDeque
+//! scan beats hash-map machinery; operations are O(k).
+
+use std::collections::VecDeque;
+
+#[derive(Debug, Clone)]
+pub struct LruSet<T: PartialEq + Copy> {
+    cap: usize,
+    /// Most-recently-used at the front.
+    items: VecDeque<T>,
+}
+
+impl<T: PartialEq + Copy> LruSet<T> {
+    pub fn new(cap: usize) -> Self {
+        LruSet { cap, items: VecDeque::with_capacity(cap) }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn contains(&self, x: &T) -> bool {
+        self.items.contains(x)
+    }
+
+    /// Mark `x` as used: promote to MRU if present (returns true = hit);
+    /// otherwise insert, returning the evicted LRU item via `evicted`.
+    pub fn touch(&mut self, x: T) -> (bool, Option<T>) {
+        if let Some(pos) = self.items.iter().position(|y| *y == x) {
+            let item = self.items.remove(pos).unwrap();
+            self.items.push_front(item);
+            return (true, None);
+        }
+        if self.cap == 0 {
+            return (false, None); // nothing cached, nothing evicted
+        }
+        let evicted = if self.items.len() == self.cap {
+            self.items.pop_back()
+        } else {
+            None
+        };
+        self.items.push_front(x);
+        (false, evicted)
+    }
+
+    /// Insert without counting as a hit/miss (promotion of a speculative
+    /// load into the cache). Returns the evicted LRU item, if any.
+    pub fn insert(&mut self, x: T) -> Option<T> {
+        let (_, ev) = self.touch(x);
+        ev
+    }
+
+    /// Remove a specific item (e.g. the engine invalidating an entry).
+    pub fn remove(&mut self, x: &T) -> bool {
+        if let Some(pos) = self.items.iter().position(|y| y == x) {
+            self.items.remove(pos);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// LRU→MRU snapshot (for traces / Fig 1's gray squares).
+    pub fn iter_mru(&self) -> impl Iterator<Item = &T> {
+        self.items.iter()
+    }
+
+    pub fn peek_lru(&self) -> Option<&T> {
+        self.items.back()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, ensure};
+
+    #[test]
+    fn hit_promotes_to_mru() {
+        let mut c = LruSet::new(3);
+        c.touch(1);
+        c.touch(2);
+        c.touch(3); // MRU order: 3 2 1
+        let (hit, ev) = c.touch(1);
+        assert!(hit && ev.is_none());
+        assert_eq!(c.iter_mru().copied().collect::<Vec<_>>(), vec![1, 3, 2]);
+    }
+
+    #[test]
+    fn evicts_lru_when_full() {
+        let mut c = LruSet::new(2);
+        c.touch(1);
+        c.touch(2);
+        let (hit, ev) = c.touch(3);
+        assert!(!hit);
+        assert_eq!(ev, Some(1));
+        assert!(c.contains(&2) && c.contains(&3) && !c.contains(&1));
+    }
+
+    #[test]
+    fn zero_capacity_never_stores() {
+        let mut c = LruSet::new(0);
+        let (hit, ev) = c.touch(7);
+        assert!(!hit && ev.is_none());
+        assert!(c.is_empty());
+        let (hit, _) = c.touch(7);
+        assert!(!hit, "k=0 must never hit");
+    }
+
+    #[test]
+    fn remove_works() {
+        let mut c = LruSet::new(3);
+        c.touch(1);
+        c.touch(2);
+        assert!(c.remove(&1));
+        assert!(!c.remove(&1));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn prop_lru_invariants() {
+        // 1) size never exceeds cap; 2) no duplicates; 3) a touch of x
+        // makes x MRU; 4) evicted item was the LRU.
+        check(
+            "lru-invariants",
+            200,
+            |r| {
+                let cap = r.below(5);
+                let ops: Vec<u8> = (0..60).map(|_| r.below(8) as u8).collect();
+                (cap, ops)
+            },
+            |(cap, ops)| {
+                let mut c = LruSet::new(*cap);
+                for &x in ops {
+                    let before: Vec<u8> = c.iter_mru().copied().collect();
+                    let (hit, ev) = c.touch(x);
+                    ensure(c.len() <= *cap, "size > cap")?;
+                    let mut seen = std::collections::HashSet::new();
+                    ensure(c.iter_mru().all(|i| seen.insert(*i)), "duplicates")?;
+                    if *cap > 0 {
+                        ensure(c.iter_mru().next() == Some(&x), "touched not MRU")?;
+                    }
+                    ensure(hit == before.contains(&x), "hit flag wrong")?;
+                    if let Some(e) = ev {
+                        ensure(before.last() == Some(&e), "evicted not LRU")?;
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn matches_figure1_example_semantics() {
+        // paper fig 1: with k=2 the cache holds the union of the last
+        // two distinct active experts.
+        let mut c = LruSet::new(2);
+        for e in [3, 5, 3, 3, 1] {
+            c.touch(e);
+        }
+        assert!(c.contains(&1) && c.contains(&3));
+        assert!(!c.contains(&5));
+    }
+}

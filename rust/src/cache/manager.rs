@@ -1,0 +1,319 @@
+//! The expert cache manager — composes the per-layer LRU cache (§3.1),
+//! the speculative-load buffers (§3.2) and device memory accounting into
+//! the placement policy the engine drives.
+//!
+//! Placement rules (paper §3.3 "Expert Offloading"):
+//! * each MoE layer keeps its own k-way LRU of experts;
+//! * speculatively loaded experts land in shared buffers and do NOT evict
+//!   cached experts until actually used; when used, they are promoted into
+//!   the layer's cache, evicting that layer's LRU entry;
+//! * evicting an expert just drops the device copy (host keeps masters);
+//! * k = 0 models the cache-less ablation: demand loads are transient and
+//!   freed right after use.
+
+use std::collections::VecDeque;
+
+use crate::cache::lru::LruSet;
+use crate::cache::speculative::SpeculativeStats;
+use crate::error::Result;
+use crate::memory::device::{DeviceExpert, DeviceMemory};
+use crate::memory::host::ExpertId;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lookup {
+    /// In the layer's LRU cache.
+    InCache,
+    /// Resident via an (unclaimed) speculative load.
+    InSpec,
+    Absent,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub spec: SpeculativeStats,
+    pub evictions: u64,
+    /// per-layer (hits, uses)
+    pub per_layer: Vec<(u64, u64)>,
+}
+
+impl CacheStats {
+    pub fn hit_ratio(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Event log entry (drives Fig 1's cache overlay + Fig 2 evaluations).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheEvent {
+    Hit(ExpertId),
+    SpecHit(ExpertId),
+    Miss(ExpertId),
+}
+
+pub struct CacheManager {
+    layers: Vec<LruSet<u16>>,
+    /// Unclaimed speculative loads, oldest first (bounded by spec_cap).
+    spec_resident: VecDeque<ExpertId>,
+    spec_cap: usize,
+    pub device: DeviceMemory,
+    pub stats: CacheStats,
+}
+
+impl CacheManager {
+    pub fn new(n_layers: usize, cache_k: usize, spec_cap: usize, device: DeviceMemory) -> Self {
+        CacheManager {
+            layers: (0..n_layers).map(|_| LruSet::new(cache_k)).collect(),
+            spec_resident: VecDeque::new(),
+            spec_cap,
+            device,
+            stats: CacheStats { per_layer: vec![(0, 0); n_layers], ..Default::default() },
+        }
+    }
+
+    pub fn cache_k(&self) -> usize {
+        self.layers.first().map(|l| l.capacity()).unwrap_or(0)
+    }
+
+    pub fn lookup(&self, id: ExpertId) -> Lookup {
+        if self.layers[id.layer as usize].contains(&id.expert) {
+            Lookup::InCache
+        } else if self.spec_resident.contains(&id) {
+            Lookup::InSpec
+        } else {
+            Lookup::Absent
+        }
+    }
+
+    /// Record a demand use of `id`. Mutates LRU order / promotes
+    /// speculative entries and updates stats. The caller handles `Miss` by
+    /// loading the expert and calling [`insert_loaded`].
+    pub fn on_demand_use(&mut self, id: ExpertId) -> CacheEvent {
+        let li = id.layer as usize;
+        self.stats.per_layer[li].1 += 1;
+        match self.lookup(id) {
+            Lookup::InCache => {
+                self.layers[li].touch(id.expert);
+                self.stats.hits += 1;
+                self.stats.per_layer[li].0 += 1;
+                CacheEvent::Hit(id)
+            }
+            Lookup::InSpec => {
+                // promote: leave device residency, move bookkeeping into
+                // the layer cache (paper: replaces that layer's LRU entry)
+                self.spec_resident.retain(|x| *x != id);
+                self.insert_into_layer(id);
+                self.stats.spec.useful += 1;
+                // a spec hit avoided a miss; count as hit for hit-ratio of
+                // the *combined* system but track separately too
+                self.stats.hits += 1;
+                self.stats.per_layer[li].0 += 1;
+                CacheEvent::SpecHit(id)
+            }
+            Lookup::Absent => {
+                self.stats.misses += 1;
+                self.stats.spec.missed += 1;
+                CacheEvent::Miss(id)
+            }
+        }
+    }
+
+    /// Install a demand-loaded expert (after the transfer completed).
+    pub fn insert_loaded(&mut self, id: ExpertId, e: DeviceExpert) -> Result<()> {
+        self.ensure_headroom()?;
+        self.device.insert(id, e)?;
+        self.insert_into_layer(id);
+        Ok(())
+    }
+
+    /// Install a speculatively loaded expert into the shared buffers.
+    /// Oldest unclaimed speculative entry is dropped when full.
+    pub fn insert_speculative(&mut self, id: ExpertId, e: DeviceExpert) -> Result<()> {
+        if self.lookup(id) != Lookup::Absent {
+            self.stats.spec.redundant += 1;
+            return Ok(());
+        }
+        while self.spec_resident.len() >= self.spec_cap.max(1) {
+            if let Some(old) = self.spec_resident.pop_front() {
+                self.device.evict(old);
+                self.stats.evictions += 1;
+            }
+        }
+        self.ensure_headroom()?;
+        self.device.insert(id, e)?;
+        self.spec_resident.push_back(id);
+        self.stats.spec.issued += 1;
+        Ok(())
+    }
+
+    /// For k = 0 (cache-less ablation): free a transiently loaded expert
+    /// right after use.
+    pub fn release_transient(&mut self, id: ExpertId) {
+        let li = id.layer as usize;
+        if self.layers[li].capacity() == 0 && !self.spec_resident.contains(&id) {
+            self.device.evict(id);
+        }
+    }
+
+    /// Layer-cache insert + device eviction of whatever LRU fell out.
+    fn insert_into_layer(&mut self, id: ExpertId) {
+        let li = id.layer as usize;
+        if let Some(evicted) = self.layers[li].insert(id.expert) {
+            self.device.evict(ExpertId { layer: id.layer, expert: evicted });
+            self.stats.evictions += 1;
+        }
+    }
+
+    /// Make sure at least one expert slot is free (spec buffers may be
+    /// holding stale entries when device budget is tight).
+    fn ensure_headroom(&mut self) -> Result<()> {
+        while self.device.resident_count() + 1 > self.device.expert_capacity() {
+            match self.spec_resident.pop_front() {
+                Some(old) => {
+                    self.device.evict(old);
+                    self.stats.evictions += 1;
+                }
+                None => break, // let device.insert surface the OOM
+            }
+        }
+        Ok(())
+    }
+
+    /// Cached experts of a layer, MRU first (Fig 1 overlay).
+    pub fn cached_of_layer(&self, layer: usize) -> Vec<u16> {
+        self.layers[layer].iter_mru().copied().collect()
+    }
+
+    pub fn spec_resident_ids(&self) -> impl Iterator<Item = &ExpertId> {
+        self.spec_resident.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn dummy() -> DeviceExpert {
+        DeviceExpert::Fp {
+            w1: Tensor::zeros(vec![1, 1]),
+            w3: Tensor::zeros(vec![1, 1]),
+            w2: Tensor::zeros(vec![1, 1]),
+        }
+    }
+
+    fn mgr(k: usize, spec_cap: usize, cap_experts: u64) -> CacheManager {
+        let device = DeviceMemory::new(cap_experts * 100, 0, 100);
+        CacheManager::new(2, k, spec_cap, device)
+    }
+
+    fn id(l: usize, e: usize) -> ExpertId {
+        ExpertId::new(l, e)
+    }
+
+    #[test]
+    fn miss_then_hit() {
+        let mut m = mgr(2, 4, 16);
+        assert_eq!(m.on_demand_use(id(0, 3)), CacheEvent::Miss(id(0, 3)));
+        m.insert_loaded(id(0, 3), dummy()).unwrap();
+        assert_eq!(m.on_demand_use(id(0, 3)), CacheEvent::Hit(id(0, 3)));
+        assert_eq!(m.stats.hits, 1);
+        assert_eq!(m.stats.misses, 1);
+    }
+
+    #[test]
+    fn lru_eviction_frees_device() {
+        let mut m = mgr(1, 4, 16);
+        m.insert_loaded(id(0, 1), dummy()).unwrap();
+        m.insert_loaded(id(0, 2), dummy()).unwrap(); // evicts expert 1
+        assert!(!m.device.contains(id(0, 1)));
+        assert!(m.device.contains(id(0, 2)));
+        assert_eq!(m.lookup(id(0, 1)), Lookup::Absent);
+    }
+
+    #[test]
+    fn layers_are_independent() {
+        let mut m = mgr(1, 4, 16);
+        m.insert_loaded(id(0, 1), dummy()).unwrap();
+        m.insert_loaded(id(1, 1), dummy()).unwrap();
+        assert_eq!(m.lookup(id(0, 1)), Lookup::InCache);
+        assert_eq!(m.lookup(id(1, 1)), Lookup::InCache);
+    }
+
+    #[test]
+    fn speculative_promotion() {
+        let mut m = mgr(1, 4, 16);
+        m.insert_loaded(id(0, 5), dummy()).unwrap();
+        m.insert_speculative(id(0, 7), dummy()).unwrap();
+        // spec expert does NOT evict the cached one until used
+        assert_eq!(m.lookup(id(0, 5)), Lookup::InCache);
+        assert_eq!(m.lookup(id(0, 7)), Lookup::InSpec);
+        // using it promotes + evicts the LRU cache entry
+        assert_eq!(m.on_demand_use(id(0, 7)), CacheEvent::SpecHit(id(0, 7)));
+        assert_eq!(m.lookup(id(0, 7)), Lookup::InCache);
+        assert_eq!(m.lookup(id(0, 5)), Lookup::Absent);
+        assert_eq!(m.stats.spec.useful, 1);
+    }
+
+    #[test]
+    fn spec_buffers_bounded() {
+        let mut m = mgr(1, 2, 16);
+        m.insert_speculative(id(0, 1), dummy()).unwrap();
+        m.insert_speculative(id(0, 2), dummy()).unwrap();
+        m.insert_speculative(id(0, 3), dummy()).unwrap(); // drops oldest
+        assert_eq!(m.lookup(id(0, 1)), Lookup::Absent);
+        assert_eq!(m.lookup(id(0, 2)), Lookup::InSpec);
+        assert_eq!(m.lookup(id(0, 3)), Lookup::InSpec);
+    }
+
+    #[test]
+    fn redundant_speculation_is_counted_not_duplicated() {
+        let mut m = mgr(1, 4, 16);
+        m.insert_loaded(id(0, 1), dummy()).unwrap();
+        m.insert_speculative(id(0, 1), dummy()).unwrap();
+        assert_eq!(m.stats.spec.redundant, 1);
+        assert_eq!(m.device.resident_count(), 1);
+    }
+
+    #[test]
+    fn k0_transient_release() {
+        let mut m = mgr(0, 4, 16);
+        assert_eq!(m.on_demand_use(id(0, 2)), CacheEvent::Miss(id(0, 2)));
+        m.insert_loaded(id(0, 2), dummy()).unwrap();
+        m.release_transient(id(0, 2));
+        assert!(!m.device.contains(id(0, 2)));
+        // and it never hits
+        assert_eq!(m.on_demand_use(id(0, 2)), CacheEvent::Miss(id(0, 2)));
+    }
+
+    #[test]
+    fn tight_device_budget_sheds_spec_buffers() {
+        let mut m = mgr(1, 4, 3); // device fits only 3 experts
+        m.insert_loaded(id(0, 1), dummy()).unwrap();
+        m.insert_loaded(id(1, 1), dummy()).unwrap();
+        m.insert_speculative(id(0, 2), dummy()).unwrap();
+        // a new demand load must shed the spec entry, not OOM; layer 1's
+        // k=1 LRU also evicts (1,1) when (1,2) is installed.
+        m.insert_loaded(id(1, 2), dummy()).unwrap();
+        assert_eq!(m.device.resident_count(), 2);
+        assert_eq!(m.lookup(id(0, 2)), Lookup::Absent);
+        assert_eq!(m.lookup(id(1, 1)), Lookup::Absent);
+        assert_eq!(m.lookup(id(1, 2)), Lookup::InCache);
+    }
+
+    #[test]
+    fn hit_ratio_math() {
+        let mut m = mgr(2, 4, 16);
+        m.on_demand_use(id(0, 1)); // miss
+        m.insert_loaded(id(0, 1), dummy()).unwrap();
+        m.on_demand_use(id(0, 1)); // hit
+        m.on_demand_use(id(0, 1)); // hit
+        assert!((m.stats.hit_ratio() - 2.0 / 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,10 @@
+//! Expert caching: per-layer LRU (paper §3.1) and the speculative
+//! prefetcher (paper §3.2), composed by the cache manager.
+
+pub mod lru;
+pub mod manager;
+pub mod speculative;
+
+pub use lru::LruSet;
+pub use manager::{CacheEvent, CacheManager, CacheStats};
+pub use speculative::SpeculativeStats;

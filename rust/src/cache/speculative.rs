@@ -1,0 +1,74 @@
+//! Speculative expert loading statistics (paper §3.2 / Fig 2 right).
+//!
+//! The guess itself is computed by the engine (it re-runs the *next*
+//! layer's gate on the *current* layer's pre-MoE hidden state); this module
+//! tracks guess quality: recall = fraction of actually-needed experts that
+//! had been speculatively loaded.
+
+#[derive(Debug, Clone, Default)]
+pub struct SpeculativeStats {
+    /// Experts speculatively fetched.
+    pub issued: u64,
+    /// Speculative fetches that were already resident / in flight anyway.
+    pub redundant: u64,
+    /// Needed experts that a speculative fetch made available.
+    pub useful: u64,
+    /// Needed experts not covered by speculation (demand loads).
+    pub missed: u64,
+}
+
+impl SpeculativeStats {
+    pub fn recall(&self) -> f64 {
+        let total = self.useful + self.missed;
+        if total == 0 {
+            0.0
+        } else {
+            self.useful as f64 / total as f64
+        }
+    }
+
+    /// Fraction of issued speculative transfers that turned out useful.
+    pub fn precision(&self) -> f64 {
+        if self.issued == 0 {
+            0.0
+        } else {
+            self.useful as f64 / self.issued as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &SpeculativeStats) {
+        self.issued += other.issued;
+        self.redundant += other.redundant;
+        self.useful += other.useful;
+        self.missed += other.missed;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recall_and_precision() {
+        let s = SpeculativeStats { issued: 10, redundant: 1, useful: 6, missed: 2 };
+        assert!((s.recall() - 0.75).abs() < 1e-12);
+        assert!((s.precision() - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_stats_are_zero() {
+        let s = SpeculativeStats::default();
+        assert_eq!(s.recall(), 0.0);
+        assert_eq!(s.precision(), 0.0);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = SpeculativeStats { issued: 1, redundant: 0, useful: 1, missed: 0 };
+        let b = SpeculativeStats { issued: 3, redundant: 1, useful: 1, missed: 1 };
+        a.merge(&b);
+        assert_eq!(a.issued, 4);
+        assert_eq!(a.useful, 2);
+        assert!((a.recall() - 2.0 / 3.0).abs() < 1e-12);
+    }
+}

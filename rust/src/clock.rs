@@ -1,0 +1,223 @@
+//! Virtual timeline for the discrete-event hardware model.
+//!
+//! Two serial resources model the paper's hardware: the GPU compute stream
+//! and the host→device copy stream (PCIe). Work reserved on one resource
+//! overlaps freely with the other — exactly the property speculative
+//! expert loading exploits (§3.2: transfers hidden behind the previous
+//! layer's compute). A third notion, `now`, tracks the sequential decode
+//! front: compute for step N+1 cannot begin before its inputs exist.
+//!
+//! All times are f64 seconds. The timeline is deterministic: timing depends
+//! only on the sequence of reservations, never on wall-clock.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Resource {
+    Gpu,
+    Link,
+}
+
+#[derive(Debug, Clone)]
+pub struct Timeline {
+    now: f64,
+    gpu_free: f64,
+    link_free: f64,
+    // accounting
+    pub gpu_busy: f64,
+    pub link_busy: f64,
+    pub gpu_ops: u64,
+    pub transfers: u64,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Span {
+    pub start: f64,
+    pub end: f64,
+}
+
+impl Default for Timeline {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Timeline {
+    pub fn new() -> Self {
+        Timeline {
+            now: 0.0,
+            gpu_free: 0.0,
+            link_free: 0.0,
+            gpu_busy: 0.0,
+            link_busy: 0.0,
+            gpu_ops: 0,
+            transfers: 0,
+        }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Reserve `dur` seconds on a resource, starting no earlier than
+    /// max(resource_free, `not_before`). Returns the span. Does NOT move
+    /// `now` — callers decide what the decode front waits on.
+    pub fn reserve(&mut self, res: Resource, dur: f64, not_before: f64) -> Span {
+        assert!(dur >= 0.0 && dur.is_finite(), "bad duration {dur}");
+        let free = match res {
+            Resource::Gpu => &mut self.gpu_free,
+            Resource::Link => &mut self.link_free,
+        };
+        let start = free.max(not_before);
+        let end = start + dur;
+        *free = end;
+        match res {
+            Resource::Gpu => {
+                self.gpu_busy += dur;
+                self.gpu_ops += 1;
+            }
+            Resource::Link => {
+                self.link_busy += dur;
+                self.transfers += 1;
+            }
+        }
+        Span { start, end }
+    }
+
+    /// Reserve GPU work that the decode front depends on: starts at
+    /// max(gpu_free, now, extra_dep) and advances `now` to its end.
+    pub fn compute(&mut self, dur: f64, extra_dep: f64) -> Span {
+        let dep = self.now.max(extra_dep);
+        let span = self.reserve(Resource::Gpu, dur, dep);
+        self.now = span.end;
+        span
+    }
+
+    /// Reserve a transfer whose completion others may wait on; `now` is
+    /// unaffected (transfers overlap the decode front).
+    pub fn transfer(&mut self, dur: f64, not_before: f64) -> Span {
+        self.reserve(Resource::Link, dur, not_before.max(self.now_floor()))
+    }
+
+    /// Block the decode front until `t` (e.g. waiting for a demand-load).
+    pub fn wait_until(&mut self, t: f64) {
+        if t > self.now {
+            self.now = t;
+        }
+    }
+
+    fn now_floor(&self) -> f64 {
+        // transfers can be issued as soon as the decision is known, which
+        // is never later than the decode front
+        0.0
+    }
+
+    /// Utilization of the link up to `now` (diagnostics).
+    pub fn link_utilization(&self) -> f64 {
+        if self.now <= 0.0 {
+            0.0
+        } else {
+            (self.link_busy / self.now).min(1.0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, ensure};
+
+    #[test]
+    fn compute_is_sequential() {
+        let mut t = Timeline::new();
+        let a = t.compute(1.0, 0.0);
+        let b = t.compute(2.0, 0.0);
+        assert_eq!(a.end, 1.0);
+        assert_eq!(b.start, 1.0);
+        assert_eq!(b.end, 3.0);
+        assert_eq!(t.now(), 3.0);
+    }
+
+    #[test]
+    fn transfer_overlaps_compute() {
+        let mut t = Timeline::new();
+        let c = t.compute(5.0, 0.0);
+        let x = t.transfer(2.0, 0.0);
+        // transfer runs during the compute span
+        assert!(x.start < c.end);
+        assert_eq!(t.now(), 5.0); // decode front unaffected by transfer
+    }
+
+    #[test]
+    fn dependent_compute_waits_for_transfer() {
+        let mut t = Timeline::new();
+        let x = t.transfer(3.0, 0.0);
+        t.wait_until(x.end);
+        let c = t.compute(1.0, 0.0);
+        assert_eq!(c.start, 3.0);
+        assert_eq!(c.end, 4.0);
+    }
+
+    #[test]
+    fn link_serializes_transfers() {
+        let mut t = Timeline::new();
+        let a = t.transfer(2.0, 0.0);
+        let b = t.transfer(2.0, 0.0);
+        assert_eq!(a.end, 2.0);
+        assert_eq!(b.start, 2.0);
+    }
+
+    #[test]
+    fn not_before_is_respected() {
+        let mut t = Timeline::new();
+        let x = t.transfer(1.0, 10.0);
+        assert_eq!(x.start, 10.0);
+    }
+
+    #[test]
+    fn prop_monotone_and_non_overlapping_per_resource() {
+        check(
+            "timeline-invariants",
+            100,
+            |r| {
+                (0..30)
+                    .map(|_| (r.below(3), r.f64() * 2.0, r.f64() * 5.0))
+                    .collect::<Vec<_>>()
+            },
+            |ops| {
+                let mut t = Timeline::new();
+                let mut last_gpu_end = 0.0f64;
+                let mut last_link_end = 0.0f64;
+                let mut last_now = 0.0f64;
+                for &(kind, dur, dep) in ops {
+                    match kind {
+                        0 => {
+                            let s = t.compute(dur, dep);
+                            ensure(s.start >= last_gpu_end - 1e-12, "gpu overlap")?;
+                            last_gpu_end = s.end;
+                        }
+                        1 => {
+                            let s = t.transfer(dur, dep);
+                            ensure(s.start >= last_link_end - 1e-12, "link overlap")?;
+                            last_link_end = s.end;
+                        }
+                        _ => t.wait_until(dep),
+                    }
+                    ensure(t.now() >= last_now - 1e-12, "now went backwards")?;
+                    last_now = t.now();
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn busy_accounting_sums_durations() {
+        let mut t = Timeline::new();
+        t.compute(1.5, 0.0);
+        t.compute(0.5, 0.0);
+        t.transfer(2.0, 0.0);
+        assert!((t.gpu_busy - 2.0).abs() < 1e-12);
+        assert!((t.link_busy - 2.0).abs() < 1e-12);
+        assert_eq!(t.gpu_ops, 2);
+        assert_eq!(t.transfers, 1);
+    }
+}

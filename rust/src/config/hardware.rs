@@ -1,0 +1,165 @@
+//! Hardware profiles for the discrete-event timing model.
+//!
+//! The paper benchmarks four setups (Table 2): free-tier Colab T4, RTX 3080
+//! Mobile laptop, RTX 3060 desktop, and an A100-80GB server. We model each
+//! as (device memory budget, host→device link, device memory bandwidth,
+//! per-kernel launch overhead). Link numbers are *effective* bandwidths —
+//! PCIe Gen3 x16 sustains ~11-12 GB/s of its 16 GB/s line rate with pinned
+//! buffers, Gen4 roughly double; Colab's virtualised T4 link measures
+//! slower in practice, which is visible in the paper's T4 rows.
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct HardwareProfile {
+    pub name: &'static str,
+    /// Device (GPU) memory budget available for experts, bytes.
+    pub vram_bytes: u64,
+    /// Effective host→device bandwidth, bytes/s (pinned buffers).
+    pub h2d_bytes_per_s: f64,
+    /// Per-transfer fixed latency, seconds (DMA setup + driver).
+    pub h2d_latency_s: f64,
+    /// Pageable (non-pinned) transfers run at this fraction of pinned BW.
+    pub pageable_factor: f64,
+    /// Device memory (HBM/GDDR) bandwidth, bytes/s — batch-1 GEMV compute
+    /// time is weight-bytes / this (memory-bound roofline).
+    pub hbm_bytes_per_s: f64,
+    /// Fixed per-kernel dispatch overhead, seconds. Calibrated to the
+    /// paper's *reference implementation* (PyTorch eager + HQQ dequant
+    /// glue, weak Colab host CPUs), not to an ideal CUDA-graphs stack —
+    /// this is what speculative pre-loading overlaps, so it matters for
+    /// Table 2's ablation gaps.
+    pub launch_overhead_s: f64,
+    /// LRU cache size per layer the paper chose for this GPU.
+    pub paper_cache_k: usize,
+}
+
+impl HardwareProfile {
+    pub const fn t4_colab() -> Self {
+        HardwareProfile {
+            name: "T4 (Colab)",
+            vram_bytes: 16 << 30,
+            h2d_bytes_per_s: 10.5e9,
+            h2d_latency_s: 100e-6,
+            pageable_factor: 0.45,
+            hbm_bytes_per_s: 300.0e9,
+            // Colab's weak host CPU: python dispatch + HQQ dequant glue
+            // dominate per-kernel cost in the reference implementation
+            launch_overhead_s: 800e-6,
+            paper_cache_k: 4,
+        }
+    }
+
+    pub const fn rtx3060() -> Self {
+        HardwareProfile {
+            name: "RTX 3060",
+            vram_bytes: 12 << 30,
+            h2d_bytes_per_s: 11.0e9, // PCIe Gen3 x16, pinned
+            h2d_latency_s: 50e-6,
+            pageable_factor: 0.5,
+            hbm_bytes_per_s: 360.0e9,
+            launch_overhead_s: 600e-6,
+            paper_cache_k: 2, // 12 GB card -> smaller cache (paper §3.3)
+        }
+    }
+
+    pub const fn rtx3080_mobile() -> Self {
+        HardwareProfile {
+            name: "RTX 3080 Mobile",
+            vram_bytes: 16 << 30,
+            h2d_bytes_per_s: 13.5e9, // Gen4 link but laptop power limits
+            h2d_latency_s: 50e-6,
+            pageable_factor: 0.5,
+            hbm_bytes_per_s: 448.0e9,
+            launch_overhead_s: 550e-6,
+            paper_cache_k: 4,
+        }
+    }
+
+    pub const fn a100_80gb() -> Self {
+        HardwareProfile {
+            name: "A100-80GB",
+            vram_bytes: 80 << 30,
+            h2d_bytes_per_s: 22.0e9, // PCIe Gen4 x16 server, pinned
+            h2d_latency_s: 30e-6,
+            pageable_factor: 0.55,
+            hbm_bytes_per_s: 2000.0e9,
+            launch_overhead_s: 500e-6,
+            paper_cache_k: 4,
+        }
+    }
+
+    /// The four Table-2 setups, fastest link last to match the paper's
+    /// column order (A100, 3080M, 3060, T4).
+    pub fn table2_profiles() -> Vec<HardwareProfile> {
+        vec![
+            Self::a100_80gb(),
+            Self::rtx3080_mobile(),
+            Self::rtx3060(),
+            Self::t4_colab(),
+        ]
+    }
+
+    pub fn by_name(name: &str) -> Option<HardwareProfile> {
+        let norm = name.to_lowercase().replace([' ', '-', '_'], "");
+        match norm.as_str() {
+            "t4" | "t4colab" | "colab" => Some(Self::t4_colab()),
+            "rtx3060" | "3060" => Some(Self::rtx3060()),
+            "rtx3080mobile" | "3080mobile" | "3080m" => Some(Self::rtx3080_mobile()),
+            "a100" | "a10080gb" => Some(Self::a100_80gb()),
+            _ => None,
+        }
+    }
+
+    /// Time to move `bytes` host→device (pinned).
+    pub fn h2d_time(&self, bytes: u64) -> f64 {
+        self.h2d_latency_s + bytes as f64 / self.h2d_bytes_per_s
+    }
+
+    /// Batch-1 compute time for a kernel that reads `bytes` of weights.
+    pub fn gemv_time(&self, bytes: u64) -> f64 {
+        self.launch_overhead_s + bytes as f64 / self.hbm_bytes_per_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(HardwareProfile::by_name("T4").unwrap().name, "T4 (Colab)");
+        assert_eq!(HardwareProfile::by_name("rtx-3060").unwrap().name, "RTX 3060");
+        assert_eq!(
+            HardwareProfile::by_name("3080 mobile").unwrap().name,
+            "RTX 3080 Mobile"
+        );
+        assert!(HardwareProfile::by_name("h100").is_none());
+    }
+
+    #[test]
+    fn transfer_time_scales_with_bytes() {
+        let p = HardwareProfile::rtx3060();
+        let t1 = p.h2d_time(1 << 20);
+        let t2 = p.h2d_time(2 << 20);
+        assert!(t2 > t1);
+        // latency dominates tiny transfers
+        let tiny = p.h2d_time(64);
+        assert!(tiny < 2.0 * p.h2d_latency_s);
+    }
+
+    #[test]
+    fn link_ordering_matches_paper() {
+        // paper Table 2: A100 fastest, then 3080M, 3060, T4 slowest.
+        let ps = HardwareProfile::table2_profiles();
+        let bw: Vec<f64> = ps.iter().map(|p| p.h2d_bytes_per_s).collect();
+        assert!(bw[0] > bw[1] && bw[1] > bw[2] && bw[2] > bw[3]);
+    }
+
+    #[test]
+    fn compute_is_much_faster_than_transfer() {
+        // the regime the paper exploits: moving an expert costs far more
+        // than running it once.
+        let p = HardwareProfile::t4_colab();
+        let expert_bytes = 57 << 20; // ~2-bit Mixtral expert
+        assert!(p.h2d_time(expert_bytes) > 5.0 * p.gemv_time(expert_bytes));
+    }
+}

@@ -1,0 +1,10 @@
+//! Configuration: model geometry (mirrors `python/compile/config.py`),
+//! hardware profiles for the timing model, and serving/offloading policy.
+
+pub mod hardware;
+pub mod model;
+pub mod serving;
+
+pub use hardware::HardwareProfile;
+pub use model::{Manifest, ModelConfig};
+pub use serving::{OffloadPolicy, QuantScheme, ServingConfig, SimScale};

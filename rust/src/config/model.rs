@@ -1,0 +1,242 @@
+//! Model geometry + artifact manifest, parsed from `artifacts/manifest.json`
+//! (written by `python/compile/aot.py`). Field names mirror
+//! `python/compile/config.py::ModelConfig`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub max_seq: usize,
+    pub rope_theta: f64,
+    pub norm_eps: f64,
+    pub group_size: usize,
+    pub prefill_chunk: usize,
+}
+
+impl ModelConfig {
+    pub fn q_dim(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim
+    }
+
+    /// f32 parameters per expert (w1 + w3 + w2).
+    pub fn params_per_expert(&self) -> usize {
+        3 * self.d_model * self.d_ff
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let get = |k: &str| -> Result<usize> {
+            v.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| Error::Config(format!("manifest config missing {k}")))
+        };
+        let getf = |k: &str| -> Result<f64> {
+            v.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| Error::Config(format!("manifest config missing {k}")))
+        };
+        let cfg = ModelConfig {
+            vocab_size: get("vocab_size")?,
+            d_model: get("d_model")?,
+            n_layers: get("n_layers")?,
+            n_heads: get("n_heads")?,
+            n_kv_heads: get("n_kv_heads")?,
+            head_dim: get("head_dim")?,
+            d_ff: get("d_ff")?,
+            n_experts: get("n_experts")?,
+            top_k: get("top_k")?,
+            max_seq: get("max_seq")?,
+            rope_theta: getf("rope_theta")?,
+            norm_eps: getf("norm_eps")?,
+            group_size: get("group_size")?,
+            prefill_chunk: get("prefill_chunk")?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        let check = |cond: bool, msg: &str| -> Result<()> {
+            if cond {
+                Ok(())
+            } else {
+                Err(Error::Config(msg.to_string()))
+            }
+        };
+        check(self.n_heads % self.n_kv_heads == 0, "n_heads % n_kv_heads != 0")?;
+        check(self.d_model % self.group_size == 0, "d_model % group_size != 0")?;
+        check(self.d_ff % self.group_size == 0, "d_ff % group_size != 0")?;
+        check(self.top_k <= self.n_experts, "top_k > n_experts")?;
+        check(self.top_k >= 1, "top_k < 1")?;
+        check(self.max_seq >= self.prefill_chunk, "max_seq < prefill_chunk")?;
+        Ok(())
+    }
+
+    /// The tiny config the default artifacts are built with (tests only —
+    /// real runs always read the manifest).
+    pub fn tiny() -> Self {
+        ModelConfig {
+            vocab_size: 256,
+            d_model: 128,
+            n_layers: 6,
+            n_heads: 4,
+            n_kv_heads: 2,
+            head_dim: 32,
+            d_ff: 256,
+            n_experts: 8,
+            top_k: 2,
+            max_seq: 512,
+            rope_theta: 10000.0,
+            norm_eps: 1e-5,
+            group_size: 32,
+            prefill_chunk: 16,
+        }
+    }
+
+    /// Mixtral-8x7B geometry — used by the timing model to translate the
+    /// tiny testbed's routing behaviour into paper-scale byte counts.
+    pub fn mixtral_8x7b() -> Self {
+        ModelConfig {
+            vocab_size: 32000,
+            d_model: 4096,
+            n_layers: 32,
+            n_heads: 32,
+            n_kv_heads: 8,
+            head_dim: 128,
+            d_ff: 14336,
+            n_experts: 8,
+            top_k: 2,
+            max_seq: 4096,
+            rope_theta: 1e6,
+            norm_eps: 1e-5,
+            group_size: 64,
+            prefill_chunk: 16,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ModuleInfo {
+    pub file: String,
+    pub arg_shapes: Vec<Vec<usize>>,
+    pub arg_dtypes: Vec<String>,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub config: ModelConfig,
+    pub modules: BTreeMap<String, ModuleInfo>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        let v = Json::parse(&text)?;
+        let config = ModelConfig::from_json(
+            v.get("config")
+                .ok_or_else(|| Error::Artifact("manifest missing 'config'".into()))?,
+        )?;
+        let mut modules = BTreeMap::new();
+        let mods = v
+            .get("modules")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| Error::Artifact("manifest missing 'modules'".into()))?;
+        for (name, m) in mods {
+            let file = m
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| Error::Artifact(format!("module {name} missing file")))?
+                .to_string();
+            let mut arg_shapes = Vec::new();
+            let mut arg_dtypes = Vec::new();
+            for arg in m.get("args").and_then(Json::as_arr).unwrap_or(&[]) {
+                let shape = arg
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .map(|xs| xs.iter().filter_map(Json::as_usize).collect())
+                    .unwrap_or_default();
+                arg_shapes.push(shape);
+                arg_dtypes.push(
+                    arg.get("dtype")
+                        .and_then(Json::as_str)
+                        .unwrap_or("float32")
+                        .to_string(),
+                );
+            }
+            modules.insert(name.clone(), ModuleInfo { file, arg_shapes, arg_dtypes });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), config, modules })
+    }
+
+    pub fn module(&self, name: &str) -> Result<&ModuleInfo> {
+        self.modules
+            .get(name)
+            .ok_or_else(|| Error::Artifact(format!("manifest has no module '{name}'")))
+    }
+
+    pub fn module_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.module(name)?.file))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_config_is_valid() {
+        ModelConfig::tiny().validate().unwrap();
+        ModelConfig::mixtral_8x7b().validate().unwrap();
+    }
+
+    #[test]
+    fn from_json_roundtrip() {
+        let cfg = ModelConfig::tiny();
+        let text = format!(
+            r#"{{"vocab_size":{},"d_model":{},"n_layers":{},"n_heads":{},
+                "n_kv_heads":{},"head_dim":{},"d_ff":{},"n_experts":{},
+                "top_k":{},"max_seq":{},"rope_theta":{},"norm_eps":{},
+                "group_size":{},"prefill_chunk":{}}}"#,
+            cfg.vocab_size, cfg.d_model, cfg.n_layers, cfg.n_heads,
+            cfg.n_kv_heads, cfg.head_dim, cfg.d_ff, cfg.n_experts,
+            cfg.top_k, cfg.max_seq, cfg.rope_theta, cfg.norm_eps,
+            cfg.group_size, cfg.prefill_chunk,
+        );
+        let parsed = ModelConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(parsed, cfg);
+    }
+
+    #[test]
+    fn invalid_config_rejected() {
+        let mut cfg = ModelConfig::tiny();
+        cfg.top_k = 100;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ModelConfig::tiny();
+        cfg.group_size = 7;
+        assert!(cfg.validate().is_err());
+    }
+}

@@ -1,0 +1,192 @@
+//! Serving / offloading policy configuration.
+
+use crate::error::{Error, Result};
+
+/// Weight quantization scheme (per weight class).
+///
+/// `Fp16` stores weights unquantized (we hold f32 in host memory but
+/// account 2 bytes/param for size/transfer, matching the paper's fp16
+/// baselines). `Hqq{bits}` is HQQ group quantization; group sizes follow
+/// the paper's §4.2 table (4-bit: g=64, 3-bit: g=64, 2-bit: g=16), scaled
+/// down proportionally for the tiny model where needed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum QuantScheme {
+    Fp16,
+    Hqq { bits: u8 },
+}
+
+impl QuantScheme {
+    pub fn parse(text: &str) -> Result<Self> {
+        match text.to_lowercase().as_str() {
+            "fp16" | "f16" | "16" => Ok(QuantScheme::Fp16),
+            "4" | "4bit" | "q4" | "hqq4" => Ok(QuantScheme::Hqq { bits: 4 }),
+            "3" | "3bit" | "q3" | "hqq3" => Ok(QuantScheme::Hqq { bits: 3 }),
+            "2" | "2bit" | "q2" | "hqq2" => Ok(QuantScheme::Hqq { bits: 2 }),
+            other => Err(Error::Config(format!("unknown quant scheme {other:?}"))),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            QuantScheme::Fp16 => "FP16".to_string(),
+            QuantScheme::Hqq { bits } => format!("{bits}-bit"),
+        }
+    }
+
+    pub fn bits(&self) -> u32 {
+        match self {
+            QuantScheme::Fp16 => 16,
+            QuantScheme::Hqq { bits } => *bits as u32,
+        }
+    }
+
+    /// Paper §4.2 group sizes, scaled by the model's group_size field for
+    /// the tiny testbed (which uses g=32 everywhere).
+    pub fn group_size(&self, model_group: usize) -> usize {
+        match self {
+            QuantScheme::Fp16 => model_group,
+            QuantScheme::Hqq { bits: 2 } => model_group.min(16),
+            QuantScheme::Hqq { .. } => model_group,
+        }
+    }
+
+    /// Stored/transferred bytes for `n` weights quantized with this scheme
+    /// in groups of `g`: packed codes + scale & zero per group. HQQ
+    /// deployments second-level-quantize group metadata to 8 bit (the
+    /// paper's "scale group size"), so we account 1 byte each.
+    pub fn bytes_for(&self, n: usize, g: usize) -> u64 {
+        match self {
+            QuantScheme::Fp16 => (n * 2) as u64,
+            QuantScheme::Hqq { bits } => {
+                let code_bytes = (n * (*bits as usize) + 7) / 8;
+                let groups = n.div_ceil(g);
+                (code_bytes + groups * 2) as u64 // u8 scale + u8 zero
+            }
+        }
+    }
+
+    /// Effective bits per parameter including group metadata.
+    pub fn effective_bits(&self, g: usize) -> f64 {
+        self.bytes_for(g * 1024, g) as f64 * 8.0 / (g * 1024) as f64
+    }
+}
+
+/// Which offloading algorithm variant to run — the Table 2 grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OffloadPolicy {
+    /// LRU cache + speculative expert pre-loading (the paper's algorithm).
+    Full { cache_k: usize, spec_n: usize },
+    /// LRU cache only ("W/o expert pre-loading").
+    LruOnly { cache_k: usize },
+    /// Load active experts on demand, no cache, no speculation
+    /// ("W/o LRU cache & pre-loading").
+    OnDemand,
+    /// Accelerate-style whole-layer offloading: every expert of a MoE layer
+    /// is transferred when the layer runs ("Naive offloading").
+    Naive,
+}
+
+impl OffloadPolicy {
+    pub fn label(&self) -> &'static str {
+        match self {
+            OffloadPolicy::Full { .. } => "Full algorithm",
+            OffloadPolicy::LruOnly { .. } => "W/o expert pre-loading",
+            OffloadPolicy::OnDemand => "W/o LRU cache & pre-loading",
+            OffloadPolicy::Naive => "Naive offloading (accelerate)",
+        }
+    }
+
+    pub fn cache_k(&self) -> usize {
+        match self {
+            OffloadPolicy::Full { cache_k, .. } | OffloadPolicy::LruOnly { cache_k } => *cache_k,
+            _ => 0,
+        }
+    }
+
+    pub fn spec_n(&self) -> usize {
+        match self {
+            OffloadPolicy::Full { spec_n, .. } => *spec_n,
+            _ => 0,
+        }
+    }
+}
+
+/// Whether timing is reported at the tiny testbed's own scale or translated
+/// to Mixtral-8x7B geometry (routing decisions always come from the real
+/// tiny-model execution; only byte/flop accounting changes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimScale {
+    Tiny,
+    Mixtral,
+}
+
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    pub policy: OffloadPolicy,
+    pub expert_quant: QuantScheme,
+    pub attn_quant: QuantScheme,
+    /// Number of shared staging buffers for async copies (paper: b = 4).
+    pub staging_buffers: usize,
+    pub sim_scale: SimScale,
+    pub max_new_tokens: usize,
+    pub temperature: f32,
+    pub seed: u64,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            policy: OffloadPolicy::Full { cache_k: 2, spec_n: 2 },
+            expert_quant: QuantScheme::Hqq { bits: 3 },
+            attn_quant: QuantScheme::Hqq { bits: 4 },
+            staging_buffers: 4,
+            sim_scale: SimScale::Tiny,
+            max_new_tokens: 128,
+            temperature: 1.0,
+            seed: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheme_parse() {
+        assert_eq!(QuantScheme::parse("fp16").unwrap(), QuantScheme::Fp16);
+        assert_eq!(QuantScheme::parse("2bit").unwrap(), QuantScheme::Hqq { bits: 2 });
+        assert!(QuantScheme::parse("5bit").is_err());
+    }
+
+    #[test]
+    fn bytes_ordering() {
+        // fewer bits => fewer bytes, fp16 largest
+        let n = 128 * 256;
+        let b2 = QuantScheme::Hqq { bits: 2 }.bytes_for(n, 16);
+        let b3 = QuantScheme::Hqq { bits: 3 }.bytes_for(n, 32);
+        let b4 = QuantScheme::Hqq { bits: 4 }.bytes_for(n, 32);
+        let bf = QuantScheme::Fp16.bytes_for(n, 32);
+        assert!(b2 < b3 && b3 < b4 && b4 < bf);
+    }
+
+    #[test]
+    fn effective_bits_match_paper_ballpark() {
+        // paper: 2-bit @ g=16 reports ~2.6 effective bits; our 8-bit-meta
+        // accounting lands at 2 + 16/16 = 3.0 (we skip their second-level
+        // scale sharing). Assert the ballpark + ordering.
+        let e2 = QuantScheme::Hqq { bits: 2 }.effective_bits(16);
+        assert!(e2 > 2.0 && e2 < 3.2, "{e2}");
+        let e4 = QuantScheme::Hqq { bits: 4 }.effective_bits(64);
+        assert!(e4 > 4.0 && e4 < 4.5, "{e4}");
+    }
+
+    #[test]
+    fn policy_labels_match_table2_rows() {
+        assert_eq!(
+            OffloadPolicy::Full { cache_k: 4, spec_n: 2 }.label(),
+            "Full algorithm"
+        );
+        assert_eq!(OffloadPolicy::Naive.label(), "Naive offloading (accelerate)");
+    }
+}

@@ -1,0 +1,271 @@
+//! Serving coordinator: request router + engine worker + TCP line server.
+//!
+//! The paper targets interactive batch-1 inference, so the coordinator is
+//! a single engine worker fed by a FIFO request queue (std mpsc; tokio is
+//! not in the offline crate set and one CPU-bound worker needs no
+//! reactor). Each request is a prompt + generation params; responses
+//! stream token chunks back over a bounded channel so callers can render
+//! incrementally — the property offloading labors to preserve.
+
+pub mod server;
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::engine::MoeEngine;
+use crate::error::{Error, Result};
+use crate::model::{ByteTokenizer, Sampler};
+use crate::telemetry::Metrics;
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: String,
+    pub max_tokens: usize,
+    pub temperature: f32,
+    pub top_p: f32,
+    /// Chat-format the prompt with the training template.
+    pub chat: bool,
+}
+
+impl Request {
+    pub fn new(prompt: impl Into<String>) -> Self {
+        Request {
+            id: 0,
+            prompt: prompt.into(),
+            max_tokens: 64,
+            temperature: 1.0,
+            top_p: 1.0,
+            chat: true,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub enum Event {
+    /// A decoded text fragment.
+    Token { request_id: u64, text: String },
+    /// Generation finished.
+    Done {
+        request_id: u64,
+        text: String,
+        prompt_tokens: usize,
+        new_tokens: usize,
+        wall_s: f64,
+        tokens_per_s_wall: f64,
+        tokens_per_s_sim: f64,
+    },
+    Error { request_id: u64, message: String },
+}
+
+/// Handle returned to submitters: stream of events for their request.
+pub struct ResponseStream {
+    pub request_id: u64,
+    pub events: Receiver<Event>,
+}
+
+impl ResponseStream {
+    /// Collect the final text (blocking).
+    pub fn wait_text(self) -> Result<String> {
+        for ev in self.events.iter() {
+            match ev {
+                Event::Done { text, .. } => return Ok(text),
+                Event::Error { message, .. } => return Err(Error::Serving(message)),
+                Event::Token { .. } => {}
+            }
+        }
+        Err(Error::Serving("worker dropped".into()))
+    }
+}
+
+enum Work {
+    Run(Request, Sender<Event>),
+    Shutdown,
+}
+
+/// The coordinator: owns the engine worker thread.
+pub struct Coordinator {
+    work_tx: Sender<Work>,
+    next_id: AtomicU64,
+    pub metrics: Arc<Metrics>,
+    running: Arc<AtomicBool>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// `make_engine` runs on the worker thread — PJRT handles are not
+    /// `Send`, so the engine must be *built* where it lives.
+    pub fn new<F>(make_engine: F, seed: u64) -> Self
+    where
+        F: FnOnce() -> Result<MoeEngine> + Send + 'static,
+    {
+        let (work_tx, work_rx) = channel::<Work>();
+        let metrics = Arc::new(Metrics::new());
+        let running = Arc::new(AtomicBool::new(true));
+        let m = Arc::clone(&metrics);
+        let r = Arc::clone(&running);
+        let worker = std::thread::spawn(move || {
+            let mut engine = match make_engine() {
+                Ok(e) => e,
+                Err(e) => {
+                    // fail every queued request with the build error
+                    while let Ok(work) = work_rx.recv() {
+                        if let Work::Run(req, tx) = work {
+                            let _ = tx.send(Event::Error {
+                                request_id: req.id,
+                                message: format!("engine init failed: {e}"),
+                            });
+                        } else {
+                            break;
+                        }
+                    }
+                    r.store(false, Ordering::SeqCst);
+                    return;
+                }
+            };
+            let tokenizer = ByteTokenizer::new();
+            let mut req_seed = seed;
+            while let Ok(work) = work_rx.recv() {
+                let (req, tx) = match work {
+                    Work::Run(req, tx) => (req, tx),
+                    Work::Shutdown => break,
+                };
+                m.inc("requests_started", 1);
+                let t0 = Instant::now();
+                req_seed = req_seed.wrapping_add(1);
+                match run_request(&mut engine, &tokenizer, &req, req_seed, &tx) {
+                    Ok((text, prompt_tokens, new_tokens, sim_tps)) => {
+                        let wall = t0.elapsed().as_secs_f64();
+                        m.inc("requests_ok", 1);
+                        m.inc("tokens_generated", new_tokens as u64);
+                        m.observe("request_latency_s", wall);
+                        let _ = tx.send(Event::Done {
+                            request_id: req.id,
+                            text,
+                            prompt_tokens,
+                            new_tokens,
+                            wall_s: wall,
+                            tokens_per_s_wall: new_tokens as f64 / wall.max(1e-9),
+                            tokens_per_s_sim: sim_tps,
+                        });
+                    }
+                    Err(e) => {
+                        m.inc("requests_failed", 1);
+                        let _ = tx.send(Event::Error {
+                            request_id: req.id,
+                            message: e.to_string(),
+                        });
+                    }
+                }
+            }
+            r.store(false, Ordering::SeqCst);
+        });
+        Coordinator {
+            work_tx,
+            next_id: AtomicU64::new(1),
+            metrics,
+            running,
+            worker: Some(worker),
+        }
+    }
+
+    /// Enqueue a request; returns a stream of events.
+    pub fn submit(&self, mut req: Request) -> ResponseStream {
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        req.id = id;
+        let (tx, rx) = channel();
+        self.metrics.inc("requests_enqueued", 1);
+        let _ = self.work_tx.send(Work::Run(req, tx));
+        ResponseStream { request_id: id, events: rx }
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.work_tx.send(Work::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let _ = self.work_tx.send(Work::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn run_request(
+    engine: &mut MoeEngine,
+    tokenizer: &ByteTokenizer,
+    req: &Request,
+    seed: u64,
+    tx: &Sender<Event>,
+) -> Result<(String, usize, usize, f64)> {
+    let prompt_tokens = if req.chat {
+        tokenizer.chat_turn(&req.prompt)
+    } else {
+        tokenizer.encode(&req.prompt)
+    };
+    if prompt_tokens.is_empty() {
+        return Err(Error::Serving("empty prompt".into()));
+    }
+    engine.reset_session(false);
+    let sim_before = engine.run.sim_total_scaled_s;
+    let tokens_before = engine.run.tokens.len();
+
+    let mut sampler = Sampler::new(req.temperature, req.top_p, seed);
+    let budget = req
+        .max_tokens
+        .min(engine.weights.cfg.max_seq.saturating_sub(prompt_tokens.len()).saturating_sub(1));
+    if budget == 0 {
+        return Err(Error::Serving("prompt exceeds context window".into()));
+    }
+
+    let logits = engine.prefill(&prompt_tokens)?;
+    let mut next = sampler.sample(logits.row(prompt_tokens.len() - 1)) as u32;
+    let mut generated = vec![next];
+    let _ = tx.send(Event::Token {
+        request_id: req.id,
+        text: tokenizer.decode(&[next]),
+    });
+    for _ in 1..budget {
+        let logits = engine.decode_step(next)?;
+        next = sampler.sample(&logits) as u32;
+        generated.push(next);
+        let _ = tx.send(Event::Token {
+            request_id: req.id,
+            text: tokenizer.decode(&[next]),
+        });
+        // stop at end-of-turn marker (newline after assistant text)
+        if generated.len() > 4 && tokenizer.decode(&generated).ends_with(".\n") {
+            break;
+        }
+    }
+    let sim_s = engine.run.sim_total_scaled_s - sim_before;
+    let n_new = engine.run.tokens.len() - tokens_before;
+    let sim_tps = if sim_s > 0.0 { n_new as f64 / sim_s } else { 0.0 };
+    Ok((tokenizer.decode(&generated), prompt_tokens.len(), generated.len(), sim_tps))
+}
+
+/// Drain helper for tests / examples: iterate a stream's token events.
+pub fn collect_events(stream: ResponseStream) -> Vec<Event> {
+    let mut out = Vec::new();
+    loop {
+        match stream.events.try_recv() {
+            Ok(ev) => {
+                let done = matches!(ev, Event::Done { .. } | Event::Error { .. });
+                out.push(ev);
+                if done {
+                    break;
+                }
+            }
+            Err(TryRecvError::Empty) => std::thread::sleep(std::time::Duration::from_millis(1)),
+            Err(TryRecvError::Disconnected) => break,
+        }
+    }
+    out
+}

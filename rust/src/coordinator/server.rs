@@ -1,0 +1,182 @@
+//! TCP line-protocol server over the coordinator.
+//!
+//! Protocol: one JSON object per line in, streamed JSON lines out:
+//!
+//! ```text
+//! -> {"prompt": "what is perplexity", "max_tokens": 48}
+//! <- {"type":"token","text":"t"}
+//! <- {"type":"done","text":"...","tokens_per_s_wall":...}
+//! ```
+//!
+//! One connection is served at a time per acceptor thread (batch-1 engine;
+//! concurrent connections queue at the coordinator).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use crate::coordinator::{Coordinator, Event, Request};
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+pub struct Server {
+    listener: TcpListener,
+    coordinator: Arc<Coordinator>,
+}
+
+impl Server {
+    pub fn bind(addr: &str, coordinator: Arc<Coordinator>) -> Result<Self> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| Error::Serving(format!("bind {addr}: {e}")))?;
+        Ok(Server { listener, coordinator })
+    }
+
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Serve `max_conns` connections (None = forever). Blocking.
+    pub fn serve(&self, max_conns: Option<usize>) -> Result<()> {
+        let mut served = 0usize;
+        for stream in self.listener.incoming() {
+            let stream = stream?;
+            let coord = Arc::clone(&self.coordinator);
+            // one thread per connection; engine access serializes in the
+            // coordinator queue
+            std::thread::spawn(move || {
+                let _ = handle_conn(stream, &coord);
+            });
+            served += 1;
+            if let Some(m) = max_conns {
+                if served >= m {
+                    break;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+pub fn parse_request(line: &str) -> Result<Request> {
+    let v = Json::parse(line)?;
+    let prompt = v
+        .get("prompt")
+        .and_then(Json::as_str)
+        .ok_or_else(|| Error::Serving("missing 'prompt'".into()))?
+        .to_string();
+    let mut req = Request::new(prompt);
+    if let Some(m) = v.get("max_tokens").and_then(Json::as_usize) {
+        req.max_tokens = m;
+    }
+    if let Some(t) = v.get("temperature").and_then(Json::as_f64) {
+        req.temperature = t as f32;
+    }
+    if let Some(p) = v.get("top_p").and_then(Json::as_f64) {
+        req.top_p = p as f32;
+    }
+    if let Some(c) = v.get("chat").and_then(Json::as_bool) {
+        req.chat = c;
+    }
+    Ok(req)
+}
+
+pub fn event_to_json(ev: &Event) -> Json {
+    match ev {
+        Event::Token { text, .. } => Json::obj(vec![
+            ("type", "token".into()),
+            ("text", Json::str(text.clone())),
+        ]),
+        Event::Done {
+            text,
+            prompt_tokens,
+            new_tokens,
+            wall_s,
+            tokens_per_s_wall,
+            tokens_per_s_sim,
+            ..
+        } => Json::obj(vec![
+            ("type", "done".into()),
+            ("text", Json::str(text.clone())),
+            ("prompt_tokens", (*prompt_tokens).into()),
+            ("new_tokens", (*new_tokens).into()),
+            ("wall_s", (*wall_s).into()),
+            ("tokens_per_s_wall", (*tokens_per_s_wall).into()),
+            ("tokens_per_s_sim", (*tokens_per_s_sim).into()),
+        ]),
+        Event::Error { message, .. } => Json::obj(vec![
+            ("type", "error".into()),
+            ("message", Json::str(message.clone())),
+        ]),
+    }
+}
+
+fn handle_conn(stream: TcpStream, coord: &Coordinator) -> Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        match parse_request(&line) {
+            Ok(req) => {
+                let resp = coord.submit(req);
+                for ev in resp.events.iter() {
+                    let done = matches!(ev, Event::Done { .. } | Event::Error { .. });
+                    writeln!(writer, "{}", event_to_json(&ev))?;
+                    if done {
+                        break;
+                    }
+                }
+            }
+            Err(e) => {
+                writeln!(
+                    writer,
+                    "{}",
+                    Json::obj(vec![
+                        ("type", "error".into()),
+                        ("message", Json::str(e.to_string())),
+                    ])
+                )?;
+            }
+        }
+        writer.flush()?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_request_happy_path() {
+        let r = parse_request(r#"{"prompt":"hi","max_tokens":8,"temperature":0.5}"#).unwrap();
+        assert_eq!(r.prompt, "hi");
+        assert_eq!(r.max_tokens, 8);
+        assert!((r.temperature - 0.5).abs() < 1e-6);
+        assert!(r.chat);
+    }
+
+    #[test]
+    fn parse_request_requires_prompt() {
+        assert!(parse_request(r#"{"max_tokens":8}"#).is_err());
+        assert!(parse_request("not json").is_err());
+    }
+
+    #[test]
+    fn event_json_roundtrip_fields() {
+        let ev = Event::Done {
+            request_id: 1,
+            text: "abc".into(),
+            prompt_tokens: 3,
+            new_tokens: 5,
+            wall_s: 0.5,
+            tokens_per_s_wall: 10.0,
+            tokens_per_s_sim: 2.5,
+        };
+        let j = event_to_json(&ev);
+        assert_eq!(j.get("type").unwrap().as_str(), Some("done"));
+        assert_eq!(j.get("new_tokens").unwrap().as_usize(), Some(5));
+    }
+}

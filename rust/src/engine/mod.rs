@@ -1,0 +1,604 @@
+//! The MoE generation engine — the paper's offloading algorithm driving
+//! real model execution through PJRT.
+//!
+//! Per decoded token, per MoE layer the engine:
+//! 1. runs attention + router (device-resident weights);
+//! 2. looks the routed experts up in the per-layer LRU cache (§3.1),
+//!    claiming any that a speculative transfer already fetched;
+//! 3. demand-loads misses over the (virtual-clock) link, blocking the
+//!    decode front for the remaining transfer time;
+//! 4. after the current layer's experts are loaded, applies the NEXT
+//!    layer's gate to the current residual and prefetches the top guesses
+//!    (§3.2) — those transfers overlap the current layer's expert compute;
+//! 5. runs the expert kernels (fused dequant+SwiGLU for quantized paths)
+//!    and mixes outputs by the renormalised top-k router weights.
+//!
+//! Timing is tracked on a virtual [`Timeline`] (costs from [`CostModel`]):
+//! routing/caching behaviour is real, reported seconds are the modeled
+//! hardware's. Wall time is tracked too for the CPU testbed numbers.
+
+pub mod cost;
+pub mod stats;
+pub mod trace;
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::cache::manager::{CacheEvent, CacheManager};
+use crate::clock::Timeline;
+use crate::config::{HardwareProfile, Manifest, OffloadPolicy, ServingConfig};
+use crate::error::{Error, Result};
+use crate::memory::copy_engine::{CopyEngine, TransferTicket};
+use crate::memory::device::DeviceMemory;
+use crate::memory::host::ExpertId;
+use crate::model::{ModelWeights, Sampler};
+use crate::runtime::{ExpertLits, Runtime, StaticLits};
+use crate::tensor::{softmax, top_k, Tensor};
+use cost::CostModel;
+use stats::{RunStats, TokenStats};
+use trace::{ActivationRecord, TraceRecorder};
+
+#[derive(Debug, Clone, Copy)]
+struct InFlight {
+    ticket: TransferTicket,
+    ready_at: f64,
+}
+
+/// Offline probe for Figure 2 (right): record the speculative router
+/// distribution gate_{l+a}(h_l) at every layer without affecting the
+/// schedule or the virtual clock.
+#[derive(Debug, Default)]
+pub struct SpecProbe {
+    pub aheads: Vec<usize>,
+    /// (token, layer, ahead, speculative probs over experts)
+    pub records: Vec<(usize, usize, usize, Vec<f32>)>,
+}
+
+pub struct MoeEngine {
+    pub rt: Runtime,
+    pub weights: ModelWeights,
+    /// Static weights pre-marshalled as PJRT literals (§Perf opt 2).
+    lits: StaticLits,
+    pub cache: CacheManager,
+    copy: CopyEngine,
+    pub timeline: Timeline,
+    pub cost: CostModel,
+    pub policy: OffloadPolicy,
+    pub trace: TraceRecorder,
+    pub spec_probe: Option<SpecProbe>,
+    pub run: RunStats,
+    /// Per-layer KV caches as opaque literals (§Perf opt 3: no host
+    /// round-trips between attention calls).
+    kv: Vec<Option<(xla::Literal, xla::Literal)>>,
+    /// Literal cache for device-resident experts (§Perf opt 4).
+    expert_lits: HashMap<ExpertId, ExpertLits>,
+    pos: usize,
+    in_flight: HashMap<ExpertId, InFlight>,
+    spec_queue: VecDeque<ExpertId>,
+    staging_buffers: usize,
+    token_counter: usize,
+}
+
+impl MoeEngine {
+    /// Assemble the engine from loaded artifacts + weights.
+    pub fn new(
+        manifest: &Manifest,
+        weights: ModelWeights,
+        serving: &ServingConfig,
+        profile: HardwareProfile,
+    ) -> Result<Self> {
+        let rt = Runtime::load(manifest)?;
+        Self::with_runtime(rt, weights, serving, profile)
+    }
+
+    pub fn with_runtime(
+        rt: Runtime,
+        weights: ModelWeights,
+        serving: &ServingConfig,
+        profile: HardwareProfile,
+    ) -> Result<Self> {
+        let cfg = weights.cfg.clone();
+        let cost = CostModel::new(
+            profile,
+            &cfg,
+            serving.sim_scale,
+            weights.attn_quant,
+            serving.expert_quant,
+        );
+        // device budget at accounting scale: VRAM minus shared weights, KV
+        // cache and staging buffers
+        let kv_bytes = match serving.sim_scale {
+            crate::config::SimScale::Tiny => {
+                (2 * cfg.n_layers * cfg.max_seq * cfg.kv_dim() * 2) as u64
+            }
+            crate::config::SimScale::Mixtral => {
+                let m = crate::config::ModelConfig::mixtral_8x7b();
+                (2 * m.n_layers * m.max_seq * m.kv_dim() * 2) as u64
+            }
+        };
+        let shared = cost.lm_head_bytes * 2
+            + (cost.attn_bytes + cost.gate_bytes) * ((cfg.n_layers as f64 * cost.layer_ratio) as u64);
+        let staging = serving.staging_buffers as u64 * cost.expert_wire_bytes;
+        let reserved = shared + kv_bytes + staging;
+        let device = DeviceMemory::new(
+            cost.profile.vram_bytes.max(reserved + cost.expert_wire_bytes),
+            reserved,
+            cost.expert_wire_bytes,
+        );
+        let cache = CacheManager::new(
+            cfg.n_layers,
+            serving.policy.cache_k(),
+            serving.staging_buffers,
+            device,
+        );
+        let copy = CopyEngine::new(Arc::clone(&weights.experts), serving.staging_buffers, 2);
+        let mut kv = Vec::with_capacity(cfg.n_layers);
+        for _ in 0..cfg.n_layers {
+            kv.push(Some(rt.zero_kv()?));
+        }
+        let lits = StaticLits::new(&weights)?;
+        Ok(MoeEngine {
+            rt,
+            weights,
+            lits,
+            cache,
+            copy,
+            timeline: Timeline::new(),
+            cost,
+            policy: serving.policy,
+            trace: TraceRecorder::new(false),
+            spec_probe: None,
+            run: RunStats::default(),
+            kv,
+            expert_lits: HashMap::new(),
+            pos: 0,
+            in_flight: HashMap::new(),
+            spec_queue: VecDeque::new(),
+            staging_buffers: serving.staging_buffers,
+            token_counter: 0,
+        })
+    }
+
+    pub fn position(&self) -> usize {
+        self.pos
+    }
+
+    /// Reset the session (KV cache + position); expert cache stays warm
+    /// unless `cold` is set.
+    pub fn reset_session(&mut self, cold: bool) {
+        for slot in &mut self.kv {
+            *slot = self.rt.zero_kv().ok();
+        }
+        self.pos = 0;
+        self.token_counter = 0;
+        if cold {
+            self.drain_in_flight();
+            let reserved = self.cache.device.used_bytes()
+                - self.cache.device.resident_count() as u64 * self.cost.expert_wire_bytes;
+            self.cache = CacheManager::new(
+                self.weights.cfg.n_layers,
+                self.cache.cache_k(),
+                self.staging_buffers,
+                DeviceMemory::new(
+                    self.cost
+                        .profile
+                        .vram_bytes
+                        .max(reserved + self.cost.expert_wire_bytes),
+                    reserved,
+                    self.cost.expert_wire_bytes,
+                ),
+            );
+        }
+    }
+
+    fn drain_in_flight(&mut self) {
+        for (_, inf) in self.in_flight.drain() {
+            let _ = self.copy.wait(inf.ticket);
+        }
+        self.spec_queue.clear();
+    }
+
+    // ---------------------------------------------------------------------
+    // decode
+    // ---------------------------------------------------------------------
+
+    /// Decode one token: returns next-token logits.
+    pub fn decode_step(&mut self, token: u32) -> Result<Vec<f32>> {
+        if self.pos >= self.weights.cfg.max_seq {
+            return Err(Error::Engine(format!(
+                "sequence length {} exceeds max_seq {}",
+                self.pos, self.weights.cfg.max_seq
+            )));
+        }
+        let sim_start = self.timeline.now();
+        let wall_start = Instant::now();
+        let mut tstats = TokenStats::default();
+
+        // embed (device-resident; gather cost ~ launch overhead)
+        self.timeline.compute(self.cost.profile.launch_overhead_s, 0.0);
+        let mut x = self.rt.embed(token, &self.lits.embed)?;
+
+        for l in 0..self.weights.cfg.n_layers {
+            x = self.layer_step(l, x, &mut tstats)?;
+        }
+
+        // lm head
+        self.timeline.compute(self.cost.lm_head_compute_s(), 0.0);
+        let logits = self.rt.lm_head(&x, &self.lits.final_ln, &self.lits.lm_head)?;
+
+        self.pos += 1;
+        self.token_counter += 1;
+        tstats.sim_s = self.timeline.now() - sim_start;
+        tstats.wall_s = wall_start.elapsed().as_secs_f64();
+        self.run.sim_total_scaled_s += self.cost.scale_token_time(tstats.sim_s);
+        self.run.wall_total_s += tstats.wall_s;
+        self.run.tokens.push(tstats);
+        Ok(logits.data)
+    }
+
+    /// One transformer layer on a [1, D] residual.
+    fn layer_step(&mut self, l: usize, x: Tensor, tstats: &mut TokenStats) -> Result<Tensor> {
+        // attention (weights borrowed in place — no per-layer copies on the
+        // hot path; see EXPERIMENTS.md §Perf)
+        self.timeline.compute(self.cost.attn_compute_s(), 0.0);
+        let (kc, vc) = self.kv[l].take().expect("kv cache present");
+        let (x, kc, vc) = self.rt.attn(&x, &self.lits.layers[l], &kc, &vc, self.pos)?;
+        self.kv[l] = Some((kc, vc));
+
+        // router
+        self.timeline.compute(self.cost.gate_compute_s(), 0.0);
+        let (gate_logits, h) = self.rt.gate(&x, &self.lits.layers[l])?;
+        let mut probs = gate_logits.row(0).to_vec();
+        softmax(&mut probs);
+        let selected = top_k(&probs, self.weights.cfg.top_k);
+        let mut sel_w: Vec<f32> = selected.iter().map(|&e| probs[e]).collect();
+        let wsum: f32 = sel_w.iter().sum();
+        for w in &mut sel_w {
+            *w /= wsum.max(1e-12);
+        }
+
+        self.trace.record(ActivationRecord {
+            token_index: self.token_counter,
+            layer: l,
+            probs: probs.clone(),
+            selected: selected.clone(),
+            cached_before: self.cache.cached_of_layer(l),
+        });
+
+        // Fig2R probe: speculative gate distributions at several
+        // look-aheads (measurement only — no timeline cost)
+        if let Some(probe) = self.spec_probe.take() {
+            let mut probe = probe;
+            for &a in &probe.aheads.clone() {
+                if l + a < self.weights.cfg.n_layers {
+                    let (sl, _) = self.rt.gate(&x, &self.lits.layers[l + a])?;
+                    let mut sp = sl.row(0).to_vec();
+                    softmax(&mut sp);
+                    probe.records.push((self.token_counter, l, a, sp));
+                }
+            }
+            self.spec_probe = Some(probe);
+        }
+
+        // expert placement per policy
+        let ids: Vec<ExpertId> = selected.iter().map(|&e| ExpertId::new(l, e)).collect();
+        match self.policy {
+            OffloadPolicy::Naive => {
+                // accelerate-style: synchronously stream the WHOLE MoE
+                // layer through the device, then compute.
+                for e in 0..self.weights.cfg.n_experts {
+                    let id = ExpertId::new(l, e);
+                    let span = self
+                        .timeline
+                        .transfer(self.cost.expert_transfer_s(), self.timeline.now());
+                    let before = self.timeline.now();
+                    self.timeline.wait_until(span.end);
+                    tstats.stall_s += self.timeline.now() - before;
+                    tstats.bytes_transferred += self.cost.expert_wire_bytes;
+                    let ticket = self.copy.submit(id);
+                    let (_, de) = self.copy.wait(ticket)?;
+                    self.cache.insert_loaded(id, de)?;
+                    tstats.misses += 1;
+                }
+            }
+            _ => {
+                // with k >= top_k the whole selection fits the layer cache,
+                // so load everything first (lets speculation overlap the
+                // expert compute, as in the paper). With smaller k, loading
+                // expert B could evict expert A before it runs — interleave
+                // load/use instead (speculation then fires post-compute).
+                if self.cache.cache_k() >= ids.len()
+                    || matches!(self.policy, OffloadPolicy::OnDemand)
+                {
+                    for &id in &ids {
+                        self.ensure_expert(id, tstats)?;
+                    }
+                    // speculative pre-loading fires after the current
+                    // layer's experts finished loading (paper §3.3)
+                    if matches!(self.policy, OffloadPolicy::Full { .. }) {
+                        self.speculate(l, &x, tstats)?;
+                    }
+                }
+            }
+        }
+
+        // expert compute + mix
+        let interleaved = !matches!(self.policy, OffloadPolicy::Naive | OffloadPolicy::OnDemand)
+            && self.cache.cache_k() < ids.len();
+        let mut y = vec![0.0f32; self.weights.cfg.d_model];
+        for (&e, &w) in selected.iter().zip(&sel_w) {
+            let id = ExpertId::new(l, e);
+            if interleaved {
+                self.ensure_expert(id, tstats)?;
+            }
+            self.timeline.compute(self.cost.expert_compute_s(), 0.0);
+            let out = self.run_expert(id, &h)?;
+            for (acc, v) in y.iter_mut().zip(&out.data) {
+                *acc += w * v;
+            }
+        }
+        if interleaved && matches!(self.policy, OffloadPolicy::Full { .. }) {
+            self.speculate(l, &x, tstats)?;
+        }
+        // transient release (k = 0 policies) — selected + naive extras
+        for e in 0..self.weights.cfg.n_experts {
+            self.cache.release_transient(ExpertId::new(l, e));
+        }
+
+        let mut out = x;
+        for (xi, yi) in out.data.iter_mut().zip(&y) {
+            *xi += yi;
+        }
+        Ok(out)
+    }
+
+    /// Make `id` resident, classifying hit / spec-hit / miss and advancing
+    /// the virtual clock for any wait.
+    fn ensure_expert(&mut self, id: ExpertId, tstats: &mut TokenStats) -> Result<()> {
+        // claim an in-flight speculative transfer first
+        if let Some(inf) = self.in_flight.remove(&id) {
+            self.spec_queue.retain(|x| *x != id);
+            let before = self.timeline.now();
+            self.timeline.wait_until(inf.ready_at);
+            tstats.stall_s += self.timeline.now() - before;
+            let (_, de) = self.copy.wait(inf.ticket)?;
+            self.cache.insert_speculative(id, de)?;
+        }
+        match self.cache.on_demand_use(id) {
+            CacheEvent::Hit(_) => {
+                tstats.cache_hits += 1;
+            }
+            CacheEvent::SpecHit(_) => {
+                tstats.spec_hits += 1;
+            }
+            CacheEvent::Miss(_) => {
+                let span = self
+                    .timeline
+                    .transfer(self.cost.expert_transfer_s(), self.timeline.now());
+                let before = self.timeline.now();
+                self.timeline.wait_until(span.end);
+                tstats.stall_s += self.timeline.now() - before;
+                tstats.bytes_transferred += self.cost.expert_wire_bytes;
+                tstats.misses += 1;
+                let ticket = self.copy.submit(id);
+                let (_, de) = self.copy.wait(ticket)?;
+                self.cache.insert_loaded(id, de)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Run a resident expert on `h`, marshalling (and caching) its
+    /// literals on first use after each transfer.
+    fn run_expert(&mut self, id: ExpertId, h: &Tensor) -> Result<Tensor> {
+        if !self.expert_lits.contains_key(&id) {
+            let de = self
+                .cache
+                .device
+                .get(id)
+                .ok_or_else(|| Error::Engine(format!("expert {id} not resident")))?;
+            self.expert_lits.insert(id, ExpertLits::new(de)?);
+            // prune entries whose experts were evicted since last sweep
+            if self.expert_lits.len() > 2 * self.cache.device.resident_count() + 8 {
+                let device = &self.cache.device;
+                self.expert_lits.retain(|k, _| device.contains(*k));
+            }
+        }
+        let lits = &self.expert_lits[&id];
+        self.rt.expert_with_lits(h, lits)
+    }
+
+    /// §3.2: apply layer l+1's gate to layer l's (pre-MoE) hidden state and
+    /// prefetch the best guesses.
+    fn speculate(&mut self, l: usize, x: &Tensor, tstats: &mut TokenStats) -> Result<()> {
+        let spec_n = self.policy.spec_n();
+        if spec_n == 0 || l + 1 >= self.weights.cfg.n_layers {
+            return Ok(());
+        }
+        // the extra gate evaluation costs GPU time
+        self.timeline.compute(self.cost.gate_compute_s(), 0.0);
+        let (spec_logits, _) = self.rt.gate(x, &self.lits.layers[l + 1])?;
+        let mut probs = spec_logits.row(0).to_vec();
+        softmax(&mut probs);
+        for &e in top_k(&probs, spec_n).iter() {
+            let id = ExpertId::new(l + 1, e);
+            if self.in_flight.contains_key(&id)
+                || self.cache.lookup(id) != crate::cache::manager::Lookup::Absent
+            {
+                continue;
+            }
+            // recycle the oldest unclaimed speculative buffer if full
+            while self.spec_queue.len() >= self.staging_buffers {
+                if let Some(old) = self.spec_queue.pop_front() {
+                    if let Some(inf) = self.in_flight.remove(&old) {
+                        let (_, de) = self.copy.wait(inf.ticket)?;
+                        // arrived: park it in the manager's spec buffers
+                        self.cache.insert_speculative(old, de)?;
+                    }
+                }
+            }
+            let span = self
+                .timeline
+                .transfer(self.cost.expert_transfer_s(), self.timeline.now());
+            tstats.bytes_transferred += self.cost.expert_wire_bytes;
+            let ticket = self.copy.submit(id);
+            self.in_flight.insert(id, InFlight { ticket, ready_at: span.end });
+            self.spec_queue.push_back(id);
+        }
+        Ok(())
+    }
+
+    // ---------------------------------------------------------------------
+    // prefill
+    // ---------------------------------------------------------------------
+
+    /// Encode a prompt with chunked prefill; returns logits for every
+    /// prompt position ([T, V]) for scoring / sampling the first token.
+    pub fn prefill(&mut self, tokens: &[u32]) -> Result<Tensor> {
+        if tokens.is_empty() {
+            return Err(Error::Engine("empty prompt".into()));
+        }
+        if self.pos + tokens.len() > self.weights.cfg.max_seq {
+            return Err(Error::Engine("prompt exceeds max_seq".into()));
+        }
+        let sim_start = self.timeline.now();
+        let c = self.weights.cfg.prefill_chunk;
+        let d = self.weights.cfg.d_model;
+        let mut all_logits: Vec<f32> = Vec::with_capacity(tokens.len() * self.weights.cfg.vocab_size);
+
+        let mut done = 0;
+        while done < tokens.len() {
+            let n_valid = (tokens.len() - done).min(c);
+            // embed chunk (gather in rust; pad with token 0)
+            let mut xdata = vec![0.0f32; c * d];
+            for t in 0..c {
+                let tok = if t < n_valid { tokens[done + t] as usize } else { 0 };
+                xdata[t * d..(t + 1) * d].copy_from_slice(self.weights.embed.row(tok));
+            }
+            let mut x = Tensor::new(xdata, vec![c, d])?;
+
+            for l in 0..self.weights.cfg.n_layers {
+                x = self.prefill_layer(l, x, n_valid)?;
+            }
+
+            self.timeline.compute(self.cost.lm_head_compute_s(), 0.0);
+            let logits = self.rt.lm_head(&x, &self.lits.final_ln, &self.lits.lm_head)?;
+            for t in 0..n_valid {
+                all_logits.extend_from_slice(logits.row(t));
+            }
+            self.pos += n_valid;
+            done += n_valid;
+        }
+        self.run.prefill_sim_s += self.timeline.now() - sim_start;
+        self.run.prefill_tokens += tokens.len();
+        Tensor::new(all_logits, vec![tokens.len(), self.weights.cfg.vocab_size])
+    }
+
+    fn prefill_layer(&mut self, l: usize, x: Tensor, n_valid: usize) -> Result<Tensor> {
+        let c = x.shape[0];
+        let d = self.weights.cfg.d_model;
+
+        self.timeline.compute(self.cost.attn_compute_s(), 0.0);
+        let (kc, vc) = self.kv[l].take().expect("kv cache present");
+        let (x, kc, vc) = self.rt.prefill_attn(&x, &self.lits.layers[l], &kc, &vc, self.pos)?;
+        self.kv[l] = Some((kc, vc));
+
+        self.timeline.compute(self.cost.gate_compute_s(), 0.0);
+        let (gate_logits, h) = self.rt.gate(&x, &self.lits.layers[l])?;
+
+        // per-token routing; prefill loads each needed expert once
+        let e_count = self.weights.cfg.n_experts;
+        let mut weights = vec![0.0f32; c * e_count];
+        let mut needed: Vec<usize> = Vec::new();
+        for t in 0..n_valid {
+            let mut probs = gate_logits.row(t).to_vec();
+            softmax(&mut probs);
+            let sel = top_k(&probs, self.weights.cfg.top_k);
+            let wsum: f32 = sel.iter().map(|&e| probs[e]).sum();
+            for &e in &sel {
+                weights[t * e_count + e] = probs[e] / wsum.max(1e-12);
+                if !needed.contains(&e) {
+                    needed.push(e);
+                }
+            }
+            self.trace.record(ActivationRecord {
+                token_index: self.token_counter + t,
+                layer: l,
+                probs,
+                selected: sel,
+                cached_before: self.cache.cached_of_layer(l),
+            });
+        }
+        needed.sort();
+
+        // load-then-use one expert at a time: with small k, loading the
+        // whole union first could evict an expert before it runs.
+        let mut tstats = TokenStats::default();
+        let mut y = vec![0.0f32; c * d];
+        for &e in &needed {
+            let id = ExpertId::new(l, e);
+            self.ensure_expert(id, &mut tstats)?;
+            self.timeline.compute(self.cost.expert_compute_s(), 0.0);
+            let out = self.run_expert(id, &h)?;
+            for t in 0..n_valid {
+                let w = weights[t * e_count + e];
+                if w > 0.0 {
+                    for i in 0..d {
+                        y[t * d + i] += w * out.data[t * d + i];
+                    }
+                }
+            }
+            self.cache.release_transient(id);
+        }
+
+        let mut out = x;
+        for (xi, yi) in out.data.iter_mut().zip(&y) {
+            *xi += yi;
+        }
+        // advance token counter for trace indexing
+        if l == self.weights.cfg.n_layers - 1 {
+            self.token_counter += n_valid;
+        }
+        Ok(out)
+    }
+
+    // ---------------------------------------------------------------------
+    // generation
+    // ---------------------------------------------------------------------
+
+    /// Prefill the prompt, then sample `max_new` tokens.
+    pub fn generate(
+        &mut self,
+        prompt: &[u32],
+        max_new: usize,
+        sampler: &mut Sampler,
+    ) -> Result<Vec<u32>> {
+        let logits = self.prefill(prompt)?;
+        let mut next = sampler.sample(logits.row(prompt.len() - 1)) as u32;
+        let mut out = vec![next];
+        for _ in 1..max_new {
+            if self.pos >= self.weights.cfg.max_seq {
+                break;
+            }
+            let logits = self.decode_step(next)?;
+            next = sampler.sample(&logits) as u32;
+            out.push(next);
+        }
+        Ok(out)
+    }
+
+    /// Teacher-forced scoring: per-position log-prob of the actual next
+    /// token (perplexity evaluation). Uses the prefill fast path.
+    pub fn score(&mut self, tokens: &[u32]) -> Result<Vec<f32>> {
+        let logits = self.prefill(tokens)?;
+        let mut lps = Vec::with_capacity(tokens.len() - 1);
+        for t in 0..tokens.len() - 1 {
+            lps.push(crate::tensor::log_softmax_at(
+                logits.row(t),
+                tokens[t + 1] as usize,
+            ));
+        }
+        Ok(lps)
+    }
+}

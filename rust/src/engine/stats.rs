@@ -1,0 +1,102 @@
+//! Per-token and per-run generation statistics: the simulated-time
+//! breakdown Table 2 reports, plus wall-clock for the real CPU testbed.
+
+#[derive(Debug, Clone, Default)]
+pub struct TokenStats {
+    /// Virtual seconds this token took (timeline delta, unscaled).
+    pub sim_s: f64,
+    /// Host wall seconds (real PJRT execution on this machine).
+    pub wall_s: f64,
+    pub cache_hits: u64,
+    pub spec_hits: u64,
+    pub misses: u64,
+    pub bytes_transferred: u64,
+    /// Virtual seconds the decode front spent stalled on transfers.
+    pub stall_s: f64,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct RunStats {
+    pub tokens: Vec<TokenStats>,
+    /// layer_ratio-scaled total virtual seconds (accounting geometry).
+    pub sim_total_scaled_s: f64,
+    pub wall_total_s: f64,
+    pub prefill_sim_s: f64,
+    pub prefill_tokens: usize,
+}
+
+impl RunStats {
+    pub fn decode_tokens(&self) -> usize {
+        self.tokens.len()
+    }
+
+    /// Decode throughput in the accounting geometry (Table 2's metric).
+    pub fn tokens_per_s_sim(&self) -> f64 {
+        if self.sim_total_scaled_s <= 0.0 {
+            0.0
+        } else {
+            self.tokens.len() as f64 / self.sim_total_scaled_s
+        }
+    }
+
+    pub fn tokens_per_s_wall(&self) -> f64 {
+        if self.wall_total_s <= 0.0 {
+            0.0
+        } else {
+            self.tokens.len() as f64 / self.wall_total_s
+        }
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.tokens.iter().map(|t| t.bytes_transferred).sum()
+    }
+
+    pub fn hit_ratio(&self) -> f64 {
+        let hits: u64 = self.tokens.iter().map(|t| t.cache_hits + t.spec_hits).sum();
+        let total: u64 = hits + self.tokens.iter().map(|t| t.misses).sum::<u64>();
+        if total == 0 {
+            0.0
+        } else {
+            hits as f64 / total as f64
+        }
+    }
+
+    pub fn mean_stall_s(&self) -> f64 {
+        if self.tokens.is_empty() {
+            return 0.0;
+        }
+        self.tokens.iter().map(|t| t.stall_s).sum::<f64>() / self.tokens.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_math() {
+        let mut rs = RunStats::default();
+        rs.tokens = vec![TokenStats::default(); 10];
+        rs.sim_total_scaled_s = 5.0;
+        rs.wall_total_s = 2.0;
+        assert!((rs.tokens_per_s_sim() - 2.0).abs() < 1e-12);
+        assert!((rs.tokens_per_s_wall() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_run_is_zero() {
+        let rs = RunStats::default();
+        assert_eq!(rs.tokens_per_s_sim(), 0.0);
+        assert_eq!(rs.hit_ratio(), 0.0);
+        assert_eq!(rs.mean_stall_s(), 0.0);
+    }
+
+    #[test]
+    fn hit_ratio_combines_cache_and_spec() {
+        let mut rs = RunStats::default();
+        rs.tokens = vec![
+            TokenStats { cache_hits: 1, spec_hits: 1, misses: 2, ..Default::default() },
+        ];
+        assert!((rs.hit_ratio() - 0.5).abs() < 1e-12);
+    }
+}

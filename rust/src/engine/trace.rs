@@ -1,0 +1,120 @@
+//! Expert-activation trace recorder — the data behind Figure 1 (activation
+//! heatmap with LRU overlay) and the offline cache/speculation evaluations
+//! (Figure 2).
+
+use crate::util::json::Json;
+
+/// One MoE-layer visit during decode/prefill of one token.
+#[derive(Debug, Clone)]
+pub struct ActivationRecord {
+    pub token_index: usize,
+    pub layer: usize,
+    /// Full router softmax over experts.
+    pub probs: Vec<f32>,
+    /// Selected top-k experts (indices into probs).
+    pub selected: Vec<usize>,
+    /// Cache contents (expert indices, MRU first) *before* this token's
+    /// demand loads — the gray squares of Fig 1.
+    pub cached_before: Vec<u16>,
+}
+
+#[derive(Debug, Default)]
+pub struct TraceRecorder {
+    pub records: Vec<ActivationRecord>,
+    pub enabled: bool,
+}
+
+impl TraceRecorder {
+    pub fn new(enabled: bool) -> Self {
+        TraceRecorder { records: Vec::new(), enabled }
+    }
+
+    pub fn record(&mut self, rec: ActivationRecord) {
+        if self.enabled {
+            self.records.push(rec);
+        }
+    }
+
+    /// Router probability matrix for one layer: rows = tokens, cols =
+    /// experts (Fig 1 heatmap data).
+    pub fn layer_heatmap(&self, layer: usize) -> Vec<Vec<f32>> {
+        self.records
+            .iter()
+            .filter(|r| r.layer == layer)
+            .map(|r| r.probs.clone())
+            .collect()
+    }
+
+    /// Sequence of selected expert sets for one layer, in token order
+    /// (drives the offline LRU / speculation replays).
+    pub fn layer_selections(&self, layer: usize) -> Vec<Vec<usize>> {
+        self.records
+            .iter()
+            .filter(|r| r.layer == layer)
+            .map(|r| r.selected.clone())
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::arr(self.records.iter().map(|r| {
+            Json::obj(vec![
+                ("token", r.token_index.into()),
+                ("layer", r.layer.into()),
+                (
+                    "probs",
+                    Json::arr(r.probs.iter().map(|&p| Json::Num(p as f64))),
+                ),
+                (
+                    "selected",
+                    Json::arr(r.selected.iter().map(|&e| Json::from(e))),
+                ),
+                (
+                    "cached",
+                    Json::arr(r.cached_before.iter().map(|&e| Json::from(e as usize))),
+                ),
+            ])
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(token: usize, layer: usize, sel: Vec<usize>) -> ActivationRecord {
+        ActivationRecord {
+            token_index: token,
+            layer,
+            probs: vec![0.1; 4],
+            selected: sel,
+            cached_before: vec![0],
+        }
+    }
+
+    #[test]
+    fn disabled_recorder_drops() {
+        let mut t = TraceRecorder::new(false);
+        t.record(rec(0, 0, vec![1]));
+        assert!(t.records.is_empty());
+    }
+
+    #[test]
+    fn heatmap_filters_by_layer() {
+        let mut t = TraceRecorder::new(true);
+        t.record(rec(0, 0, vec![1]));
+        t.record(rec(0, 1, vec![2]));
+        t.record(rec(1, 0, vec![3]));
+        assert_eq!(t.layer_heatmap(0).len(), 2);
+        assert_eq!(t.layer_selections(1), vec![vec![2]]);
+    }
+
+    #[test]
+    fn json_shape() {
+        let mut t = TraceRecorder::new(true);
+        t.record(rec(0, 2, vec![1, 3]));
+        let j = t.to_json();
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("layer").unwrap().as_usize(), Some(2));
+    }
+}

@@ -1,0 +1,53 @@
+//! Library-wide error type.
+
+use thiserror::Error;
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[derive(Error, Debug)]
+pub enum Error {
+    #[error("shape error: {0}")]
+    Shape(String),
+
+    #[error("npz/npy format error: {0}")]
+    Npz(String),
+
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    #[error("quantization error: {0}")]
+    Quant(String),
+
+    #[error("engine error: {0}")]
+    Engine(String),
+
+    #[error("serving error: {0}")]
+    Serving(String),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("json error: {0}")]
+    Json(#[from] crate::util::json::JsonError),
+
+    #[error("xla error: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+impl From<zip::result::ZipError> for Error {
+    fn from(e: zip::result::ZipError) -> Self {
+        Error::Npz(e.to_string())
+    }
+}

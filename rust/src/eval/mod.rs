@@ -1,0 +1,107 @@
+//! Quality evaluation: held-out perplexity (the paper's WikiText2/C4
+//! columns, substituted with the build corpora) and a cloze-completion
+//! accuracy task (the MMLU substitute) — see DESIGN.md substitution table.
+
+use std::path::Path;
+
+use crate::engine::MoeEngine;
+use crate::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// Load an eval corpus written by `python/compile/data.py`.
+pub fn load_corpus(path: &Path) -> Result<Vec<u32>> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| Error::Config(format!("cannot read corpus {}: {e}", path.display())))?;
+    Ok(bytes.into_iter().map(|b| b as u32).collect())
+}
+
+/// Perplexity over a corpus, evaluated in independent windows of
+/// `window` tokens (each window scored teacher-forced through the engine's
+/// chunked-prefill path).
+pub fn perplexity(
+    engine: &mut MoeEngine,
+    corpus: &[u32],
+    window: usize,
+    n_windows: usize,
+) -> Result<f64> {
+    if corpus.len() < window + 1 {
+        return Err(Error::Config("corpus shorter than eval window".into()));
+    }
+    let stride = (corpus.len() - window - 1) / n_windows.max(1);
+    let mut nll = 0.0f64;
+    let mut count = 0usize;
+    for w in 0..n_windows {
+        let start = w * stride;
+        let slice = &corpus[start..start + window];
+        engine.reset_session(false);
+        let lps = engine.score(slice)?;
+        nll -= lps.iter().map(|&x| x as f64).sum::<f64>();
+        count += lps.len();
+    }
+    Ok((nll / count as f64).exp())
+}
+
+/// A 4-way cloze task: pick the true continuation of a context among three
+/// distractors sampled elsewhere from the corpus; scored by total
+/// continuation log-prob. Returns accuracy (chance = 0.25).
+pub fn cloze_accuracy(
+    engine: &mut MoeEngine,
+    corpus: &[u32],
+    n_items: usize,
+    ctx_len: usize,
+    cont_len: usize,
+    seed: u64,
+) -> Result<f64> {
+    let item_len = ctx_len + cont_len;
+    if corpus.len() < 4 * item_len + 4 {
+        return Err(Error::Config("corpus too small for cloze task".into()));
+    }
+    let mut rng = Rng::new(seed);
+    let mut correct = 0usize;
+    for _ in 0..n_items {
+        let start = rng.below(corpus.len() - item_len - 1);
+        let ctx = &corpus[start..start + ctx_len];
+        let true_cont = &corpus[start + ctx_len..start + item_len];
+
+        // three distractor continuations from random other positions
+        let mut options: Vec<Vec<u32>> = vec![true_cont.to_vec()];
+        for _ in 0..3 {
+            let s = rng.below(corpus.len() - cont_len - 1);
+            options.push(corpus[s..s + cont_len].to_vec());
+        }
+        let order: Vec<usize> = {
+            let mut idx: Vec<usize> = (0..4).collect();
+            rng.shuffle(&mut idx);
+            idx
+        };
+
+        let mut best = (f64::NEG_INFINITY, 0usize);
+        for &oi in &order {
+            let mut seq = ctx.to_vec();
+            seq.extend_from_slice(&options[oi]);
+            engine.reset_session(false);
+            let lps = engine.score(&seq)?;
+            // score only the continuation region
+            let cont_lp: f64 = lps[ctx_len - 1..].iter().map(|&x| x as f64).sum();
+            if cont_lp > best.0 {
+                best = (cont_lp, oi);
+            }
+        }
+        if best.1 == 0 {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / n_items as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_corpus_missing_file_errors() {
+        assert!(load_corpus(Path::new("/nonexistent/corpus.bin")).is_err());
+    }
+
+    // end-to-end eval tests live in rust/tests/ (they need artifacts)
+}

@@ -1,0 +1,37 @@
+//! # moe-offload
+//!
+//! Fast inference of Mixture-of-Experts language models with offloading —
+//! a rust + JAX + Pallas reproduction of Eliseev & Mazur (2023).
+//!
+//! The crate is the Layer-3 coordinator of a three-layer stack:
+//!
+//! * **L1** (`python/compile/kernels/`): Pallas kernels — fused
+//!   group-dequant + SwiGLU expert FFN (the offloading hot spot).
+//! * **L2** (`python/compile/model.py`): the Mixtral-architecture decoder
+//!   in JAX, lowered per-module to HLO-text artifacts at build time.
+//! * **L3** (this crate): loads those artifacts via PJRT and owns
+//!   everything the paper contributes — the expert LRU cache, speculative
+//!   expert loading, mixed HQQ quantization, the two-tier memory system,
+//!   and the serving coordinator. Python never runs on the request path.
+//!
+//! Start at [`engine::MoeEngine`] for generation, [`coordinator`] for
+//! serving, and `rust/src/bin/` for the paper's tables and figures.
+
+pub mod cache;
+pub mod clock;
+pub mod config;
+pub mod engine;
+pub mod error;
+pub mod eval;
+pub mod harness;
+pub mod memory;
+pub mod model;
+pub mod npz;
+pub mod quant;
+pub mod runtime;
+pub mod telemetry;
+pub mod tensor;
+pub mod util;
+pub mod coordinator;
+
+pub use error::{Error, Result};

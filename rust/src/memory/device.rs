@@ -1,0 +1,223 @@
+//! Device-side expert storage: kernel-ready buffers + VRAM budget
+//! accounting.
+//!
+//! A `DeviceExpert` holds an expert in the exact layout the PJRT
+//! executables consume (byte-per-code uint8 + f32 scale/zero for the fused
+//! dequant kernel, or raw f32 for the fp path). `DeviceMemory` enforces the
+//! profile's VRAM budget the way the paper's implementation does: experts
+//! are only admitted if the budget (after reserving non-expert weights, KV
+//! cache and staging buffers) allows it.
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+use crate::memory::host::{ExpertId, HostExpert};
+use crate::quant::bitpack;
+use crate::tensor::{Tensor, TensorU8};
+
+/// Kernel-ready expert arguments.
+#[derive(Debug, Clone)]
+pub enum DeviceExpert {
+    Fp {
+        w1: Tensor,
+        w3: Tensor,
+        w2: Tensor,
+    },
+    Quant {
+        bits: u8,
+        q1: TensorU8,
+        s1: Tensor,
+        z1: Tensor,
+        q3: TensorU8,
+        s3: Tensor,
+        z3: Tensor,
+        q2: TensorU8,
+        s2: Tensor,
+        z2: Tensor,
+    },
+}
+
+impl DeviceExpert {
+    /// Unpack a host expert into kernel layout. This is the work the copy
+    /// engine's staging threads perform ("GPU-side" unpack in the model).
+    pub fn from_host(host: &HostExpert) -> Result<DeviceExpert> {
+        match host {
+            HostExpert::Fp { w1, w3, w2 } => Ok(DeviceExpert::Fp {
+                w1: w1.clone(),
+                w3: w3.clone(),
+                w2: w2.clone(),
+            }),
+            HostExpert::Quant { w1, w3, w2 } => {
+                let unpack = |m: &crate::quant::QuantizedMatrix| -> Result<(TensorU8, Tensor, Tensor)> {
+                    let codes = bitpack::unpack(&m.packed, m.n_in * m.n_out, m.bits)?;
+                    Ok((
+                        TensorU8::new(codes, vec![m.n_in, m.n_out])?,
+                        Tensor::new(m.scale.clone(), vec![m.n_groups(), m.n_out])?,
+                        Tensor::new(m.zero.clone(), vec![m.n_groups(), m.n_out])?,
+                    ))
+                };
+                let (q1, s1, z1) = unpack(w1)?;
+                let (q3, s3, z3) = unpack(w3)?;
+                let (q2, s2, z2) = unpack(w2)?;
+                Ok(DeviceExpert::Quant {
+                    bits: w1.bits,
+                    q1,
+                    s1,
+                    z1,
+                    q3,
+                    s3,
+                    z3,
+                    q2,
+                    s2,
+                    z2,
+                })
+            }
+        }
+    }
+
+    pub fn is_quant(&self) -> bool {
+        matches!(self, DeviceExpert::Quant { .. })
+    }
+}
+
+/// VRAM budget accounting + resident expert store.
+pub struct DeviceMemory {
+    budget_bytes: u64,
+    reserved_bytes: u64,
+    expert_bytes: u64,
+    used_bytes: u64,
+    resident: HashMap<ExpertId, DeviceExpert>,
+    pub peak_bytes: u64,
+}
+
+impl DeviceMemory {
+    /// `budget` is total VRAM; `reserved` covers non-expert weights, KV
+    /// cache, activations and staging buffers; `expert_bytes` is the
+    /// device footprint of one expert (uniform — all experts share shape).
+    pub fn new(budget: u64, reserved: u64, expert_bytes: u64) -> Self {
+        DeviceMemory {
+            budget_bytes: budget,
+            reserved_bytes: reserved,
+            expert_bytes,
+            used_bytes: reserved,
+            resident: HashMap::new(),
+            peak_bytes: reserved,
+        }
+    }
+
+    /// How many experts fit on the device at once.
+    pub fn expert_capacity(&self) -> usize {
+        if self.expert_bytes == 0 {
+            return usize::MAX;
+        }
+        ((self.budget_bytes.saturating_sub(self.reserved_bytes)) / self.expert_bytes) as usize
+    }
+
+    pub fn contains(&self, id: ExpertId) -> bool {
+        self.resident.contains_key(&id)
+    }
+
+    pub fn get(&self, id: ExpertId) -> Option<&DeviceExpert> {
+        self.resident.get(&id)
+    }
+
+    pub fn insert(&mut self, id: ExpertId, e: DeviceExpert) -> Result<()> {
+        if self.resident.contains_key(&id) {
+            return Ok(()); // idempotent re-insert
+        }
+        let new_used = self.used_bytes + self.expert_bytes;
+        if new_used > self.budget_bytes {
+            return Err(Error::Engine(format!(
+                "device OOM inserting {id}: {new_used} > {} (evict first)",
+                self.budget_bytes
+            )));
+        }
+        self.used_bytes = new_used;
+        self.peak_bytes = self.peak_bytes.max(self.used_bytes);
+        self.resident.insert(id, e);
+        Ok(())
+    }
+
+    /// Evict (paper: the LRU expert is copied back to RAM to preserve
+    /// memory parity — host master copies make that a pure drop here).
+    pub fn evict(&mut self, id: ExpertId) -> Option<DeviceExpert> {
+        let e = self.resident.remove(&id);
+        if e.is_some() {
+            self.used_bytes -= self.expert_bytes;
+        }
+        e
+    }
+
+    pub fn resident_count(&self) -> usize {
+        self.resident.len()
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.used_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mem(cap_experts: u64) -> DeviceMemory {
+        DeviceMemory::new(1000 + cap_experts * 100, 1000, 100)
+    }
+
+    fn id(l: usize, e: usize) -> ExpertId {
+        ExpertId::new(l, e)
+    }
+
+    fn dummy() -> DeviceExpert {
+        DeviceExpert::Fp {
+            w1: Tensor::zeros(vec![1, 1]),
+            w3: Tensor::zeros(vec![1, 1]),
+            w2: Tensor::zeros(vec![1, 1]),
+        }
+    }
+
+    #[test]
+    fn capacity_accounting() {
+        let m = mem(3);
+        assert_eq!(m.expert_capacity(), 3);
+    }
+
+    #[test]
+    fn insert_until_full_then_oom() {
+        let mut m = mem(2);
+        m.insert(id(0, 0), dummy()).unwrap();
+        m.insert(id(0, 1), dummy()).unwrap();
+        assert!(m.insert(id(0, 2), dummy()).is_err());
+        assert_eq!(m.resident_count(), 2);
+    }
+
+    #[test]
+    fn evict_frees_budget() {
+        let mut m = mem(1);
+        m.insert(id(0, 0), dummy()).unwrap();
+        assert!(m.insert(id(0, 1), dummy()).is_err());
+        assert!(m.evict(id(0, 0)).is_some());
+        m.insert(id(0, 1), dummy()).unwrap();
+        assert_eq!(m.resident_count(), 1);
+        assert!(m.evict(id(9, 9)).is_none());
+    }
+
+    #[test]
+    fn reinsert_is_idempotent() {
+        let mut m = mem(1);
+        m.insert(id(0, 0), dummy()).unwrap();
+        m.insert(id(0, 0), dummy()).unwrap();
+        assert_eq!(m.used_bytes(), 1100);
+    }
+
+    #[test]
+    fn peak_tracks_high_water() {
+        let mut m = mem(2);
+        m.insert(id(0, 0), dummy()).unwrap();
+        m.insert(id(0, 1), dummy()).unwrap();
+        m.evict(id(0, 0));
+        assert_eq!(m.peak_bytes, 1200);
+        assert_eq!(m.used_bytes(), 1100);
+    }
+}

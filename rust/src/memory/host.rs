@@ -1,0 +1,202 @@
+//! Host-side ("pinned RAM") expert pool.
+//!
+//! Mirrors the paper's §3.3 layout: every expert's parameters live in one
+//! contiguous byte buffer that can be moved with a single host→device copy.
+//! For quantized experts the buffer holds bit-packed codes followed by
+//! scale/zero metadata for each of the three FFN matrices; for fp16
+//! experts it holds raw f32 (accounted at 2 bytes/param on the link).
+
+use std::collections::BTreeMap;
+
+use crate::config::{ModelConfig, QuantScheme};
+use crate::error::{Error, Result};
+use crate::quant::hqq::{self, HqqConfig, QuantizedMatrix};
+use crate::tensor::Tensor;
+
+/// (layer, expert) identifier used across cache / memory / engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ExpertId {
+    pub layer: u16,
+    pub expert: u16,
+}
+
+impl ExpertId {
+    pub fn new(layer: usize, expert: usize) -> Self {
+        ExpertId { layer: layer as u16, expert: expert as u16 }
+    }
+}
+
+impl std::fmt::Display for ExpertId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "L{}E{}", self.layer, self.expert)
+    }
+}
+
+/// One expert's host-resident parameters.
+#[derive(Debug, Clone)]
+pub enum HostExpert {
+    /// Unquantized: raw f32 matrices (w1, w3, w2).
+    Fp { w1: Tensor, w3: Tensor, w2: Tensor },
+    /// HQQ-quantized matrices.
+    Quant {
+        w1: QuantizedMatrix,
+        w3: QuantizedMatrix,
+        w2: QuantizedMatrix,
+    },
+}
+
+impl HostExpert {
+    /// Bytes that cross the host→device link for this expert.
+    pub fn transfer_bytes(&self, scheme: QuantScheme) -> u64 {
+        match self {
+            HostExpert::Fp { w1, w3, w2 } => {
+                // fp16 deployment: 2 bytes/param
+                let n = w1.len() + w3.len() + w2.len();
+                match scheme {
+                    QuantScheme::Fp16 => (n * 2) as u64,
+                    _ => (n * 2) as u64,
+                }
+            }
+            HostExpert::Quant { w1, w3, w2 } => {
+                w1.transfer_bytes() + w3.transfer_bytes() + w2.transfer_bytes()
+            }
+        }
+    }
+
+    /// Bytes the expert occupies resident on the device.
+    pub fn device_bytes(&self) -> u64 {
+        match self {
+            HostExpert::Fp { w1, w3, w2 } => ((w1.len() + w3.len() + w2.len()) * 2) as u64,
+            HostExpert::Quant { w1, w3, w2 } => {
+                w1.transfer_bytes() + w3.transfer_bytes() + w2.transfer_bytes()
+            }
+        }
+    }
+}
+
+/// All experts of the model, host-resident, keyed by (layer, expert).
+pub struct HostExpertPool {
+    pub scheme: QuantScheme,
+    pub experts: BTreeMap<ExpertId, HostExpert>,
+    cfg: ModelConfig,
+}
+
+impl HostExpertPool {
+    /// Build the pool from raw f32 expert weights, quantizing per `scheme`.
+    ///
+    /// `get_weights(layer, expert)` returns (w1 [D,FF], w3 [D,FF], w2 [FF,D]).
+    pub fn build(
+        cfg: &ModelConfig,
+        scheme: QuantScheme,
+        mut get_weights: impl FnMut(usize, usize) -> Result<(Tensor, Tensor, Tensor)>,
+    ) -> Result<Self> {
+        let mut experts = BTreeMap::new();
+        for layer in 0..cfg.n_layers {
+            for expert in 0..cfg.n_experts {
+                let (w1, w3, w2) = get_weights(layer, expert)?;
+                let he = match scheme {
+                    QuantScheme::Fp16 => HostExpert::Fp { w1, w3, w2 },
+                    QuantScheme::Hqq { bits } => {
+                        let g = scheme.group_size(cfg.group_size);
+                        let hcfg = HqqConfig::new(bits, g);
+                        HostExpert::Quant {
+                            w1: hqq::quantize(&w1, &hcfg)?,
+                            w3: hqq::quantize(&w3, &hcfg)?,
+                            w2: hqq::quantize(&w2, &hcfg)?,
+                        }
+                    }
+                };
+                experts.insert(ExpertId::new(layer, expert), he);
+            }
+        }
+        Ok(HostExpertPool { scheme, experts, cfg: cfg.clone() })
+    }
+
+    pub fn get(&self, id: ExpertId) -> Result<&HostExpert> {
+        self.experts
+            .get(&id)
+            .ok_or_else(|| Error::Engine(format!("no host expert {id}")))
+    }
+
+    /// Transfer size of one (representative) expert.
+    pub fn expert_transfer_bytes(&self) -> u64 {
+        self.experts
+            .values()
+            .next()
+            .map(|e| e.transfer_bytes(self.scheme))
+            .unwrap_or(0)
+    }
+
+    /// Total host bytes across all experts.
+    pub fn total_bytes(&self) -> u64 {
+        self.experts
+            .values()
+            .map(|e| e.transfer_bytes(self.scheme))
+            .sum()
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tiny_cfg() -> ModelConfig {
+        let mut c = ModelConfig::tiny();
+        c.n_layers = 2;
+        c.n_experts = 2;
+        c.d_model = 32;
+        c.d_ff = 64;
+        c.group_size = 16;
+        c
+    }
+
+    fn rand_t(rng: &mut Rng, shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor::new((0..n).map(|_| rng.normal() as f32 * 0.1).collect(), shape).unwrap()
+    }
+
+    fn build_pool(scheme: QuantScheme) -> HostExpertPool {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(1);
+        HostExpertPool::build(&cfg, scheme, |_, _| {
+            Ok((
+                rand_t(&mut rng, vec![32, 64]),
+                rand_t(&mut rng, vec![32, 64]),
+                rand_t(&mut rng, vec![64, 32]),
+            ))
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn pool_has_all_experts() {
+        let pool = build_pool(QuantScheme::Hqq { bits: 4 });
+        assert_eq!(pool.experts.len(), 4);
+        assert!(pool.get(ExpertId::new(1, 1)).is_ok());
+        assert!(pool.get(ExpertId::new(2, 0)).is_err());
+    }
+
+    #[test]
+    fn quantized_pool_is_smaller_than_fp() {
+        let q2 = build_pool(QuantScheme::Hqq { bits: 2 }).total_bytes();
+        let q4 = build_pool(QuantScheme::Hqq { bits: 4 }).total_bytes();
+        let fp = build_pool(QuantScheme::Fp16).total_bytes();
+        assert!(q2 < q4 && q4 < fp, "{q2} {q4} {fp}");
+    }
+
+    #[test]
+    fn transfer_bytes_matches_scheme_accounting() {
+        let pool = build_pool(QuantScheme::Hqq { bits: 3 });
+        let per = pool.expert_transfer_bytes();
+        // 3 matrices, each n=2048 params, g=16 (2-bit would shrink groups;
+        // 3-bit keeps model group 16 here)
+        let scheme = QuantScheme::Hqq { bits: 3 };
+        let expected = 3 * scheme.bytes_for(2048, 16);
+        assert_eq!(per, expected);
+    }
+}

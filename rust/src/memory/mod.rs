@@ -1,0 +1,11 @@
+//! Two-tier memory substrate: host "pinned" expert pool, device budget
+//! accounting, staging buffers, and the async copy engine that moves
+//! quantized expert bytes across the modeled PCIe link.
+
+pub mod copy_engine;
+pub mod device;
+pub mod host;
+
+pub use copy_engine::{CopyEngine, TransferTicket};
+pub use device::DeviceMemory;
+pub use host::{ExpertId, HostExpertPool};

@@ -1,0 +1,11 @@
+//! Model-side substrates: weight loading (npz → structured layers, with
+//! attention-side quantization applied), the byte-level tokenizer + chat
+//! template, and the sampler.
+
+pub mod sampler;
+pub mod tokenizer;
+pub mod weights;
+
+pub use sampler::Sampler;
+pub use tokenizer::ByteTokenizer;
+pub use weights::ModelWeights;

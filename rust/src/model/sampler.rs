@@ -1,0 +1,132 @@
+//! Token sampling.
+//!
+//! The paper's evaluation samples *proportionally to the predicted
+//! probabilities* (no temperature/nucleus) — that is `Sampler::default()`.
+//! Temperature, nucleus (top-p) and greedy modes are provided for the
+//! serving examples.
+
+use crate::tensor::softmax;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct Sampler {
+    pub temperature: f32,
+    /// top-p nucleus threshold; 1.0 disables.
+    pub top_p: f32,
+    rng: Rng,
+}
+
+impl Sampler {
+    pub fn new(temperature: f32, top_p: f32, seed: u64) -> Self {
+        Sampler { temperature, top_p, rng: Rng::new(seed) }
+    }
+
+    /// Paper-default: proportional sampling.
+    pub fn proportional(seed: u64) -> Self {
+        Self::new(1.0, 1.0, seed)
+    }
+
+    pub fn greedy() -> Self {
+        Self::new(0.0, 1.0, 0)
+    }
+
+    /// Sample a token id from raw logits.
+    pub fn sample(&mut self, logits: &[f32]) -> usize {
+        if self.temperature <= 0.0 {
+            // greedy
+            return logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+        }
+        let mut probs: Vec<f32> = logits.iter().map(|&x| x / self.temperature).collect();
+        softmax(&mut probs);
+        if self.top_p < 1.0 {
+            nucleus_filter(&mut probs, self.top_p);
+        }
+        self.rng.categorical(&probs)
+    }
+}
+
+/// Zero out everything outside the smallest set of tokens whose cumulative
+/// probability reaches `top_p` (keeps at least one token).
+fn nucleus_filter(probs: &mut [f32], top_p: f32) {
+    let mut order: Vec<usize> = (0..probs.len()).collect();
+    order.sort_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap_or(std::cmp::Ordering::Equal));
+    let mut cum = 0.0f32;
+    let mut keep = vec![false; probs.len()];
+    for &i in &order {
+        keep[i] = true;
+        cum += probs[i];
+        if cum >= top_p {
+            break;
+        }
+    }
+    for (i, p) in probs.iter_mut().enumerate() {
+        if !keep[i] {
+            *p = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_argmax() {
+        let mut s = Sampler::greedy();
+        assert_eq!(s.sample(&[0.1, 3.0, -1.0]), 1);
+    }
+
+    #[test]
+    fn proportional_matches_distribution() {
+        let mut s = Sampler::proportional(5);
+        let logits = vec![0.0, (3.0f32).ln()]; // probs 0.25 / 0.75
+        let n = 20_000;
+        let ones = (0..n).filter(|_| s.sample(&logits) == 1).count();
+        let frac = ones as f64 / n as f64;
+        assert!((frac - 0.75).abs() < 0.02, "{frac}");
+    }
+
+    #[test]
+    fn low_temperature_sharpens() {
+        let mut hot = Sampler::new(2.0, 1.0, 3);
+        let mut cold = Sampler::new(0.2, 1.0, 3);
+        let logits = vec![0.0, 1.0];
+        let n = 5_000;
+        let hot_top = (0..n).filter(|_| hot.sample(&logits) == 1).count();
+        let cold_top = (0..n).filter(|_| cold.sample(&logits) == 1).count();
+        assert!(cold_top > hot_top);
+    }
+
+    #[test]
+    fn nucleus_drops_tail() {
+        let mut probs = vec![0.5, 0.3, 0.15, 0.05];
+        nucleus_filter(&mut probs, 0.7);
+        assert!(probs[0] > 0.0 && probs[1] > 0.0);
+        assert_eq!(probs[2], 0.0);
+        assert_eq!(probs[3], 0.0);
+    }
+
+    #[test]
+    fn nucleus_keeps_at_least_one() {
+        let mut probs = vec![0.9, 0.1];
+        nucleus_filter(&mut probs, 0.01);
+        assert!(probs[0] > 0.0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let logits = vec![0.3, 0.5, 0.2, 1.0];
+        let a: Vec<usize> = {
+            let mut s = Sampler::proportional(9);
+            (0..20).map(|_| s.sample(&logits)).collect()
+        };
+        let mut s = Sampler::proportional(9);
+        let b: Vec<usize> = (0..20).map(|_| s.sample(&logits)).collect();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,81 @@
+//! Byte-level tokenizer + chat template.
+//!
+//! The tiny model is trained on raw bytes (vocab 256, ASCII-folded), so
+//! tokenization is identity over bytes. The chat template matches the
+//! synthetic OpenAssistant stand-in corpus the trainer used
+//! (`python/compile/data.py::build_chat_corpus`).
+
+#[derive(Debug, Clone, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub fn new() -> Self {
+        ByteTokenizer
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        256
+    }
+
+    /// Encode text to token ids (ASCII-folding non-ASCII like the corpus).
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        text.chars()
+            .map(|c| if c.is_ascii() { c as u32 } else { b'?' as u32 })
+            .collect()
+    }
+
+    pub fn decode(&self, tokens: &[u32]) -> String {
+        tokens
+            .iter()
+            .map(|&t| {
+                let b = (t & 0xff) as u8;
+                if b.is_ascii_graphic() || b == b' ' || b == b'\n' || b == b'\t' {
+                    b as char
+                } else {
+                    '\u{fffd}'
+                }
+            })
+            .collect()
+    }
+
+    /// Wrap a user turn in the chat format the model was trained on.
+    pub fn chat_turn(&self, user: &str) -> Vec<u32> {
+        self.encode(&format!("<user> {user}?\n<assistant> "))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = ByteTokenizer::new();
+        let ids = t.encode("hello, world\n");
+        assert_eq!(ids.len(), 13);
+        assert_eq!(t.decode(&ids), "hello, world\n");
+    }
+
+    #[test]
+    fn folds_non_ascii() {
+        let t = ByteTokenizer::new();
+        let ids = t.encode("héllo");
+        assert_eq!(ids, t.encode("h?llo"));
+        assert!(ids.iter().all(|&i| i < 256));
+    }
+
+    #[test]
+    fn chat_template_shape() {
+        let t = ByteTokenizer::new();
+        let ids = t.chat_turn("what is perplexity");
+        let text = t.decode(&ids);
+        assert!(text.starts_with("<user> "));
+        assert!(text.ends_with("<assistant> "));
+    }
+
+    #[test]
+    fn decode_masks_control_bytes() {
+        let t = ByteTokenizer::new();
+        assert_eq!(t.decode(&[7]), "\u{fffd}");
+    }
+}

@@ -1,0 +1,292 @@
+//! Model weights: loading `artifacts/weights.npz` (written by the python
+//! trainer) into the structured form the engine feeds to PJRT modules.
+//!
+//! Mixed quantization (paper §3.3): the *attention* (shared) weights are
+//! quantized per `attn_quant` and dequantized once at load — they stay
+//! device-resident, so only their quality effect matters, and an affine
+//! quant→dequant round-trip reproduces exactly what the GPU kernel would
+//! compute. The *expert* weights go into the [`HostExpertPool`] in their
+//! quantized wire format — those are the bytes that stream over the link.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::config::{ModelConfig, QuantScheme};
+use crate::error::{Error, Result};
+use crate::memory::host::HostExpertPool;
+use crate::npz::{self, Array};
+use crate::quant::hqq::{self, HqqConfig};
+use crate::tensor::Tensor;
+
+/// Per-layer non-expert weights (device-resident, f32 after dequant).
+#[derive(Debug, Clone)]
+pub struct LayerWeights {
+    pub attn_ln: Tensor,
+    pub wq: Tensor,
+    pub wk: Tensor,
+    pub wv: Tensor,
+    pub wo: Tensor,
+    pub mlp_ln: Tensor,
+    pub w_gate: Tensor,
+}
+
+/// The full model: shared weights structured, experts pooled.
+pub struct ModelWeights {
+    pub cfg: ModelConfig,
+    pub embed: Tensor,
+    pub final_ln: Tensor,
+    pub lm_head: Tensor,
+    pub layers: Vec<LayerWeights>,
+    pub experts: Arc<HostExpertPool>,
+    pub attn_quant: QuantScheme,
+}
+
+impl ModelWeights {
+    /// Load weights.npz and apply the mixed-quantization scheme.
+    pub fn load(
+        cfg: &ModelConfig,
+        path: &Path,
+        attn_quant: QuantScheme,
+        expert_quant: QuantScheme,
+    ) -> Result<Self> {
+        let arrays = npz::load_npz(path)?;
+        Self::from_arrays(cfg, &arrays, attn_quant, expert_quant)
+    }
+
+    pub fn from_arrays(
+        cfg: &ModelConfig,
+        arrays: &BTreeMap<String, Array>,
+        attn_quant: QuantScheme,
+        expert_quant: QuantScheme,
+    ) -> Result<Self> {
+        let get = |name: &str| -> Result<Tensor> {
+            arrays
+                .get(name)
+                .ok_or_else(|| Error::Npz(format!("weights.npz missing '{name}'")))?
+                .as_f32()
+                .cloned()
+        };
+
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for i in 0..cfg.n_layers {
+            let g = |suffix: &str| get(&format!("layers.{i}.{suffix}"));
+            layers.push(LayerWeights {
+                attn_ln: g("attn_ln")?,
+                wq: maybe_quantize(g("wq")?, attn_quant, cfg)?,
+                wk: maybe_quantize(g("wk")?, attn_quant, cfg)?,
+                wv: maybe_quantize(g("wv")?, attn_quant, cfg)?,
+                wo: maybe_quantize(g("wo")?, attn_quant, cfg)?,
+                mlp_ln: g("mlp_ln")?,
+                // the router gate stays 16-bit (paper keeps gates high
+                // precision — they steer everything)
+                w_gate: g("w_gate")?,
+            });
+        }
+
+        // expert pool: quantized wire-format host copies
+        let experts = HostExpertPool::build(cfg, expert_quant, |layer, expert| {
+            let w1 = get(&format!("layers.{layer}.w1"))?;
+            let w3 = get(&format!("layers.{layer}.w3"))?;
+            let w2 = get(&format!("layers.{layer}.w2"))?;
+            Ok((slice_expert(&w1, expert)?, slice_expert(&w3, expert)?, slice_expert(&w2, expert)?))
+        })?;
+
+        let mw = ModelWeights {
+            cfg: cfg.clone(),
+            embed: get("embed")?,
+            final_ln: get("final_ln")?,
+            lm_head: get("lm_head")?,
+            layers,
+            experts: Arc::new(experts),
+            attn_quant,
+        };
+        mw.validate()?;
+        Ok(mw)
+    }
+
+    fn validate(&self) -> Result<()> {
+        let c = &self.cfg;
+        let want = |t: &Tensor, shape: &[usize], name: &str| -> Result<()> {
+            if t.shape != shape {
+                return Err(Error::Shape(format!(
+                    "{name}: expected {shape:?}, got {:?}",
+                    t.shape
+                )));
+            }
+            Ok(())
+        };
+        want(&self.embed, &[c.vocab_size, c.d_model], "embed")?;
+        want(&self.lm_head, &[c.d_model, c.vocab_size], "lm_head")?;
+        want(&self.final_ln, &[c.d_model], "final_ln")?;
+        for (i, l) in self.layers.iter().enumerate() {
+            want(&l.wq, &[c.d_model, c.q_dim()], &format!("layers.{i}.wq"))?;
+            want(&l.wk, &[c.d_model, c.kv_dim()], &format!("layers.{i}.wk"))?;
+            want(&l.wv, &[c.d_model, c.kv_dim()], &format!("layers.{i}.wv"))?;
+            want(&l.wo, &[c.q_dim(), c.d_model], &format!("layers.{i}.wo"))?;
+            want(&l.w_gate, &[c.d_model, c.n_experts], &format!("layers.{i}.w_gate"))?;
+        }
+        Ok(())
+    }
+
+    /// Non-expert parameter bytes resident on the device (size accounting).
+    pub fn shared_bytes(&self) -> u64 {
+        let mut n = self.embed.len() + self.final_ln.len() + self.lm_head.len();
+        for l in &self.layers {
+            n += l.attn_ln.len() + l.mlp_ln.len() + l.w_gate.len();
+        }
+        let mut b = (n * 2) as u64; // embeddings/norms/gates at 16 bit
+        for l in &self.layers {
+            let attn_n = l.wq.len() + l.wk.len() + l.wv.len() + l.wo.len();
+            let g = self.attn_quant.group_size(self.cfg.group_size);
+            b += self.attn_quant.bytes_for(attn_n, g);
+        }
+        b
+    }
+
+    /// Total model bytes (shared + experts) under the current schemes —
+    /// the "Model size, GB" column of Table 1.
+    pub fn total_bytes(&self) -> u64 {
+        self.shared_bytes() + self.experts.total_bytes()
+    }
+}
+
+/// Quantize + dequantize a shared weight (identity for Fp16: 16-bit round
+/// trip is numerically negligible for our value ranges and the paper keeps
+/// fp16 as the uncompressed reference).
+fn maybe_quantize(w: Tensor, scheme: QuantScheme, cfg: &ModelConfig) -> Result<Tensor> {
+    match scheme {
+        QuantScheme::Fp16 => Ok(w),
+        QuantScheme::Hqq { bits } => {
+            let g = scheme.group_size(cfg.group_size);
+            let q = hqq::quantize(&w, &HqqConfig::new(bits, g))?;
+            q.dequantize()
+        }
+    }
+}
+
+/// Slice expert `e` out of a stacked [E, a, b] tensor.
+fn slice_expert(stacked: &Tensor, e: usize) -> Result<Tensor> {
+    if stacked.rank() != 3 {
+        return Err(Error::Shape(format!(
+            "expected stacked expert tensor, got {:?}",
+            stacked.shape
+        )));
+    }
+    Ok(stacked.index0(e))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tiny() -> ModelConfig {
+        let mut c = ModelConfig::tiny();
+        c.n_layers = 2;
+        c.d_model = 32;
+        c.d_ff = 64;
+        c.n_experts = 2;
+        c.n_heads = 2;
+        c.n_kv_heads = 1;
+        c.head_dim = 16;
+        c.group_size = 16;
+        c
+    }
+
+    pub fn synth_arrays(cfg: &ModelConfig, seed: u64) -> BTreeMap<String, Array> {
+        let mut rng = Rng::new(seed);
+        let mut m = BTreeMap::new();
+        let mut put = |name: String, shape: Vec<usize>, rng: &mut Rng| {
+            let n: usize = shape.iter().product();
+            let t = Tensor::new(
+                (0..n).map(|_| rng.normal() as f32 * 0.1).collect(),
+                shape,
+            )
+            .unwrap();
+            m.insert(name, Array::F32(t));
+        };
+        put("embed".into(), vec![cfg.vocab_size, cfg.d_model], &mut rng);
+        put("final_ln".into(), vec![cfg.d_model], &mut rng);
+        put("lm_head".into(), vec![cfg.d_model, cfg.vocab_size], &mut rng);
+        for i in 0..cfg.n_layers {
+            put(format!("layers.{i}.attn_ln"), vec![cfg.d_model], &mut rng);
+            put(format!("layers.{i}.wq"), vec![cfg.d_model, cfg.q_dim()], &mut rng);
+            put(format!("layers.{i}.wk"), vec![cfg.d_model, cfg.kv_dim()], &mut rng);
+            put(format!("layers.{i}.wv"), vec![cfg.d_model, cfg.kv_dim()], &mut rng);
+            put(format!("layers.{i}.wo"), vec![cfg.q_dim(), cfg.d_model], &mut rng);
+            put(format!("layers.{i}.mlp_ln"), vec![cfg.d_model], &mut rng);
+            put(format!("layers.{i}.w_gate"), vec![cfg.d_model, cfg.n_experts], &mut rng);
+            put(format!("layers.{i}.w1"), vec![cfg.n_experts, cfg.d_model, cfg.d_ff], &mut rng);
+            put(format!("layers.{i}.w3"), vec![cfg.n_experts, cfg.d_model, cfg.d_ff], &mut rng);
+            put(format!("layers.{i}.w2"), vec![cfg.n_experts, cfg.d_ff, cfg.d_model], &mut rng);
+        }
+        m
+    }
+
+    #[test]
+    fn loads_and_validates() {
+        let cfg = tiny();
+        let arrays = synth_arrays(&cfg, 1);
+        let mw = ModelWeights::from_arrays(
+            &cfg,
+            &arrays,
+            QuantScheme::Fp16,
+            QuantScheme::Hqq { bits: 3 },
+        )
+        .unwrap();
+        assert_eq!(mw.layers.len(), 2);
+        assert_eq!(mw.experts.experts.len(), 4);
+    }
+
+    #[test]
+    fn missing_tensor_is_reported() {
+        let cfg = tiny();
+        let mut arrays = synth_arrays(&cfg, 1);
+        arrays.remove("layers.1.wq");
+        let err = match ModelWeights::from_arrays(
+            &cfg,
+            &arrays,
+            QuantScheme::Fp16,
+            QuantScheme::Fp16,
+        ) {
+            Err(e) => e,
+            Ok(_) => panic!("expected missing-tensor error"),
+        };
+        assert!(err.to_string().contains("layers.1.wq"));
+    }
+
+    #[test]
+    fn attn_quant_perturbs_but_preserves_scale() {
+        let cfg = tiny();
+        let arrays = synth_arrays(&cfg, 2);
+        let fp = ModelWeights::from_arrays(&cfg, &arrays, QuantScheme::Fp16, QuantScheme::Fp16)
+            .unwrap();
+        let q2 = ModelWeights::from_arrays(
+            &cfg,
+            &arrays,
+            QuantScheme::Hqq { bits: 2 },
+            QuantScheme::Fp16,
+        )
+        .unwrap();
+        let diff = fp.layers[0].wq.max_abs_diff(&q2.layers[0].wq);
+        assert!(diff > 0.0, "2-bit quant must perturb weights");
+        assert!(diff < 0.2, "but not destroy them (diff={diff})");
+    }
+
+    #[test]
+    fn size_accounting_orders_schemes() {
+        let cfg = tiny();
+        let arrays = synth_arrays(&cfg, 3);
+        let size = |aq, eq| {
+            ModelWeights::from_arrays(&cfg, &arrays, aq, eq)
+                .unwrap()
+                .total_bytes()
+        };
+        let fp = size(QuantScheme::Fp16, QuantScheme::Fp16);
+        let e4 = size(QuantScheme::Fp16, QuantScheme::Hqq { bits: 4 });
+        let e2 = size(QuantScheme::Fp16, QuantScheme::Hqq { bits: 2 });
+        let both2 = size(QuantScheme::Hqq { bits: 2 }, QuantScheme::Hqq { bits: 2 });
+        assert!(fp > e4 && e4 > e2 && e2 > both2);
+    }
+}

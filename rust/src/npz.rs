@@ -1,0 +1,279 @@
+//! Minimal NPY/NPZ reader (+ NPY writer) — the weights interchange between
+//! the python trainer (`np.savez`) and the rust coordinator.
+//!
+//! Supports the subset numpy actually emits for our payloads: NPY v1/v2,
+//! little-endian `<f4`/`<f8`/`<i4`/`<i8`/`|u1`, C order. NPZ is a zip
+//! archive of `.npy` members (stored or deflated — the `zip` crate handles
+//! both).
+
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::tensor::{Tensor, TensorU8};
+
+const MAGIC: &[u8] = b"\x93NUMPY";
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Array {
+    F32(Tensor),
+    U8(TensorU8),
+}
+
+impl Array {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Array::F32(t) => &t.shape,
+            Array::U8(t) => &t.shape,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&Tensor> {
+        match self {
+            Array::F32(t) => Ok(t),
+            Array::U8(_) => Err(Error::Npz("expected f32 array, got u8".into())),
+        }
+    }
+
+    pub fn as_u8(&self) -> Result<&TensorU8> {
+        match self {
+            Array::U8(t) => Ok(t),
+            Array::F32(_) => Err(Error::Npz("expected u8 array, got f32".into())),
+        }
+    }
+}
+
+/// Parse a `.npy` byte buffer.
+pub fn parse_npy(bytes: &[u8]) -> Result<Array> {
+    if bytes.len() < 10 || &bytes[..6] != MAGIC {
+        return Err(Error::Npz("bad npy magic".into()));
+    }
+    let major = bytes[6];
+    let (header_len, header_start) = match major {
+        1 => {
+            let n = u16::from_le_bytes([bytes[8], bytes[9]]) as usize;
+            (n, 10)
+        }
+        2 | 3 => {
+            if bytes.len() < 12 {
+                return Err(Error::Npz("truncated npy v2 header".into()));
+            }
+            let n = u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]) as usize;
+            (n, 12)
+        }
+        v => return Err(Error::Npz(format!("unsupported npy version {v}"))),
+    };
+    let header_end = header_start + header_len;
+    if bytes.len() < header_end {
+        return Err(Error::Npz("truncated npy header".into()));
+    }
+    let header = std::str::from_utf8(&bytes[header_start..header_end])
+        .map_err(|_| Error::Npz("non-utf8 npy header".into()))?;
+
+    let descr = dict_value(header, "descr")?;
+    let fortran = dict_value(header, "fortran_order")?;
+    let shape_text = dict_value(header, "shape")?;
+    if fortran.trim() != "False" {
+        return Err(Error::Npz("fortran_order arrays unsupported".into()));
+    }
+    let shape = parse_shape(&shape_text)?;
+    let n: usize = shape.iter().product();
+    let payload = &bytes[header_end..];
+
+    let descr = descr.trim_matches(['\'', '"']);
+    match descr {
+        "<f4" => {
+            expect_len(payload, n * 4)?;
+            let data = payload
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            Ok(Array::F32(Tensor::new(data, shape)?))
+        }
+        "<f8" => {
+            expect_len(payload, n * 8)?;
+            let data = payload
+                .chunks_exact(8)
+                .map(|c| {
+                    f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]) as f32
+                })
+                .collect();
+            Ok(Array::F32(Tensor::new(data, shape)?))
+        }
+        "<i4" => {
+            expect_len(payload, n * 4)?;
+            let data = payload
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]) as f32)
+                .collect();
+            Ok(Array::F32(Tensor::new(data, shape)?))
+        }
+        "<i8" => {
+            expect_len(payload, n * 8)?;
+            let data = payload
+                .chunks_exact(8)
+                .map(|c| {
+                    i64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]) as f32
+                })
+                .collect();
+            Ok(Array::F32(Tensor::new(data, shape)?))
+        }
+        "|u1" | "<u1" => {
+            expect_len(payload, n)?;
+            Ok(Array::U8(TensorU8::new(payload[..n].to_vec(), shape)?))
+        }
+        other => Err(Error::Npz(format!("unsupported dtype descr {other:?}"))),
+    }
+}
+
+fn expect_len(payload: &[u8], want: usize) -> Result<()> {
+    if payload.len() < want {
+        return Err(Error::Npz(format!(
+            "payload too short: {} < {}",
+            payload.len(),
+            want
+        )));
+    }
+    Ok(())
+}
+
+/// Extract the raw text of a key's value from the python-dict header.
+fn dict_value(header: &str, key: &str) -> Result<String> {
+    let pat = format!("'{key}':");
+    let start = header
+        .find(&pat)
+        .ok_or_else(|| Error::Npz(format!("missing header key {key}")))?
+        + pat.len();
+    let rest = &header[start..];
+    // value ends at the next top-level comma or closing brace
+    let mut depth = 0usize;
+    let mut in_str = false;
+    for (i, c) in rest.char_indices() {
+        match c {
+            '\'' | '"' => in_str = !in_str,
+            '(' | '[' if !in_str => depth += 1,
+            ')' | ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' | '}' if !in_str && depth == 0 => {
+                return Ok(rest[..i].trim().to_string());
+            }
+            _ => {}
+        }
+    }
+    Err(Error::Npz(format!("unterminated header value for {key}")))
+}
+
+fn parse_shape(text: &str) -> Result<Vec<usize>> {
+    let inner = text
+        .trim()
+        .strip_prefix('(')
+        .and_then(|s| s.strip_suffix(')'))
+        .ok_or_else(|| Error::Npz(format!("bad shape {text:?}")))?;
+    let mut shape = Vec::new();
+    for part in inner.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        shape.push(
+            part.parse()
+                .map_err(|_| Error::Npz(format!("bad shape dim {part:?}")))?,
+        );
+    }
+    Ok(shape)
+}
+
+/// Serialize a Tensor as NPY v1 (`<f4`, C order) — used by tests and by the
+/// trace tooling to hand data back to python plotting.
+pub fn write_npy_f32(t: &Tensor) -> Vec<u8> {
+    let shape = t
+        .shape
+        .iter()
+        .map(|d| d.to_string())
+        .collect::<Vec<_>>()
+        .join(", ");
+    let trailing = if t.shape.len() == 1 { "," } else { "" };
+    let mut header = format!(
+        "{{'descr': '<f4', 'fortran_order': False, 'shape': ({shape}{trailing}), }}"
+    );
+    // pad so that (10 + len) % 64 == 0, ending in \n
+    let total = 10 + header.len() + 1;
+    let pad = (64 - total % 64) % 64;
+    header.push_str(&" ".repeat(pad));
+    header.push('\n');
+
+    let mut out = Vec::with_capacity(10 + header.len() + t.data.len() * 4);
+    out.extend_from_slice(MAGIC);
+    out.push(1);
+    out.push(0);
+    out.extend_from_slice(&(header.len() as u16).to_le_bytes());
+    out.extend_from_slice(header.as_bytes());
+    for x in &t.data {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Load every member of an `.npz` archive.
+pub fn load_npz(path: &Path) -> Result<BTreeMap<String, Array>> {
+    let file = std::fs::File::open(path)?;
+    let mut archive = zip::ZipArchive::new(file)?;
+    let mut out = BTreeMap::new();
+    for i in 0..archive.len() {
+        let mut entry = archive.by_index(i)?;
+        let name = entry
+            .name()
+            .strip_suffix(".npy")
+            .unwrap_or(entry.name())
+            .to_string();
+        let mut bytes = Vec::with_capacity(entry.size() as usize);
+        entry.read_to_end(&mut bytes)?;
+        out.insert(name, parse_npy(&bytes)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn npy_f32_roundtrip() {
+        let t = Tensor::new(vec![1.5, -2.0, 0.0, 3.25, 7.0, -0.5], vec![2, 3]).unwrap();
+        let bytes = write_npy_f32(&t);
+        match parse_npy(&bytes).unwrap() {
+            Array::F32(got) => assert_eq!(got, t),
+            _ => panic!("wrong dtype"),
+        }
+    }
+
+    #[test]
+    fn npy_1d_roundtrip() {
+        let t = Tensor::new(vec![9.0; 5], vec![5]).unwrap();
+        let parsed = parse_npy(&write_npy_f32(&t)).unwrap();
+        assert_eq!(parsed.shape(), &[5]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(parse_npy(b"NOTNUMPYxxxxxxxxxxxx").is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_payload() {
+        let t = Tensor::new(vec![1.0; 4], vec![4]).unwrap();
+        let mut bytes = write_npy_f32(&t);
+        bytes.truncate(bytes.len() - 8);
+        assert!(parse_npy(&bytes).is_err());
+    }
+
+    #[test]
+    fn header_dict_parser_handles_nested_tuples() {
+        let h = "{'descr': '<f4', 'fortran_order': False, 'shape': (2, 3), }";
+        assert_eq!(dict_value(h, "descr").unwrap(), "'<f4'");
+        assert_eq!(dict_value(h, "shape").unwrap(), "(2, 3)");
+        assert_eq!(parse_shape("(2, 3)").unwrap(), vec![2, 3]);
+        assert_eq!(parse_shape("(7,)").unwrap(), vec![7]);
+        assert_eq!(parse_shape("()").unwrap(), Vec::<usize>::new());
+    }
+}

@@ -1,0 +1,171 @@
+//! Bit-packing codecs for 2/3/4-bit quantization codes.
+//!
+//! Codes are packed little-endian within a contiguous bit stream: code `i`
+//! occupies bits `[i*b, (i+1)*b)`. This is the layout the host "pinned"
+//! expert buffers use — what actually crosses the (simulated) PCIe link —
+//! and it is unpacked to byte-per-code right before kernel dispatch (the
+//! GPU-side unpack the fused kernel performs in HBM on real hardware).
+
+use crate::error::{Error, Result};
+
+/// Number of bytes needed to pack `n` codes of `bits` width.
+pub fn packed_len(n: usize, bits: u8) -> usize {
+    (n * bits as usize + 7) / 8
+}
+
+/// Pack `codes` (each < 2^bits) into a bit stream.
+pub fn pack(codes: &[u8], bits: u8) -> Result<Vec<u8>> {
+    if !(1..=8).contains(&bits) {
+        return Err(Error::Quant(format!("bits must be 1..=8, got {bits}")));
+    }
+    let limit = if bits == 8 { 255 } else { (1u16 << bits) as u8 - 1 };
+    let mut out = vec![0u8; packed_len(codes.len(), bits)];
+    for (i, &c) in codes.iter().enumerate() {
+        if c > limit {
+            return Err(Error::Quant(format!(
+                "code {c} exceeds {bits}-bit range at index {i}"
+            )));
+        }
+        let bit = i * bits as usize;
+        let byte = bit / 8;
+        let off = bit % 8;
+        out[byte] |= c << off;
+        if off + bits as usize > 8 {
+            out[byte + 1] |= c >> (8 - off);
+        }
+    }
+    Ok(out)
+}
+
+/// Unpack `n` codes of `bits` width from a bit stream.
+pub fn unpack(packed: &[u8], n: usize, bits: u8) -> Result<Vec<u8>> {
+    if !(1..=8).contains(&bits) {
+        return Err(Error::Quant(format!("bits must be 1..=8, got {bits}")));
+    }
+    if packed.len() < packed_len(n, bits) {
+        return Err(Error::Quant(format!(
+            "packed buffer too short: {} < {}",
+            packed.len(),
+            packed_len(n, bits)
+        )));
+    }
+    let mask = if bits == 8 { 0xffu16 } else { (1u16 << bits) - 1 };
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let bit = i * bits as usize;
+        let byte = bit / 8;
+        let off = bit % 8;
+        let mut v = (packed[byte] >> off) as u16;
+        if off + bits as usize > 8 {
+            v |= (packed[byte + 1] as u16) << (8 - off);
+        }
+        out.push((v & mask) as u8);
+    }
+    Ok(out)
+}
+
+/// Unpack directly into a reusable buffer (hot-path variant: the decode
+/// loop calls this per expert transfer; no allocation).
+pub fn unpack_into(packed: &[u8], n: usize, bits: u8, out: &mut Vec<u8>) -> Result<()> {
+    out.clear();
+    out.reserve(n);
+    let mask = if bits == 8 { 0xffu16 } else { (1u16 << bits) - 1 };
+    if packed.len() < packed_len(n, bits) {
+        return Err(Error::Quant("packed buffer too short".into()));
+    }
+    for i in 0..n {
+        let bit = i * bits as usize;
+        let byte = bit / 8;
+        let off = bit % 8;
+        let mut v = (packed[byte] >> off) as u16;
+        if off + bits as usize > 8 {
+            v |= (packed[byte + 1] as u16) << (8 - off);
+        }
+        out.push((v & mask) as u8);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, ensure};
+
+    #[test]
+    fn packed_len_exact() {
+        assert_eq!(packed_len(8, 2), 2);
+        assert_eq!(packed_len(8, 3), 3);
+        assert_eq!(packed_len(3, 3), 2); // 9 bits -> 2 bytes
+        assert_eq!(packed_len(0, 4), 0);
+    }
+
+    #[test]
+    fn rejects_out_of_range_codes() {
+        assert!(pack(&[4], 2).is_err());
+        assert!(pack(&[8], 3).is_err());
+        assert!(pack(&[3], 2).is_ok());
+    }
+
+    #[test]
+    fn rejects_bad_widths() {
+        assert!(pack(&[0], 0).is_err());
+        assert!(pack(&[0], 9).is_err());
+        assert!(unpack(&[0], 1, 0).is_err());
+    }
+
+    #[test]
+    fn rejects_short_buffer() {
+        assert!(unpack(&[0u8; 2], 100, 3).is_err());
+    }
+
+    #[test]
+    fn known_vector_2bit() {
+        // codes 0,1,2,3 -> byte 0b11100100
+        let packed = pack(&[0, 1, 2, 3], 2).unwrap();
+        assert_eq!(packed, vec![0b1110_0100]);
+        assert_eq!(unpack(&packed, 4, 2).unwrap(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn known_vector_3bit_crosses_bytes() {
+        // 7,7,7 = 0b111_111_111 -> bytes 0xFF, 0x01
+        let packed = pack(&[7, 7, 7], 3).unwrap();
+        assert_eq!(packed, vec![0xff, 0x01]);
+        assert_eq!(unpack(&packed, 3, 3).unwrap(), vec![7, 7, 7]);
+    }
+
+    #[test]
+    fn prop_roundtrip_all_widths() {
+        check(
+            "bitpack-roundtrip",
+            300,
+            |r| {
+                let bits = [2u8, 3, 4, 8][r.below(4)];
+                let n = r.range(0, 200);
+                let max = if bits == 8 { 256 } else { 1usize << bits };
+                let codes: Vec<u8> = (0..n).map(|_| r.below(max) as u8).collect();
+                (bits, codes)
+            },
+            |(bits, codes)| {
+                let packed = pack(codes, *bits).map_err(|e| e.to_string())?;
+                ensure(
+                    packed.len() == packed_len(codes.len(), *bits),
+                    "packed length mismatch",
+                )?;
+                let back = unpack(&packed, codes.len(), *bits).map_err(|e| e.to_string())?;
+                ensure(&back == codes, "roundtrip mismatch")
+            },
+        );
+    }
+
+    #[test]
+    fn unpack_into_reuses_buffer() {
+        let packed = pack(&[1, 2, 3, 0, 1], 2).unwrap();
+        let mut buf = Vec::new();
+        unpack_into(&packed, 5, 2, &mut buf).unwrap();
+        assert_eq!(buf, vec![1, 2, 3, 0, 1]);
+        let cap = buf.capacity();
+        unpack_into(&packed, 5, 2, &mut buf).unwrap();
+        assert_eq!(buf.capacity(), cap); // no realloc
+    }
+}

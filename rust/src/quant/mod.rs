@@ -1,0 +1,12 @@
+//! Quantization substrate: bit-packing codecs and the HQQ group quantizer.
+//!
+//! The paper compresses Mixtral's experts with HQQ (Badri & Shaji 2023) at
+//! 2–4 bits and streams the *compressed* bytes over PCIe. We mirror that:
+//! `hqq` produces (codes, scale, zero) per group, `bitpack` packs codes to
+//! their logical width for host storage / link accounting, and
+//! `QuantizedMatrix` bundles it all with exact byte accounting.
+
+pub mod bitpack;
+pub mod hqq;
+
+pub use hqq::{HqqConfig, QuantizedMatrix};

@@ -1,0 +1,352 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them.
+//!
+//! One compiled executable per module (embed / attn / gate / expert /
+//! expert_q{2,3,4} / lm_head + prefill variants); weights are runtime
+//! arguments, so a single executable serves every layer and expert. HLO
+//! *text* is the interchange format — see `python/compile/aot.py` and
+//! /opt/xla-example/README.md for why serialized protos don't work here.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Instant;
+
+use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::config::{Manifest, ModelConfig};
+use crate::error::{Error, Result};
+use crate::memory::device::DeviceExpert;
+use crate::model::weights::LayerWeights;
+use crate::tensor::{Tensor, TensorU8};
+
+/// Per-module call accounting (wall time is the *host* cost of the call;
+/// simulated device timing lives in [`crate::clock::Timeline`]).
+#[derive(Debug, Clone, Default)]
+pub struct CallStats {
+    pub calls: u64,
+    pub wall_s: f64,
+}
+
+pub struct Runtime {
+    exes: BTreeMap<String, PjRtLoadedExecutable>,
+    pub cfg: ModelConfig,
+    pub stats: BTreeMap<String, CallStats>,
+}
+
+/// Pre-converted literals for one layer's device-resident weights — built
+/// once at engine start so the hot loop never re-marshals static weights
+/// (§Perf optimization 2).
+pub struct LayerLits {
+    pub attn_ln: Literal,
+    pub wq: Literal,
+    pub wk: Literal,
+    pub wv: Literal,
+    pub wo: Literal,
+    pub mlp_ln: Literal,
+    pub w_gate: Literal,
+}
+
+impl LayerLits {
+    pub fn new(lw: &LayerWeights) -> Result<Self> {
+        Ok(LayerLits {
+            attn_ln: Runtime::lit_f32(&lw.attn_ln)?,
+            wq: Runtime::lit_f32(&lw.wq)?,
+            wk: Runtime::lit_f32(&lw.wk)?,
+            wv: Runtime::lit_f32(&lw.wv)?,
+            wo: Runtime::lit_f32(&lw.wo)?,
+            mlp_ln: Runtime::lit_f32(&lw.mlp_ln)?,
+            w_gate: Runtime::lit_f32(&lw.w_gate)?,
+        })
+    }
+}
+
+/// An expert's arguments pre-marshalled as literals (built once when the
+/// expert lands on the device; reused for every routed token while it
+/// stays cached — §Perf opt 4).
+pub struct ExpertLits {
+    /// None => fp path; Some(bits) => fused-dequant path.
+    pub bits: Option<u8>,
+    pub args: Vec<Literal>,
+}
+
+impl ExpertLits {
+    pub fn new(e: &DeviceExpert) -> Result<Self> {
+        match e {
+            DeviceExpert::Fp { w1, w3, w2 } => Ok(ExpertLits {
+                bits: None,
+                args: vec![
+                    Runtime::lit_f32(w1)?,
+                    Runtime::lit_f32(w3)?,
+                    Runtime::lit_f32(w2)?,
+                ],
+            }),
+            DeviceExpert::Quant { bits, q1, s1, z1, q3, s3, z3, q2, s2, z2 } => Ok(ExpertLits {
+                bits: Some(*bits),
+                args: vec![
+                    Runtime::lit_u8(q1)?,
+                    Runtime::lit_f32(s1)?,
+                    Runtime::lit_f32(z1)?,
+                    Runtime::lit_u8(q3)?,
+                    Runtime::lit_f32(s3)?,
+                    Runtime::lit_f32(z3)?,
+                    Runtime::lit_u8(q2)?,
+                    Runtime::lit_f32(s2)?,
+                    Runtime::lit_f32(z2)?,
+                ],
+            }),
+        }
+    }
+}
+
+/// Pre-converted literals for the non-layer weights.
+pub struct StaticLits {
+    pub embed: Literal,
+    pub final_ln: Literal,
+    pub lm_head: Literal,
+    pub layers: Vec<LayerLits>,
+}
+
+impl StaticLits {
+    pub fn new(w: &crate::model::ModelWeights) -> Result<Self> {
+        Ok(StaticLits {
+            embed: Runtime::lit_f32(&w.embed)?,
+            final_ln: Runtime::lit_f32(&w.final_ln)?,
+            lm_head: Runtime::lit_f32(&w.lm_head)?,
+            layers: w.layers.iter().map(LayerLits::new).collect::<Result<_>>()?,
+        })
+    }
+}
+
+impl Runtime {
+    /// Load and compile every artifact listed in the manifest.
+    pub fn load(manifest: &Manifest) -> Result<Self> {
+        let client = PjRtClient::cpu()?;
+        let mut exes = BTreeMap::new();
+        for name in manifest.modules.keys() {
+            let path = manifest.module_path(name)?;
+            let exe = Self::compile_one(&client, &path)?;
+            exes.insert(name.clone(), exe);
+        }
+        Ok(Runtime { exes, cfg: manifest.config.clone(), stats: BTreeMap::new() })
+    }
+
+    fn compile_one(client: &PjRtClient, path: &Path) -> Result<PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Artifact(format!("bad path {path:?}")))?,
+        )?;
+        let comp = XlaComputation::from_proto(&proto);
+        Ok(client.compile(&comp)?)
+    }
+
+    pub fn has_module(&self, name: &str) -> bool {
+        self.exes.contains_key(name)
+    }
+
+    /// Like [`call`] but takes borrowed literals (hot path: static weights
+    /// are pre-converted once and reused).
+    pub fn call_refs(&mut self, name: &str, args: &[&Literal]) -> Result<Vec<Literal>> {
+        let t0 = Instant::now();
+        let exe = self
+            .exes
+            .get(name)
+            .ok_or_else(|| Error::Runtime(format!("no executable '{name}'")))?;
+        let result = exe.execute::<&Literal>(args)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple()?;
+        let entry = self.stats.entry(name.to_string()).or_default();
+        entry.calls += 1;
+        entry.wall_s += t0.elapsed().as_secs_f64();
+        Ok(out)
+    }
+
+    /// Execute a module; unwraps the outer tuple the AOT pipeline always
+    /// emits (`return_tuple=True`).
+    pub fn call(&mut self, name: &str, args: &[Literal]) -> Result<Vec<Literal>> {
+        let t0 = Instant::now();
+        let exe = self
+            .exes
+            .get(name)
+            .ok_or_else(|| Error::Runtime(format!("no executable '{name}'")))?;
+        let result = exe.execute::<Literal>(args)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple()?;
+        let entry = self.stats.entry(name.to_string()).or_default();
+        entry.calls += 1;
+        entry.wall_s += t0.elapsed().as_secs_f64();
+        Ok(out)
+    }
+
+    // -- literal conversion helpers -----------------------------------------
+
+    pub fn lit_f32(t: &Tensor) -> Result<Literal> {
+        let bytes: Vec<u8> = t.data.iter().flat_map(|x| x.to_le_bytes()).collect();
+        Ok(Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &t.shape,
+            &bytes,
+        )?)
+    }
+
+    pub fn lit_u8(t: &TensorU8) -> Result<Literal> {
+        Ok(Literal::create_from_shape_and_untyped_data(
+            ElementType::U8,
+            &t.shape,
+            &t.data,
+        )?)
+    }
+
+    pub fn lit_i32_scalar(v: i32) -> Literal {
+        Literal::scalar(v)
+    }
+
+    pub fn lit_i32_vec(v: &[i32]) -> Literal {
+        Literal::vec1(v)
+    }
+
+    pub fn tensor_from(lit: &Literal, shape: Vec<usize>) -> Result<Tensor> {
+        let data = lit.to_vec::<f32>()?;
+        Tensor::new(data, shape)
+    }
+
+    // -- typed module wrappers ----------------------------------------------
+
+    /// embed: token id -> x [1, D]
+    pub fn embed(&mut self, token: u32, embed: &Literal) -> Result<Tensor> {
+        let tok = Self::lit_i32_vec(&[token as i32]);
+        let out = self.call_refs("embed", &[&tok, embed])?;
+        Self::tensor_from(&out[0], vec![1, self.cfg.d_model])
+    }
+
+    /// attn (decode): returns (x', k_cache', v_cache') — caches stay as
+    /// opaque Literals between calls (never round-tripped to host; §Perf
+    /// optimization 3).
+    pub fn attn(
+        &mut self,
+        x: &Tensor,
+        lits: &LayerLits,
+        k_cache: &Literal,
+        v_cache: &Literal,
+        pos: usize,
+    ) -> Result<(Tensor, Literal, Literal)> {
+        self.attn_inner("attn", x, lits, k_cache, v_cache, pos)
+    }
+
+    /// chunked prefill attention: x is [C, D].
+    pub fn prefill_attn(
+        &mut self,
+        x: &Tensor,
+        lits: &LayerLits,
+        k_cache: &Literal,
+        v_cache: &Literal,
+        pos0: usize,
+    ) -> Result<(Tensor, Literal, Literal)> {
+        self.attn_inner("prefill_attn", x, lits, k_cache, v_cache, pos0)
+    }
+
+    fn attn_inner(
+        &mut self,
+        module: &str,
+        x: &Tensor,
+        lits: &LayerLits,
+        k_cache: &Literal,
+        v_cache: &Literal,
+        pos: usize,
+    ) -> Result<(Tensor, Literal, Literal)> {
+        let t = x.shape[0];
+        let x_lit = Self::lit_f32(x)?;
+        let pos_lit = Self::lit_i32_scalar(pos as i32);
+        let args: [&Literal; 9] = [
+            &x_lit, &lits.attn_ln, &lits.wq, &lits.wk, &lits.wv, &lits.wo,
+            k_cache, v_cache, &pos_lit,
+        ];
+        let mut out = self.call_refs(module, &args)?;
+        let x_out = Self::tensor_from(&out[0], vec![t, self.cfg.d_model])?;
+        let v_new = out.pop().expect("attn returns 3 outputs");
+        let k_new = out.pop().expect("attn returns 3 outputs");
+        Ok((x_out, k_new, v_new))
+    }
+
+    /// Zero KV-cache literal pair (session start).
+    pub fn zero_kv(&self) -> Result<(Literal, Literal)> {
+        let t = Tensor::zeros(vec![self.cfg.max_seq, self.cfg.n_kv_heads, self.cfg.head_dim]);
+        Ok((Self::lit_f32(&t)?, Self::lit_f32(&t)?))
+    }
+
+    /// gate: returns (router logits [T, E], normed hidden h [T, D]).
+    pub fn gate(&mut self, x: &Tensor, lits: &LayerLits) -> Result<(Tensor, Tensor)> {
+        let module = if x.shape[0] == 1 { "gate" } else { "prefill_gate" };
+        let t = x.shape[0];
+        let x_lit = Self::lit_f32(x)?;
+        let out = self.call_refs(module, &[&x_lit, &lits.mlp_ln, &lits.w_gate])?;
+        Ok((
+            Self::tensor_from(&out[0], vec![t, self.cfg.n_experts])?,
+            Self::tensor_from(&out[1], vec![t, self.cfg.d_model])?,
+        ))
+    }
+
+    /// expert FFN on normed hidden state h [T, D] (fp or fused-dequant).
+    pub fn expert(&mut self, h: &Tensor, e: &DeviceExpert) -> Result<Tensor> {
+        let t = h.shape[0];
+        let prefix = if t == 1 { "" } else { "prefill_" };
+        match e {
+            DeviceExpert::Fp { w1, w3, w2 } => {
+                let out = self.call(
+                    &format!("{prefix}expert"),
+                    &[
+                        Self::lit_f32(h)?,
+                        Self::lit_f32(w1)?,
+                        Self::lit_f32(w3)?,
+                        Self::lit_f32(w2)?,
+                    ],
+                )?;
+                Self::tensor_from(&out[0], vec![t, self.cfg.d_model])
+            }
+            DeviceExpert::Quant { bits, q1, s1, z1, q3, s3, z3, q2, s2, z2 } => {
+                let out = self.call(
+                    &format!("{prefix}expert_q{bits}"),
+                    &[
+                        Self::lit_f32(h)?,
+                        Self::lit_u8(q1)?,
+                        Self::lit_f32(s1)?,
+                        Self::lit_f32(z1)?,
+                        Self::lit_u8(q3)?,
+                        Self::lit_f32(s3)?,
+                        Self::lit_f32(z3)?,
+                        Self::lit_u8(q2)?,
+                        Self::lit_f32(s2)?,
+                        Self::lit_f32(z2)?,
+                    ],
+                )?;
+                Self::tensor_from(&out[0], vec![t, self.cfg.d_model])
+            }
+        }
+    }
+
+    /// expert FFN via pre-marshalled literals (cached-expert fast path).
+    pub fn expert_with_lits(&mut self, h: &Tensor, e: &ExpertLits) -> Result<Tensor> {
+        let t = h.shape[0];
+        let prefix = if t == 1 { "" } else { "prefill_" };
+        let module = match e.bits {
+            None => format!("{prefix}expert"),
+            Some(bits) => format!("{prefix}expert_q{bits}"),
+        };
+        let x_lit = Self::lit_f32(h)?;
+        let mut args: Vec<&Literal> = Vec::with_capacity(1 + e.args.len());
+        args.push(&x_lit);
+        args.extend(e.args.iter());
+        let out = self.call_refs(&module, &args)?;
+        Self::tensor_from(&out[0], vec![t, self.cfg.d_model])
+    }
+
+    /// lm head: x [T, D] -> logits [T, V].
+    pub fn lm_head(&mut self, x: &Tensor, final_ln: &Literal, w: &Literal) -> Result<Tensor> {
+        let t = x.shape[0];
+        let module = if t == 1 { "lm_head" } else { "prefill_lm_head" };
+        let x_lit = Self::lit_f32(x)?;
+        let out = self.call_refs(module, &[&x_lit, final_ln, w])?;
+        Self::tensor_from(&out[0], vec![t, self.cfg.vocab_size])
+    }
+
+    /// Total host wall time spent inside PJRT calls (perf diagnostics).
+    pub fn total_wall_s(&self) -> f64 {
+        self.stats.values().map(|s| s.wall_s).sum()
+    }
+}

@@ -1,0 +1,211 @@
+//! Lightweight metrics: counters + streaming histograms for the serving
+//! coordinator, and table formatting for the experiment binaries.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// A fixed-boundary histogram (latencies in seconds).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    sum: f64,
+    n: u64,
+    max: f64,
+}
+
+impl Histogram {
+    pub fn latency() -> Self {
+        // 100us .. 100s, log-spaced
+        let bounds: Vec<f64> = (0..13).map(|i| 1e-4 * 3.0f64.powi(i)).collect();
+        let len = bounds.len() + 1;
+        Histogram { bounds, counts: vec![0; len], sum: 0.0, n: 0, max: 0.0 }
+    }
+
+    pub fn observe(&mut self, v: f64) {
+        let idx = self.bounds.iter().position(|b| v <= *b).unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.sum += v;
+        self.n += 1;
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Approximate quantile from bucket boundaries.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let target = (q * self.n as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return if i < self.bounds.len() { self.bounds[i] } else { self.max };
+            }
+        }
+        self.max
+    }
+}
+
+/// Process-wide metrics registry (coordinator-facing).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, u64>>,
+    histograms: Mutex<BTreeMap<String, Histogram>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&self, name: &str, by: u64) {
+        *self.counters.lock().unwrap().entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        *self.counters.lock().unwrap().get(name).unwrap_or(&0)
+    }
+
+    pub fn observe(&self, name: &str, v: f64) {
+        self.histograms
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(Histogram::latency)
+            .observe(v);
+    }
+
+    pub fn histogram_mean(&self, name: &str) -> f64 {
+        self.histograms
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|h| h.mean())
+            .unwrap_or(0.0)
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("{k} {v}\n"));
+        }
+        for (k, h) in self.histograms.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "{k}_mean {:.6}\n{k}_p50 {:.6}\n{k}_p99 {:.6}\n{k}_count {}\n",
+                h.mean(),
+                h.quantile(0.5),
+                h.quantile(0.99),
+                h.count()
+            ));
+        }
+        out
+    }
+}
+
+/// Fixed-width table printer for experiment binaries.
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                if i < widths.len() {
+                    widths[i] = widths[i].max(c.len());
+                } else {
+                    widths.push(c.len());
+                }
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths.get(i).copied().unwrap_or(c.len())))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = fmt_row(&self.header);
+        out.push('\n');
+        out.push_str(&"-".repeat(out.len().saturating_sub(1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_are_ordered() {
+        let mut h = Histogram::latency();
+        for i in 1..=1000 {
+            h.observe(i as f64 * 1e-3);
+        }
+        assert!(h.quantile(0.5) <= h.quantile(0.99));
+        assert!(h.mean() > 0.0);
+        assert_eq!(h.count(), 1000);
+    }
+
+    #[test]
+    fn metrics_counters() {
+        let m = Metrics::new();
+        m.inc("requests", 1);
+        m.inc("requests", 2);
+        assert_eq!(m.counter("requests"), 3);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn metrics_render_contains_entries() {
+        let m = Metrics::new();
+        m.inc("tokens", 5);
+        m.observe("latency", 0.01);
+        let r = m.render();
+        assert!(r.contains("tokens 5"));
+        assert!(r.contains("latency_mean"));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(vec!["a".into(), "1".into()]);
+        t.row(vec!["longer".into(), "2".into()]);
+        let r = t.render();
+        assert!(r.contains("name"));
+        assert!(r.lines().count() == 4);
+    }
+}

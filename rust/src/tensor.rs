@@ -1,0 +1,207 @@
+//! Owned host tensors used across the coordinator.
+//!
+//! Deliberately minimal: row-major `Vec<f32>` / `Vec<u8>` plus a shape.
+//! The engine moves flat buffers in and out of PJRT literals; nothing in
+//! the hot path needs strides or views.
+
+use crate::error::{Error, Result};
+
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Tensor {
+    pub data: Vec<f32>,
+    pub shape: Vec<usize>,
+}
+
+impl Tensor {
+    pub fn new(data: Vec<f32>, shape: Vec<usize>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(Error::Shape(format!(
+                "data len {} != shape {:?} product {}",
+                data.len(),
+                shape,
+                n
+            )));
+        }
+        Ok(Tensor { data, shape })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor { data: vec![0.0; n], shape }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// [rows, cols] accessor for rank-2 tensors.
+    pub fn at2(&self, r: usize, c: usize) -> f32 {
+        debug_assert_eq!(self.rank(), 2);
+        self.data[r * self.shape[1] + c]
+    }
+
+    /// Row slice of a rank-2 tensor.
+    pub fn row(&self, r: usize) -> &[f32] {
+        debug_assert_eq!(self.rank(), 2);
+        let w = self.shape[1];
+        &self.data[r * w..(r + 1) * w]
+    }
+
+    /// Slice along the first axis: returns the flat data of `self[i]`.
+    pub fn index0(&self, i: usize) -> Tensor {
+        let inner: usize = self.shape[1..].iter().product();
+        Tensor {
+            data: self.data[i * inner..(i + 1) * inner].to_vec(),
+            shape: self.shape[1..].to_vec(),
+        }
+    }
+
+    pub fn reshape(mut self, shape: Vec<usize>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            return Err(Error::Shape(format!(
+                "cannot reshape {} elements to {:?}",
+                self.data.len(),
+                shape
+            )));
+        }
+        self.shape = shape;
+        Ok(self)
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        debug_assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorU8 {
+    pub data: Vec<u8>,
+    pub shape: Vec<usize>,
+}
+
+impl TensorU8 {
+    pub fn new(data: Vec<u8>, shape: Vec<usize>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(Error::Shape(format!(
+                "data len {} != shape {:?} product {}",
+                data.len(),
+                shape,
+                n
+            )));
+        }
+        Ok(TensorU8 { data, shape })
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+/// Numerically stable softmax over a flat slice (in place).
+pub fn softmax(xs: &mut [f32]) {
+    let max = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for x in xs.iter_mut() {
+        *x = (*x - max).exp();
+        sum += *x;
+    }
+    if sum > 0.0 {
+        for x in xs.iter_mut() {
+            *x /= sum;
+        }
+    }
+}
+
+/// log-softmax value at a single index (stable; used by the ppl evaluator).
+pub fn log_softmax_at(xs: &[f32], idx: usize) -> f32 {
+    let max = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let lse: f32 = xs.iter().map(|x| (x - max).exp()).sum::<f32>().ln() + max;
+    xs[idx] - lse
+}
+
+/// Indices of the k largest values, descending (ties broken by lower index,
+/// matching jnp.argsort(-p) in the python oracle).
+pub fn top_k(xs: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| {
+        xs[b].partial_cmp(&xs[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    idx.truncate(k);
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_validates_shape() {
+        assert!(Tensor::new(vec![1.0; 6], vec![2, 3]).is_ok());
+        assert!(Tensor::new(vec![1.0; 5], vec![2, 3]).is_err());
+    }
+
+    #[test]
+    fn indexing() {
+        let t = Tensor::new((0..12).map(|x| x as f32).collect(), vec![3, 4]).unwrap();
+        assert_eq!(t.at2(1, 2), 6.0);
+        assert_eq!(t.row(2), &[8.0, 9.0, 10.0, 11.0]);
+        let s = t.index0(1);
+        assert_eq!(s.shape, vec![4]);
+        assert_eq!(s.data, vec![4.0, 5.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut xs = vec![1.0, 2.0, 3.0, -1e30];
+        softmax(&mut xs);
+        let sum: f32 = xs.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+        assert!(xs[3] < 1e-20);
+        assert!(xs[2] > xs[1] && xs[1] > xs[0]);
+    }
+
+    #[test]
+    fn softmax_is_shift_invariant() {
+        let mut a = vec![1000.0, 1001.0];
+        softmax(&mut a);
+        let mut b = vec![0.0, 1.0];
+        softmax(&mut b);
+        assert!((a[0] - b[0]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn log_softmax_matches_softmax() {
+        let xs = vec![0.3, -1.2, 2.0];
+        let mut sm = xs.clone();
+        softmax(&mut sm);
+        for i in 0..3 {
+            assert!((log_softmax_at(&xs, i) - sm[i].ln()).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn top_k_orders_descending() {
+        let xs = vec![0.1, 0.9, 0.5, 0.9];
+        assert_eq!(top_k(&xs, 3), vec![1, 3, 2]);
+    }
+}

@@ -1,0 +1,199 @@
+//! Minimal CLI flag parser (clap is not in the offline crate set).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and positional
+//! arguments. Each binary declares its options up front so `--help` output
+//! stays accurate.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+#[derive(Debug)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+pub struct Cli {
+    bin: &'static str,
+    about: &'static str,
+    opts: Vec<OptSpec>,
+}
+
+impl Cli {
+    pub fn new(bin: &'static str, about: &'static str) -> Self {
+        Cli { bin, about, opts: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: Some(default), is_flag: false });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: false });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.bin, self.about);
+        for o in &self.opts {
+            let kind = if o.is_flag { "" } else { " <value>" };
+            let def = match o.default {
+                Some(d) if !o.is_flag => format!(" [default: {d}]"),
+                _ => String::new(),
+            };
+            s.push_str(&format!("  --{}{kind}\t{}{def}\n", o.name, o.help));
+        }
+        s
+    }
+
+    /// Parse process args (skipping argv[0]); exits on --help or bad input.
+    pub fn parse(self) -> Args {
+        match self.parse_from(std::env::args().skip(1)) {
+            Ok(a) => a,
+            Err(e) => {
+                eprintln!("{e}\n\n{}", self.usage());
+                std::process::exit(2);
+            }
+        }
+    }
+
+    pub fn parse_from(
+        &self,
+        args: impl IntoIterator<Item = String>,
+    ) -> Result<Args, String> {
+        let mut values = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut positional = Vec::new();
+        let mut it = args.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if arg == "--help" || arg == "-h" {
+                println!("{}", self.usage());
+                std::process::exit(0);
+            }
+            if let Some(name) = arg.strip_prefix("--") {
+                let (name, inline) = match name.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (name, None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}"))?;
+                if spec.is_flag {
+                    if inline.is_some() {
+                        return Err(format!("--{name} takes no value"));
+                    }
+                    flags.push(name.to_string());
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("--{name} needs a value"))?,
+                    };
+                    values.insert(name.to_string(), v);
+                }
+            } else {
+                positional.push(arg);
+            }
+        }
+        // fill defaults
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                values.entry(o.name.to_string()).or_insert_with(|| d.to_string());
+            }
+        }
+        // required present?
+        for o in &self.opts {
+            if !o.is_flag && o.default.is_none() && !values.contains_key(o.name) {
+                return Err(format!("missing required option --{}", o.name));
+            }
+        }
+        Ok(Args { values, flags, positional })
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("option --{name} not declared"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} must be an integer"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} must be a number"))
+    }
+
+    pub fn has(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .opt("steps", "10", "number of steps")
+            .req("path", "input path")
+            .flag("verbose", "noisy output")
+    }
+
+    fn parse(args: &[&str]) -> Result<Args, String> {
+        cli().parse_from(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn parses_values_and_defaults() {
+        let a = parse(&["--path", "/tmp/x", "--steps=20", "pos1"]).unwrap();
+        assert_eq!(a.get("path"), "/tmp/x");
+        assert_eq!(a.get_usize("steps"), 20);
+        assert_eq!(a.positional, vec!["pos1"]);
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn default_applies() {
+        let a = parse(&["--path", "p"]).unwrap();
+        assert_eq!(a.get_usize("steps"), 10);
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(parse(&["--steps", "5"]).is_err());
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(parse(&["--path", "p", "--bogus", "1"]).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_errors() {
+        assert!(parse(&["--path", "p", "--verbose=yes"]).is_err());
+    }
+}

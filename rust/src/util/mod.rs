@@ -1,0 +1,8 @@
+//! In-tree replacements for crates missing from the offline cache:
+//! JSON (serde_json), CLI parsing (clap), deterministic RNG (rand) and a
+//! property-test runner (proptest).
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;

@@ -1,0 +1,80 @@
+//! Tiny property-testing harness (proptest is not in the offline crate set).
+//!
+//! `check` runs a property over `n` random cases; on failure it reports the
+//! seed so the case can be replayed. Generators are just closures over
+//! [`Rng`] — composable enough for the invariants this crate tests (LRU
+//! behaviour, bit-pack round-trips, HQQ error bounds, timeline monotonicity).
+
+use super::rng::Rng;
+
+pub const DEFAULT_CASES: u64 = 200;
+
+/// Run `prop` on `cases` random inputs drawn via `gen`. Panics with the
+/// failing seed on the first violation.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cases: u64,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let base = env_seed();
+    for case in 0..cases {
+        let seed = base.wrapping_add(case);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed (replay with PROP_SEED={seed}):\n  \
+                 input: {input:?}\n  violation: {msg}"
+            );
+        }
+    }
+}
+
+fn env_seed() -> u64 {
+    std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5eed_0000)
+}
+
+/// Convenience assertion helpers for property bodies.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+pub fn approx_eq(a: f64, b: f64, tol: f64) -> Result<(), String> {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("{a} !~ {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("sum-commutes", 50, |r| (r.below(100), r.below(100)), |&(a, b)| {
+            ensure(a + b == b + a, "addition must commute")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn reports_failures() {
+        check("always-fails", 5, |r| r.below(10), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn approx_eq_tolerates_scale() {
+        assert!(approx_eq(1000.0, 1000.1, 1e-3).is_ok());
+        assert!(approx_eq(1.0, 2.0, 1e-3).is_err());
+    }
+}

@@ -1,0 +1,90 @@
+//! Integration: quality evaluation (perplexity + cloze) across
+//! quantization schemes — the machinery behind Table 1.
+//! Requires `make artifacts` (skips cleanly otherwise).
+
+use std::path::{Path, PathBuf};
+
+use moe_offload::config::{
+    HardwareProfile, Manifest, OffloadPolicy, QuantScheme, ServingConfig, SimScale,
+};
+use moe_offload::engine::MoeEngine;
+use moe_offload::eval;
+use moe_offload::model::ModelWeights;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists()
+        && dir.join("weights.npz").exists()
+        && dir.join("corpus/prose_eval.bin").exists()
+    {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/corpora not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn engine(dir: &Path, attn: QuantScheme, expert: QuantScheme) -> MoeEngine {
+    let manifest = Manifest::load(dir).unwrap();
+    let weights =
+        ModelWeights::load(&manifest.config, &dir.join("weights.npz"), attn, expert).unwrap();
+    let serving = ServingConfig {
+        policy: OffloadPolicy::Full { cache_k: 4, spec_n: 2 },
+        expert_quant: expert,
+        attn_quant: attn,
+        sim_scale: SimScale::Tiny,
+        ..Default::default()
+    };
+    MoeEngine::new(&manifest, weights, &serving, HardwareProfile::a100_80gb()).unwrap()
+}
+
+#[test]
+fn quantization_degrades_ppl_monotonically() {
+    let Some(dir) = artifacts_dir() else { return };
+    let corpus = eval::load_corpus(&dir.join("corpus/prose_eval.bin")).unwrap();
+
+    let ppl = |expert: QuantScheme| -> f64 {
+        let mut e = engine(&dir, QuantScheme::Fp16, expert);
+        eval::perplexity(&mut e, &corpus, 96, 2).unwrap()
+    };
+    let fp = ppl(QuantScheme::Fp16);
+    let q4 = ppl(QuantScheme::Hqq { bits: 4 });
+    let q2 = ppl(QuantScheme::Hqq { bits: 2 });
+    // Table 1's qualitative shape: fp16 <= 4-bit < 2-bit (small slack for
+    // eval noise at tiny scale)
+    assert!(fp > 1.0 && fp < 30.0, "fp ppl {fp}");
+    assert!(q4 < q2, "4-bit {q4} should beat 2-bit {q2}");
+    assert!(fp <= q4 * 1.05, "fp {fp} should be <= 4-bit {q4}");
+}
+
+#[test]
+fn domain_shift_shows_in_ppl() {
+    let Some(dir) = artifacts_dir() else { return };
+    let prose = eval::load_corpus(&dir.join("corpus/prose_eval.bin")).unwrap();
+    let code = eval::load_corpus(&dir.join("corpus/code_eval.bin")).unwrap();
+    let mut e = engine(&dir, QuantScheme::Fp16, QuantScheme::Fp16);
+    let p1 = eval::perplexity(&mut e, &prose, 96, 2).unwrap();
+    let mut e = engine(&dir, QuantScheme::Fp16, QuantScheme::Fp16);
+    let p2 = eval::perplexity(&mut e, &code, 96, 2).unwrap();
+    // both trained domains: finite, plausible, distinct corpora score
+    assert!(p1 > 1.0 && p1.is_finite());
+    assert!(p2 > 1.0 && p2.is_finite());
+}
+
+#[test]
+fn cloze_beats_chance_on_fp16() {
+    let Some(dir) = artifacts_dir() else { return };
+    let corpus = eval::load_corpus(&dir.join("corpus/prose_eval.bin")).unwrap();
+    let mut e = engine(&dir, QuantScheme::Fp16, QuantScheme::Fp16);
+    let acc = eval::cloze_accuracy(&mut e, &corpus, 12, 48, 16, 3).unwrap();
+    // trained model should pick the true continuation well above 0.25
+    assert!(acc > 0.4, "cloze accuracy {acc}");
+}
+
+#[test]
+fn eval_rejects_undersized_corpus() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut e = engine(&dir, QuantScheme::Fp16, QuantScheme::Fp16);
+    assert!(eval::perplexity(&mut e, &[1, 2, 3], 96, 2).is_err());
+    assert!(eval::cloze_accuracy(&mut e, &[1, 2, 3], 2, 48, 16, 0).is_err());
+}

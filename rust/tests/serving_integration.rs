@@ -1,0 +1,149 @@
+//! Integration: coordinator + TCP server over the real engine.
+//! Requires `make artifacts` (skips cleanly otherwise).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use moe_offload::config::{
+    HardwareProfile, Manifest, OffloadPolicy, QuantScheme, ServingConfig, SimScale,
+};
+use moe_offload::coordinator::{server::Server, Coordinator, Event, Request};
+use moe_offload::engine::MoeEngine;
+use moe_offload::model::ModelWeights;
+use moe_offload::util::json::Json;
+use moe_offload::Result;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() && dir.join("weights.npz").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn make_engine(dir: &Path) -> Result<MoeEngine> {
+    let manifest = Manifest::load(dir)?;
+    let weights = ModelWeights::load(
+        &manifest.config,
+        &dir.join("weights.npz"),
+        QuantScheme::Hqq { bits: 4 },
+        QuantScheme::Hqq { bits: 3 },
+    )?;
+    let serving = ServingConfig {
+        policy: OffloadPolicy::Full { cache_k: 2, spec_n: 2 },
+        expert_quant: QuantScheme::Hqq { bits: 3 },
+        attn_quant: QuantScheme::Hqq { bits: 4 },
+        sim_scale: SimScale::Tiny,
+        ..Default::default()
+    };
+    MoeEngine::new(&manifest, weights, &serving, HardwareProfile::t4_colab())
+}
+
+#[test]
+fn coordinator_serves_sequential_requests() {
+    let Some(dir) = artifacts_dir() else { return };
+    let coord = Coordinator::new(move || make_engine(&dir), 7);
+
+    let mut req = Request::new("what is perplexity");
+    req.max_tokens = 12;
+    let stream1 = coord.submit(req.clone());
+    let stream2 = coord.submit(req);
+
+    let text1 = stream1.wait_text().unwrap();
+    let text2 = stream2.wait_text().unwrap();
+    assert!(!text1.is_empty());
+    assert!(!text2.is_empty());
+    assert_eq!(coord.metrics.counter("requests_ok"), 2);
+    assert!(coord.metrics.counter("tokens_generated") >= 2);
+}
+
+#[test]
+fn coordinator_streams_token_events() {
+    let Some(dir) = artifacts_dir() else { return };
+    let coord = Coordinator::new(move || make_engine(&dir), 3);
+    let mut req = Request::new("hello");
+    req.max_tokens = 6;
+    let stream = coord.submit(req);
+    let mut token_events = 0;
+    let mut saw_done = false;
+    for ev in stream.events.iter() {
+        match ev {
+            Event::Token { .. } => token_events += 1,
+            Event::Done { new_tokens, tokens_per_s_wall, .. } => {
+                assert!(new_tokens >= 1);
+                assert!(tokens_per_s_wall > 0.0);
+                saw_done = true;
+                break;
+            }
+            Event::Error { message, .. } => panic!("unexpected error: {message}"),
+        }
+    }
+    assert!(saw_done);
+    assert!(token_events >= 1);
+}
+
+#[test]
+fn engine_init_failure_reports_error() {
+    let coord = Coordinator::new(|| Err(moe_offload::Error::Serving("boom".into())), 0);
+    let stream = coord.submit(Request::new("hi"));
+    let err = stream.wait_text().unwrap_err();
+    assert!(err.to_string().contains("boom"));
+}
+
+#[test]
+fn tcp_server_round_trip() {
+    let Some(dir) = artifacts_dir() else { return };
+    let coord = Arc::new(Coordinator::new(move || make_engine(&dir), 11));
+    let server = Server::bind("127.0.0.1:0", Arc::clone(&coord)).unwrap();
+    let addr = server.local_addr().unwrap();
+    std::thread::spawn(move || {
+        let _ = server.serve(Some(1));
+    });
+
+    let mut conn = TcpStream::connect(addr).unwrap();
+    writeln!(conn, r#"{{"prompt":"what is a mixture of experts model","max_tokens":8}}"#)
+        .unwrap();
+    conn.flush().unwrap();
+
+    let reader = BufReader::new(conn.try_clone().unwrap());
+    let mut done = None;
+    for line in reader.lines() {
+        let line = line.unwrap();
+        let v = Json::parse(&line).unwrap();
+        match v.get("type").and_then(Json::as_str) {
+            Some("token") => {}
+            Some("done") => {
+                done = Some(v);
+                break;
+            }
+            other => panic!("unexpected event type {other:?}: {line}"),
+        }
+    }
+    let done = done.expect("no done event");
+    assert!(done.get("new_tokens").unwrap().as_usize().unwrap() >= 1);
+    assert!(done.get("tokens_per_s_sim").unwrap().as_f64().unwrap() > 0.0);
+}
+
+#[test]
+fn tcp_server_rejects_bad_request() {
+    let Some(dir) = artifacts_dir() else { return };
+    let coord = Arc::new(Coordinator::new(move || make_engine(&dir), 0));
+    let server = Server::bind("127.0.0.1:0", coord).unwrap();
+    let addr = server.local_addr().unwrap();
+    std::thread::spawn(move || {
+        let _ = server.serve(Some(1));
+    });
+
+    let mut conn = TcpStream::connect(addr).unwrap();
+    writeln!(conn, "this is not json").unwrap();
+    conn.flush().unwrap();
+    let mut reader = BufReader::new(conn);
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let v = Json::parse(&line).unwrap();
+    assert_eq!(v.get("type").and_then(Json::as_str), Some("error"));
+}
