@@ -22,6 +22,7 @@ fn main() -> anyhow::Result<()> {
     )?;
     let tokenizer = ByteTokenizer::new();
     let mut sampler = Sampler::new(0.8, 0.95, 7);
+    let mut session = engine.new_session()?;
 
     let turns = [
         "what is a mixture of experts model",
@@ -31,26 +32,26 @@ fn main() -> anyhow::Result<()> {
 
     println!("=== interactive chat (RTX 3080 Mobile profile, 2-bit experts) ===\n");
     for (i, turn) in turns.iter().enumerate() {
-        let hits_before: u64 = engine.run.tokens.iter().map(|t| t.cache_hits + t.spec_hits).sum();
+        let hits_before: u64 = session.run.tokens.iter().map(|t| t.cache_hits + t.spec_hits).sum();
         let prompt = tokenizer.chat_turn(turn);
-        if engine.position() + prompt.len() + 48 >= engine.weights.cfg.max_seq {
-            engine.reset_session(false); // context full: new session, warm cache
+        if session.position() + prompt.len() + 48 >= engine.weights.cfg.max_seq {
+            session.reset(&engine)?; // context full: new sequence, warm cache
         }
-        let reply = engine.generate(&prompt, 48, &mut sampler)?;
-        let hits_after: u64 = engine.run.tokens.iter().map(|t| t.cache_hits + t.spec_hits).sum();
+        let reply = engine.generate(&mut session, &prompt, 48, &mut sampler)?;
+        let hits_after: u64 = session.run.tokens.iter().map(|t| t.cache_hits + t.spec_hits).sum();
         println!("[turn {}] <user> {turn}?", i + 1);
         println!("         <assistant> {}", tokenizer.decode(&reply).trim_end());
         println!(
             "         ({} expert-cache hits this turn, session pos {})\n",
             hits_after - hits_before,
-            engine.position()
+            session.position()
         );
     }
     println!(
         "session totals: {} decode tokens, {:.2} tok/s simulated, hit ratio {:.1}%",
-        engine.run.decode_tokens(),
-        engine.run.tokens_per_s_sim(),
-        engine.run.hit_ratio() * 100.0
+        session.run.decode_tokens(),
+        session.run.tokens_per_s_sim(),
+        session.run.hit_ratio() * 100.0
     );
     Ok(())
 }

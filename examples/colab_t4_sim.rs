@@ -30,12 +30,12 @@ fn main() -> anyhow::Result<()> {
             profile.clone(),
             SimScale::Mixtral,
         )?;
-        harness::run_teacher_forced(&mut engine, &tokens)?;
-        let tps = engine.run.tokens_per_s_sim();
+        let sess = harness::run_teacher_forced(&mut engine, &tokens)?;
+        let tps = sess.run.tokens_per_s_sim();
         println!(
             "{label:38} {tps:.3} tok/s   (hit ratio {:.1}%, {:.1} GB moved/100 tok)",
-            engine.run.hit_ratio() * 100.0,
-            engine.run.total_bytes() as f64 / 1e9 * (100.0 / tokens.len() as f64),
+            sess.run.hit_ratio() * 100.0,
+            sess.run.total_bytes() as f64 / 1e9 * (100.0 / tokens.len() as f64),
         );
         results.push(tps);
     }

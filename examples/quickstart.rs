@@ -26,19 +26,20 @@ fn main() -> anyhow::Result<()> {
     let prompt = tokenizer.chat_turn("what is a mixture of experts model");
     let mut sampler = Sampler::proportional(42);
 
-    let reply = engine.generate(&prompt, 64, &mut sampler)?;
+    let mut session = engine.new_session()?;
+    let reply = engine.generate(&mut session, &prompt, 64, &mut sampler)?;
     println!("prompt : <user> what is a mixture of experts model?");
     println!("reply  : {}", tokenizer.decode(&reply).trim_end());
     println!(
         "\nstats  : {} tokens | {:.2} tok/s (simulated {}) | {:.2} tok/s (cpu wall)\n\
          cache  : {:.1}% hit ratio | {} speculative hits | {:.1} MiB over the link",
-        engine.run.decode_tokens(),
-        engine.run.tokens_per_s_sim(),
+        session.run.decode_tokens(),
+        session.run.tokens_per_s_sim(),
         engine.cost.profile.name,
-        engine.run.tokens_per_s_wall(),
-        engine.run.hit_ratio() * 100.0,
-        engine.run.tokens.iter().map(|t| t.spec_hits).sum::<u64>(),
-        engine.run.total_bytes() as f64 / (1 << 20) as f64,
+        session.run.tokens_per_s_wall(),
+        session.run.hit_ratio() * 100.0,
+        session.run.tokens.iter().map(|t| t.spec_hits).sum::<u64>(),
+        session.run.total_bytes() as f64 / (1 << 20) as f64,
     );
     Ok(())
 }

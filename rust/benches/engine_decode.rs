@@ -34,12 +34,13 @@ fn main() {
             SimScale::Tiny,
         )
         .unwrap();
+        let mut sess = engine.new_session().unwrap();
         let mut i = 0usize;
         let r = bench(&format!("decode_token_{name}_q3"), 2500, || {
-            if engine.position() + 1 >= engine.weights.cfg.max_seq {
-                engine.reset_session(false);
+            if sess.position() + 1 >= engine.weights.cfg.max_seq {
+                sess.reset(&engine).unwrap();
             }
-            engine.decode_step(tokens[i % tokens.len()]).unwrap();
+            engine.decode_step(&mut sess, tokens[i % tokens.len()]).unwrap();
             i += 1;
         });
         r.print();
@@ -55,12 +56,13 @@ fn main() {
             SimScale::Tiny,
         )
         .unwrap();
+        let mut sess = engine.new_session().unwrap();
         let mut i = 0usize;
         let r = bench(&format!("decode_token_full_q{bits}"), 2500, || {
-            if engine.position() + 1 >= engine.weights.cfg.max_seq {
-                engine.reset_session(false);
+            if sess.position() + 1 >= engine.weights.cfg.max_seq {
+                sess.reset(&engine).unwrap();
             }
-            engine.decode_step(tokens[i % tokens.len()]).unwrap();
+            engine.decode_step(&mut sess, tokens[i % tokens.len()]).unwrap();
             i += 1;
         });
         r.print();
@@ -78,8 +80,8 @@ fn main() {
     .unwrap();
     let chunk: Vec<u32> = tokens[..64].to_vec();
     let r = bench("prefill_64_tokens_chunked", 4000, || {
-        engine.reset_session(false);
-        engine.prefill(&chunk).unwrap();
+        let mut sess = engine.new_session().unwrap();
+        engine.prefill(&mut sess, &chunk).unwrap();
     });
     r.print();
     println!(

@@ -22,8 +22,8 @@ fn main() -> anyhow::Result<()> {
         let mut engine = harness::build_engine(
             &dir, attn, expert, policy, profile.clone(), SimScale::Mixtral,
         )?;
-        harness::run_teacher_forced(&mut engine, &tokens)?;
-        Ok((engine.run.tokens_per_s_sim(), engine.run.hit_ratio()))
+        let sess = harness::run_teacher_forced(&mut engine, &tokens)?;
+        Ok((sess.run.tokens_per_s_sim(), sess.run.hit_ratio()))
     };
 
     println!("ABLATIONS — RTX 3060 profile, Mixtral geometry, 2-bit experts\n");

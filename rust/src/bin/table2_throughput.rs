@@ -52,8 +52,8 @@ fn main() -> anyhow::Result<()> {
                 let mut engine = harness::build_engine(
                     &dir, attn, expert, policy, profile.clone(), scale,
                 )?;
-                harness::run_teacher_forced(&mut engine, &tokens)?;
-                let tps = engine.run.tokens_per_s_sim();
+                let sess = harness::run_teacher_forced(&mut engine, &tokens)?;
+                let tps = sess.run.tokens_per_s_sim();
                 row_tps.push(tps);
                 cells.push(format!("{tps:.3}"));
             }

@@ -131,6 +131,12 @@ pub struct ServingConfig {
     pub max_new_tokens: usize,
     pub temperature: f32,
     pub seed: u64,
+    /// Continuous-batching width: how many live sessions the coordinator's
+    /// scheduler interleaves (round-robin, one decode step per session per
+    /// tick). KV-cache device memory is reserved for this many sessions and
+    /// the engine refuses to open more at once. 1 reproduces the paper's
+    /// batch-1 serving exactly.
+    pub max_concurrent_sessions: usize,
 }
 
 impl Default for ServingConfig {
@@ -144,7 +150,30 @@ impl Default for ServingConfig {
             max_new_tokens: 128,
             temperature: 1.0,
             seed: 0,
+            max_concurrent_sessions: 1,
         }
+    }
+}
+
+impl ServingConfig {
+    /// Cheap structural validation, called by the engine constructor.
+    pub fn validate(&self) -> Result<()> {
+        if self.max_concurrent_sessions == 0 {
+            return Err(Error::Config(
+                "max_concurrent_sessions must be >= 1".into(),
+            ));
+        }
+        if self.max_concurrent_sessions > 256 {
+            return Err(Error::Config(format!(
+                "max_concurrent_sessions {} is unreasonably large (KV memory \
+                 is reserved per session; limit 256)",
+                self.max_concurrent_sessions
+            )));
+        }
+        if self.staging_buffers == 0 {
+            return Err(Error::Config("staging_buffers must be >= 1".into()));
+        }
+        Ok(())
     }
 }
 
@@ -179,6 +208,19 @@ mod tests {
         assert!(e2 > 2.0 && e2 < 3.2, "{e2}");
         let e4 = QuantScheme::Hqq { bits: 4 }.effective_bits(64);
         assert!(e4 > 4.0 && e4 < 4.5, "{e4}");
+    }
+
+    #[test]
+    fn serving_config_validation() {
+        assert!(ServingConfig::default().validate().is_ok());
+        let zero = ServingConfig { max_concurrent_sessions: 0, ..Default::default() };
+        assert!(zero.validate().is_err());
+        let huge = ServingConfig { max_concurrent_sessions: 1000, ..Default::default() };
+        assert!(huge.validate().is_err());
+        let no_staging = ServingConfig { staging_buffers: 0, ..Default::default() };
+        assert!(no_staging.validate().is_err());
+        let pool = ServingConfig { max_concurrent_sessions: 8, ..Default::default() };
+        assert!(pool.validate().is_ok());
     }
 
     #[test]

@@ -1,20 +1,34 @@
 //! Serving coordinator: request router + engine worker + TCP line server.
 //!
-//! The paper targets interactive batch-1 inference, so the coordinator is
-//! a single engine worker fed by a FIFO request queue (std mpsc; tokio is
-//! not in the offline crate set and one CPU-bound worker needs no
-//! reactor). Each request is a prompt + generation params; responses
-//! stream token chunks back over a bounded channel so callers can render
-//! incrementally — the property offloading labors to preserve.
+//! The engine worker runs a continuous-batching scheduler. Requests queue
+//! FIFO (std mpsc; tokio is not in the offline crate set and one
+//! CPU-bound worker needs no reactor); the worker admits up to
+//! `max_concurrent_sessions` of them into live [`Session`]s and
+//! round-robin interleaves ONE decode step per live session per
+//! scheduling tick. Every live session shares the engine's warm expert
+//! LRU cache and amortizes speculative transfers — the cross-request
+//! reuse that makes offloading pay off under load — while keeping its own
+//! KV cache, sampler and token budget, so streams stay numerically
+//! independent. With `max_concurrent_sessions = 1` the schedule degrades
+//! to the paper's batch-1 serving, token for token.
+//!
+//! Responses stream token chunks back over a bounded channel so callers
+//! can render incrementally — the property offloading labors to preserve.
+//!
+//! Fairness: the round-robin tick gives every live session exactly one
+//! decode step per pass, so a long generation cannot starve its
+//! neighbors; admission is FIFO and `queue_wait_s` records time spent
+//! waiting for a free session slot.
 
 pub mod server;
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use crate::engine::MoeEngine;
+use crate::engine::{MoeEngine, Session};
 use crate::error::{Error, Result};
 use crate::model::{ByteTokenizer, Sampler};
 use crate::telemetry::Metrics;
@@ -56,6 +70,10 @@ pub enum Event {
         wall_s: f64,
         tokens_per_s_wall: f64,
         tokens_per_s_sim: f64,
+        /// Seconds the request waited in the queue before admission.
+        queue_wait_s: f64,
+        /// Live sessions (including this one) when the request finished.
+        active_sessions: u64,
     },
     Error { request_id: u64, message: String },
 }
@@ -81,8 +99,29 @@ impl ResponseStream {
 }
 
 enum Work {
-    Run(Request, Sender<Event>),
+    Run(Request, Sender<Event>, Instant),
     Shutdown,
+}
+
+/// One admitted request: its engine session plus streaming state.
+struct LiveSession {
+    id: u64,
+    tx: Sender<Event>,
+    sess: Session,
+    sampler: Sampler,
+    /// Last sampled token (input to the next decode step).
+    next: u32,
+    /// Incrementally decoded generation text — also the stop-condition
+    /// tail, so the end-of-turn check is O(1) per token instead of
+    /// re-decoding the whole generation.
+    text: String,
+    /// Tokens emitted so far (first one comes from prefill).
+    generated: usize,
+    /// Per-session token budget (max_tokens capped by the context window).
+    budget: usize,
+    prompt_tokens: usize,
+    started: Instant,
+    queue_wait_s: f64,
 }
 
 /// The coordinator: owns the engine worker thread.
@@ -96,7 +135,9 @@ pub struct Coordinator {
 
 impl Coordinator {
     /// `make_engine` runs on the worker thread — PJRT handles are not
-    /// `Send`, so the engine must be *built* where it lives.
+    /// `Send`, so the engine must be *built* where it lives. The
+    /// scheduler's concurrency comes from the engine's
+    /// `max_concurrent_sessions` (set via [`crate::config::ServingConfig`]).
     pub fn new<F>(make_engine: F, seed: u64) -> Self
     where
         F: FnOnce() -> Result<MoeEngine> + Send + 'static,
@@ -112,7 +153,7 @@ impl Coordinator {
                 Err(e) => {
                     // fail every queued request with the build error
                     while let Ok(work) = work_rx.recv() {
-                        if let Work::Run(req, tx) = work {
+                        if let Work::Run(req, tx, _) = work {
                             let _ = tx.send(Event::Error {
                                 request_id: req.id,
                                 message: format!("engine init failed: {e}"),
@@ -125,41 +166,7 @@ impl Coordinator {
                     return;
                 }
             };
-            let tokenizer = ByteTokenizer::new();
-            let mut req_seed = seed;
-            while let Ok(work) = work_rx.recv() {
-                let (req, tx) = match work {
-                    Work::Run(req, tx) => (req, tx),
-                    Work::Shutdown => break,
-                };
-                m.inc("requests_started", 1);
-                let t0 = Instant::now();
-                req_seed = req_seed.wrapping_add(1);
-                match run_request(&mut engine, &tokenizer, &req, req_seed, &tx) {
-                    Ok((text, prompt_tokens, new_tokens, sim_tps)) => {
-                        let wall = t0.elapsed().as_secs_f64();
-                        m.inc("requests_ok", 1);
-                        m.inc("tokens_generated", new_tokens as u64);
-                        m.observe("request_latency_s", wall);
-                        let _ = tx.send(Event::Done {
-                            request_id: req.id,
-                            text,
-                            prompt_tokens,
-                            new_tokens,
-                            wall_s: wall,
-                            tokens_per_s_wall: new_tokens as f64 / wall.max(1e-9),
-                            tokens_per_s_sim: sim_tps,
-                        });
-                    }
-                    Err(e) => {
-                        m.inc("requests_failed", 1);
-                        let _ = tx.send(Event::Error {
-                            request_id: req.id,
-                            message: e.to_string(),
-                        });
-                    }
-                }
-            }
+            scheduler_loop(&mut engine, &work_rx, seed, &m);
             r.store(false, Ordering::SeqCst);
         });
         Coordinator {
@@ -177,8 +184,13 @@ impl Coordinator {
         req.id = id;
         let (tx, rx) = channel();
         self.metrics.inc("requests_enqueued", 1);
-        let _ = self.work_tx.send(Work::Run(req, tx));
+        let _ = self.work_tx.send(Work::Run(req, tx, Instant::now()));
         ResponseStream { request_id: id, events: rx }
+    }
+
+    /// Whether the engine worker is still alive.
+    pub fn is_running(&self) -> bool {
+        self.running.load(Ordering::SeqCst)
     }
 
     pub fn shutdown(mut self) {
@@ -198,64 +210,236 @@ impl Drop for Coordinator {
     }
 }
 
-fn run_request(
+/// The continuous-batching loop: admit queued requests into free session
+/// slots, then give every live session one decode step per tick.
+fn scheduler_loop(
+    engine: &mut MoeEngine,
+    work_rx: &Receiver<Work>,
+    seed: u64,
+    m: &Metrics,
+) {
+    let max_sessions = engine.max_concurrent_sessions.max(1);
+    let tokenizer = ByteTokenizer::new();
+    let mut active: VecDeque<LiveSession> = VecDeque::new();
+    let mut accepting = true;
+
+    loop {
+        // admission: fill free slots from the queue. Block only when idle;
+        // with live sessions we poll so decode keeps flowing.
+        while accepting && active.len() < max_sessions {
+            let work = if active.is_empty() {
+                match work_rx.recv() {
+                    Ok(w) => w,
+                    Err(_) => {
+                        accepting = false;
+                        break;
+                    }
+                }
+            } else {
+                match work_rx.try_recv() {
+                    Ok(w) => w,
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        accepting = false;
+                        break;
+                    }
+                }
+            };
+            let (req, tx, enqueued) = match work {
+                Work::Run(req, tx, enqueued) => (req, tx, enqueued),
+                Work::Shutdown => {
+                    // finish live sessions, drop anything still queued
+                    accepting = false;
+                    break;
+                }
+            };
+            m.inc("requests_started", 1);
+            let queue_wait_s = enqueued.elapsed().as_secs_f64();
+            m.observe("queue_wait_s", queue_wait_s);
+            match admit(engine, &tokenizer, req, seed, tx, queue_wait_s) {
+                Ok(Some(live)) => {
+                    if live.generated >= live.budget {
+                        // single-token budget: finished at prefill
+                        finish(m, live, active.len() as u64 + 1);
+                    } else {
+                        active.push_back(live);
+                    }
+                }
+                Ok(None) => {
+                    m.inc("requests_cancelled", 1);
+                }
+                Err((id, tx, e)) => {
+                    m.inc("requests_failed", 1);
+                    let _ = tx.send(Event::Error { request_id: id, message: e.to_string() });
+                }
+            }
+            m.set_gauge("active_sessions", active.len() as u64);
+        }
+
+        if active.is_empty() {
+            if !accepting {
+                break;
+            }
+            continue;
+        }
+
+        // one scheduling tick: exactly one decode step per live session,
+        // in admission order (round-robin fairness).
+        m.inc("scheduler_ticks", 1);
+        let n = active.len();
+        for _ in 0..n {
+            let mut live = active.pop_front().unwrap();
+            match step(engine, &tokenizer, &mut live) {
+                Ok(StepOutcome::Continue) => active.push_back(live),
+                Ok(StepOutcome::Finished) => finish(m, live, active.len() as u64 + 1),
+                Ok(StepOutcome::Cancelled) => {
+                    // client went away: free the slot instead of decoding
+                    // the rest of the budget into a dropped channel
+                    m.inc("requests_cancelled", 1);
+                }
+                Err(e) => {
+                    // the failing session is dropped; its neighbors keep
+                    // their own KV state and continue undisturbed
+                    m.inc("requests_failed", 1);
+                    let _ = live.tx.send(Event::Error {
+                        request_id: live.id,
+                        message: e.to_string(),
+                    });
+                }
+            }
+        }
+        m.set_gauge("active_sessions", active.len() as u64);
+    }
+}
+
+/// Tokenize, budget and prefill a request into a live session, emitting
+/// its first token. `Ok(None)` means the submitter already dropped its
+/// stream; on failure the channel is handed back so the caller can
+/// report the error.
+fn admit(
     engine: &mut MoeEngine,
     tokenizer: &ByteTokenizer,
-    req: &Request,
-    seed: u64,
-    tx: &Sender<Event>,
-) -> Result<(String, usize, usize, f64)> {
+    req: Request,
+    base_seed: u64,
+    tx: Sender<Event>,
+    queue_wait_s: f64,
+) -> std::result::Result<Option<LiveSession>, (u64, Sender<Event>, Error)> {
+    let started = Instant::now();
+
     let prompt_tokens = if req.chat {
         tokenizer.chat_turn(&req.prompt)
     } else {
         tokenizer.encode(&req.prompt)
     };
     if prompt_tokens.is_empty() {
-        return Err(Error::Serving("empty prompt".into()));
+        return Err((req.id, tx, Error::Serving("empty prompt".into())));
     }
-    engine.reset_session(false);
-    let sim_before = engine.run.sim_total_scaled_s;
-    let tokens_before = engine.run.tokens.len();
-
-    let mut sampler = Sampler::new(req.temperature, req.top_p, seed);
     let budget = req
         .max_tokens
         .min(engine.weights.cfg.max_seq.saturating_sub(prompt_tokens.len()).saturating_sub(1));
     if budget == 0 {
-        return Err(Error::Serving("prompt exceeds context window".into()));
+        return Err((req.id, tx, Error::Serving("prompt exceeds context window".into())));
     }
-
-    let logits = engine.prefill(&prompt_tokens)?;
-    let mut next = sampler.sample(logits.row(prompt_tokens.len() - 1)) as u32;
-    let mut generated = vec![next];
-    let _ = tx.send(Event::Token {
-        request_id: req.id,
-        text: tokenizer.decode(&[next]),
-    });
-    for _ in 1..budget {
-        let logits = engine.decode_step(next)?;
-        next = sampler.sample(&logits) as u32;
-        generated.push(next);
-        let _ = tx.send(Event::Token {
-            request_id: req.id,
-            text: tokenizer.decode(&[next]),
-        });
-        // stop at end-of-turn marker (newline after assistant text)
-        if generated.len() > 4 && tokenizer.decode(&generated).ends_with(".\n") {
-            break;
-        }
+    // request-id-derived seed: independent of admission order, and equal
+    // to the old sequential derivation when requests are served one at a
+    // time in submit order.
+    let mut sess = match Session::with_seed(engine, base_seed.wrapping_add(req.id)) {
+        Ok(s) => s,
+        Err(e) => return Err((req.id, tx, e)),
+    };
+    let mut sampler = sess.sampler(req.temperature, req.top_p);
+    let logits = match engine.prefill(&mut sess, &prompt_tokens) {
+        Ok(l) => l,
+        Err(e) => return Err((req.id, tx, e)),
+    };
+    let next = sampler.sample(logits.row(prompt_tokens.len() - 1)) as u32;
+    let piece = tokenizer.decode(&[next]);
+    if tx.send(Event::Token { request_id: req.id, text: piece.clone() }).is_err() {
+        // client dropped its stream while queued — don't occupy a slot
+        return Ok(None);
     }
-    let sim_s = engine.run.sim_total_scaled_s - sim_before;
-    let n_new = engine.run.tokens.len() - tokens_before;
-    let sim_tps = if sim_s > 0.0 { n_new as f64 / sim_s } else { 0.0 };
-    Ok((tokenizer.decode(&generated), prompt_tokens.len(), generated.len(), sim_tps))
+    Ok(Some(LiveSession {
+        id: req.id,
+        tx,
+        sess,
+        sampler,
+        next,
+        text: piece,
+        generated: 1,
+        budget,
+        prompt_tokens: prompt_tokens.len(),
+        started,
+        queue_wait_s,
+    }))
 }
 
-/// Drain helper for tests / examples: iterate a stream's token events.
-pub fn collect_events(stream: ResponseStream) -> Vec<Event> {
+enum StepOutcome {
+    Continue,
+    /// Budget exhausted or end-of-turn marker reached.
+    Finished,
+    /// The submitter dropped its stream; the session slot is reclaimed.
+    Cancelled,
+}
+
+/// One decode step for one live session.
+fn step(
+    engine: &mut MoeEngine,
+    tokenizer: &ByteTokenizer,
+    live: &mut LiveSession,
+) -> Result<StepOutcome> {
+    let logits = engine.decode_step(&mut live.sess, live.next)?;
+    live.next = live.sampler.sample(&logits) as u32;
+    live.generated += 1;
+    let piece = tokenizer.decode(&[live.next]);
+    live.text.push_str(&piece);
+    if live.tx.send(Event::Token { request_id: live.id, text: piece }).is_err() {
+        return Ok(StepOutcome::Cancelled);
+    }
+    // stop at end-of-turn marker (newline after assistant text) — the
+    // incrementally-maintained text makes this O(1) per token
+    let stopped = live.generated > 4 && live.text.ends_with(".\n");
+    if stopped || live.generated >= live.budget {
+        Ok(StepOutcome::Finished)
+    } else {
+        Ok(StepOutcome::Continue)
+    }
+}
+
+/// Emit the Done event and final accounting for a finished session.
+fn finish(m: &Metrics, live: LiveSession, active_sessions: u64) {
+    let wall = live.started.elapsed().as_secs_f64();
+    let sim_tps = live.sess.run.tokens_per_s_sim();
+    let hits = live.sess.run.total_hits();
+    let misses = live.sess.run.total_misses();
+    m.inc("requests_ok", 1);
+    m.inc("tokens_generated", live.generated as u64);
+    m.inc("expert_cache_hits", hits);
+    m.inc("expert_cache_misses", misses);
+    m.observe("request_latency_s", wall);
+    let _ = live.tx.send(Event::Done {
+        request_id: live.id,
+        text: live.text,
+        prompt_tokens: live.prompt_tokens,
+        new_tokens: live.generated,
+        wall_s: wall,
+        tokens_per_s_wall: live.generated as f64 / wall.max(1e-9),
+        tokens_per_s_sim: sim_tps,
+        queue_wait_s: live.queue_wait_s,
+        active_sessions,
+    });
+}
+
+/// Drain helper for tests / examples: iterate a stream's token events,
+/// blocking until the stream finishes or `timeout` elapses.
+pub fn collect_events_timeout(stream: &ResponseStream, timeout: Duration) -> Vec<Event> {
+    let deadline = Instant::now() + timeout;
     let mut out = Vec::new();
     loop {
-        match stream.events.try_recv() {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match stream.events.recv_timeout(deadline - now) {
             Ok(ev) => {
                 let done = matches!(ev, Event::Done { .. } | Event::Error { .. });
                 out.push(ev);
@@ -263,9 +447,14 @@ pub fn collect_events(stream: ResponseStream) -> Vec<Event> {
                     break;
                 }
             }
-            Err(TryRecvError::Empty) => std::thread::sleep(std::time::Duration::from_millis(1)),
-            Err(TryRecvError::Disconnected) => break,
+            Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => break,
         }
     }
     out
+}
+
+/// Drain a stream to completion (blocking `recv`, generous timeout — no
+/// spin-waiting).
+pub fn collect_events(stream: ResponseStream) -> Vec<Event> {
+    collect_events_timeout(&stream, Duration::from_secs(600))
 }

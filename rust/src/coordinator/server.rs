@@ -5,11 +5,13 @@
 //! ```text
 //! -> {"prompt": "what is perplexity", "max_tokens": 48}
 //! <- {"type":"token","text":"t"}
-//! <- {"type":"done","text":"...","tokens_per_s_wall":...}
+//! <- {"type":"done","text":"...","tokens_per_s_wall":...,"queue_wait_s":...,"active_sessions":...}
 //! ```
 //!
-//! One connection is served at a time per acceptor thread (batch-1 engine;
-//! concurrent connections queue at the coordinator).
+//! Each connection gets its own handler thread; the coordinator's
+//! scheduler interleaves up to `max_concurrent_sessions` requests, so
+//! concurrent connections stream tokens concurrently (beyond that they
+//! queue, which shows up as `queue_wait_s` in the done event).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -93,6 +95,8 @@ pub fn event_to_json(ev: &Event) -> Json {
             wall_s,
             tokens_per_s_wall,
             tokens_per_s_sim,
+            queue_wait_s,
+            active_sessions,
             ..
         } => Json::obj(vec![
             ("type", "done".into()),
@@ -102,6 +106,8 @@ pub fn event_to_json(ev: &Event) -> Json {
             ("wall_s", (*wall_s).into()),
             ("tokens_per_s_wall", (*tokens_per_s_wall).into()),
             ("tokens_per_s_sim", (*tokens_per_s_sim).into()),
+            ("queue_wait_s", (*queue_wait_s).into()),
+            ("active_sessions", (*active_sessions as usize).into()),
         ]),
         Event::Error { message, .. } => Json::obj(vec![
             ("type", "error".into()),
@@ -174,9 +180,13 @@ mod tests {
             wall_s: 0.5,
             tokens_per_s_wall: 10.0,
             tokens_per_s_sim: 2.5,
+            queue_wait_s: 0.25,
+            active_sessions: 2,
         };
         let j = event_to_json(&ev);
         assert_eq!(j.get("type").unwrap().as_str(), Some("done"));
         assert_eq!(j.get("new_tokens").unwrap().as_usize(), Some(5));
+        assert_eq!(j.get("active_sessions").unwrap().as_usize(), Some(2));
+        assert!((j.get("queue_wait_s").unwrap().as_f64().unwrap() - 0.25).abs() < 1e-9);
     }
 }

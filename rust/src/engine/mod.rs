@@ -1,6 +1,19 @@
 //! The MoE generation engine — the paper's offloading algorithm driving
 //! real model execution through PJRT.
 //!
+//! The engine is split in two:
+//!
+//! * [`MoeEngine`] is the shared core: PJRT runtime, weights and their
+//!   pre-marshalled literals, the per-layer expert LRU cache, the copy
+//!   engine, the cost model and the virtual [`Timeline`]. It holds no
+//!   per-request state and can serve any number of generation streams.
+//! * [`Session`] owns one request's state: per-layer KV literals, the
+//!   sequence position, the trace token counter, per-session
+//!   [`stats::RunStats`] and the sampler seed.
+//!   `decode_step`/`prefill`/`generate`/`score`
+//!   take a `&mut Session`, so the coordinator's scheduler can interleave
+//!   decode steps of concurrent sessions against one warm expert cache.
+//!
 //! Per decoded token, per MoE layer the engine:
 //! 1. runs attention + router (device-resident weights);
 //! 2. looks the routed experts up in the per-layer LRU cache (§3.1),
@@ -18,10 +31,12 @@
 //! hardware's. Wall time is tracked too for the CPU testbed numbers.
 
 pub mod cost;
+pub mod session;
 pub mod stats;
 pub mod trace;
 
 use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -36,7 +51,8 @@ use crate::model::{ModelWeights, Sampler};
 use crate::runtime::{ExpertLits, Runtime, StaticLits};
 use crate::tensor::{softmax, top_k, Tensor};
 use cost::CostModel;
-use stats::{RunStats, TokenStats};
+pub use session::Session;
+use stats::TokenStats;
 use trace::{ActivationRecord, TraceRecorder};
 
 #[derive(Debug, Clone, Copy)]
@@ -47,7 +63,8 @@ struct InFlight {
 
 /// Offline probe for Figure 2 (right): record the speculative router
 /// distribution gate_{l+a}(h_l) at every layer without affecting the
-/// schedule or the virtual clock.
+/// schedule or the virtual clock. Single-session instrumentation: drive
+/// one session while the probe is installed (the fig2 binary does).
 #[derive(Debug, Default)]
 pub struct SpecProbe {
     pub aheads: Vec<usize>,
@@ -55,6 +72,7 @@ pub struct SpecProbe {
     pub records: Vec<(usize, usize, usize, Vec<f32>)>,
 }
 
+/// The shared engine core. Per-request state lives in [`Session`].
 pub struct MoeEngine {
     pub rt: Runtime,
     pub weights: ModelWeights,
@@ -67,17 +85,17 @@ pub struct MoeEngine {
     pub policy: OffloadPolicy,
     pub trace: TraceRecorder,
     pub spec_probe: Option<SpecProbe>,
-    pub run: RunStats,
-    /// Per-layer KV caches as opaque literals (§Perf opt 3: no host
-    /// round-trips between attention calls).
-    kv: Vec<Option<(xla::Literal, xla::Literal)>>,
     /// Literal cache for device-resident experts (§Perf opt 4).
     expert_lits: HashMap<ExpertId, ExpertLits>,
-    pos: usize,
     in_flight: HashMap<ExpertId, InFlight>,
     spec_queue: VecDeque<ExpertId>,
     staging_buffers: usize,
-    token_counter: usize,
+    /// Scheduler concurrency the engine was provisioned for (KV memory is
+    /// reserved for this many sessions; see [`ServingConfig`]).
+    pub max_concurrent_sessions: usize,
+    /// Live [`Session`] count — [`Session::new`] refuses to exceed the
+    /// provisioned pool, [`Session`]'s `Drop` releases the slot.
+    live_sessions: Arc<AtomicUsize>,
 }
 
 impl MoeEngine {
@@ -98,6 +116,7 @@ impl MoeEngine {
         serving: &ServingConfig,
         profile: HardwareProfile,
     ) -> Result<Self> {
+        serving.validate()?;
         let cfg = weights.cfg.clone();
         let cost = CostModel::new(
             profile,
@@ -107,8 +126,8 @@ impl MoeEngine {
             serving.expert_quant,
         );
         // device budget at accounting scale: VRAM minus shared weights, KV
-        // cache and staging buffers
-        let kv_bytes = match serving.sim_scale {
+        // caches (one per concurrent session) and staging buffers
+        let kv_per_session = match serving.sim_scale {
             crate::config::SimScale::Tiny => {
                 (2 * cfg.n_layers * cfg.max_seq * cfg.kv_dim() * 2) as u64
             }
@@ -117,10 +136,26 @@ impl MoeEngine {
                 (2 * m.n_layers * m.max_seq * m.kv_dim() * 2) as u64
             }
         };
+        let kv_bytes = kv_per_session * serving.max_concurrent_sessions as u64;
         let shared = cost.lm_head_bytes * 2
             + (cost.attn_bytes + cost.gate_bytes) * ((cfg.n_layers as f64 * cost.layer_ratio) as u64);
         let staging = serving.staging_buffers as u64 * cost.expert_wire_bytes;
         let reserved = shared + kv_bytes + staging;
+        // a multi-session KV reservation that outgrows the modeled VRAM
+        // must fail loudly — clamping the device up (the width-1 tiny-
+        // testbed fallback below) would simulate a GPU that doesn't exist
+        if serving.max_concurrent_sessions > 1
+            && reserved + cost.expert_wire_bytes > cost.profile.vram_bytes
+        {
+            return Err(Error::Config(format!(
+                "max_concurrent_sessions {} reserves {} MiB (KV + shared + staging), \
+                 which exceeds {}'s {} MiB VRAM — lower the session count",
+                serving.max_concurrent_sessions,
+                reserved / (1 << 20),
+                cost.profile.name,
+                cost.profile.vram_bytes / (1 << 20),
+            )));
+        }
         let device = DeviceMemory::new(
             cost.profile.vram_bytes.max(reserved + cost.expert_wire_bytes),
             reserved,
@@ -133,10 +168,6 @@ impl MoeEngine {
             device,
         );
         let copy = CopyEngine::new(Arc::clone(&weights.experts), serving.staging_buffers, 2);
-        let mut kv = Vec::with_capacity(cfg.n_layers);
-        for _ in 0..cfg.n_layers {
-            kv.push(Some(rt.zero_kv()?));
-        }
         let lits = StaticLits::new(&weights)?;
         Ok(MoeEngine {
             rt,
@@ -149,47 +180,47 @@ impl MoeEngine {
             policy: serving.policy,
             trace: TraceRecorder::new(false),
             spec_probe: None,
-            run: RunStats::default(),
-            kv,
             expert_lits: HashMap::new(),
-            pos: 0,
             in_flight: HashMap::new(),
             spec_queue: VecDeque::new(),
             staging_buffers: serving.staging_buffers,
-            token_counter: 0,
+            max_concurrent_sessions: serving.max_concurrent_sessions,
+            live_sessions: Arc::new(AtomicUsize::new(0)),
         })
     }
 
-    pub fn position(&self) -> usize {
-        self.pos
+    /// Open a fresh session (zeroed KV, position 0, empty stats). The
+    /// expert cache is shared with every other session and stays warm.
+    /// Errors when `max_concurrent_sessions` sessions are already live.
+    pub fn new_session(&self) -> Result<Session> {
+        Session::new(self)
     }
 
-    /// Reset the session (KV cache + position); expert cache stays warm
-    /// unless `cold` is set.
-    pub fn reset_session(&mut self, cold: bool) {
-        for slot in &mut self.kv {
-            *slot = self.rt.zero_kv().ok();
-        }
-        self.pos = 0;
-        self.token_counter = 0;
-        if cold {
-            self.drain_in_flight();
-            let reserved = self.cache.device.used_bytes()
-                - self.cache.device.resident_count() as u64 * self.cost.expert_wire_bytes;
-            self.cache = CacheManager::new(
-                self.weights.cfg.n_layers,
-                self.cache.cache_k(),
-                self.staging_buffers,
-                DeviceMemory::new(
-                    self.cost
-                        .profile
-                        .vram_bytes
-                        .max(reserved + self.cost.expert_wire_bytes),
-                    reserved,
-                    self.cost.expert_wire_bytes,
-                ),
-            );
-        }
+    /// Sessions currently open against this engine.
+    pub fn live_session_count(&self) -> usize {
+        self.live_sessions.load(Ordering::SeqCst)
+    }
+
+    /// Drop the warm expert cache (cold restart of the offloading state).
+    /// Sessions are unaffected — their KV caches live in [`Session`].
+    pub fn drop_expert_cache(&mut self) {
+        self.drain_in_flight();
+        let reserved = self.cache.device.used_bytes()
+            - self.cache.device.resident_count() as u64 * self.cost.expert_wire_bytes;
+        self.cache = CacheManager::new(
+            self.weights.cfg.n_layers,
+            self.cache.cache_k(),
+            self.staging_buffers,
+            DeviceMemory::new(
+                self.cost
+                    .profile
+                    .vram_bytes
+                    .max(reserved + self.cost.expert_wire_bytes),
+                reserved,
+                self.cost.expert_wire_bytes,
+            ),
+        );
+        self.expert_lits.clear();
     }
 
     fn drain_in_flight(&mut self) {
@@ -203,12 +234,12 @@ impl MoeEngine {
     // decode
     // ---------------------------------------------------------------------
 
-    /// Decode one token: returns next-token logits.
-    pub fn decode_step(&mut self, token: u32) -> Result<Vec<f32>> {
-        if self.pos >= self.weights.cfg.max_seq {
+    /// Decode one token for `sess`: returns next-token logits.
+    pub fn decode_step(&mut self, sess: &mut Session, token: u32) -> Result<Vec<f32>> {
+        if sess.pos >= self.weights.cfg.max_seq {
             return Err(Error::Engine(format!(
                 "sequence length {} exceeds max_seq {}",
-                self.pos, self.weights.cfg.max_seq
+                sess.pos, self.weights.cfg.max_seq
             )));
         }
         let sim_start = self.timeline.now();
@@ -220,31 +251,37 @@ impl MoeEngine {
         let mut x = self.rt.embed(token, &self.lits.embed)?;
 
         for l in 0..self.weights.cfg.n_layers {
-            x = self.layer_step(l, x, &mut tstats)?;
+            x = self.layer_step(sess, l, x, &mut tstats)?;
         }
 
         // lm head
         self.timeline.compute(self.cost.lm_head_compute_s(), 0.0);
         let logits = self.rt.lm_head(&x, &self.lits.final_ln, &self.lits.lm_head)?;
 
-        self.pos += 1;
-        self.token_counter += 1;
+        sess.pos += 1;
+        sess.token_counter += 1;
         tstats.sim_s = self.timeline.now() - sim_start;
         tstats.wall_s = wall_start.elapsed().as_secs_f64();
-        self.run.sim_total_scaled_s += self.cost.scale_token_time(tstats.sim_s);
-        self.run.wall_total_s += tstats.wall_s;
-        self.run.tokens.push(tstats);
+        sess.run.sim_total_scaled_s += self.cost.scale_token_time(tstats.sim_s);
+        sess.run.wall_total_s += tstats.wall_s;
+        sess.run.tokens.push(tstats);
         Ok(logits.data)
     }
 
     /// One transformer layer on a [1, D] residual.
-    fn layer_step(&mut self, l: usize, x: Tensor, tstats: &mut TokenStats) -> Result<Tensor> {
+    fn layer_step(
+        &mut self,
+        sess: &mut Session,
+        l: usize,
+        x: Tensor,
+        tstats: &mut TokenStats,
+    ) -> Result<Tensor> {
         // attention (weights borrowed in place — no per-layer copies on the
         // hot path; see EXPERIMENTS.md §Perf)
         self.timeline.compute(self.cost.attn_compute_s(), 0.0);
-        let (kc, vc) = self.kv[l].take().expect("kv cache present");
-        let (x, kc, vc) = self.rt.attn(&x, &self.lits.layers[l], &kc, &vc, self.pos)?;
-        self.kv[l] = Some((kc, vc));
+        let (kc, vc) = sess.kv[l].take().expect("kv cache present");
+        let (x, kc, vc) = self.rt.attn(&x, &self.lits.layers[l], &kc, &vc, sess.pos)?;
+        sess.kv[l] = Some((kc, vc));
 
         // router
         self.timeline.compute(self.cost.gate_compute_s(), 0.0);
@@ -259,7 +296,8 @@ impl MoeEngine {
         }
 
         self.trace.record(ActivationRecord {
-            token_index: self.token_counter,
+            session: sess.id,
+            token_index: sess.token_counter,
             layer: l,
             probs: probs.clone(),
             selected: selected.clone(),
@@ -275,7 +313,7 @@ impl MoeEngine {
                     let (sl, _) = self.rt.gate(&x, &self.lits.layers[l + a])?;
                     let mut sp = sl.row(0).to_vec();
                     softmax(&mut sp);
-                    probe.records.push((self.token_counter, l, a, sp));
+                    probe.records.push((sess.token_counter, l, a, sp));
                 }
             }
             self.spec_probe = Some(probe);
@@ -455,11 +493,11 @@ impl MoeEngine {
 
     /// Encode a prompt with chunked prefill; returns logits for every
     /// prompt position ([T, V]) for scoring / sampling the first token.
-    pub fn prefill(&mut self, tokens: &[u32]) -> Result<Tensor> {
+    pub fn prefill(&mut self, sess: &mut Session, tokens: &[u32]) -> Result<Tensor> {
         if tokens.is_empty() {
             return Err(Error::Engine("empty prompt".into()));
         }
-        if self.pos + tokens.len() > self.weights.cfg.max_seq {
+        if sess.pos + tokens.len() > self.weights.cfg.max_seq {
             return Err(Error::Engine("prompt exceeds max_seq".into()));
         }
         let sim_start = self.timeline.now();
@@ -479,7 +517,7 @@ impl MoeEngine {
             let mut x = Tensor::new(xdata, vec![c, d])?;
 
             for l in 0..self.weights.cfg.n_layers {
-                x = self.prefill_layer(l, x, n_valid)?;
+                x = self.prefill_layer(sess, l, x, n_valid)?;
             }
 
             self.timeline.compute(self.cost.lm_head_compute_s(), 0.0);
@@ -487,22 +525,28 @@ impl MoeEngine {
             for t in 0..n_valid {
                 all_logits.extend_from_slice(logits.row(t));
             }
-            self.pos += n_valid;
+            sess.pos += n_valid;
             done += n_valid;
         }
-        self.run.prefill_sim_s += self.timeline.now() - sim_start;
-        self.run.prefill_tokens += tokens.len();
+        sess.run.prefill_sim_s += self.timeline.now() - sim_start;
+        sess.run.prefill_tokens += tokens.len();
         Tensor::new(all_logits, vec![tokens.len(), self.weights.cfg.vocab_size])
     }
 
-    fn prefill_layer(&mut self, l: usize, x: Tensor, n_valid: usize) -> Result<Tensor> {
+    fn prefill_layer(
+        &mut self,
+        sess: &mut Session,
+        l: usize,
+        x: Tensor,
+        n_valid: usize,
+    ) -> Result<Tensor> {
         let c = x.shape[0];
         let d = self.weights.cfg.d_model;
 
         self.timeline.compute(self.cost.attn_compute_s(), 0.0);
-        let (kc, vc) = self.kv[l].take().expect("kv cache present");
-        let (x, kc, vc) = self.rt.prefill_attn(&x, &self.lits.layers[l], &kc, &vc, self.pos)?;
-        self.kv[l] = Some((kc, vc));
+        let (kc, vc) = sess.kv[l].take().expect("kv cache present");
+        let (x, kc, vc) = self.rt.prefill_attn(&x, &self.lits.layers[l], &kc, &vc, sess.pos)?;
+        sess.kv[l] = Some((kc, vc));
 
         self.timeline.compute(self.cost.gate_compute_s(), 0.0);
         let (gate_logits, h) = self.rt.gate(&x, &self.lits.layers[l])?;
@@ -523,7 +567,8 @@ impl MoeEngine {
                 }
             }
             self.trace.record(ActivationRecord {
-                token_index: self.token_counter + t,
+                session: sess.id,
+                token_index: sess.token_counter + t,
                 layer: l,
                 probs,
                 selected: sel,
@@ -558,7 +603,7 @@ impl MoeEngine {
         }
         // advance token counter for trace indexing
         if l == self.weights.cfg.n_layers - 1 {
-            self.token_counter += n_valid;
+            sess.token_counter += n_valid;
         }
         Ok(out)
     }
@@ -570,18 +615,19 @@ impl MoeEngine {
     /// Prefill the prompt, then sample `max_new` tokens.
     pub fn generate(
         &mut self,
+        sess: &mut Session,
         prompt: &[u32],
         max_new: usize,
         sampler: &mut Sampler,
     ) -> Result<Vec<u32>> {
-        let logits = self.prefill(prompt)?;
+        let logits = self.prefill(sess, prompt)?;
         let mut next = sampler.sample(logits.row(prompt.len() - 1)) as u32;
         let mut out = vec![next];
         for _ in 1..max_new {
-            if self.pos >= self.weights.cfg.max_seq {
+            if sess.pos >= self.weights.cfg.max_seq {
                 break;
             }
-            let logits = self.decode_step(next)?;
+            let logits = self.decode_step(sess, next)?;
             next = sampler.sample(&logits) as u32;
             out.push(next);
         }
@@ -590,8 +636,8 @@ impl MoeEngine {
 
     /// Teacher-forced scoring: per-position log-prob of the actual next
     /// token (perplexity evaluation). Uses the prefill fast path.
-    pub fn score(&mut self, tokens: &[u32]) -> Result<Vec<f32>> {
-        let logits = self.prefill(tokens)?;
+    pub fn score(&mut self, sess: &mut Session, tokens: &[u32]) -> Result<Vec<f32>> {
+        let logits = self.prefill(sess, tokens)?;
         let mut lps = Vec::with_capacity(tokens.len() - 1);
         for t in 0..tokens.len() - 1 {
             lps.push(crate::tensor::log_softmax_at(

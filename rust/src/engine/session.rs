@@ -1,0 +1,138 @@
+//! Per-request decode state, split out of the engine core so many
+//! requests can share one warm engine.
+//!
+//! A [`Session`] owns everything that belongs to ONE generation stream:
+//! the per-layer KV cache, the sequence position, the trace token
+//! counter, the run statistics, and the sampler seed. The engine core
+//! ([`super::MoeEngine`]) owns everything shareable — runtime,
+//! weights/literals, the expert LRU cache, the copy engine, the cost
+//! model and the virtual timeline. Any number of sessions can be decoded
+//! against one engine (interleaved by the coordinator's scheduler); they
+//! are numerically independent but share the warm expert cache, which is
+//! exactly the cross-request reuse the paper's offloading algorithm
+//! benefits from.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use xla::Literal;
+
+use crate::engine::stats::RunStats;
+use crate::engine::MoeEngine;
+use crate::error::{Error, Result};
+use crate::model::Sampler;
+
+/// Process-wide session id source, so activation-trace records from
+/// interleaved sessions remain attributable to their stream.
+static NEXT_SESSION_ID: AtomicU64 = AtomicU64::new(1);
+
+/// All per-request mutable state of one generation stream.
+pub struct Session {
+    /// Unique (process-wide) session id, stamped into trace records.
+    pub id: u64,
+    /// Per-layer KV caches as opaque literals (§Perf opt 3: no host
+    /// round-trips between attention calls).
+    pub(super) kv: Vec<Option<(Literal, Literal)>>,
+    /// Next sequence position to be written.
+    pub(super) pos: usize,
+    /// Tokens pushed through this session (trace indexing).
+    pub(super) token_counter: usize,
+    /// Per-session generation statistics (decode + prefill timing,
+    /// cache hit/miss/stall accounting).
+    pub run: RunStats,
+    /// Sampler seed associated with this session (the coordinator derives
+    /// it from the request id so replays are order-independent).
+    pub seed: u64,
+    /// Live-session counter of the owning engine; decremented on drop.
+    pool: Arc<AtomicUsize>,
+}
+
+impl Session {
+    /// Fresh session against `engine`: zeroed KV, position 0, empty
+    /// stats. Errors when the engine's session pool is exhausted — KV
+    /// device memory is reserved for `max_concurrent_sessions`, so more
+    /// live sessions would silently oversubscribe the modeled VRAM.
+    pub fn new(engine: &MoeEngine) -> Result<Self> {
+        // reserve the pool slot BEFORE allocating KV, so a rejected open
+        // never performs the very allocation the pool bounds
+        let max = engine.max_concurrent_sessions.max(1);
+        let pool = Arc::clone(&engine.live_sessions);
+        if pool
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| {
+                if n < max {
+                    Some(n + 1)
+                } else {
+                    None
+                }
+            })
+            .is_err()
+        {
+            return Err(Error::Engine(format!(
+                "session pool exhausted: {max} live session(s) already open \
+                 (raise ServingConfig::max_concurrent_sessions)"
+            )));
+        }
+        let n_layers = engine.weights.cfg.n_layers;
+        let mut kv = Vec::with_capacity(n_layers);
+        for _ in 0..n_layers {
+            match engine.rt.zero_kv() {
+                Ok(z) => kv.push(Some(z)),
+                Err(e) => {
+                    // release the reserved slot before propagating
+                    pool.fetch_sub(1, Ordering::SeqCst);
+                    return Err(e);
+                }
+            }
+        }
+        Ok(Session {
+            id: NEXT_SESSION_ID.fetch_add(1, Ordering::Relaxed),
+            kv,
+            pos: 0,
+            token_counter: 0,
+            run: RunStats::default(),
+            seed: 0,
+            pool,
+        })
+    }
+
+    /// Fresh session with a sampler seed attached.
+    pub fn with_seed(engine: &MoeEngine, seed: u64) -> Result<Self> {
+        let mut s = Session::new(engine)?;
+        s.seed = seed;
+        Ok(s)
+    }
+
+    /// Current sequence position (tokens already in the KV cache).
+    pub fn position(&self) -> usize {
+        self.pos
+    }
+
+    /// Tokens pushed through this session (decode + prefill).
+    pub fn tokens_seen(&self) -> usize {
+        self.token_counter
+    }
+
+    /// Restart the sequence in place: zero the KV cache and position but
+    /// KEEP the accumulated run statistics (the old warm
+    /// `reset_session(false)` semantics — the engine's expert cache is
+    /// untouched and stays warm).
+    pub fn reset(&mut self, engine: &MoeEngine) -> Result<()> {
+        for slot in &mut self.kv {
+            *slot = Some(engine.rt.zero_kv()?);
+        }
+        self.pos = 0;
+        self.token_counter = 0;
+        Ok(())
+    }
+
+    /// A sampler seeded from this session.
+    pub fn sampler(&self, temperature: f32, top_p: f32) -> Sampler {
+        Sampler::new(temperature, top_p, self.seed)
+    }
+}
+
+impl Drop for Session {
+    fn drop(&mut self) {
+        self.pool.fetch_sub(1, Ordering::SeqCst);
+    }
+}

@@ -51,9 +51,18 @@ impl RunStats {
         self.tokens.iter().map(|t| t.bytes_transferred).sum()
     }
 
+    /// Demand + speculative hits across the run.
+    pub fn total_hits(&self) -> u64 {
+        self.tokens.iter().map(|t| t.cache_hits + t.spec_hits).sum()
+    }
+
+    pub fn total_misses(&self) -> u64 {
+        self.tokens.iter().map(|t| t.misses).sum()
+    }
+
     pub fn hit_ratio(&self) -> f64 {
-        let hits: u64 = self.tokens.iter().map(|t| t.cache_hits + t.spec_hits).sum();
-        let total: u64 = hits + self.tokens.iter().map(|t| t.misses).sum::<u64>();
+        let hits = self.total_hits();
+        let total = hits + self.total_misses();
         if total == 0 {
             0.0
         } else {

@@ -7,6 +7,9 @@ use crate::util::json::Json;
 /// One MoE-layer visit during decode/prefill of one token.
 #[derive(Debug, Clone)]
 pub struct ActivationRecord {
+    /// Session the token belongs to — interleaved sessions share one
+    /// recorder, so `token_index` is only meaningful per session.
+    pub session: u64,
     pub token_index: usize,
     pub layer: usize,
     /// Full router softmax over experts.
@@ -58,6 +61,7 @@ impl TraceRecorder {
     pub fn to_json(&self) -> Json {
         Json::arr(self.records.iter().map(|r| {
             Json::obj(vec![
+                ("session", (r.session as usize).into()),
                 ("token", r.token_index.into()),
                 ("layer", r.layer.into()),
                 (
@@ -83,6 +87,7 @@ mod tests {
 
     fn rec(token: usize, layer: usize, sel: Vec<usize>) -> ActivationRecord {
         ActivationRecord {
+            session: 1,
             token_index: token,
             layer,
             probs: vec![0.1; 4],

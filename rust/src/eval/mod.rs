@@ -33,8 +33,8 @@ pub fn perplexity(
     for w in 0..n_windows {
         let start = w * stride;
         let slice = &corpus[start..start + window];
-        engine.reset_session(false);
-        let lps = engine.score(slice)?;
+        let mut sess = engine.new_session()?;
+        let lps = engine.score(&mut sess, slice)?;
         nll -= lps.iter().map(|&x| x as f64).sum::<f64>();
         count += lps.len();
     }
@@ -79,8 +79,8 @@ pub fn cloze_accuracy(
         for &oi in &order {
             let mut seq = ctx.to_vec();
             seq.extend_from_slice(&options[oi]);
-            engine.reset_session(false);
-            let lps = engine.score(&seq)?;
+            let mut sess = engine.new_session()?;
+            let lps = engine.score(&mut sess, &seq)?;
             // score only the continuation region
             let cont_lp: f64 = lps[ctx_len - 1..].iter().map(|&x| x as f64).sum();
             if cont_lp > best.0 {

@@ -63,15 +63,19 @@ pub fn chat_tokens(dir: &Path, n: usize) -> Result<Vec<u32>> {
 }
 
 /// Decode `tokens` teacher-forced through the engine (the evaluation mode
-/// of §4.1/4.3: run the model over recorded conversations).
-pub fn run_teacher_forced(engine: &mut MoeEngine, tokens: &[u32]) -> Result<()> {
+/// of §4.1/4.3: run the model over recorded conversations). Returns the
+/// session so callers can read its run statistics; when the context
+/// window fills, the session restarts in place (warm expert cache, stats
+/// preserved).
+pub fn run_teacher_forced(engine: &mut MoeEngine, tokens: &[u32]) -> Result<crate::engine::Session> {
+    let mut sess = engine.new_session()?;
     for &t in tokens {
-        if engine.position() + 1 >= engine.weights.cfg.max_seq {
-            engine.reset_session(false);
+        if sess.position() + 1 >= engine.weights.cfg.max_seq {
+            sess.reset(engine)?;
         }
-        engine.decode_step(t)?;
+        engine.decode_step(&mut sess, t)?;
     }
-    Ok(())
+    Ok(sess)
 }
 
 /// Offline LRU replay over recorded per-layer expert selections: returns

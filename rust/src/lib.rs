@@ -16,6 +16,36 @@
 //!
 //! Start at [`engine::MoeEngine`] for generation, [`coordinator`] for
 //! serving, and `rust/src/bin/` for the paper's tables and figures.
+//!
+//! ## Architecture: engine core vs. sessions vs. scheduler
+//!
+//! Serving is split across three pieces:
+//!
+//! * **Engine core** ([`engine::MoeEngine`]) — the shared, stateless-per-
+//!   request machinery: PJRT runtime + compiled modules, weights and
+//!   pre-marshalled literals, the per-layer expert LRU cache, the copy
+//!   engine, the cost model and the virtual timeline. One engine serves
+//!   any number of generation streams; its warm expert cache and
+//!   speculative transfers are shared by all of them.
+//! * **Sessions** ([`engine::Session`]) — everything owned by ONE
+//!   request: per-layer KV-cache literals, sequence position, trace
+//!   token counter, per-session run statistics and the sampler seed.
+//!   `decode_step`/`prefill`/`generate`/`score` take `&mut Session`;
+//!   dropping the session ends the request, `Session::reset` rewinds it
+//!   in place with the expert cache still warm. The engine reserves KV
+//!   device memory per configured session and refuses to open more than
+//!   `max_concurrent_sessions` at once.
+//! * **Scheduler** ([`coordinator::Coordinator`]) — a continuous-batching
+//!   loop on the engine worker thread. Queued requests are admitted into
+//!   up to `max_concurrent_sessions` live sessions
+//!   ([`config::ServingConfig::max_concurrent_sessions`], default 1);
+//!   each scheduling tick gives every live session exactly one decode
+//!   step (round-robin fairness), streaming tokens out per session as
+//!   they decode. Queue wait and live-session counts are recorded in
+//!   [`telemetry::Metrics`] (`queue_wait_s`, `active_sessions`) and
+//!   surfaced in the server's `done` event. Width 1 reproduces the
+//!   paper's batch-1 serving exactly; width ≥ 2 lets concurrent requests
+//!   share hot experts, which is where offloading wins under load.
 
 pub mod cache;
 pub mod clock;

@@ -71,6 +71,7 @@ fn common_setup(a: &moe_offload::util::cli::Args) -> anyhow::Result<Setup> {
         max_new_tokens: a.get_usize("max-tokens"),
         temperature: a.get_f64("temperature") as f32,
         seed: a.get_usize("seed") as u64,
+        max_concurrent_sessions: a.get_usize("max-sessions"),
         ..Default::default()
     };
     Ok(Setup { manifest, serving, profile, artifacts })
@@ -98,6 +99,7 @@ fn base_cli(bin: &'static str, about: &'static str) -> Cli {
         .opt("max-tokens", "64", "max new tokens")
         .opt("temperature", "1.0", "sampling temperature")
         .opt("seed", "0", "random seed")
+        .opt("max-sessions", "1", "concurrent sessions the serve scheduler interleaves")
         .flag("mixtral-scale", "report timing at Mixtral-8x7B geometry")
 }
 
@@ -115,7 +117,8 @@ fn cmd_generate(argv: Vec<String>) -> anyhow::Result<()> {
         tokenizer.chat_turn(a.get("prompt"))
     };
     let mut sampler = Sampler::new(setup.serving.temperature, 1.0, setup.serving.seed);
-    let out = engine.generate(&prompt, setup.serving.max_new_tokens, &mut sampler)?;
+    let mut session = engine.new_session()?;
+    let out = engine.generate(&mut session, &prompt, setup.serving.max_new_tokens, &mut sampler)?;
     println!("{}", tokenizer.decode(&out));
     eprintln!(
         "\n[{} | {} | experts {} | attn {}]\n\
@@ -125,13 +128,13 @@ fn cmd_generate(argv: Vec<String>) -> anyhow::Result<()> {
         setup.serving.policy.label(),
         setup.serving.expert_quant.label(),
         setup.serving.attn_quant.label(),
-        engine.run.decode_tokens(),
-        engine.run.tokens_per_s_sim(),
+        session.run.decode_tokens(),
+        session.run.tokens_per_s_sim(),
         if a.has("mixtral-scale") { "Mixtral-8x7B scale" } else { "tiny scale" },
-        engine.run.tokens_per_s_wall(),
-        engine.run.hit_ratio() * 100.0,
-        engine.run.tokens.iter().map(|t| t.spec_hits).sum::<u64>(),
-        engine.run.total_bytes() / (1 << 20),
+        session.run.tokens_per_s_wall(),
+        session.run.hit_ratio() * 100.0,
+        session.run.tokens.iter().map(|t| t.spec_hits).sum::<u64>(),
+        session.run.total_bytes() / (1 << 20),
     );
     Ok(())
 }

@@ -67,6 +67,7 @@ impl Histogram {
 #[derive(Debug, Default)]
 pub struct Metrics {
     counters: Mutex<BTreeMap<String, u64>>,
+    gauges: Mutex<BTreeMap<String, u64>>,
     histograms: Mutex<BTreeMap<String, Histogram>>,
 }
 
@@ -81,6 +82,15 @@ impl Metrics {
 
     pub fn counter(&self, name: &str) -> u64 {
         *self.counters.lock().unwrap().get(name).unwrap_or(&0)
+    }
+
+    /// Set a point-in-time gauge (e.g. `active_sessions`).
+    pub fn set_gauge(&self, name: &str, v: u64) {
+        self.gauges.lock().unwrap().insert(name.to_string(), v);
+    }
+
+    pub fn gauge(&self, name: &str) -> u64 {
+        *self.gauges.lock().unwrap().get(name).unwrap_or(&0)
     }
 
     pub fn observe(&self, name: &str, v: f64) {
@@ -104,6 +114,9 @@ impl Metrics {
     pub fn render(&self) -> String {
         let mut out = String::new();
         for (k, v) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("{k} {v}\n"));
+        }
+        for (k, v) in self.gauges.lock().unwrap().iter() {
             out.push_str(&format!("{k} {v}\n"));
         }
         for (k, h) in self.histograms.lock().unwrap().iter() {
@@ -187,6 +200,16 @@ mod tests {
         m.inc("requests", 2);
         assert_eq!(m.counter("requests"), 3);
         assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn metrics_gauges_overwrite() {
+        let m = Metrics::new();
+        m.set_gauge("active_sessions", 3);
+        m.set_gauge("active_sessions", 1);
+        assert_eq!(m.gauge("active_sessions"), 1);
+        assert_eq!(m.gauge("missing"), 0);
+        assert!(m.render().contains("active_sessions 1"));
     }
 
     #[test]

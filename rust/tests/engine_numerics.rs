@@ -81,8 +81,9 @@ fn fp16_decode_matches_python_reference() {
         OffloadPolicy::Full { cache_k: 2, spec_n: 2 },
     );
 
+    let mut sess = engine.new_session().unwrap();
     for (t, &tok) in tokens.iter().enumerate() {
-        let logits = engine.decode_step(tok).unwrap();
+        let logits = engine.decode_step(&mut sess, tok).unwrap();
         let argmax = logits
             .iter()
             .enumerate()
@@ -113,7 +114,8 @@ fn prefill_matches_decode_path() {
         QuantScheme::Fp16,
         OffloadPolicy::Full { cache_k: 4, spec_n: 2 },
     );
-    let prefill_logits = e1.prefill(&tokens).unwrap();
+    let mut s1 = e1.new_session().unwrap();
+    let prefill_logits = e1.prefill(&mut s1, &tokens).unwrap();
 
     let mut e2 = engine_with(
         &dir,
@@ -121,8 +123,9 @@ fn prefill_matches_decode_path() {
         QuantScheme::Fp16,
         OffloadPolicy::Full { cache_k: 4, spec_n: 2 },
     );
+    let mut s2 = e2.new_session().unwrap();
     for (t, &tok) in tokens.iter().enumerate() {
-        let decode_logits = e2.decode_step(tok).unwrap();
+        let decode_logits = e2.decode_step(&mut s2, tok).unwrap();
         let row = prefill_logits.row(t);
         let max_diff = decode_logits
             .iter()
@@ -150,9 +153,10 @@ fn quantized_paths_run_and_degrade_gracefully() {
             scheme,
             OffloadPolicy::Full { cache_k: 2, spec_n: 2 },
         );
+        let mut sess = e.new_session().unwrap();
         let mut last = Vec::new();
         for &t in &tokens {
-            last = e.decode_step(t).unwrap();
+            last = e.decode_step(&mut sess, t).unwrap();
         }
         assert!(last.iter().all(|x| x.is_finite()), "{scheme:?} produced NaN");
         ref_logits.push(last);
@@ -190,10 +194,11 @@ fn cache_policies_order_as_expected() {
             policy,
             SimScale::Mixtral,
         );
+        let mut sess = e.new_session().unwrap();
         for &t in &tokens {
-            e.decode_step(t).unwrap();
+            e.decode_step(&mut sess, t).unwrap();
         }
-        throughput.push((policy.label(), e.run.tokens_per_s_sim()));
+        throughput.push((policy.label(), sess.run.tokens_per_s_sim()));
     }
     // paper Table 2 ordering: full >= lru-only >= on-demand > naive
     assert!(
@@ -224,9 +229,10 @@ fn placement_policy_never_changes_numerics() {
             QuantScheme::Hqq { bits: 3 },
             policy,
         );
+        let mut sess = e.new_session().unwrap();
         let mut last = Vec::new();
         for &t in &tokens {
-            last = e.decode_step(t).unwrap();
+            last = e.decode_step(&mut sess, t).unwrap();
         }
         match &reference {
             None => reference = Some(last),
@@ -258,7 +264,8 @@ fn generation_is_deterministic_given_seed() {
         );
         let prompt: Vec<u32> = "<user> hi?\n<assistant> ".bytes().map(|b| b as u32).collect();
         let mut sampler = moe_offload::model::Sampler::proportional(1234);
-        e.generate(&prompt, 24, &mut sampler).unwrap()
+        let mut sess = e.new_session().unwrap();
+        e.generate(&mut sess, &prompt, 24, &mut sampler).unwrap()
     };
     assert_eq!(gen(), gen());
 }
@@ -272,19 +279,20 @@ fn session_reset_preserves_then_clears_cache() {
         QuantScheme::Hqq { bits: 3 },
         OffloadPolicy::LruOnly { cache_k: 4 },
     );
+    let mut sess = e.new_session().unwrap();
     for &t in "warm the cache up".as_bytes() {
-        e.decode_step(t as u32).unwrap();
+        e.decode_step(&mut sess, t as u32).unwrap();
     }
     assert!(e.cache.device.resident_count() > 0);
-    // warm reset: cache stays
-    e.reset_session(false);
+    // warm restart: the session rewinds, the shared expert cache stays
+    sess.reset(&e).unwrap();
     assert!(e.cache.device.resident_count() > 0);
-    assert_eq!(e.position(), 0);
-    // cold reset: cache dropped
-    e.reset_session(true);
+    assert_eq!(sess.position(), 0);
+    // cold restart: the expert cache is dropped, sessions unaffected
+    e.drop_expert_cache();
     assert_eq!(e.cache.device.resident_count(), 0);
     // and the engine still works afterwards
-    let logits = e.decode_step(65).unwrap();
+    let logits = e.decode_step(&mut sess, 65).unwrap();
     assert!(logits.iter().all(|x| x.is_finite()));
 }
 
@@ -300,8 +308,9 @@ fn sequence_overflow_is_an_error_not_a_crash() {
     let max = e.weights.cfg.max_seq;
     // prefill right up to the limit, then decode must refuse
     let long: Vec<u32> = (0..max).map(|i| (i % 64 + 32) as u32).collect();
-    e.prefill(&long).unwrap();
-    assert!(e.decode_step(1).is_err());
+    let mut sess = e.new_session().unwrap();
+    e.prefill(&mut sess, &long).unwrap();
+    assert!(e.decode_step(&mut sess, 1).is_err());
     // prompts longer than the window are rejected up front
     let mut e2 = engine_with(
         &dir,
@@ -310,7 +319,8 @@ fn sequence_overflow_is_an_error_not_a_crash() {
         OffloadPolicy::LruOnly { cache_k: 2 },
     );
     let too_long: Vec<u32> = (0..max + 1).map(|_| 65u32).collect();
-    assert!(e2.prefill(&too_long).is_err());
+    let mut s2 = e2.new_session().unwrap();
+    assert!(e2.prefill(&mut s2, &too_long).is_err());
 }
 
 #[test]
@@ -326,13 +336,14 @@ fn speculative_loading_produces_spec_hits() {
         QuantScheme::Hqq { bits: 3 },
         OffloadPolicy::Full { cache_k: 2, spec_n: 2 },
     );
+    let mut sess = e.new_session().unwrap();
     for &t in &tokens {
-        e.decode_step(t).unwrap();
+        e.decode_step(&mut sess, t).unwrap();
     }
-    let spec_hits: u64 = e.run.tokens.iter().map(|t| t.spec_hits).sum();
+    let spec_hits: u64 = sess.run.tokens.iter().map(|t| t.spec_hits).sum();
     assert!(spec_hits > 0, "speculation never hit: {:?}", e.cache.stats.spec);
     // and the engine stays numerically healthy
-    assert!(e.run.hit_ratio() > 0.0);
+    assert!(sess.run.hit_ratio() > 0.0);
 }
 
 #[test]
@@ -345,8 +356,9 @@ fn trace_recorder_captures_activations() {
         OffloadPolicy::LruOnly { cache_k: 2 },
     );
     e.trace.enabled = true;
+    let mut sess = e.new_session().unwrap();
     for &t in "hello world".as_bytes() {
-        e.decode_step(t as u32).unwrap();
+        e.decode_step(&mut sess, t as u32).unwrap();
     }
     let n_layers = e.weights.cfg.n_layers;
     assert_eq!(e.trace.records.len(), 11 * n_layers);
