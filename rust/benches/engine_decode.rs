@@ -8,8 +8,11 @@
 mod bench_harness;
 
 use bench_harness::bench;
-use moe_offload::config::{HardwareProfile, OffloadPolicy, QuantScheme, SimScale};
+use moe_offload::config::{
+    HardwareProfile, OffloadPolicy, QuantScheme, ServingConfig, SimScale,
+};
 use moe_offload::harness;
+use moe_offload::Error;
 
 fn main() {
     let Ok(dir) = harness::artifacts_dir() else {
@@ -38,7 +41,7 @@ fn main() {
         let mut i = 0usize;
         let r = bench(&format!("decode_token_{name}_q3"), 2500, || {
             if sess.position() + 1 >= engine.weights.cfg.max_seq {
-                sess.reset(&engine).unwrap();
+                sess.reset();
             }
             engine.decode_step(&mut sess, tokens[i % tokens.len()]).unwrap();
             i += 1;
@@ -60,7 +63,7 @@ fn main() {
         let mut i = 0usize;
         let r = bench(&format!("decode_token_full_q{bits}"), 2500, || {
             if sess.position() + 1 >= engine.weights.cfg.max_seq {
-                sess.reset(&engine).unwrap();
+                sess.reset();
             }
             engine.decode_step(&mut sess, tokens[i % tokens.len()]).unwrap();
             i += 1;
@@ -88,6 +91,59 @@ fn main() {
         "prefill tokens/s (wall): {:.1}",
         64.0 / r.mean.as_secs_f64()
     );
+
+    // paged-KV admission: how many concurrent sessions fit a FIXED VRAM
+    // budget. The pool is sized to exactly the bytes the pre-paging
+    // engine reserved statically for `static_sessions` full sequences;
+    // paged admission then packs short streams into the same budget.
+    let max_seq = engine.weights.cfg.max_seq;
+    let static_sessions = 2usize;
+    let prompt_len = 32usize;
+    let serving = ServingConfig {
+        policy: OffloadPolicy::Full { cache_k: 4, spec_n: 2 },
+        expert_quant: QuantScheme::Hqq { bits: 3 },
+        attn_quant: QuantScheme::Hqq { bits: 4 },
+        sim_scale: SimScale::Tiny,
+        max_concurrent_sessions: 256,
+        kv_block_tokens: 32,
+        kv_pool_tokens: Some(static_sessions * max_seq),
+        ..Default::default()
+    };
+    let mut paged = harness::build_engine_with_serving(&dir, &serving, HardwareProfile::rtx3060())
+        .unwrap();
+    let prompt: Vec<u32> = tokens[..prompt_len].to_vec();
+    let t0 = std::time::Instant::now();
+    let mut admitted = Vec::new();
+    loop {
+        let mut sess = match paged.new_session() {
+            Ok(s) => s,
+            Err(_) => break, // width cap — should not bind before the pool
+        };
+        match paged.prefill(&mut sess, &prompt) {
+            Ok(_) => admitted.push(sess),
+            Err(Error::KvPoolExhausted(_)) => break,
+            Err(e) => panic!("unexpected admission failure: {e}"),
+        }
+    }
+    let st = paged.kv_pool.stats();
+    println!(
+        "\nkv_admission @ fixed VRAM ({} KV tokens, {} blocks of {}): \
+         static reservation {} sessions vs paged {} sessions of {}-token prompts \
+         ({} blocks in use, {:.3}s to admit)",
+        static_sessions * max_seq,
+        st.total_blocks,
+        paged.kv_pool.block_tokens(),
+        static_sessions,
+        admitted.len(),
+        prompt_len,
+        st.in_use_blocks,
+        t0.elapsed().as_secs_f64(),
+    );
+    assert!(
+        admitted.len() > static_sessions,
+        "paged admission must beat static reservation at the same budget"
+    );
+    drop(admitted);
 
     // host wall-time breakdown per module (perf-pass diagnostics)
     println!("\nper-module host wall time (from the prefill engine):");

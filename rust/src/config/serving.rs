@@ -133,10 +133,22 @@ pub struct ServingConfig {
     pub seed: u64,
     /// Continuous-batching width: how many live sessions the coordinator's
     /// scheduler interleaves (round-robin, one decode step per session per
-    /// tick). KV-cache device memory is reserved for this many sessions and
-    /// the engine refuses to open more at once. 1 reproduces the paper's
-    /// batch-1 serving exactly.
+    /// tick). Also sizes the KV block pool when `kv_pool_tokens` is None
+    /// (one full sequence per session, matching the old static
+    /// reservation byte for byte). 1 reproduces the paper's batch-1
+    /// serving exactly.
     pub max_concurrent_sessions: usize,
+    /// Sequence positions per KV block (all layers, K and V). Smaller
+    /// blocks waste less memory on short streams but grow the page
+    /// tables; clamped to `max_seq` by the engine. Block size never
+    /// affects numerics — width-1 decode is bit-identical at any value.
+    pub kv_block_tokens: usize,
+    /// Total KV pool capacity in sequence positions. `None` (default)
+    /// sizes it as `max_concurrent_sessions * max_seq` — exactly the
+    /// bytes the pre-paging engine reserved statically. Setting it
+    /// smaller admits sessions by free-block accounting and relies on
+    /// preemption when the pool runs dry mid-decode.
+    pub kv_pool_tokens: Option<usize>,
 }
 
 impl Default for ServingConfig {
@@ -151,6 +163,8 @@ impl Default for ServingConfig {
             temperature: 1.0,
             seed: 0,
             max_concurrent_sessions: 1,
+            kv_block_tokens: 32,
+            kv_pool_tokens: None,
         }
     }
 }
@@ -172,6 +186,25 @@ impl ServingConfig {
         }
         if self.staging_buffers == 0 {
             return Err(Error::Config("staging_buffers must be >= 1".into()));
+        }
+        if self.kv_block_tokens == 0 {
+            return Err(Error::Config("kv_block_tokens must be >= 1".into()));
+        }
+        if self.kv_block_tokens > 8192 {
+            return Err(Error::Config(format!(
+                "kv_block_tokens {} is unreasonably large (a block should be \
+                 a small fraction of the sequence; limit 8192)",
+                self.kv_block_tokens
+            )));
+        }
+        if let Some(pool) = self.kv_pool_tokens {
+            if pool < self.kv_block_tokens {
+                return Err(Error::Config(format!(
+                    "kv_pool_tokens {} is smaller than one block ({} tokens) — \
+                     the pool could never admit a session",
+                    pool, self.kv_block_tokens
+                )));
+            }
         }
         Ok(())
     }
@@ -221,6 +254,26 @@ mod tests {
         assert!(no_staging.validate().is_err());
         let pool = ServingConfig { max_concurrent_sessions: 8, ..Default::default() };
         assert!(pool.validate().is_ok());
+    }
+
+    #[test]
+    fn kv_knob_validation() {
+        let zero_block = ServingConfig { kv_block_tokens: 0, ..Default::default() };
+        assert!(zero_block.validate().is_err());
+        let huge_block = ServingConfig { kv_block_tokens: 10_000, ..Default::default() };
+        assert!(huge_block.validate().is_err());
+        let sub_block_pool = ServingConfig {
+            kv_block_tokens: 32,
+            kv_pool_tokens: Some(16),
+            ..Default::default()
+        };
+        assert!(sub_block_pool.validate().is_err());
+        let ok = ServingConfig {
+            kv_block_tokens: 16,
+            kv_pool_tokens: Some(256),
+            ..Default::default()
+        };
+        assert!(ok.validate().is_ok());
     }
 
     #[test]

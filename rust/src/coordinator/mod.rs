@@ -12,13 +12,22 @@
 //! independent. With `max_concurrent_sessions = 1` the schedule degrades
 //! to the paper's batch-1 serving, token for token.
 //!
+//! Admission is memory-elastic (see [`crate::kv`]): beyond the width cap,
+//! a request is admitted only when the paged KV pool has free blocks for
+//! its prompt — and if the pool runs dry *mid-decode*, the scheduler
+//! preempts the youngest live session (its KV blocks swap to host and it
+//! joins a requeue list, resumed bit-identically once blocks free up)
+//! instead of failing anyone. Requests whose prompt exceeds the whole
+//! pool fail up front; everything else eventually runs.
+//!
 //! Responses stream token chunks back over a bounded channel so callers
 //! can render incrementally — the property offloading labors to preserve.
 //!
 //! Fairness: the round-robin tick gives every live session exactly one
 //! decode step per pass, so a long generation cannot starve its
-//! neighbors; admission is FIFO and `queue_wait_s` records time spent
-//! waiting for a free session slot.
+//! neighbors; admission is FIFO, preempted sessions resume before new
+//! requests are admitted, and `queue_wait_s` records time spent waiting
+//! for a session slot or KV blocks.
 
 pub mod server;
 
@@ -74,6 +83,12 @@ pub enum Event {
         queue_wait_s: f64,
         /// Live sessions (including this one) when the request finished.
         active_sessions: u64,
+        /// KV pool occupancy when the request finished (this session's
+        /// blocks still counted — they free on drop).
+        kv_blocks_in_use: u64,
+        kv_blocks_free: u64,
+        /// Total KV preemptions (swap-outs to host) since engine start.
+        kv_preemptions: u64,
     },
     Error { request_id: u64, message: String },
 }
@@ -122,6 +137,10 @@ struct LiveSession {
     prompt_tokens: usize,
     started: Instant,
     queue_wait_s: f64,
+    /// Admission order (monotone): preemption always picks the youngest.
+    admit_seq: u64,
+    /// How many times this session has been swapped out (runaway guard).
+    preempt_count: u32,
 }
 
 /// The coordinator: owns the engine worker thread.
@@ -210,8 +229,10 @@ impl Drop for Coordinator {
     }
 }
 
-/// The continuous-batching loop: admit queued requests into free session
-/// slots, then give every live session one decode step per tick.
+/// The continuous-batching loop: pull requests into a local FIFO, resume
+/// preempted sessions, admit new ones while the width cap and the KV
+/// block pool allow, then give every live session one decode step per
+/// tick — preempting the youngest session when the pool runs dry.
 fn scheduler_loop(
     engine: &mut MoeEngine,
     work_rx: &Receiver<Work>,
@@ -221,13 +242,22 @@ fn scheduler_loop(
     let max_sessions = engine.max_concurrent_sessions.max(1);
     let tokenizer = ByteTokenizer::new();
     let mut active: VecDeque<LiveSession> = VecDeque::new();
+    // sessions swapped out to host, oldest first (FIFO resume)
+    let mut preempted: VecDeque<LiveSession> = VecDeque::new();
+    // requests pulled off the channel but not yet admitted; a request
+    // refused for lack of KV blocks goes back to the FRONT, so FIFO
+    // order survives deferral
+    let mut pending: VecDeque<(Request, Sender<Event>, Instant)> = VecDeque::new();
     let mut accepting = true;
+    let mut next_admit_seq: u64 = 0;
 
     loop {
-        // admission: fill free slots from the queue. Block only when idle;
-        // with live sessions we poll so decode keeps flowing.
-        while accepting && active.len() < max_sessions {
-            let work = if active.is_empty() {
+        // 1) drain the channel into the local queue. Block only when
+        // fully idle; with live or deferred work we poll so decode flows.
+        loop {
+            let idle =
+                active.is_empty() && preempted.is_empty() && pending.is_empty();
+            let work = if idle && accepting {
                 match work_rx.recv() {
                     Ok(w) => w,
                     Err(_) => {
@@ -245,22 +275,96 @@ fn scheduler_loop(
                     }
                 }
             };
-            let (req, tx, enqueued) = match work {
-                Work::Run(req, tx, enqueued) => (req, tx, enqueued),
+            match work {
+                Work::Run(req, tx, enqueued) => pending.push_back((req, tx, enqueued)),
                 Work::Shutdown => {
                     // finish live sessions, drop anything still queued
                     accepting = false;
+                    pending.clear();
                     break;
                 }
-            };
-            m.inc("requests_started", 1);
+            }
+        }
+
+        // 2) resume preempted sessions FIRST (oldest first) — they were
+        // admitted before anything still pending, and starving them would
+        // let new work steal the blocks they are waiting for.
+        while !preempted.is_empty() && active.len() < max_sessions {
+            // don't bother restoring a stream the pool can't even give a
+            // next decode step — it would be re-preempted immediately
+            let next_tokens = preempted.front().unwrap().sess.position() + 1;
+            if !engine.kv_pool.can_admit(next_tokens) {
+                if active.is_empty() {
+                    // whole pool is free and still too small: permanent
+                    let live = preempted.pop_front().unwrap();
+                    m.inc("requests_failed", 1);
+                    let _ = live.tx.send(Event::Error {
+                        request_id: live.id,
+                        message: format!(
+                            "kv pool of {} tokens cannot resume a session at \
+                             position {}",
+                            engine.kv_pool.capacity_tokens(),
+                            next_tokens - 1
+                        ),
+                    });
+                    continue;
+                }
+                break;
+            }
+            let mut live = preempted.pop_front().unwrap();
+            match engine.resume_session(&mut live.sess) {
+                Ok(()) => {
+                    m.inc("kv_resumes", 1);
+                    active.push_back(live);
+                }
+                Err(Error::KvPoolExhausted(msg)) => {
+                    if active.is_empty() {
+                        // nothing left to free blocks — the pool can never
+                        // back this stream again
+                        m.inc("requests_failed", 1);
+                        let _ = live.tx.send(Event::Error {
+                            request_id: live.id,
+                            message: format!("kv pool cannot resume session: {msg}"),
+                        });
+                    } else {
+                        preempted.push_front(live);
+                        break;
+                    }
+                }
+                Err(e) => {
+                    m.inc("requests_failed", 1);
+                    let _ = live.tx.send(Event::Error {
+                        request_id: live.id,
+                        message: e.to_string(),
+                    });
+                }
+            }
+        }
+
+        // 3) admit new requests while a width slot and KV blocks allow
+        while !pending.is_empty() && preempted.is_empty() && active.len() < max_sessions {
+            // coarse pre-gate: the byte tokenizer yields at least
+            // prompt.len() tokens, so when the pool clearly can't take
+            // the queue head yet, skip the whole admit path (tokenize +
+            // session open + prefill setup) instead of re-running it
+            // every tick. With nothing live the gate is bypassed so an
+            // impossible request still fails permanently in admit().
+            let head_min_tokens = pending.front().unwrap().0.prompt.len() + 1;
+            if !engine.kv_pool.can_admit(head_min_tokens)
+                && !(active.is_empty() && preempted.is_empty())
+            {
+                break;
+            }
+            let (req, tx, enqueued) = pending.pop_front().unwrap();
             let queue_wait_s = enqueued.elapsed().as_secs_f64();
-            m.observe("queue_wait_s", queue_wait_s);
-            match admit(engine, &tokenizer, req, seed, tx, queue_wait_s) {
+            match admit(engine, &tokenizer, req, seed, tx, queue_wait_s, next_admit_seq) {
                 Ok(Some(live)) => {
+                    next_admit_seq += 1;
+                    m.inc("requests_started", 1);
+                    m.observe("queue_wait_s", queue_wait_s);
                     if live.generated >= live.budget {
                         // single-token budget: finished at prefill
-                        finish(m, live, active.len() as u64 + 1);
+                        finish(m, engine, live, active.len() as u64 + 1);
                     } else {
                         active.push_back(live);
                     }
@@ -268,34 +372,60 @@ fn scheduler_loop(
                 Ok(None) => {
                     m.inc("requests_cancelled", 1);
                 }
-                Err((id, tx, e)) => {
+                Err((req, tx, e)) => {
+                    let transient = matches!(e, Error::KvPoolExhausted(_))
+                        && !(active.is_empty() && preempted.is_empty());
+                    if transient {
+                        // live sessions will free blocks as they finish —
+                        // defer, preserving FIFO order
+                        pending.push_front((req, tx, enqueued));
+                        break;
+                    }
+                    m.inc("requests_started", 1);
+                    m.observe("queue_wait_s", queue_wait_s);
                     m.inc("requests_failed", 1);
-                    let _ = tx.send(Event::Error { request_id: id, message: e.to_string() });
+                    let _ = tx.send(Event::Error { request_id: req.id, message: e.to_string() });
                 }
             }
-            m.set_gauge("active_sessions", active.len() as u64);
         }
+        m.set_gauge("active_sessions", active.len() as u64);
+        let kv = engine.kv_pool.stats();
+        m.record_kv_pool(
+            kv.total_blocks as u64,
+            kv.free_blocks as u64,
+            kv.in_use_blocks as u64,
+            kv.preemptions,
+        );
 
         if active.is_empty() {
-            if !accepting {
+            if preempted.is_empty() && pending.is_empty() && !accepting {
                 break;
             }
             continue;
         }
 
-        // one scheduling tick: exactly one decode step per live session,
-        // in admission order (round-robin fairness).
+        // 4) one scheduling tick: exactly one decode step per live
+        // session, in admission order (round-robin fairness).
         m.inc("scheduler_ticks", 1);
         let n = active.len();
         for _ in 0..n {
             let mut live = active.pop_front().unwrap();
             match step(engine, &tokenizer, &mut live) {
                 Ok(StepOutcome::Continue) => active.push_back(live),
-                Ok(StepOutcome::Finished) => finish(m, live, active.len() as u64 + 1),
+                Ok(StepOutcome::Finished) => {
+                    finish(m, engine, live, active.len() as u64 + 1)
+                }
                 Ok(StepOutcome::Cancelled) => {
                     // client went away: free the slot instead of decoding
                     // the rest of the budget into a dropped channel
                     m.inc("requests_cancelled", 1);
+                }
+                Err(Error::KvPoolExhausted(msg)) => {
+                    // pool dry mid-decode: swap the youngest session's KV
+                    // to host and requeue it so older streams finish.
+                    // decode_step commits blocks before any state change,
+                    // so `live` retries its step cleanly next tick.
+                    preempt_youngest(engine, m, &mut active, &mut preempted, live, &msg);
                 }
                 Err(e) => {
                     // the failing session is dropped; its neighbors keep
@@ -312,10 +442,78 @@ fn scheduler_loop(
     }
 }
 
+/// How often one session may be swapped out before the scheduler gives up
+/// on it — a pure runaway guard; normal preemption churn stays far below.
+const MAX_PREEMPTIONS_PER_SESSION: u32 = 64;
+
+/// Preemption policy: among the stepping session and all its live
+/// neighbors, the YOUNGEST (latest admitted) is swapped out — oldest
+/// streams keep their progress, which bounds total wasted work.
+fn preempt_youngest(
+    engine: &mut MoeEngine,
+    m: &Metrics,
+    active: &mut VecDeque<LiveSession>,
+    preempted: &mut VecDeque<LiveSession>,
+    live: LiveSession,
+    why: &str,
+) {
+    if active.is_empty() {
+        // `live` is alone and still cannot get blocks: nothing to preempt
+        m.inc("requests_failed", 1);
+        let _ = live.tx.send(Event::Error {
+            request_id: live.id,
+            message: format!("kv pool exhausted with no session to preempt: {why}"),
+        });
+        return;
+    }
+    let (vi, vseq) = active
+        .iter()
+        .enumerate()
+        .max_by_key(|(_, s)| s.admit_seq)
+        .map(|(i, s)| (i, s.admit_seq))
+        .expect("active is non-empty");
+    let mut victim = if live.admit_seq > vseq {
+        live
+    } else {
+        let v = active.remove(vi).expect("index from enumerate");
+        active.push_back(live);
+        v
+    };
+    if victim.preempt_count >= MAX_PREEMPTIONS_PER_SESSION {
+        m.inc("requests_failed", 1);
+        let _ = victim.tx.send(Event::Error {
+            request_id: victim.id,
+            message: format!(
+                "session preempted {MAX_PREEMPTIONS_PER_SESSION} times without \
+                 completing — kv pool is thrashing: {why}"
+            ),
+        });
+        return;
+    }
+    match engine.preempt_session(&mut victim.sess) {
+        Ok(()) => {
+            // no counter here: the engine-side KvPool tally is the single
+            // source, surfaced as the `kv_preemptions` gauge each pass
+            victim.preempt_count += 1;
+            preempted.push_back(victim);
+        }
+        Err(e) => {
+            m.inc("requests_failed", 1);
+            let _ = victim.tx.send(Event::Error {
+                request_id: victim.id,
+                message: e.to_string(),
+            });
+        }
+    }
+}
+
 /// Tokenize, budget and prefill a request into a live session, emitting
 /// its first token. `Ok(None)` means the submitter already dropped its
-/// stream; on failure the channel is handed back so the caller can
-/// report the error.
+/// stream; on failure the request AND channel are handed back so the
+/// caller can either requeue (transient [`Error::KvPoolExhausted`]) or
+/// report the error. The prompt's KV blocks are committed all-or-nothing
+/// before any compute, so a refused admission leaves no residue.
+#[allow(clippy::too_many_arguments)]
 fn admit(
     engine: &mut MoeEngine,
     tokenizer: &ByteTokenizer,
@@ -323,7 +521,8 @@ fn admit(
     base_seed: u64,
     tx: Sender<Event>,
     queue_wait_s: f64,
-) -> std::result::Result<Option<LiveSession>, (u64, Sender<Event>, Error)> {
+    admit_seq: u64,
+) -> std::result::Result<Option<LiveSession>, (Request, Sender<Event>, Error)> {
     let started = Instant::now();
 
     let prompt_tokens = if req.chat {
@@ -332,25 +531,47 @@ fn admit(
         tokenizer.encode(&req.prompt)
     };
     if prompt_tokens.is_empty() {
-        return Err((req.id, tx, Error::Serving("empty prompt".into())));
+        return Err((req, tx, Error::Serving("empty prompt".into())));
     }
     let budget = req
         .max_tokens
         .min(engine.weights.cfg.max_seq.saturating_sub(prompt_tokens.len()).saturating_sub(1));
     if budget == 0 {
-        return Err((req.id, tx, Error::Serving("prompt exceeds context window".into())));
+        return Err((req, tx, Error::Serving("prompt exceeds context window".into())));
     }
+    // a prompt bigger than the ENTIRE pool can never be served — fail it
+    // permanently instead of deferring it forever at the queue head
+    if !engine.kv_pool.fits(prompt_tokens.len() + 1) {
+        return Err((
+            req,
+            tx,
+            Error::Serving(format!(
+                "prompt of {} tokens exceeds the kv pool capacity of {} tokens",
+                prompt_tokens.len(),
+                engine.kv_pool.capacity_tokens()
+            )),
+        ));
+    }
+    // ...and clamp the token budget to what the pool can EVER back, so a
+    // generation finishes at the capacity wall instead of erroring after
+    // tokens were already streamed (fits() above guarantees this is ≥ 1)
+    let budget = budget.min(
+        engine
+            .kv_pool
+            .capacity_tokens()
+            .saturating_sub(prompt_tokens.len()),
+    );
     // request-id-derived seed: independent of admission order, and equal
     // to the old sequential derivation when requests are served one at a
     // time in submit order.
     let mut sess = match Session::with_seed(engine, base_seed.wrapping_add(req.id)) {
         Ok(s) => s,
-        Err(e) => return Err((req.id, tx, e)),
+        Err(e) => return Err((req, tx, e)),
     };
     let mut sampler = sess.sampler(req.temperature, req.top_p);
     let logits = match engine.prefill(&mut sess, &prompt_tokens) {
         Ok(l) => l,
-        Err(e) => return Err((req.id, tx, e)),
+        Err(e) => return Err((req, tx, e)),
     };
     let next = sampler.sample(logits.row(prompt_tokens.len() - 1)) as u32;
     let piece = tokenizer.decode(&[next]);
@@ -370,6 +591,8 @@ fn admit(
         prompt_tokens: prompt_tokens.len(),
         started,
         queue_wait_s,
+        admit_seq,
+        preempt_count: 0,
     }))
 }
 
@@ -406,11 +629,12 @@ fn step(
 }
 
 /// Emit the Done event and final accounting for a finished session.
-fn finish(m: &Metrics, live: LiveSession, active_sessions: u64) {
+fn finish(m: &Metrics, engine: &MoeEngine, live: LiveSession, active_sessions: u64) {
     let wall = live.started.elapsed().as_secs_f64();
     let sim_tps = live.sess.run.tokens_per_s_sim();
     let hits = live.sess.run.total_hits();
     let misses = live.sess.run.total_misses();
+    let kv = engine.kv_pool.stats();
     m.inc("requests_ok", 1);
     m.inc("tokens_generated", live.generated as u64);
     m.inc("expert_cache_hits", hits);
@@ -426,6 +650,9 @@ fn finish(m: &Metrics, live: LiveSession, active_sessions: u64) {
         tokens_per_s_sim: sim_tps,
         queue_wait_s: live.queue_wait_s,
         active_sessions,
+        kv_blocks_in_use: kv.in_use_blocks as u64,
+        kv_blocks_free: kv.free_blocks as u64,
+        kv_preemptions: kv.preemptions,
     });
 }
 

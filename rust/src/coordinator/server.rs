@@ -5,7 +5,8 @@
 //! ```text
 //! -> {"prompt": "what is perplexity", "max_tokens": 48}
 //! <- {"type":"token","text":"t"}
-//! <- {"type":"done","text":"...","tokens_per_s_wall":...,"queue_wait_s":...,"active_sessions":...}
+//! <- {"type":"done","text":"...","tokens_per_s_wall":...,"queue_wait_s":...,"active_sessions":...,
+//!     "kv_blocks_in_use":...,"kv_blocks_free":...,"kv_preemptions":...}
 //! ```
 //!
 //! Each connection gets its own handler thread; the coordinator's
@@ -97,6 +98,9 @@ pub fn event_to_json(ev: &Event) -> Json {
             tokens_per_s_sim,
             queue_wait_s,
             active_sessions,
+            kv_blocks_in_use,
+            kv_blocks_free,
+            kv_preemptions,
             ..
         } => Json::obj(vec![
             ("type", "done".into()),
@@ -108,6 +112,9 @@ pub fn event_to_json(ev: &Event) -> Json {
             ("tokens_per_s_sim", (*tokens_per_s_sim).into()),
             ("queue_wait_s", (*queue_wait_s).into()),
             ("active_sessions", (*active_sessions as usize).into()),
+            ("kv_blocks_in_use", (*kv_blocks_in_use as usize).into()),
+            ("kv_blocks_free", (*kv_blocks_free as usize).into()),
+            ("kv_preemptions", (*kv_preemptions as usize).into()),
         ]),
         Event::Error { message, .. } => Json::obj(vec![
             ("type", "error".into()),
@@ -182,11 +189,18 @@ mod tests {
             tokens_per_s_sim: 2.5,
             queue_wait_s: 0.25,
             active_sessions: 2,
+            kv_blocks_in_use: 7,
+            kv_blocks_free: 9,
+            kv_preemptions: 1,
         };
         let j = event_to_json(&ev);
         assert_eq!(j.get("type").unwrap().as_str(), Some("done"));
         assert_eq!(j.get("new_tokens").unwrap().as_usize(), Some(5));
         assert_eq!(j.get("active_sessions").unwrap().as_usize(), Some(2));
         assert!((j.get("queue_wait_s").unwrap().as_f64().unwrap() - 0.25).abs() < 1e-9);
+        // KV pool telemetry rides along next to active_sessions
+        assert_eq!(j.get("kv_blocks_in_use").unwrap().as_usize(), Some(7));
+        assert_eq!(j.get("kv_blocks_free").unwrap().as_usize(), Some(9));
+        assert_eq!(j.get("kv_preemptions").unwrap().as_usize(), Some(1));
     }
 }

@@ -73,6 +73,13 @@ impl CostModel {
         self.profile.h2d_time(self.expert_wire_bytes)
     }
 
+    /// KV page swap for preemption/resume: moving `bytes` of mapped KV
+    /// blocks across the pinned link (symmetric either direction in the
+    /// model).
+    pub fn kv_swap_s(&self, bytes: u64) -> f64 {
+        self.profile.h2d_time(bytes)
+    }
+
     pub fn expert_compute_s(&self) -> f64 {
         (Self::EXPERT_KERNELS - 1.0) * self.profile.launch_overhead_s
             + self.profile.gemv_time(self.expert_hbm_bytes)

@@ -7,9 +7,10 @@
 //!   pre-marshalled literals, the per-layer expert LRU cache, the copy
 //!   engine, the cost model and the virtual [`Timeline`]. It holds no
 //!   per-request state and can serve any number of generation streams.
-//! * [`Session`] owns one request's state: per-layer KV literals, the
-//!   sequence position, the trace token counter, per-session
-//!   [`stats::RunStats`] and the sampler seed.
+//! * [`Session`] owns one request's state: the paged per-layer KV store
+//!   (device literals backed block-by-block by the engine's shared
+//!   [`crate::kv::KvPool`]), the sequence position, the trace token
+//!   counter, per-session [`stats::RunStats`] and the sampler seed.
 //!   `decode_step`/`prefill`/`generate`/`score`
 //!   take a `&mut Session`, so the coordinator's scheduler can interleave
 //!   decode steps of concurrent sessions against one warm expert cache.
@@ -44,6 +45,7 @@ use crate::cache::manager::{CacheEvent, CacheManager};
 use crate::clock::Timeline;
 use crate::config::{HardwareProfile, Manifest, OffloadPolicy, ServingConfig};
 use crate::error::{Error, Result};
+use crate::kv::KvPool;
 use crate::memory::copy_engine::{CopyEngine, TransferTicket};
 use crate::memory::device::DeviceMemory;
 use crate::memory::host::ExpertId;
@@ -90,9 +92,15 @@ pub struct MoeEngine {
     in_flight: HashMap<ExpertId, InFlight>,
     spec_queue: VecDeque<ExpertId>,
     staging_buffers: usize,
-    /// Scheduler concurrency the engine was provisioned for (KV memory is
-    /// reserved for this many sessions; see [`ServingConfig`]).
+    /// Scheduler concurrency the engine was provisioned for. KV memory is
+    /// no longer reserved per session — it comes from the paged block
+    /// pool — but this still bounds how many sessions may be open at once
+    /// (and sizes the pool when `kv_pool_tokens` is unset).
     pub max_concurrent_sessions: usize,
+    /// Shared paged-KV block pool (see [`crate::kv`]): the KV byte budget
+    /// carved out of device memory, drawn on block-by-block as sessions
+    /// decode. Sessions hold an `Arc` so drops return blocks directly.
+    pub kv_pool: Arc<KvPool>,
     /// Live [`Session`] count — [`Session::new`] refuses to exceed the
     /// provisioned pool, [`Session`]'s `Drop` releases the slot.
     live_sessions: Arc<AtomicUsize>,
@@ -125,8 +133,15 @@ impl MoeEngine {
             weights.attn_quant,
             serving.expert_quant,
         );
-        // device budget at accounting scale: VRAM minus shared weights, KV
-        // caches (one per concurrent session) and staging buffers
+        // device budget at accounting scale: VRAM minus shared weights,
+        // the paged KV block pool and staging buffers. The pool is carved
+        // out of the budget as whole blocks: per-token KV bytes come from
+        // the accounting geometry (full-sequence bytes spread over the
+        // executed model's max_seq positions, since block indices live in
+        // the executed model's position space), block size from the
+        // serving config, capacity from kv_pool_tokens — defaulting to
+        // one full sequence per configured session, i.e. byte-for-byte
+        // the old static reservation.
         let kv_per_session = match serving.sim_scale {
             crate::config::SimScale::Tiny => {
                 (2 * cfg.n_layers * cfg.max_seq * cfg.kv_dim() * 2) as u64
@@ -136,31 +151,48 @@ impl MoeEngine {
                 (2 * m.n_layers * m.max_seq * m.kv_dim() * 2) as u64
             }
         };
-        let kv_bytes = kv_per_session * serving.max_concurrent_sessions as u64;
+        let kv_token_bytes = kv_per_session.div_ceil(cfg.max_seq as u64);
+        let block_tokens = serving.kv_block_tokens.clamp(1, cfg.max_seq);
+        let pool_tokens = serving
+            .kv_pool_tokens
+            .unwrap_or(serving.max_concurrent_sessions * cfg.max_seq);
+        let n_blocks = pool_tokens.div_ceil(block_tokens);
+        let block_bytes = kv_token_bytes * block_tokens as u64;
+        let kv_pool_bytes = n_blocks as u64 * block_bytes;
         let shared = cost.lm_head_bytes * 2
             + (cost.attn_bytes + cost.gate_bytes) * ((cfg.n_layers as f64 * cost.layer_ratio) as u64);
         let staging = serving.staging_buffers as u64 * cost.expert_wire_bytes;
-        let reserved = shared + kv_bytes + staging;
-        // a multi-session KV reservation that outgrows the modeled VRAM
-        // must fail loudly — clamping the device up (the width-1 tiny-
-        // testbed fallback below) would simulate a GPU that doesn't exist
-        if serving.max_concurrent_sessions > 1
-            && reserved + cost.expert_wire_bytes > cost.profile.vram_bytes
+        let reserved = shared + staging;
+        // a KV pool that outgrows the modeled VRAM must fail loudly —
+        // clamping the device up (the width-1 tiny-testbed fallback
+        // below) would simulate a GPU that doesn't exist
+        if (serving.max_concurrent_sessions > 1 || serving.kv_pool_tokens.is_some())
+            && reserved + kv_pool_bytes + cost.expert_wire_bytes > cost.profile.vram_bytes
         {
             return Err(Error::Config(format!(
-                "max_concurrent_sessions {} reserves {} MiB (KV + shared + staging), \
-                 which exceeds {}'s {} MiB VRAM — lower the session count",
-                serving.max_concurrent_sessions,
-                reserved / (1 << 20),
+                "KV pool of {pool_tokens} tokens ({} blocks) reserves {} MiB \
+                 (KV pool + shared + staging), which exceeds {}'s {} MiB VRAM — \
+                 lower max_concurrent_sessions or kv_pool_tokens",
+                n_blocks,
+                (reserved + kv_pool_bytes) / (1 << 20),
                 cost.profile.name,
                 cost.profile.vram_bytes / (1 << 20),
             )));
         }
-        let device = DeviceMemory::new(
-            cost.profile.vram_bytes.max(reserved + cost.expert_wire_bytes),
+        let device = DeviceMemory::with_kv_pool(
+            cost.profile
+                .vram_bytes
+                .max(reserved + kv_pool_bytes + cost.expert_wire_bytes),
             reserved,
+            kv_pool_bytes,
             cost.expert_wire_bytes,
         );
+        let kv_pool = Arc::new(KvPool::carve(
+            kv_pool_bytes,
+            block_tokens,
+            block_bytes,
+            vec![cfg.max_seq, cfg.n_kv_heads, cfg.head_dim],
+        ));
         let cache = CacheManager::new(
             cfg.n_layers,
             serving.policy.cache_k(),
@@ -185,12 +217,14 @@ impl MoeEngine {
             spec_queue: VecDeque::new(),
             staging_buffers: serving.staging_buffers,
             max_concurrent_sessions: serving.max_concurrent_sessions,
+            kv_pool,
             live_sessions: Arc::new(AtomicUsize::new(0)),
         })
     }
 
-    /// Open a fresh session (zeroed KV, position 0, empty stats). The
-    /// expert cache is shared with every other session and stays warm.
+    /// Open a fresh session (virgin paged KV — zero blocks committed —
+    /// position 0, empty stats). The expert cache is shared with every
+    /// other session and stays warm.
     /// Errors when `max_concurrent_sessions` sessions are already live.
     pub fn new_session(&self) -> Result<Session> {
         Session::new(self)
@@ -205,18 +239,23 @@ impl MoeEngine {
     /// Sessions are unaffected — their KV caches live in [`Session`].
     pub fn drop_expert_cache(&mut self) {
         self.drain_in_flight();
-        let reserved = self.cache.device.used_bytes()
+        // non-expert bytes = reserved + the KV pool carve; split the
+        // carve back out so the rebuilt device keeps it pinned
+        let non_expert = self.cache.device.used_bytes()
             - self.cache.device.resident_count() as u64 * self.cost.expert_wire_bytes;
+        let kv_pool_bytes = self.cache.device.kv_pool_bytes();
+        let reserved = non_expert - kv_pool_bytes;
         self.cache = CacheManager::new(
             self.weights.cfg.n_layers,
             self.cache.cache_k(),
             self.staging_buffers,
-            DeviceMemory::new(
+            DeviceMemory::with_kv_pool(
                 self.cost
                     .profile
                     .vram_bytes
-                    .max(reserved + self.cost.expert_wire_bytes),
+                    .max(non_expert + self.cost.expert_wire_bytes),
                 reserved,
+                kv_pool_bytes,
                 self.cost.expert_wire_bytes,
             ),
         );
@@ -231,6 +270,43 @@ impl MoeEngine {
     }
 
     // ---------------------------------------------------------------------
+    // KV preemption (scheduler support)
+    // ---------------------------------------------------------------------
+
+    /// Preempt `sess`: swap its KV images to host memory and return every
+    /// block to the pool so older sessions can finish. The modeled D2H
+    /// transfer of the mapped blocks occupies the link and blocks the
+    /// decode front like any demand load. The session's position, stats
+    /// and generated state are untouched — [`Self::resume_session`]
+    /// continues it bit-identically.
+    pub fn preempt_session(&mut self, sess: &mut Session) -> Result<()> {
+        let bytes = sess.kv.swap_out()?;
+        if bytes > 0 {
+            let span = self
+                .timeline
+                .transfer(self.cost.kv_swap_s(bytes), self.timeline.now());
+            self.timeline.wait_until(span.end);
+        }
+        self.kv_pool.note_preemption();
+        Ok(())
+    }
+
+    /// Resume a preempted session: re-acquire blocks for its written
+    /// positions and restore the KV images from host, bit-exactly.
+    /// Errors with [`Error::KvPoolExhausted`] while the pool still
+    /// cannot back the stream (the scheduler retries later).
+    pub fn resume_session(&mut self, sess: &mut Session) -> Result<()> {
+        let bytes = sess.kv.swap_in(sess.pos)?;
+        if bytes > 0 {
+            let span = self
+                .timeline
+                .transfer(self.cost.kv_swap_s(bytes), self.timeline.now());
+            self.timeline.wait_until(span.end);
+        }
+        Ok(())
+    }
+
+    // ---------------------------------------------------------------------
     // decode
     // ---------------------------------------------------------------------
 
@@ -242,6 +318,11 @@ impl MoeEngine {
                 sess.pos, self.weights.cfg.max_seq
             )));
         }
+        // commit KV blocks for the new position up front (all layers
+        // advance in lockstep, one page table covers them all). On a dry
+        // pool this fails BEFORE any compute or state change, so the
+        // scheduler can preempt a session and retry the step cleanly.
+        sess.kv.ensure_tokens(sess.pos + 1)?;
         let sim_start = self.timeline.now();
         let wall_start = Instant::now();
         let mut tstats = TokenStats::default();
@@ -277,11 +358,15 @@ impl MoeEngine {
         tstats: &mut TokenStats,
     ) -> Result<Tensor> {
         // attention (weights borrowed in place — no per-layer copies on the
-        // hot path; see EXPERIMENTS.md §Perf)
+        // hot path; see EXPERIMENTS.md §Perf). Virgin layers read the
+        // shared zero template — bit-identical to a freshly zeroed cache
+        // since the position mask hides everything at and beyond pos.
         self.timeline.compute(self.cost.attn_compute_s(), 0.0);
-        let (kc, vc) = sess.kv[l].take().expect("kv cache present");
-        let (x, kc, vc) = self.rt.attn(&x, &self.lits.layers[l], &kc, &vc, sess.pos)?;
-        sess.kv[l] = Some((kc, vc));
+        let (x, kc, vc) = {
+            let (k_ref, v_ref) = sess.kv.layer_or(l, &self.lits.zero_kv)?;
+            self.rt.attn(&x, &self.lits.layers[l], k_ref, v_ref, sess.pos)?
+        };
+        sess.kv.set_layer(l, kc, vc)?;
 
         // router
         self.timeline.compute(self.cost.gate_compute_s(), 0.0);
@@ -500,6 +585,9 @@ impl MoeEngine {
         if sess.pos + tokens.len() > self.weights.cfg.max_seq {
             return Err(Error::Engine("prompt exceeds max_seq".into()));
         }
+        // whole-prompt block commit, all-or-nothing: a refused admission
+        // holds no blocks and the request can be requeued untouched
+        sess.kv.ensure_tokens(sess.pos + tokens.len())?;
         let sim_start = self.timeline.now();
         let c = self.weights.cfg.prefill_chunk;
         let d = self.weights.cfg.d_model;
@@ -544,9 +632,11 @@ impl MoeEngine {
         let d = self.weights.cfg.d_model;
 
         self.timeline.compute(self.cost.attn_compute_s(), 0.0);
-        let (kc, vc) = sess.kv[l].take().expect("kv cache present");
-        let (x, kc, vc) = self.rt.prefill_attn(&x, &self.lits.layers[l], &kc, &vc, sess.pos)?;
-        sess.kv[l] = Some((kc, vc));
+        let (x, kc, vc) = {
+            let (k_ref, v_ref) = sess.kv.layer_or(l, &self.lits.zero_kv)?;
+            self.rt.prefill_attn(&x, &self.lits.layers[l], k_ref, v_ref, sess.pos)?
+        };
+        sess.kv.set_layer(l, kc, vc)?;
 
         self.timeline.compute(self.cost.gate_compute_s(), 0.0);
         let (gate_logits, h) = self.rt.gate(&x, &self.lits.layers[l])?;

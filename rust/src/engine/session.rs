@@ -2,24 +2,28 @@
 //! requests can share one warm engine.
 //!
 //! A [`Session`] owns everything that belongs to ONE generation stream:
-//! the per-layer KV cache, the sequence position, the trace token
+//! the paged per-layer KV store, the sequence position, the trace token
 //! counter, the run statistics, and the sampler seed. The engine core
 //! ([`super::MoeEngine`]) owns everything shareable — runtime,
 //! weights/literals, the expert LRU cache, the copy engine, the cost
-//! model and the virtual timeline. Any number of sessions can be decoded
-//! against one engine (interleaved by the coordinator's scheduler); they
-//! are numerically independent but share the warm expert cache, which is
-//! exactly the cross-request reuse the paper's offloading algorithm
-//! benefits from.
+//! model, the virtual timeline and the shared KV block pool. Any number
+//! of sessions can be decoded against one engine (interleaved by the
+//! coordinator's scheduler); they are numerically independent but share
+//! the warm expert cache, which is exactly the cross-request reuse the
+//! paper's offloading algorithm benefits from.
+//!
+//! KV memory is paged (see [`crate::kv`]): opening a session commits no
+//! device memory at all — blocks are drawn from the engine's pool on
+//! demand as decode advances, returned on [`Session::reset`]/drop, and
+//! swapped to host when the scheduler preempts the stream.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 
-use xla::Literal;
-
 use crate::engine::stats::RunStats;
 use crate::engine::MoeEngine;
 use crate::error::{Error, Result};
+use crate::kv::PagedKv;
 use crate::model::Sampler;
 
 /// Process-wide session id source, so activation-trace records from
@@ -30,9 +34,10 @@ static NEXT_SESSION_ID: AtomicU64 = AtomicU64::new(1);
 pub struct Session {
     /// Unique (process-wide) session id, stamped into trace records.
     pub id: u64,
-    /// Per-layer KV caches as opaque literals (§Perf opt 3: no host
-    /// round-trips between attention calls).
-    pub(super) kv: Vec<Option<(Literal, Literal)>>,
+    /// Paged per-layer KV store: device literals (§Perf opt 3: no host
+    /// round-trips between attention calls) backed block-by-block by the
+    /// engine's shared [`crate::kv::KvPool`].
+    pub kv: PagedKv,
     /// Next sequence position to be written.
     pub(super) pos: usize,
     /// Tokens pushed through this session (trace indexing).
@@ -48,13 +53,14 @@ pub struct Session {
 }
 
 impl Session {
-    /// Fresh session against `engine`: zeroed KV, position 0, empty
-    /// stats. Errors when the engine's session pool is exhausted — KV
-    /// device memory is reserved for `max_concurrent_sessions`, so more
-    /// live sessions would silently oversubscribe the modeled VRAM.
+    /// Fresh session against `engine`: virgin KV (zero blocks mapped),
+    /// position 0, empty stats. O(1) — device memory is only committed
+    /// as decode advances. Errors when `max_concurrent_sessions` sessions
+    /// are already open: the scheduler is provisioned for that width, and
+    /// unbounded opens would defeat the KV pool's admission accounting.
     pub fn new(engine: &MoeEngine) -> Result<Self> {
-        // reserve the pool slot BEFORE allocating KV, so a rejected open
-        // never performs the very allocation the pool bounds
+        // reserve the width slot BEFORE constructing state, so a rejected
+        // open never touches the pool
         let max = engine.max_concurrent_sessions.max(1);
         let pool = Arc::clone(&engine.live_sessions);
         if pool
@@ -72,21 +78,9 @@ impl Session {
                  (raise ServingConfig::max_concurrent_sessions)"
             )));
         }
-        let n_layers = engine.weights.cfg.n_layers;
-        let mut kv = Vec::with_capacity(n_layers);
-        for _ in 0..n_layers {
-            match engine.rt.zero_kv() {
-                Ok(z) => kv.push(Some(z)),
-                Err(e) => {
-                    // release the reserved slot before propagating
-                    pool.fetch_sub(1, Ordering::SeqCst);
-                    return Err(e);
-                }
-            }
-        }
         Ok(Session {
             id: NEXT_SESSION_ID.fetch_add(1, Ordering::Relaxed),
-            kv,
+            kv: PagedKv::new(engine.weights.cfg.n_layers, Arc::clone(&engine.kv_pool)),
             pos: 0,
             token_counter: 0,
             run: RunStats::default(),
@@ -112,17 +106,18 @@ impl Session {
         self.token_counter
     }
 
-    /// Restart the sequence in place: zero the KV cache and position but
-    /// KEEP the accumulated run statistics (the old warm
-    /// `reset_session(false)` semantics — the engine's expert cache is
-    /// untouched and stays warm).
-    pub fn reset(&mut self, engine: &MoeEngine) -> Result<()> {
-        for slot in &mut self.kv {
-            *slot = Some(engine.rt.zero_kv()?);
-        }
+    /// Restart the sequence in place: return every KV block to the pool
+    /// and rewind the position, but KEEP the accumulated run statistics
+    /// (the old warm `reset_session(false)` semantics — the engine's
+    /// expert cache is untouched and stays warm). No literal is
+    /// reallocated: layers drop back to virgin and the next attention
+    /// call reads the engine's shared zero template, which is bit-
+    /// identical to freshly zeroed caches because the position mask hides
+    /// everything at and beyond `pos`.
+    pub fn reset(&mut self) {
+        self.kv.release();
         self.pos = 0;
         self.token_counter = 0;
-        Ok(())
     }
 
     /// A sampler seeded from this session.
@@ -133,6 +128,7 @@ impl Session {
 
 impl Drop for Session {
     fn drop(&mut self) {
+        // KV blocks return to the shared pool via PagedKv's own Drop
         self.pool.fetch_sub(1, Ordering::SeqCst);
     }
 }

@@ -27,6 +27,12 @@ pub enum Error {
     #[error("engine error: {0}")]
     Engine(String),
 
+    /// The paged KV block pool is dry. Typed (unlike the string errors)
+    /// because the scheduler reacts to it structurally: preempt the
+    /// youngest session / defer admission instead of failing the request.
+    #[error("kv pool exhausted: {0}")]
+    KvPoolExhausted(String),
+
     #[error("serving error: {0}")]
     Serving(String),
 

@@ -41,8 +41,6 @@ pub fn build_engine(
     profile: HardwareProfile,
     scale: SimScale,
 ) -> Result<MoeEngine> {
-    let manifest = Manifest::load(dir)?;
-    let weights = ModelWeights::load(&manifest.config, &dir.join("weights.npz"), attn, expert)?;
     let serving = ServingConfig {
         policy,
         expert_quant: expert,
@@ -50,7 +48,25 @@ pub fn build_engine(
         sim_scale: scale,
         ..Default::default()
     };
-    MoeEngine::new(&manifest, weights, &serving, profile)
+    build_engine_with_serving(dir, &serving, profile)
+}
+
+/// Build an engine from a full [`ServingConfig`] (KV pool sizing,
+/// scheduler width, …) — the benches and paged-KV tests need the knobs
+/// `build_engine` doesn't expose.
+pub fn build_engine_with_serving(
+    dir: &Path,
+    serving: &ServingConfig,
+    profile: HardwareProfile,
+) -> Result<MoeEngine> {
+    let manifest = Manifest::load(dir)?;
+    let weights = ModelWeights::load(
+        &manifest.config,
+        &dir.join("weights.npz"),
+        serving.attn_quant,
+        serving.expert_quant,
+    )?;
+    MoeEngine::new(&manifest, weights, serving, profile)
 }
 
 /// Chat workload (OpenAssistant stand-in) from the build corpora.
@@ -71,7 +87,7 @@ pub fn run_teacher_forced(engine: &mut MoeEngine, tokens: &[u32]) -> Result<crat
     let mut sess = engine.new_session()?;
     for &t in tokens {
         if sess.position() + 1 >= engine.weights.cfg.max_seq {
-            sess.reset(engine)?;
+            sess.reset();
         }
         engine.decode_step(&mut sess, t)?;
     }

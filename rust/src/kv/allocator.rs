@@ -1,0 +1,155 @@
+//! Fixed-size KV block allocator.
+//!
+//! The pool is a set of uniform blocks carved out of the device KV budget
+//! (see [`crate::kv::KvPool`] for how the byte budget becomes a block
+//! count). Allocation is a free-list pop, release is a push — O(1) both
+//! ways, no external fragmentation by construction (every block is the
+//! same size, like a page frame allocator). The allocator tracks an
+//! in-use bitmap so double-allocation and double-free — the classic paging
+//! bugs — are hard failures instead of silent accounting drift.
+
+/// Index of one physical KV block inside the pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct BlockId(pub u32);
+
+/// Free-list allocator over a fixed pool of uniform KV blocks.
+#[derive(Debug)]
+pub struct BlockAllocator {
+    /// Free block ids, popped/pushed LIFO (hot blocks get reused first,
+    /// which is friendlier to a real allocator's residency too).
+    free: Vec<u32>,
+    /// Double-alloc / double-free guard.
+    in_use: Vec<bool>,
+    total: usize,
+    /// High-water mark of simultaneously allocated blocks.
+    pub peak_in_use: usize,
+    pub total_allocs: u64,
+    pub total_frees: u64,
+}
+
+impl BlockAllocator {
+    pub fn new(total: usize) -> Self {
+        BlockAllocator {
+            // reversed so the first alloc hands out block 0
+            free: (0..total as u32).rev().collect(),
+            in_use: vec![false; total],
+            total,
+            peak_in_use: 0,
+            total_allocs: 0,
+            total_frees: 0,
+        }
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.total
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn in_use_blocks(&self) -> usize {
+        self.total - self.free.len()
+    }
+
+    /// Allocate one block, or None when the pool is dry.
+    pub fn alloc(&mut self) -> Option<BlockId> {
+        let id = self.free.pop()?;
+        debug_assert!(!self.in_use[id as usize], "free list handed out a live block");
+        self.in_use[id as usize] = true;
+        self.total_allocs += 1;
+        self.peak_in_use = self.peak_in_use.max(self.in_use_blocks());
+        Some(BlockId(id))
+    }
+
+    /// Allocate `n` blocks all-or-nothing: either every block is granted
+    /// or the pool is left untouched (so a refused admission never leaks).
+    pub fn alloc_n(&mut self, n: usize) -> Option<Vec<BlockId>> {
+        if self.free.len() < n {
+            return None;
+        }
+        Some((0..n).map(|_| self.alloc().expect("checked free count")).collect())
+    }
+
+    /// Return a block to the pool. Panics on double-free or an id from
+    /// another pool — both are allocator-invariant violations, not
+    /// recoverable runtime conditions.
+    pub fn free(&mut self, id: BlockId) {
+        let i = id.0 as usize;
+        assert!(i < self.total, "block {i} outside pool of {}", self.total);
+        assert!(self.in_use[i], "double free of KV block {i}");
+        self.in_use[i] = false;
+        self.free.push(id.0);
+        self.total_frees += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn alloc_until_dry_then_reuse() {
+        let mut a = BlockAllocator::new(3);
+        let ids: Vec<_> = (0..3).map(|_| a.alloc().unwrap()).collect();
+        assert_eq!(a.free_blocks(), 0);
+        assert!(a.alloc().is_none());
+        a.free(ids[1]);
+        assert_eq!(a.free_blocks(), 1);
+        let again = a.alloc().unwrap();
+        assert_eq!(again, ids[1], "LIFO reuse of the freed block");
+        assert_eq!(a.peak_in_use, 3);
+    }
+
+    #[test]
+    fn alloc_n_is_all_or_nothing() {
+        let mut a = BlockAllocator::new(4);
+        let _held = a.alloc_n(3).unwrap();
+        assert!(a.alloc_n(2).is_none(), "partial grant must not happen");
+        assert_eq!(a.free_blocks(), 1, "refused request leaves the pool untouched");
+        assert!(a.alloc_n(1).is_some());
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_is_detected() {
+        let mut a = BlockAllocator::new(2);
+        let id = a.alloc().unwrap();
+        a.free(id);
+        a.free(id);
+    }
+
+    /// Fragmentation stress: random alloc/free interleavings over a small
+    /// pool must preserve the accounting invariant (free + in-use = total)
+    /// and never hand the same block to two owners.
+    #[test]
+    fn random_alloc_free_stress_keeps_invariants() {
+        let mut rng = Rng::new(0x6b76); // "kv"
+        let mut a = BlockAllocator::new(17);
+        let mut held: Vec<BlockId> = Vec::new();
+        for step in 0..20_000 {
+            if rng.f64() < 0.55 {
+                if let Some(id) = a.alloc() {
+                    assert!(
+                        !held.contains(&id),
+                        "step {step}: block {id:?} handed out twice"
+                    );
+                    held.push(id);
+                }
+            } else if !held.is_empty() {
+                let i = rng.below(held.len());
+                a.free(held.swap_remove(i));
+            }
+            assert_eq!(a.free_blocks() + a.in_use_blocks(), a.total_blocks());
+            assert_eq!(a.in_use_blocks(), held.len());
+        }
+        // drain and verify the pool recovers completely
+        for id in held.drain(..) {
+            a.free(id);
+        }
+        assert_eq!(a.free_blocks(), 17);
+        assert!(a.total_allocs == a.total_frees);
+        assert!(a.peak_in_use <= 17);
+    }
+}

@@ -1,0 +1,37 @@
+//! Paged KV-cache subsystem: block allocator, per-session page tables,
+//! and the paged KV store the attention path reads through.
+//!
+//! The paper's constraint is scarce accelerator memory; PR 1's scheduler
+//! still reserved a full-sequence KV cache per configured session, so
+//! VRAM — not compute — capped concurrency. This subsystem makes KV
+//! memory elastic, vLLM-style:
+//!
+//! * [`BlockAllocator`] — the engine carves the KV byte budget out of
+//!   [`crate::memory::DeviceMemory`] into uniform blocks of
+//!   `kv_block_tokens` sequence positions (all layers, K and V). A free
+//!   list hands them out in O(1) with no external fragmentation.
+//! * [`PageTable`] — each session maps its sequence positions densely
+//!   onto physical blocks; one table serves every layer because layers
+//!   advance in lockstep.
+//! * [`KvPool`] — the shared side (allocator + geometry + telemetry),
+//!   held by the engine and every session behind an `Arc` so dropped
+//!   sessions return blocks without engine access.
+//! * [`PagedKv`] — the per-session store [`crate::engine::Session`] owns
+//!   in place of the old monolithic literal vector. Blocks are committed
+//!   on demand as decode advances, released on reset/drop, and swapped
+//!   to host (and back, bit-exactly) when the scheduler preempts a
+//!   session to let older streams finish.
+//!
+//! Admission stops being "is a session slot free?" and becomes free-block
+//! accounting: a pool sized for N full-length sequences admits strictly
+//! more than N concurrent short streams, which is the whole point — see
+//! `rust/tests/paged_kv.rs` and the `kv_admission` bench section in
+//! `rust/benches/engine_decode.rs`.
+
+pub mod allocator;
+pub mod page_table;
+pub mod store;
+
+pub use allocator::{BlockAllocator, BlockId};
+pub use page_table::PageTable;
+pub use store::{KvPool, KvPoolStats, PagedKv};

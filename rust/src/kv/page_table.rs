@@ -1,0 +1,96 @@
+//! Per-session page table: sequence positions → physical KV blocks.
+//!
+//! A sequence owns its KV positions in order, so the table is a dense
+//! `Vec<BlockId>` indexed by `position / block_tokens` — logical block `i`
+//! covers positions `[i * block_tokens, (i + 1) * block_tokens)` of the
+//! stream, across every layer (layers advance in lockstep, so one table
+//! serves all of them; the physical block's byte size accounts for all
+//! layers' K and V at those positions).
+
+use crate::kv::allocator::BlockId;
+
+/// Dense position → block mapping for one generation stream.
+#[derive(Debug)]
+pub struct PageTable {
+    block_tokens: usize,
+    blocks: Vec<BlockId>,
+}
+
+impl PageTable {
+    pub fn new(block_tokens: usize) -> Self {
+        assert!(block_tokens >= 1, "block_tokens must be >= 1");
+        PageTable { block_tokens, blocks: Vec::new() }
+    }
+
+    /// Blocks needed to back `tokens` sequence positions (ceiling).
+    pub fn blocks_for(block_tokens: usize, tokens: usize) -> usize {
+        tokens.div_ceil(block_tokens.max(1))
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    pub fn mapped_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Positions currently backed by blocks.
+    pub fn mapped_tokens(&self) -> usize {
+        self.blocks.len() * self.block_tokens
+    }
+
+    /// The physical block holding `pos`, if mapped.
+    pub fn block_of(&self, pos: usize) -> Option<BlockId> {
+        self.blocks.get(pos / self.block_tokens).copied()
+    }
+
+    /// Append freshly allocated blocks (they extend the mapped range).
+    pub fn push_blocks(&mut self, ids: impl IntoIterator<Item = BlockId>) {
+        self.blocks.extend(ids);
+    }
+
+    /// Unmap everything, handing the block ids back to the caller (which
+    /// returns them to the allocator).
+    pub fn take_blocks(&mut self) -> Vec<BlockId> {
+        std::mem::take(&mut self.blocks)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blocks_for_is_a_ceiling() {
+        assert_eq!(PageTable::blocks_for(16, 0), 0);
+        assert_eq!(PageTable::blocks_for(16, 1), 1);
+        assert_eq!(PageTable::blocks_for(16, 16), 1);
+        assert_eq!(PageTable::blocks_for(16, 17), 2);
+        assert_eq!(PageTable::blocks_for(1, 7), 7);
+    }
+
+    #[test]
+    fn positions_map_to_their_block() {
+        let mut t = PageTable::new(4);
+        assert!(t.block_of(0).is_none());
+        t.push_blocks([BlockId(9), BlockId(2)]);
+        assert_eq!(t.mapped_blocks(), 2);
+        assert_eq!(t.mapped_tokens(), 8);
+        assert_eq!(t.block_of(0), Some(BlockId(9)));
+        assert_eq!(t.block_of(3), Some(BlockId(9)));
+        assert_eq!(t.block_of(4), Some(BlockId(2)));
+        assert_eq!(t.block_of(7), Some(BlockId(2)));
+        assert!(t.block_of(8).is_none());
+    }
+
+    #[test]
+    fn take_blocks_unmaps() {
+        let mut t = PageTable::new(4);
+        t.push_blocks([BlockId(0), BlockId(1)]);
+        let ids = t.take_blocks();
+        assert_eq!(ids, vec![BlockId(0), BlockId(1)]);
+        assert_eq!(t.mapped_blocks(), 0);
+        assert!(t.block_of(0).is_none());
+    }
+}

@@ -1,0 +1,461 @@
+//! The shared KV block pool and the per-session paged KV store.
+//!
+//! [`KvPool`] is the engine-wide side: the block allocator carved out of
+//! the device KV budget, plus pool telemetry (occupancy, preemptions).
+//! It is shared behind an `Arc` by the engine and every live session, so
+//! a dropping session can return its blocks without engine access (the
+//! same pattern the live-session counter uses).
+//!
+//! [`PagedKv`] is the per-session side: the page table plus the per-layer
+//! KV *images*. Physically each layer's KV lives in one PJRT literal of
+//! the full `[max_seq, n_kv_heads, head_dim]` shape — the AOT-compiled
+//! attention modules are fixed-shape, so the literal acts as the
+//! sequence's reserved address space while the page table records which
+//! token ranges of it are actually *committed* against device memory.
+//! Blocks are committed on demand as decode advances and released on
+//! reset/drop; preemption swaps the images to host f32 buffers and
+//! returns every block to the pool, and resumption is the exact inverse,
+//! so a preempted stream continues bit-identically.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use xla::Literal;
+
+use crate::error::{Error, Result};
+use crate::kv::allocator::BlockAllocator;
+use crate::kv::page_table::PageTable;
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+
+/// Point-in-time pool occupancy + lifetime counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvPoolStats {
+    pub total_blocks: usize,
+    pub free_blocks: usize,
+    pub in_use_blocks: usize,
+    pub peak_in_use_blocks: usize,
+    /// Sessions swapped out to host since engine start.
+    pub preemptions: u64,
+}
+
+/// Engine-wide KV block pool: allocator + geometry + telemetry.
+pub struct KvPool {
+    alloc: Mutex<BlockAllocator>,
+    /// Sequence positions covered by one block (across all layers).
+    block_tokens: usize,
+    /// Device bytes one block accounts for (all layers, K and V), at the
+    /// engine's accounting scale.
+    block_bytes: u64,
+    /// Per-layer KV literal shape: `[max_seq, n_kv_heads, head_dim]`.
+    kv_shape: Vec<usize>,
+    preemptions: AtomicU64,
+}
+
+impl KvPool {
+    pub fn new(total_blocks: usize, block_tokens: usize, block_bytes: u64, kv_shape: Vec<usize>) -> Self {
+        assert!(block_tokens >= 1);
+        assert_eq!(kv_shape.len(), 3, "kv shape is [max_seq, n_kv_heads, head_dim]");
+        KvPool {
+            alloc: Mutex::new(BlockAllocator::new(total_blocks)),
+            block_tokens,
+            block_bytes,
+            kv_shape,
+            preemptions: AtomicU64::new(0),
+        }
+    }
+
+    /// Carve a pool out of a device byte budget: as many whole blocks as
+    /// fit (the engine's construction path).
+    pub fn carve(pool_bytes: u64, block_tokens: usize, block_bytes: u64, kv_shape: Vec<usize>) -> Self {
+        let total = if block_bytes == 0 { 0 } else { (pool_bytes / block_bytes) as usize };
+        Self::new(total, block_tokens, block_bytes, kv_shape)
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    pub fn block_bytes(&self) -> u64 {
+        self.block_bytes
+    }
+
+    /// Total device bytes the pool carve-out accounts for.
+    pub fn total_bytes(&self) -> u64 {
+        self.stats().total_blocks as u64 * self.block_bytes
+    }
+
+    /// Pool capacity in sequence positions.
+    pub fn capacity_tokens(&self) -> usize {
+        self.stats().total_blocks * self.block_tokens
+    }
+
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        PageTable::blocks_for(self.block_tokens, tokens)
+    }
+
+    /// Would `tokens` positions fit in the *currently free* blocks?
+    pub fn can_admit(&self, tokens: usize) -> bool {
+        self.blocks_for(tokens) <= self.alloc.lock().unwrap().free_blocks()
+    }
+
+    /// Would `tokens` positions fit in the pool even if it were empty?
+    /// (False means the request can never be served — fail it instead of
+    /// requeueing forever.)
+    pub fn fits(&self, tokens: usize) -> bool {
+        self.blocks_for(tokens) <= self.alloc.lock().unwrap().total_blocks()
+    }
+
+    pub fn stats(&self) -> KvPoolStats {
+        let a = self.alloc.lock().unwrap();
+        KvPoolStats {
+            total_blocks: a.total_blocks(),
+            free_blocks: a.free_blocks(),
+            in_use_blocks: a.in_use_blocks(),
+            peak_in_use_blocks: a.peak_in_use,
+            preemptions: self.preemptions.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn note_preemption(&self) {
+        self.preemptions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn alloc_n(&self, n: usize) -> Result<Vec<crate::kv::BlockId>> {
+        let mut a = self.alloc.lock().unwrap();
+        a.alloc_n(n).ok_or_else(|| {
+            Error::KvPoolExhausted(format!(
+                "need {n} KV block(s), {} of {} free",
+                a.free_blocks(),
+                a.total_blocks()
+            ))
+        })
+    }
+
+    fn free_all(&self, ids: Vec<crate::kv::BlockId>) {
+        let mut a = self.alloc.lock().unwrap();
+        for id in ids {
+            a.free(id);
+        }
+    }
+}
+
+/// One layer's KV swapped to host: (K bytes, V bytes) as f32 rows.
+type HostKvLayer = (Vec<f32>, Vec<f32>);
+
+/// Where a session's KV images currently live.
+enum Residency {
+    /// On-device PJRT literals, one (K, V) pair per layer. `None` means
+    /// the layer is still virgin — attention reads the engine's shared
+    /// zero template instead, so sessions start (and reset) without
+    /// marshalling a single literal.
+    Device(Vec<Option<(Literal, Literal)>>),
+    /// Swapped out to host f32 buffers (preempted).
+    Host(Vec<Option<HostKvLayer>>),
+}
+
+/// One session's paged KV: per-layer images + page table + pool handle.
+pub struct PagedKv {
+    state: Residency,
+    table: PageTable,
+    pool: Arc<KvPool>,
+}
+
+impl PagedKv {
+    /// Fresh paged KV: no blocks mapped, every layer virgin. O(1) — no
+    /// device allocation happens until the first token needs a block.
+    pub fn new(n_layers: usize, pool: Arc<KvPool>) -> Self {
+        PagedKv {
+            state: Residency::Device((0..n_layers).map(|_| None).collect()),
+            table: PageTable::new(pool.block_tokens()),
+            pool,
+        }
+    }
+
+    pub fn is_swapped(&self) -> bool {
+        matches!(self.state, Residency::Host(_))
+    }
+
+    pub fn mapped_blocks(&self) -> usize {
+        self.table.mapped_blocks()
+    }
+
+    pub fn page_table(&self) -> &PageTable {
+        &self.table
+    }
+
+    pub fn pool(&self) -> &Arc<KvPool> {
+        &self.pool
+    }
+
+    /// Commit enough blocks to back `tokens` sequence positions,
+    /// allocating on demand (all-or-nothing). Errors with
+    /// [`Error::KvPoolExhausted`] when the pool is dry — the caller
+    /// (scheduler) turns that into preemption — and with a plain engine
+    /// error when the session is swapped out.
+    pub fn ensure_tokens(&mut self, tokens: usize) -> Result<()> {
+        if self.is_swapped() {
+            return Err(Error::Engine(
+                "session KV is swapped out to host — resume it before decoding".into(),
+            ));
+        }
+        let needed = self.pool.blocks_for(tokens);
+        let have = self.table.mapped_blocks();
+        if needed > have {
+            let fresh = self.pool.alloc_n(needed - have)?;
+            self.table.push_blocks(fresh);
+        }
+        Ok(())
+    }
+
+    /// The layer's KV image, or `default` (the engine's shared zero
+    /// template) while the layer is virgin — the single read path both
+    /// decode and prefill attention go through.
+    pub fn layer_or<'a>(
+        &'a self,
+        l: usize,
+        default: &'a (Literal, Literal),
+    ) -> Result<(&'a Literal, &'a Literal)> {
+        Ok(match self.layer(l)? {
+            Some((k, v)) => (k, v),
+            None => (&default.0, &default.1),
+        })
+    }
+
+    /// The layer's on-device KV image, `None` while the layer is virgin.
+    /// Errors when the session is swapped out (decode must not read a
+    /// preempted stream).
+    pub fn layer(&self, l: usize) -> Result<Option<&(Literal, Literal)>> {
+        match &self.state {
+            Residency::Device(layers) => Ok(layers[l].as_ref()),
+            Residency::Host(_) => Err(Error::Engine(
+                "session KV is swapped out to host — resume it before decoding".into(),
+            )),
+        }
+    }
+
+    /// Install the layer's updated KV image (attention is functional: it
+    /// returns fresh literals each call).
+    pub fn set_layer(&mut self, l: usize, k: Literal, v: Literal) -> Result<()> {
+        match &mut self.state {
+            Residency::Device(layers) => {
+                layers[l] = Some((k, v));
+                Ok(())
+            }
+            Residency::Host(_) => Err(Error::Engine(
+                "cannot write KV into a swapped-out session".into(),
+            )),
+        }
+    }
+
+    /// Rewind in place: return every block to the pool and drop the layer
+    /// images back to virgin (the next attention call reads the shared
+    /// zero template). No literal is re-marshalled — this replaces the
+    /// old per-layer `rt.zero_kv()` reallocation.
+    pub fn release(&mut self) {
+        let n_layers = match &self.state {
+            Residency::Device(l) => l.len(),
+            Residency::Host(l) => l.len(),
+        };
+        self.pool.free_all(self.table.take_blocks());
+        self.state = Residency::Device((0..n_layers).map(|_| None).collect());
+    }
+
+    /// Preemption: copy every layer's KV image to host memory and return
+    /// all blocks to the pool. Returns the device bytes released (mapped
+    /// blocks × block size — the modeled D2H transfer the engine charges
+    /// to the timeline).
+    pub fn swap_out(&mut self) -> Result<u64> {
+        let layers = match &self.state {
+            Residency::Device(layers) => layers,
+            Residency::Host(_) => {
+                return Err(Error::Engine("session KV already swapped out".into()))
+            }
+        };
+        let mut host = Vec::with_capacity(layers.len());
+        for slot in layers {
+            host.push(match slot {
+                Some((k, v)) => Some((k.to_vec::<f32>()?, v.to_vec::<f32>()?)),
+                None => None,
+            });
+        }
+        let bytes = self.table.mapped_blocks() as u64 * self.pool.block_bytes();
+        self.pool.free_all(self.table.take_blocks());
+        self.state = Residency::Host(host);
+        Ok(bytes)
+    }
+
+    /// Resumption: re-acquire blocks for `tokens` written positions and
+    /// rebuild the device literals from the host copies, bit-exactly.
+    /// Errors with [`Error::KvPoolExhausted`] when the pool cannot back
+    /// the stream yet. Returns the device bytes re-committed.
+    pub fn swap_in(&mut self, tokens: usize) -> Result<u64> {
+        let host = match &self.state {
+            Residency::Host(host) => host,
+            Residency::Device(_) => {
+                return Err(Error::Engine("session KV is not swapped out".into()))
+            }
+        };
+        let fresh = self.pool.alloc_n(self.pool.blocks_for(tokens))?;
+        let shape = self.pool.kv_shape.clone();
+        // rebuild WITHOUT consuming the host copies, so a marshalling
+        // failure leaves the session intact (still swapped out, blocks
+        // returned) instead of leaking pool capacity and silently
+        // degrading already-taken layers to virgin on a retry
+        let rebuilt: Result<Vec<Option<(Literal, Literal)>>> = host
+            .iter()
+            .map(|slot| {
+                Ok(match slot {
+                    Some((k, v)) => Some((
+                        Runtime::lit_f32(&Tensor::new(k.clone(), shape.clone())?)?,
+                        Runtime::lit_f32(&Tensor::new(v.clone(), shape.clone())?)?,
+                    )),
+                    None => None,
+                })
+            })
+            .collect();
+        let layers = match rebuilt {
+            Ok(layers) => layers,
+            Err(e) => {
+                self.pool.free_all(fresh);
+                return Err(e);
+            }
+        };
+        let bytes = fresh.len() as u64 * self.pool.block_bytes();
+        self.table.push_blocks(fresh);
+        self.state = Residency::Device(layers);
+        Ok(bytes)
+    }
+}
+
+impl Drop for PagedKv {
+    fn drop(&mut self) {
+        self.pool.free_all(self.table.take_blocks());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool(total_blocks: usize, block_tokens: usize) -> Arc<KvPool> {
+        Arc::new(KvPool::new(total_blocks, block_tokens, 1024, vec![64, 2, 8]))
+    }
+
+    #[test]
+    fn blocks_commit_on_demand_and_release_on_drop() {
+        let p = pool(8, 4);
+        let mut kv = PagedKv::new(3, Arc::clone(&p));
+        assert_eq!(p.stats().in_use_blocks, 0);
+        kv.ensure_tokens(1).unwrap();
+        assert_eq!(kv.mapped_blocks(), 1);
+        kv.ensure_tokens(4).unwrap(); // still inside block 0
+        assert_eq!(kv.mapped_blocks(), 1);
+        kv.ensure_tokens(5).unwrap(); // crosses into block 1
+        assert_eq!(kv.mapped_blocks(), 2);
+        assert_eq!(p.stats().in_use_blocks, 2);
+        drop(kv);
+        assert_eq!(p.stats().in_use_blocks, 0, "drop returns every block");
+    }
+
+    #[test]
+    fn release_rewinds_without_leaking() {
+        let p = pool(4, 2);
+        let mut kv = PagedKv::new(2, Arc::clone(&p));
+        kv.ensure_tokens(7).unwrap();
+        assert_eq!(p.stats().in_use_blocks, 4);
+        kv.release();
+        assert_eq!(p.stats().in_use_blocks, 0);
+        assert_eq!(kv.mapped_blocks(), 0);
+        // and the stream can grow again
+        kv.ensure_tokens(2).unwrap();
+        assert_eq!(p.stats().in_use_blocks, 1);
+    }
+
+    #[test]
+    fn exhaustion_is_typed_and_all_or_nothing() {
+        let p = pool(2, 4);
+        let mut a = PagedKv::new(1, Arc::clone(&p));
+        let mut b = PagedKv::new(1, Arc::clone(&p));
+        a.ensure_tokens(8).unwrap(); // both blocks
+        let err = b.ensure_tokens(1).unwrap_err();
+        assert!(matches!(err, Error::KvPoolExhausted(_)), "{err}");
+        assert_eq!(b.mapped_blocks(), 0, "refused commit must not hold blocks");
+        a.release();
+        b.ensure_tokens(1).unwrap();
+    }
+
+    /// The acceptance-criterion accounting, independent of artifacts: a
+    /// pool sized for `k` full-length static sessions admits strictly
+    /// more concurrent short sessions under paging.
+    #[test]
+    fn paged_pool_admits_more_short_sessions_than_static_reservation() {
+        let max_seq = 64;
+        let block_tokens = 8;
+        let static_sessions = 2;
+        // same VRAM: exactly the bytes static reservation would pin
+        let p = pool(static_sessions * max_seq / block_tokens, block_tokens);
+        let prompt_tokens = 16;
+        let mut admitted = Vec::new();
+        loop {
+            let mut kv = PagedKv::new(2, Arc::clone(&p));
+            match kv.ensure_tokens(prompt_tokens) {
+                Ok(()) => admitted.push(kv),
+                Err(Error::KvPoolExhausted(_)) => break,
+                Err(e) => panic!("unexpected error: {e}"),
+            }
+        }
+        assert_eq!(admitted.len(), static_sessions * max_seq / prompt_tokens);
+        assert!(
+            admitted.len() > static_sessions,
+            "paged admission ({}) must beat static reservation ({static_sessions})",
+            admitted.len()
+        );
+    }
+
+    #[test]
+    fn swap_out_frees_blocks_and_swap_in_recommits() {
+        let p = pool(8, 4);
+        let mut kv = PagedKv::new(2, Arc::clone(&p));
+        kv.ensure_tokens(10).unwrap(); // 3 blocks
+        assert_eq!(p.stats().in_use_blocks, 3);
+
+        let out_bytes = kv.swap_out().unwrap();
+        assert_eq!(out_bytes, 3 * 1024);
+        assert!(kv.is_swapped());
+        assert_eq!(p.stats().in_use_blocks, 0, "preemption returns every block");
+        assert!(kv.ensure_tokens(11).is_err(), "no decode while swapped out");
+        assert!(kv.swap_out().is_err(), "double swap-out refused");
+
+        let in_bytes = kv.swap_in(10).unwrap();
+        assert_eq!(in_bytes, 3 * 1024);
+        assert!(!kv.is_swapped());
+        assert_eq!(kv.mapped_blocks(), 3);
+        assert_eq!(p.stats().in_use_blocks, 3);
+        assert_eq!(p.stats().preemptions, 0, "pool counter is the engine's to bump");
+    }
+
+    #[test]
+    fn carve_floors_to_whole_blocks() {
+        let shape = vec![64, 2, 8];
+        assert_eq!(KvPool::carve(1000, 4, 300, shape.clone()).stats().total_blocks, 3);
+        assert_eq!(KvPool::carve(0, 4, 300, shape.clone()).stats().total_blocks, 0);
+        assert_eq!(KvPool::carve(1000, 4, 0, shape).stats().total_blocks, 0);
+    }
+
+    #[test]
+    fn pool_admission_helpers() {
+        let p = pool(4, 8); // 32 token capacity
+        assert!(p.can_admit(32));
+        assert!(!p.can_admit(33));
+        assert!(p.fits(32));
+        assert!(!p.fits(33));
+        assert_eq!(p.capacity_tokens(), 32);
+        assert_eq!(p.total_bytes(), 4 * 1024);
+        let mut kv = PagedKv::new(1, Arc::clone(&p));
+        kv.ensure_tokens(9).unwrap(); // 2 blocks
+        assert!(p.can_admit(16));
+        assert!(!p.can_admit(17), "free blocks, not total, gate admission");
+        assert!(p.fits(32), "fits() ignores current occupancy");
+    }
+}

@@ -28,24 +28,35 @@
 //!   any number of generation streams; its warm expert cache and
 //!   speculative transfers are shared by all of them.
 //! * **Sessions** ([`engine::Session`]) — everything owned by ONE
-//!   request: per-layer KV-cache literals, sequence position, trace
+//!   request: the paged per-layer KV store, sequence position, trace
 //!   token counter, per-session run statistics and the sampler seed.
 //!   `decode_step`/`prefill`/`generate`/`score` take `&mut Session`;
 //!   dropping the session ends the request, `Session::reset` rewinds it
-//!   in place with the expert cache still warm. The engine reserves KV
-//!   device memory per configured session and refuses to open more than
-//!   `max_concurrent_sessions` at once.
+//!   in place with the expert cache still warm.
+//! * **Paged KV** ([`kv`]) — the KV byte budget is carved out of device
+//!   memory into fixed-size token blocks ([`kv::BlockAllocator`]); each
+//!   session maps its positions onto blocks through a [`kv::PageTable`]
+//!   and commits them on demand as decode advances. Opening a session
+//!   costs no device memory; reset/drop return blocks instantly; and
+//!   when the pool runs dry mid-decode the scheduler preempts the
+//!   youngest session (KV swaps to host, resumed bit-identically later)
+//!   instead of failing anyone. Block size never changes numerics —
+//!   width-1 decode is bit-identical to a contiguous reservation.
 //! * **Scheduler** ([`coordinator::Coordinator`]) — a continuous-batching
 //!   loop on the engine worker thread. Queued requests are admitted into
 //!   up to `max_concurrent_sessions` live sessions
-//!   ([`config::ServingConfig::max_concurrent_sessions`], default 1);
+//!   ([`config::ServingConfig::max_concurrent_sessions`], default 1)
+//!   *and* as the KV pool's free blocks allow (free-block accounting
+//!   instead of static per-session reservation — a pool sized for N full
+//!   sequences admits strictly more than N short streams);
 //!   each scheduling tick gives every live session exactly one decode
 //!   step (round-robin fairness), streaming tokens out per session as
-//!   they decode. Queue wait and live-session counts are recorded in
-//!   [`telemetry::Metrics`] (`queue_wait_s`, `active_sessions`) and
-//!   surfaced in the server's `done` event. Width 1 reproduces the
-//!   paper's batch-1 serving exactly; width ≥ 2 lets concurrent requests
-//!   share hot experts, which is where offloading wins under load.
+//!   they decode. Queue wait, live-session counts and KV-pool pressure
+//!   are recorded in [`telemetry::Metrics`] (`queue_wait_s`,
+//!   `active_sessions`, `kv_blocks_*`, `kv_preemptions`) and surfaced in
+//!   the server's `done` event. Width 1 reproduces the paper's batch-1
+//!   serving exactly; width ≥ 2 lets concurrent requests share hot
+//!   experts, which is where offloading wins under load.
 
 pub mod cache;
 pub mod clock;
@@ -54,6 +65,7 @@ pub mod engine;
 pub mod error;
 pub mod eval;
 pub mod harness;
+pub mod kv;
 pub mod memory;
 pub mod model;
 pub mod npz;

@@ -84,6 +84,11 @@ impl DeviceExpert {
 pub struct DeviceMemory {
     budget_bytes: u64,
     reserved_bytes: u64,
+    /// Carve-out for the paged KV block pool (see [`crate::kv`]). The
+    /// whole carve is pinned here — block-level occupancy within it is
+    /// the [`crate::kv::KvPool`] allocator's job — so expert admission
+    /// can never starve the KV path of its budget.
+    kv_pool_bytes: u64,
     expert_bytes: u64,
     used_bytes: u64,
     resident: HashMap<ExpertId, DeviceExpert>,
@@ -91,18 +96,30 @@ pub struct DeviceMemory {
 }
 
 impl DeviceMemory {
-    /// `budget` is total VRAM; `reserved` covers non-expert weights, KV
-    /// cache, activations and staging buffers; `expert_bytes` is the
-    /// device footprint of one expert (uniform — all experts share shape).
+    /// `budget` is total VRAM; `reserved` covers non-expert weights,
+    /// activations and staging buffers; `expert_bytes` is the device
+    /// footprint of one expert (uniform — all experts share shape).
     pub fn new(budget: u64, reserved: u64, expert_bytes: u64) -> Self {
+        Self::with_kv_pool(budget, reserved, 0, expert_bytes)
+    }
+
+    /// Like [`DeviceMemory::new`] with an explicit KV-pool carve-out on
+    /// top of `reserved`.
+    pub fn with_kv_pool(budget: u64, reserved: u64, kv_pool: u64, expert_bytes: u64) -> Self {
         DeviceMemory {
             budget_bytes: budget,
             reserved_bytes: reserved,
+            kv_pool_bytes: kv_pool,
             expert_bytes,
-            used_bytes: reserved,
+            used_bytes: reserved + kv_pool,
             resident: HashMap::new(),
-            peak_bytes: reserved,
+            peak_bytes: reserved + kv_pool,
         }
+    }
+
+    /// Bytes carved out for the paged KV block pool.
+    pub fn kv_pool_bytes(&self) -> u64 {
+        self.kv_pool_bytes
     }
 
     /// How many experts fit on the device at once.
@@ -110,7 +127,11 @@ impl DeviceMemory {
         if self.expert_bytes == 0 {
             return usize::MAX;
         }
-        ((self.budget_bytes.saturating_sub(self.reserved_bytes)) / self.expert_bytes) as usize
+        ((self
+            .budget_bytes
+            .saturating_sub(self.reserved_bytes)
+            .saturating_sub(self.kv_pool_bytes))
+            / self.expert_bytes) as usize
     }
 
     pub fn contains(&self, id: ExpertId) -> bool {
@@ -209,6 +230,17 @@ mod tests {
         m.insert(id(0, 0), dummy()).unwrap();
         m.insert(id(0, 0), dummy()).unwrap();
         assert_eq!(m.used_bytes(), 1100);
+    }
+
+    #[test]
+    fn kv_pool_carve_reduces_expert_capacity() {
+        // 1000 reserved + 200 KV pool + room for 3 experts of 100
+        let m = DeviceMemory::with_kv_pool(1500, 1000, 200, 100);
+        assert_eq!(m.kv_pool_bytes(), 200);
+        assert_eq!(m.expert_capacity(), 3);
+        assert_eq!(m.used_bytes(), 1200);
+        // without the carve the same budget fits 5
+        assert_eq!(DeviceMemory::new(1500, 1000, 100).expert_capacity(), 5);
     }
 
     #[test]

@@ -103,15 +103,25 @@ pub struct StaticLits {
     pub final_ln: Literal,
     pub lm_head: Literal,
     pub layers: Vec<LayerLits>,
+    /// Shared zero KV image `[max_seq, n_kv_heads, head_dim]`. Virgin
+    /// layers of every session read this one template instead of each
+    /// marshalling their own zeros: executables copy argument literals to
+    /// device per call, and the position mask hides anything beyond `pos`,
+    /// so sharing is bit-safe. This is what lets `Session::new`/`reset`
+    /// skip the old per-layer `zero_kv()` reallocation entirely.
+    pub zero_kv: (Literal, Literal),
 }
 
 impl StaticLits {
     pub fn new(w: &crate::model::ModelWeights) -> Result<Self> {
+        let cfg = &w.cfg;
+        let zeros = Tensor::zeros(vec![cfg.max_seq, cfg.n_kv_heads, cfg.head_dim]);
         Ok(StaticLits {
             embed: Runtime::lit_f32(&w.embed)?,
             final_ln: Runtime::lit_f32(&w.final_ln)?,
             lm_head: Runtime::lit_f32(&w.lm_head)?,
             layers: w.layers.iter().map(LayerLits::new).collect::<Result<_>>()?,
+            zero_kv: (Runtime::lit_f32(&zeros)?, Runtime::lit_f32(&zeros)?),
         })
     }
 }
@@ -262,12 +272,6 @@ impl Runtime {
         let v_new = out.pop().expect("attn returns 3 outputs");
         let k_new = out.pop().expect("attn returns 3 outputs");
         Ok((x_out, k_new, v_new))
-    }
-
-    /// Zero KV-cache literal pair (session start).
-    pub fn zero_kv(&self) -> Result<(Literal, Literal)> {
-        let t = Tensor::zeros(vec![self.cfg.max_seq, self.cfg.n_kv_heads, self.cfg.head_dim]);
-        Ok((Self::lit_f32(&t)?, Self::lit_f32(&t)?))
     }
 
     /// gate: returns (router logits [T, E], normed hidden h [T, D]).

@@ -93,6 +93,19 @@ impl Metrics {
         *self.gauges.lock().unwrap().get(name).unwrap_or(&0)
     }
 
+    /// Record the KV block pool's occupancy gauges in one shot
+    /// (`kv_blocks_total` / `kv_blocks_free` / `kv_blocks_in_use` /
+    /// `kv_preemptions`) — the scheduler calls this every tick so the
+    /// rendered metrics always show current pool pressure next to
+    /// `active_sessions`.
+    pub fn record_kv_pool(&self, total: u64, free: u64, in_use: u64, preemptions: u64) {
+        let mut g = self.gauges.lock().unwrap();
+        g.insert("kv_blocks_total".to_string(), total);
+        g.insert("kv_blocks_free".to_string(), free);
+        g.insert("kv_blocks_in_use".to_string(), in_use);
+        g.insert("kv_preemptions".to_string(), preemptions);
+    }
+
     pub fn observe(&self, name: &str, v: f64) {
         self.histograms
             .lock()
@@ -210,6 +223,18 @@ mod tests {
         assert_eq!(m.gauge("active_sessions"), 1);
         assert_eq!(m.gauge("missing"), 0);
         assert!(m.render().contains("active_sessions 1"));
+    }
+
+    #[test]
+    fn kv_pool_gauges_record_together() {
+        let m = Metrics::new();
+        m.record_kv_pool(16, 11, 5, 2);
+        assert_eq!(m.gauge("kv_blocks_total"), 16);
+        assert_eq!(m.gauge("kv_blocks_free"), 11);
+        assert_eq!(m.gauge("kv_blocks_in_use"), 5);
+        assert_eq!(m.gauge("kv_preemptions"), 2);
+        let r = m.render();
+        assert!(r.contains("kv_blocks_in_use 5"));
     }
 
     #[test]

@@ -285,7 +285,7 @@ fn session_reset_preserves_then_clears_cache() {
     }
     assert!(e.cache.device.resident_count() > 0);
     // warm restart: the session rewinds, the shared expert cache stays
-    sess.reset(&e).unwrap();
+    sess.reset();
     assert!(e.cache.device.resident_count() > 0);
     assert_eq!(sess.position(), 0);
     // cold restart: the expert cache is dropped, sessions unaffected

@@ -1,0 +1,272 @@
+//! Integration: the paged KV-cache subsystem against the real engine.
+//! Requires `make artifacts` (skips cleanly otherwise); the accounting-
+//! only contracts are also covered by always-on unit tests in
+//! `rust/src/kv/`.
+//!
+//! Covers the subsystem's contracts:
+//! * width-1 paged decode is bit-identical to the contiguous KV path
+//!   (one block spanning max_seq ≙ the old static reservation);
+//! * preemption→resume round-trips preserve the stream bit-exactly;
+//! * at a fixed VRAM budget the paged pool admits strictly more
+//!   concurrent sessions than static reservation;
+//! * the coordinator finishes every request under KV pressure (preempting
+//!   rather than failing) and surfaces pool telemetry in done events.
+
+use std::path::{Path, PathBuf};
+
+use moe_offload::config::{
+    HardwareProfile, Manifest, OffloadPolicy, QuantScheme, ServingConfig, SimScale,
+};
+use moe_offload::coordinator::{collect_events, Coordinator, Event, Request};
+use moe_offload::engine::MoeEngine;
+use moe_offload::harness;
+use moe_offload::{Error, Result};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() && dir.join("weights.npz").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn make_engine(
+    dir: &Path,
+    sessions: usize,
+    kv_block_tokens: usize,
+    kv_pool_tokens: Option<usize>,
+) -> Result<MoeEngine> {
+    let serving = ServingConfig {
+        policy: OffloadPolicy::Full { cache_k: 2, spec_n: 2 },
+        expert_quant: QuantScheme::Hqq { bits: 3 },
+        attn_quant: QuantScheme::Hqq { bits: 4 },
+        sim_scale: SimScale::Tiny,
+        max_concurrent_sessions: sessions,
+        kv_block_tokens,
+        kv_pool_tokens,
+        ..Default::default()
+    };
+    harness::build_engine_with_serving(dir, &serving, HardwareProfile::rtx3060())
+}
+
+fn bits(logits: &[Vec<f32>]) -> Vec<Vec<u32>> {
+    logits.iter().map(|row| row.iter().map(|x| x.to_bits()).collect()).collect()
+}
+
+#[test]
+fn paged_width1_decode_is_bit_identical_to_contiguous() {
+    let Some(dir) = artifacts_dir() else { return };
+    let tokens: Vec<u32> = "the quick brown fox jumps over the lazy dog"
+        .bytes()
+        .map(|b| b as u32)
+        .collect();
+
+    // contiguous reference: one block spans the whole sequence, i.e. the
+    // old static full-sequence reservation expressed in pool terms
+    let max_seq = Manifest::load(&dir).unwrap().config.max_seq;
+    let mut contig = make_engine(&dir, 1, max_seq, None).unwrap();
+    assert_eq!(
+        contig.kv_pool.block_tokens(),
+        max_seq,
+        "block size clamps to max_seq — one block = contiguous"
+    );
+    let mut cs = contig.new_session().unwrap();
+    let ref_logits: Vec<Vec<f32>> =
+        tokens.iter().map(|&t| contig.decode_step(&mut cs, t).unwrap()).collect();
+
+    // paged: small blocks, committed on demand as decode advances
+    let mut paged = make_engine(&dir, 1, 8, None).unwrap();
+    let mut ps = paged.new_session().unwrap();
+    let paged_logits: Vec<Vec<f32>> =
+        tokens.iter().map(|&t| paged.decode_step(&mut ps, t).unwrap()).collect();
+
+    assert_eq!(
+        bits(&ref_logits),
+        bits(&paged_logits),
+        "block size must never change numerics"
+    );
+    // and the paged session really did page: several blocks, on demand
+    assert_eq!(ps.kv.mapped_blocks(), tokens.len().div_ceil(8));
+    assert_eq!(cs.kv.mapped_blocks(), 1);
+}
+
+#[test]
+fn preempt_resume_roundtrip_is_bit_exact() {
+    let Some(dir) = artifacts_dir() else { return };
+    let prefix: Vec<u32> = "a mixture of experts ".bytes().map(|b| b as u32).collect();
+    let cont: Vec<u32> = "routes tokens".bytes().map(|b| b as u32).collect();
+
+    // reference: one uninterrupted stream
+    let mut e1 = make_engine(&dir, 1, 16, None).unwrap();
+    let mut s1 = e1.new_session().unwrap();
+    for &t in &prefix {
+        e1.decode_step(&mut s1, t).unwrap();
+    }
+    let ref_cont: Vec<Vec<f32>> =
+        cont.iter().map(|&t| e1.decode_step(&mut s1, t).unwrap()).collect();
+
+    // preempted stream: swap out to host mid-decode, resume, continue
+    let mut e2 = make_engine(&dir, 1, 16, None).unwrap();
+    let mut s2 = e2.new_session().unwrap();
+    for &t in &prefix {
+        e2.decode_step(&mut s2, t).unwrap();
+    }
+    let pos_before = s2.position();
+    let held_before = s2.kv.mapped_blocks();
+    assert!(held_before > 0);
+
+    e2.preempt_session(&mut s2).unwrap();
+    assert!(s2.kv.is_swapped());
+    assert_eq!(s2.kv.mapped_blocks(), 0);
+    assert_eq!(e2.kv_pool.stats().in_use_blocks, 0, "preemption frees every block");
+    assert_eq!(e2.kv_pool.stats().preemptions, 1);
+    assert_eq!(s2.position(), pos_before, "position survives the swap");
+    assert!(
+        e2.decode_step(&mut s2, cont[0]).is_err(),
+        "decoding a swapped-out session must refuse"
+    );
+
+    e2.resume_session(&mut s2).unwrap();
+    assert!(!s2.kv.is_swapped());
+    assert_eq!(s2.kv.mapped_blocks(), held_before);
+    let got_cont: Vec<Vec<f32>> =
+        cont.iter().map(|&t| e2.decode_step(&mut s2, t).unwrap()).collect();
+
+    assert_eq!(
+        bits(&ref_cont),
+        bits(&got_cont),
+        "a preempted+resumed stream must continue bit-identically"
+    );
+}
+
+#[test]
+fn paged_pool_admits_more_sessions_than_static_at_fixed_vram() {
+    let Some(dir) = artifacts_dir() else { return };
+    // pool sized to EXACTLY one static full-sequence reservation
+    let max_seq = Manifest::load(&dir).unwrap().config.max_seq;
+    let static_sessions = 1usize;
+    let prompt_len = 64usize;
+    let mut e = make_engine(&dir, 64, 16, Some(static_sessions * max_seq)).unwrap();
+    let prompt: Vec<u32> = (0..prompt_len).map(|i| (i % 64 + 32) as u32).collect();
+
+    let mut admitted = Vec::new();
+    loop {
+        let mut sess = e.new_session().unwrap();
+        match e.prefill(&mut sess, &prompt) {
+            Ok(_) => admitted.push(sess),
+            Err(Error::KvPoolExhausted(_)) => break,
+            Err(other) => panic!("unexpected admission failure: {other}"),
+        }
+    }
+    let expected = (static_sessions * max_seq) / prompt_len;
+    assert_eq!(admitted.len(), expected, "pool should pack short prompts densely");
+    assert!(
+        admitted.len() > static_sessions,
+        "paged admission ({}) must strictly beat static reservation ({static_sessions})",
+        admitted.len()
+    );
+    // and freeing one session makes room again
+    drop(admitted.pop());
+    let mut late = e.new_session().unwrap();
+    e.prefill(&mut late, &prompt).unwrap();
+}
+
+#[test]
+fn coordinator_preempts_instead_of_failing_under_kv_pressure() {
+    let Some(dir) = artifacts_dir() else { return };
+    // 6 blocks of 16 tokens. Request A prefills 64 tokens (4 blocks) and
+    // B prefills 30 (2 blocks); A's first decode crosses a block boundary
+    // with the pool dry, forcing B's preemption. Both must still finish.
+    let dir2 = dir.clone();
+    let coord = Coordinator::new(
+        move || make_engine(&dir2, 2, 16, Some(96)),
+        7,
+    );
+    let mk = |prompt: String, max_tokens: usize| {
+        let mut r = Request::new(prompt);
+        r.chat = false;
+        r.max_tokens = max_tokens;
+        r
+    };
+    // submitted back-to-back while the worker is still building the
+    // engine, so both are admitted in the same scheduling pass
+    let sa = coord.submit(mk("a".repeat(64), 4));
+    let sb = coord.submit(mk("b".repeat(30), 4));
+    let ea = collect_events(sa);
+    let eb = collect_events(sb);
+
+    let done = |evs: &[Event]| -> (String, u64) {
+        evs.iter()
+            .find_map(|ev| match ev {
+                Event::Done { text, kv_preemptions, .. } => {
+                    Some((text.clone(), *kv_preemptions))
+                }
+                _ => None,
+            })
+            .expect("request must finish, not error")
+    };
+    let (ta, _) = done(&ea);
+    let (tb, preemptions_b) = done(&eb);
+    assert!(!ta.is_empty() && !tb.is_empty());
+    assert_eq!(coord.metrics.counter("requests_ok"), 2);
+    assert_eq!(coord.metrics.counter("requests_failed"), 0);
+    assert!(
+        coord.metrics.gauge("kv_preemptions") >= 1,
+        "the pool was sized to force at least one preemption"
+    );
+    assert!(coord.metrics.counter("kv_resumes") >= 1);
+    assert!(preemptions_b >= 1, "done JSON surfaces the preemption counter");
+    // pool telemetry gauges are live and consistent
+    let total = coord.metrics.gauge("kv_blocks_total");
+    assert_eq!(total, 6);
+    assert_eq!(
+        coord.metrics.gauge("kv_blocks_free") + coord.metrics.gauge("kv_blocks_in_use"),
+        total
+    );
+}
+
+#[test]
+fn budget_is_clamped_to_pool_capacity_instead_of_erroring_midstream() {
+    let Some(dir) = artifacts_dir() else { return };
+    let dir2 = dir.clone();
+    // pool of 2 blocks × 16 = 32 tokens; prompt 20 fits, but 20 more
+    // generated tokens would not — the budget must clamp to 12 so the
+    // stream finishes cleanly at the capacity wall
+    let coord = Coordinator::new(move || make_engine(&dir2, 1, 16, Some(32)), 3);
+    let mut req = Request::new("y".repeat(20));
+    req.chat = false;
+    req.max_tokens = 20;
+    let events = collect_events(coord.submit(req));
+    let new_tokens = events
+        .iter()
+        .find_map(|ev| match ev {
+            Event::Done { new_tokens, .. } => Some(*new_tokens),
+            _ => None,
+        })
+        .expect("capacity-clamped request must finish, not error");
+    assert!(new_tokens <= 12, "budget must clamp to capacity - prompt, got {new_tokens}");
+    assert_eq!(coord.metrics.counter("requests_failed"), 0);
+}
+
+#[test]
+fn oversized_prompt_fails_fast_instead_of_queueing_forever() {
+    let Some(dir) = artifacts_dir() else { return };
+    let dir2 = dir.clone();
+    // pool of 2 blocks × 16 tokens = 32 tokens total
+    let coord = Coordinator::new(move || make_engine(&dir2, 2, 16, Some(32)), 3);
+    let mut req = Request::new("x".repeat(40));
+    req.chat = false;
+    req.max_tokens = 4;
+    let events = collect_events(coord.submit(req));
+    let msg = events
+        .iter()
+        .find_map(|ev| match ev {
+            Event::Error { message, .. } => Some(message.clone()),
+            _ => None,
+        })
+        .expect("a prompt larger than the whole pool must fail fast");
+    assert!(msg.contains("kv pool capacity"), "{msg}");
+    assert_eq!(coord.metrics.counter("requests_failed"), 1);
+}
