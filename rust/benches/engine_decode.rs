@@ -145,6 +145,84 @@ fn main() {
     );
     drop(admitted);
 
+    // prefix reuse: N requests sharing an 80% prefix — time-to-first-
+    // token (prefill wall time) and prefill tokens skipped, cache on vs
+    // off. Mirrors the paper's motif: never recompute what you can cache.
+    let prompt_len = (max_seq / 2).min(120).max(40);
+    let shared_len = prompt_len * 4 / 5; // 80% shared prefix
+    let n_requests = 8usize;
+    let prompts: Vec<Vec<u32>> = (0..n_requests)
+        .map(|i| {
+            let mut p = tokens[..shared_len].to_vec();
+            // deterministic per-request tails so every request diverges
+            // from every other after the shared prefix
+            p.extend(
+                (0..prompt_len - shared_len).map(|j| ((i * 37 + j * 11 + 1) % 256) as u32),
+            );
+            p
+        })
+        .collect();
+    let mk_serving = |prefix_cache: bool| ServingConfig {
+        policy: OffloadPolicy::Full { cache_k: 4, spec_n: 2 },
+        expert_quant: QuantScheme::Hqq { bits: 3 },
+        attn_quant: QuantScheme::Hqq { bits: 4 },
+        sim_scale: SimScale::Tiny,
+        max_concurrent_sessions: 1,
+        kv_block_tokens: 16,
+        kv_pool_tokens: Some(4 * max_seq),
+        prefix_cache,
+        ..Default::default()
+    };
+    let mut results = Vec::new();
+    for cache_on in [false, true] {
+        let mut e =
+            harness::build_engine_with_serving(&dir, &mk_serving(cache_on), HardwareProfile::rtx3060())
+                .unwrap();
+        let mut prefill_s = 0.0f64;
+        let mut first_ttft_s = 0.0f64;
+        let mut skipped = 0usize;
+        for (i, prompt) in prompts.iter().enumerate() {
+            let mut sess = e.new_session().unwrap();
+            let t0 = std::time::Instant::now();
+            let (_, reused) = e.prefill_cached(&mut sess, prompt).unwrap();
+            let dt = t0.elapsed().as_secs_f64();
+            if i == 0 {
+                first_ttft_s = dt;
+            } else {
+                prefill_s += dt;
+                skipped += reused;
+            }
+            e.prefix_insert(&sess, prompt).unwrap();
+        }
+        results.push((cache_on, first_ttft_s, prefill_s / (n_requests - 1) as f64, skipped));
+    }
+    println!(
+        "\nprefix_reuse ({n_requests} requests of {prompt_len} tokens, {shared_len} shared):"
+    );
+    for (cache_on, cold_s, warm_mean_s, skipped) in &results {
+        println!(
+            "  cache {}: first prefill {:.4}s, later prefills mean {:.4}s, \
+             prefill tokens skipped {}",
+            if *cache_on { "on " } else { "off" },
+            cold_s,
+            warm_mean_s,
+            skipped,
+        );
+    }
+    let (_, _, off_mean, off_skipped) = results[0];
+    let (_, _, on_mean, on_skipped) = results[1];
+    assert_eq!(off_skipped, 0, "cache off must never skip prefill");
+    assert!(
+        on_skipped > 0,
+        "requests sharing a prefix must skip prefill tokens with the cache on"
+    );
+    println!(
+        "  => warm TTFT {:.2}x of cold, {} of {} later-request prefill tokens skipped",
+        on_mean / off_mean.max(1e-12),
+        on_skipped,
+        (n_requests - 1) * prompt_len,
+    );
+
     // host wall-time breakdown per module (perf-pass diagnostics)
     println!("\nper-module host wall time (from the prefill engine):");
     let mut entries: Vec<_> = engine.rt.stats.iter().collect();

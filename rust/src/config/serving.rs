@@ -149,6 +149,15 @@ pub struct ServingConfig {
     /// smaller admits sessions by free-block accounting and relies on
     /// preemption when the pool runs dry mid-decode.
     pub kv_pool_tokens: Option<usize>,
+    /// Enable the prefix cache (see [`crate::prefix`]): completed
+    /// prompts become reusable KV, and admissions sharing a cached
+    /// prefix skip its prefill. Off by default — the cache-less path is
+    /// byte-identical to a stateless scheduler.
+    pub prefix_cache: bool,
+    /// Cap on cached prefix positions. `None` bounds the cache only by
+    /// the KV pool itself (cold prefixes are evicted leaf-first under
+    /// pool pressure, before any live session is preempted).
+    pub prefix_cache_tokens: Option<usize>,
 }
 
 impl Default for ServingConfig {
@@ -165,6 +174,8 @@ impl Default for ServingConfig {
             max_concurrent_sessions: 1,
             kv_block_tokens: 32,
             kv_pool_tokens: None,
+            prefix_cache: false,
+            prefix_cache_tokens: None,
         }
     }
 }
@@ -204,6 +215,19 @@ impl ServingConfig {
                      the pool could never admit a session",
                     pool, self.kv_block_tokens
                 )));
+            }
+        }
+        // the cap is inert while the cache is off — don't reject a config
+        // for a knob that builds nothing
+        if self.prefix_cache {
+            if let Some(cap) = self.prefix_cache_tokens {
+                if cap < self.kv_block_tokens {
+                    return Err(Error::Config(format!(
+                        "prefix_cache_tokens {} is smaller than one block ({} tokens) — \
+                         the cache could never hold a prefix",
+                        cap, self.kv_block_tokens
+                    )));
+                }
             }
         }
         Ok(())
@@ -271,6 +295,30 @@ mod tests {
         let ok = ServingConfig {
             kv_block_tokens: 16,
             kv_pool_tokens: Some(256),
+            ..Default::default()
+        };
+        assert!(ok.validate().is_ok());
+    }
+
+    #[test]
+    fn prefix_cache_knob_validation() {
+        assert!(!ServingConfig::default().prefix_cache, "cache is opt-in");
+        let sub_block_cap = ServingConfig {
+            prefix_cache: true,
+            kv_block_tokens: 32,
+            prefix_cache_tokens: Some(8),
+            ..Default::default()
+        };
+        assert!(sub_block_cap.validate().is_err());
+        let inert_cap = ServingConfig { prefix_cache: false, ..sub_block_cap };
+        assert!(
+            inert_cap.validate().is_ok(),
+            "an inert cap must not block a cache-off deployment"
+        );
+        let ok = ServingConfig {
+            prefix_cache: true,
+            kv_block_tokens: 16,
+            prefix_cache_tokens: Some(128),
             ..Default::default()
         };
         assert!(ok.validate().is_ok());

@@ -20,6 +20,15 @@
 //! instead of failing anyone. Requests whose prompt exceeds the whole
 //! pool fail up front; everything else eventually runs.
 //!
+//! With `ServingConfig::prefix_cache` on (see [`crate::prefix`]),
+//! admission first looks the prompt up in the prefix cache: a warm match
+//! seeds the session's KV from cached blocks and prefill resumes at the
+//! first uncached token, and completed streams are inserted back on
+//! finish. Cold cached prefixes count as admissible memory — the engine
+//! evicts them (leaf-first LRU) when the pool runs dry, so preemption of
+//! a live session is always the LAST resort, after every dead prefix
+//! already gave its blocks back.
+//!
 //! Responses stream token chunks back over a bounded channel so callers
 //! can render incrementally — the property offloading labors to preserve.
 //!
@@ -89,6 +98,14 @@ pub enum Event {
         kv_blocks_free: u64,
         /// Total KV preemptions (swap-outs to host) since engine start.
         kv_preemptions: u64,
+        /// Total preempted-session resumes since engine start.
+        kv_resumes: u64,
+        /// Whether this request seeded from the prefix cache.
+        prefix_hit: bool,
+        /// Prefill positions this request skipped via the prefix cache.
+        prefix_tokens_reused: u64,
+        /// Total prefix-cache blocks evicted since engine start.
+        prefix_evicted_blocks: u64,
     },
     Error { request_id: u64, message: String },
 }
@@ -118,6 +135,18 @@ enum Work {
     Shutdown,
 }
 
+/// A request pulled off the channel but not yet admitted.
+struct Pending {
+    req: Request,
+    tx: Sender<Event>,
+    enqueued: Instant,
+    /// Prompt tokenized at most once: the admission pre-gate fills this
+    /// lazily (it needs token ids for the prefix-aware check) and
+    /// `admit` consumes it, so a deferred head is not re-tokenized every
+    /// scheduler tick.
+    tokens: Option<Vec<u32>>,
+}
+
 /// One admitted request: its engine session plus streaming state.
 struct LiveSession {
     id: u64,
@@ -135,6 +164,13 @@ struct LiveSession {
     /// Per-session token budget (max_tokens capped by the context window).
     budget: usize,
     prompt_tokens: usize,
+    /// Every token actually FED through the engine (prompt + sampled
+    /// tokens that went through a decode step) — exactly the sequence
+    /// the session's KV positions were written from, which is what the
+    /// prefix cache indexes on completion.
+    fed_tokens: Vec<u32>,
+    /// Prefill positions seeded from the prefix cache at admission.
+    prefix_reused: usize,
     started: Instant,
     queue_wait_s: f64,
     /// Admission order (monotone): preemption always picks the youngest.
@@ -247,7 +283,7 @@ fn scheduler_loop(
     // requests pulled off the channel but not yet admitted; a request
     // refused for lack of KV blocks goes back to the FRONT, so FIFO
     // order survives deferral
-    let mut pending: VecDeque<(Request, Sender<Event>, Instant)> = VecDeque::new();
+    let mut pending: VecDeque<Pending> = VecDeque::new();
     let mut accepting = true;
     let mut next_admit_seq: u64 = 0;
 
@@ -276,7 +312,9 @@ fn scheduler_loop(
                 }
             };
             match work {
-                Work::Run(req, tx, enqueued) => pending.push_back((req, tx, enqueued)),
+                Work::Run(req, tx, enqueued) => {
+                    pending.push_back(Pending { req, tx, enqueued, tokens: None })
+                }
                 Work::Shutdown => {
                     // finish live sessions, drop anything still queued
                     accepting = false;
@@ -292,8 +330,10 @@ fn scheduler_loop(
         while !preempted.is_empty() && active.len() < max_sessions {
             // don't bother restoring a stream the pool can't even give a
             // next decode step — it would be re-preempted immediately
+            // (free blocks + cold cached prefixes count as available:
+            // resume_session reclaims the latter before giving up)
             let next_tokens = preempted.front().unwrap().sess.position() + 1;
-            if !engine.kv_pool.can_admit(next_tokens) {
+            if !engine.kv_can_admit(next_tokens) {
                 if active.is_empty() {
                     // whole pool is free and still too small: permanent
                     let live = preempted.pop_front().unwrap();
@@ -345,19 +385,37 @@ fn scheduler_loop(
         while !pending.is_empty() && preempted.is_empty() && active.len() < max_sessions {
             // coarse pre-gate: the byte tokenizer yields at least
             // prompt.len() tokens, so when the pool clearly can't take
-            // the queue head yet, skip the whole admit path (tokenize +
-            // session open + prefill setup) instead of re-running it
-            // every tick. With nothing live the gate is bypassed so an
-            // impossible request still fails permanently in admit().
-            let head_min_tokens = pending.front().unwrap().0.prompt.len() + 1;
-            if !engine.kv_pool.can_admit(head_min_tokens)
-                && !(active.is_empty() && preempted.is_empty())
-            {
+            // the queue head yet, skip the whole admit path (session
+            // open + prefill setup) instead of re-running it every tick.
+            // With the prefix cache on, the head is tokenized (once —
+            // the Pending entry caches it) so blocks its cached trunk
+            // would seed (retained, not allocated) don't count against
+            // free capacity: a warm request must not wait behind
+            // capacity its own prefix already covers. With nothing live
+            // the gate is bypassed so an impossible request still fails
+            // permanently in admit().
+            let gate_open = {
+                let head = pending.front_mut().unwrap();
+                if engine.prefix.is_some() {
+                    if head.tokens.is_none() {
+                        head.tokens = Some(if head.req.chat {
+                            tokenizer.chat_turn(&head.req.prompt)
+                        } else {
+                            tokenizer.encode(&head.req.prompt)
+                        });
+                    }
+                    engine.kv_can_admit_prompt(head.tokens.as_ref().expect("just filled"))
+                } else {
+                    engine.kv_can_admit(head.req.prompt.len() + 1)
+                }
+            };
+            if !gate_open && !(active.is_empty() && preempted.is_empty()) {
                 break;
             }
-            let (req, tx, enqueued) = pending.pop_front().unwrap();
+            let head = pending.pop_front().unwrap();
+            let (tx, enqueued, tokens) = (head.tx, head.enqueued, head.tokens);
             let queue_wait_s = enqueued.elapsed().as_secs_f64();
-            match admit(engine, &tokenizer, req, seed, tx, queue_wait_s, next_admit_seq) {
+            match admit(engine, &tokenizer, head.req, tokens, seed, tx, queue_wait_s, next_admit_seq) {
                 Ok(Some(live)) => {
                     next_admit_seq += 1;
                     m.inc("requests_started", 1);
@@ -372,13 +430,14 @@ fn scheduler_loop(
                 Ok(None) => {
                     m.inc("requests_cancelled", 1);
                 }
-                Err((req, tx, e)) => {
+                Err((req, toks, tx, e)) => {
                     let transient = matches!(e, Error::KvPoolExhausted(_))
                         && !(active.is_empty() && preempted.is_empty());
                     if transient {
                         // live sessions will free blocks as they finish —
-                        // defer, preserving FIFO order
-                        pending.push_front((req, tx, enqueued));
+                        // defer, preserving FIFO order and the already-
+                        // tokenized prompt
+                        pending.push_front(Pending { req, tx, enqueued, tokens: Some(toks) });
                         break;
                     }
                     m.inc("requests_started", 1);
@@ -396,6 +455,18 @@ fn scheduler_loop(
             kv.in_use_blocks as u64,
             kv.preemptions,
         );
+        if let Some(cache) = engine.prefix.as_ref() {
+            let s = cache.stats();
+            m.record_prefix(
+                cache.cached_blocks() as u64,
+                cache.cached_tokens() as u64,
+                s.hits,
+                s.misses,
+                s.tokens_reused,
+                s.inserted_blocks,
+                s.evicted_blocks,
+            );
+        }
 
         if active.is_empty() {
             if preempted.is_empty() && pending.is_empty() && !accepting {
@@ -509,48 +580,53 @@ fn preempt_youngest(
 
 /// Tokenize, budget and prefill a request into a live session, emitting
 /// its first token. `Ok(None)` means the submitter already dropped its
-/// stream; on failure the request AND channel are handed back so the
-/// caller can either requeue (transient [`Error::KvPoolExhausted`]) or
-/// report the error. The prompt's KV blocks are committed all-or-nothing
+/// stream; on failure the request, its tokenized prompt AND the channel
+/// are handed back so the caller can either requeue (transient
+/// [`Error::KvPoolExhausted`], without re-tokenizing on retry) or report
+/// the error. The prompt's KV blocks are committed all-or-nothing
 /// before any compute, so a refused admission leaves no residue.
 #[allow(clippy::too_many_arguments)]
 fn admit(
     engine: &mut MoeEngine,
     tokenizer: &ByteTokenizer,
     req: Request,
+    tokens: Option<Vec<u32>>,
     base_seed: u64,
     tx: Sender<Event>,
     queue_wait_s: f64,
     admit_seq: u64,
-) -> std::result::Result<Option<LiveSession>, (Request, Sender<Event>, Error)> {
+) -> std::result::Result<Option<LiveSession>, AdmitRefusal> {
     let started = Instant::now();
 
-    let prompt_tokens = if req.chat {
-        tokenizer.chat_turn(&req.prompt)
-    } else {
-        tokenizer.encode(&req.prompt)
+    // the pre-gate may already have tokenized the prompt
+    let prompt_tokens = match tokens {
+        Some(t) => t,
+        None if req.chat => tokenizer.chat_turn(&req.prompt),
+        None => tokenizer.encode(&req.prompt),
     };
     if prompt_tokens.is_empty() {
-        return Err((req, tx, Error::Serving("empty prompt".into())));
+        return Err((req, prompt_tokens, tx, Error::Serving("empty prompt".into())));
     }
     let budget = req
         .max_tokens
         .min(engine.weights.cfg.max_seq.saturating_sub(prompt_tokens.len()).saturating_sub(1));
     if budget == 0 {
-        return Err((req, tx, Error::Serving("prompt exceeds context window".into())));
+        return Err((
+            req,
+            prompt_tokens,
+            tx,
+            Error::Serving("prompt exceeds context window".into()),
+        ));
     }
     // a prompt bigger than the ENTIRE pool can never be served — fail it
     // permanently instead of deferring it forever at the queue head
     if !engine.kv_pool.fits(prompt_tokens.len() + 1) {
-        return Err((
-            req,
-            tx,
-            Error::Serving(format!(
-                "prompt of {} tokens exceeds the kv pool capacity of {} tokens",
-                prompt_tokens.len(),
-                engine.kv_pool.capacity_tokens()
-            )),
+        let e = Error::Serving(format!(
+            "prompt of {} tokens exceeds the kv pool capacity of {} tokens",
+            prompt_tokens.len(),
+            engine.kv_pool.capacity_tokens()
         ));
+        return Err((req, prompt_tokens, tx, e));
     }
     // ...and clamp the token budget to what the pool can EVER back, so a
     // generation finishes at the capacity wall instead of erroring after
@@ -566,14 +642,18 @@ fn admit(
     // time in submit order.
     let mut sess = match Session::with_seed(engine, base_seed.wrapping_add(req.id)) {
         Ok(s) => s,
-        Err(e) => return Err((req, tx, e)),
+        Err(e) => return Err((req, prompt_tokens, tx, e)),
     };
     let mut sampler = sess.sampler(req.temperature, req.top_p);
-    let logits = match engine.prefill(&mut sess, &prompt_tokens) {
-        Ok(l) => l,
-        Err(e) => return Err((req, tx, e)),
+    // prefix-cache admission lookup: a warm prefix seeds the session's
+    // KV and prefill resumes at the first uncached token (reused = 0 and
+    // plain prefill when the cache is off or misses)
+    let (logits, reused) = match engine.prefill_cached(&mut sess, &prompt_tokens) {
+        Ok(x) => x,
+        Err(e) => return Err((req, prompt_tokens, tx, e)),
     };
-    let next = sampler.sample(logits.row(prompt_tokens.len() - 1)) as u32;
+    // logits cover only the prefilled tail: [prompt - reused, vocab]
+    let next = sampler.sample(logits.row(prompt_tokens.len() - reused - 1)) as u32;
     let piece = tokenizer.decode(&[next]);
     if tx.send(Event::Token { request_id: req.id, text: piece.clone() }).is_err() {
         // client dropped its stream while queued — don't occupy a slot
@@ -589,12 +669,18 @@ fn admit(
         generated: 1,
         budget,
         prompt_tokens: prompt_tokens.len(),
+        fed_tokens: prompt_tokens,
+        prefix_reused: reused,
         started,
         queue_wait_s,
         admit_seq,
         preempt_count: 0,
     }))
 }
+
+/// A refused admission: the request, its tokenized prompt (so a
+/// transient requeue never re-tokenizes), the response channel, and why.
+type AdmitRefusal = (Request, Vec<u32>, Sender<Event>, Error);
 
 enum StepOutcome {
     Continue,
@@ -611,6 +697,9 @@ fn step(
     live: &mut LiveSession,
 ) -> Result<StepOutcome> {
     let logits = engine.decode_step(&mut live.sess, live.next)?;
+    // the step succeeded, so `next` was fed and its KV position written
+    // (on a pool-dry error nothing was fed and the retry re-pushes it)
+    live.fed_tokens.push(live.next);
     live.next = live.sampler.sample(&logits) as u32;
     live.generated += 1;
     let piece = tokenizer.decode(&[live.next]);
@@ -628,13 +717,20 @@ fn step(
     }
 }
 
-/// Emit the Done event and final accounting for a finished session.
-fn finish(m: &Metrics, engine: &MoeEngine, live: LiveSession, active_sessions: u64) {
+/// Emit the Done event and final accounting for a finished session —
+/// and hand the completed stream to the prefix cache first, so the NEXT
+/// request sharing this prefix skips its prefill (insert-on-completion;
+/// a no-op with the cache off).
+fn finish(m: &Metrics, engine: &mut MoeEngine, live: LiveSession, active_sessions: u64) {
+    // insert errors (a failed literal D2H read) only mean nothing was
+    // cached; the request itself already finished
+    let _ = engine.prefix_insert(&live.sess, &live.fed_tokens);
     let wall = live.started.elapsed().as_secs_f64();
     let sim_tps = live.sess.run.tokens_per_s_sim();
     let hits = live.sess.run.total_hits();
     let misses = live.sess.run.total_misses();
     let kv = engine.kv_pool.stats();
+    let prefix_evicted = engine.prefix.as_ref().map_or(0, |c| c.stats().evicted_blocks);
     m.inc("requests_ok", 1);
     m.inc("tokens_generated", live.generated as u64);
     m.inc("expert_cache_hits", hits);
@@ -653,6 +749,10 @@ fn finish(m: &Metrics, engine: &MoeEngine, live: LiveSession, active_sessions: u
         kv_blocks_in_use: kv.in_use_blocks as u64,
         kv_blocks_free: kv.free_blocks as u64,
         kv_preemptions: kv.preemptions,
+        kv_resumes: m.counter("kv_resumes"),
+        prefix_hit: live.prefix_reused > 0,
+        prefix_tokens_reused: live.prefix_reused as u64,
+        prefix_evicted_blocks: prefix_evicted,
     });
 }
 

@@ -6,7 +6,8 @@
 //! -> {"prompt": "what is perplexity", "max_tokens": 48}
 //! <- {"type":"token","text":"t"}
 //! <- {"type":"done","text":"...","tokens_per_s_wall":...,"queue_wait_s":...,"active_sessions":...,
-//!     "kv_blocks_in_use":...,"kv_blocks_free":...,"kv_preemptions":...}
+//!     "kv_blocks_in_use":...,"kv_blocks_free":...,"kv_preemptions":...,"kv_resumes":...,
+//!     "prefix_hit":...,"prefix_tokens_reused":...,"prefix_evicted_blocks":...}
 //! ```
 //!
 //! Each connection gets its own handler thread; the coordinator's
@@ -101,6 +102,10 @@ pub fn event_to_json(ev: &Event) -> Json {
             kv_blocks_in_use,
             kv_blocks_free,
             kv_preemptions,
+            kv_resumes,
+            prefix_hit,
+            prefix_tokens_reused,
+            prefix_evicted_blocks,
             ..
         } => Json::obj(vec![
             ("type", "done".into()),
@@ -115,6 +120,10 @@ pub fn event_to_json(ev: &Event) -> Json {
             ("kv_blocks_in_use", (*kv_blocks_in_use as usize).into()),
             ("kv_blocks_free", (*kv_blocks_free as usize).into()),
             ("kv_preemptions", (*kv_preemptions as usize).into()),
+            ("kv_resumes", (*kv_resumes as usize).into()),
+            ("prefix_hit", (*prefix_hit).into()),
+            ("prefix_tokens_reused", (*prefix_tokens_reused as usize).into()),
+            ("prefix_evicted_blocks", (*prefix_evicted_blocks as usize).into()),
         ]),
         Event::Error { message, .. } => Json::obj(vec![
             ("type", "error".into()),
@@ -192,6 +201,10 @@ mod tests {
             kv_blocks_in_use: 7,
             kv_blocks_free: 9,
             kv_preemptions: 1,
+            kv_resumes: 1,
+            prefix_hit: true,
+            prefix_tokens_reused: 32,
+            prefix_evicted_blocks: 4,
         };
         let j = event_to_json(&ev);
         assert_eq!(j.get("type").unwrap().as_str(), Some("done"));
@@ -202,5 +215,10 @@ mod tests {
         assert_eq!(j.get("kv_blocks_in_use").unwrap().as_usize(), Some(7));
         assert_eq!(j.get("kv_blocks_free").unwrap().as_usize(), Some(9));
         assert_eq!(j.get("kv_preemptions").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("kv_resumes").unwrap().as_usize(), Some(1));
+        // ...and so do the prefix-cache hit/reuse/eviction metrics
+        assert_eq!(j.get("prefix_hit").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("prefix_tokens_reused").unwrap().as_usize(), Some(32));
+        assert_eq!(j.get("prefix_evicted_blocks").unwrap().as_usize(), Some(4));
     }
 }

@@ -50,6 +50,7 @@ use crate::memory::copy_engine::{CopyEngine, TransferTicket};
 use crate::memory::device::DeviceMemory;
 use crate::memory::host::ExpertId;
 use crate::model::{ModelWeights, Sampler};
+use crate::prefix::PrefixCache;
 use crate::runtime::{ExpertLits, Runtime, StaticLits};
 use crate::tensor::{softmax, top_k, Tensor};
 use cost::CostModel;
@@ -101,6 +102,11 @@ pub struct MoeEngine {
     /// carved out of device memory, drawn on block-by-block as sessions
     /// decode. Sessions hold an `Arc` so drops return blocks directly.
     pub kv_pool: Arc<KvPool>,
+    /// Prefix cache (see [`crate::prefix`]) — `None` unless
+    /// `ServingConfig::prefix_cache` opted the deployment in. Holds cold
+    /// prefixes as refcounted KV blocks; admissions seed from it and
+    /// completions insert into it via the coordinator.
+    pub prefix: Option<PrefixCache>,
     /// Live [`Session`] count — [`Session::new`] refuses to exceed the
     /// provisioned pool, [`Session`]'s `Drop` releases the slot.
     live_sessions: Arc<AtomicUsize>,
@@ -193,6 +199,15 @@ impl MoeEngine {
             block_bytes,
             vec![cfg.max_seq, cfg.n_kv_heads, cfg.head_dim],
         ));
+        let prefix = serving.prefix_cache.then(|| {
+            PrefixCache::new(
+                Arc::clone(&kv_pool),
+                cfg.n_layers,
+                cfg.max_seq,
+                cfg.n_kv_heads * cfg.head_dim,
+                serving.prefix_cache_tokens,
+            )
+        });
         let cache = CacheManager::new(
             cfg.n_layers,
             serving.policy.cache_k(),
@@ -218,6 +233,7 @@ impl MoeEngine {
             staging_buffers: serving.staging_buffers,
             max_concurrent_sessions: serving.max_concurrent_sessions,
             kv_pool,
+            prefix,
             live_sessions: Arc::new(AtomicUsize::new(0)),
         })
     }
@@ -292,11 +308,22 @@ impl MoeEngine {
     }
 
     /// Resume a preempted session: re-acquire blocks for its written
-    /// positions and restore the KV images from host, bit-exactly.
-    /// Errors with [`Error::KvPoolExhausted`] while the pool still
-    /// cannot back the stream (the scheduler retries later).
+    /// positions and restore the KV images from host, bit-exactly. Cold
+    /// cached prefixes are reclaimed first when the pool is dry; errors
+    /// with [`Error::KvPoolExhausted`] only when even that cannot back
+    /// the stream (the scheduler retries later).
     pub fn resume_session(&mut self, sess: &mut Session) -> Result<()> {
-        let bytes = sess.kv.swap_in(sess.pos)?;
+        let bytes = match sess.kv.swap_in(sess.pos) {
+            Ok(b) => b,
+            Err(Error::KvPoolExhausted(msg)) => {
+                let needed = self.kv_pool.blocks_for(sess.pos);
+                if self.prefix.as_mut().map_or(0, |c| c.reclaim(needed)) == 0 {
+                    return Err(Error::KvPoolExhausted(msg));
+                }
+                sess.kv.swap_in(sess.pos)?
+            }
+            Err(e) => return Err(e),
+        };
         if bytes > 0 {
             let span = self
                 .timeline
@@ -304,6 +331,134 @@ impl MoeEngine {
             self.timeline.wait_until(span.end);
         }
         Ok(())
+    }
+
+    // ---------------------------------------------------------------------
+    // prefix cache (see crate::prefix)
+    // ---------------------------------------------------------------------
+
+    /// Commit KV blocks for `sess` up to `tokens` positions, reclaiming
+    /// cold cached prefixes when the pool runs dry. Only when the cache
+    /// cannot help either does [`Error::KvPoolExhausted`] surface — so
+    /// the scheduler preempts a LIVE session only after every DEAD
+    /// prefix lost its blocks first.
+    fn ensure_kv(&mut self, sess: &mut Session, tokens: usize) -> Result<()> {
+        match sess.kv.ensure_tokens(tokens) {
+            Err(Error::KvPoolExhausted(msg)) => {
+                let needed = self
+                    .kv_pool
+                    .blocks_for(tokens)
+                    .saturating_sub(sess.kv.mapped_blocks());
+                if self.prefix.as_mut().map_or(0, |c| c.reclaim(needed)) == 0 {
+                    return Err(Error::KvPoolExhausted(msg));
+                }
+                sess.kv.ensure_tokens(tokens)
+            }
+            r => r,
+        }
+    }
+
+    /// Admission gate with eviction ordering: would `tokens` positions
+    /// fit the free blocks plus what prefix-cache reclaim could free?
+    /// (With the cache off this is exactly `kv_pool.can_admit`.)
+    pub fn kv_can_admit(&self, tokens: usize) -> bool {
+        let free = self.kv_pool.stats().free_blocks;
+        let reclaimable = self.prefix.as_ref().map_or(0, |c| c.reclaimable_blocks());
+        self.kv_pool.blocks_for(tokens) <= free + reclaimable
+    }
+
+    /// Prefix-aware admission gate for a tokenized prompt: blocks the
+    /// cache would SEED (retained from the tree, never allocated) don't
+    /// count against free capacity, so a warm request whose trunk is
+    /// shared with a live session is not deferred as if it were cold.
+    /// The seeded blocks are subtracted from the reclaimable pool too —
+    /// a seed pins its own trunk, so those blocks cannot also be counted
+    /// as evictable headroom (if they are already session-shared they
+    /// were never reclaimable, and the subtraction only makes the gate
+    /// more conservative). Admission itself still does the precise
+    /// all-or-nothing commit and requeues transiently.
+    pub fn kv_can_admit_prompt(&self, tokens: &[u32]) -> bool {
+        let seeded = self.prefix.as_ref().map_or(0, |c| {
+            c.peek_match_blocks(tokens, tokens.len().saturating_sub(1))
+        });
+        let free = self.kv_pool.stats().free_blocks;
+        let reclaimable = self
+            .prefix
+            .as_ref()
+            .map_or(0, |c| c.reclaimable_blocks())
+            .saturating_sub(seeded);
+        let needed = self.kv_pool.blocks_for(tokens.len() + 1).saturating_sub(seeded);
+        needed <= free + reclaimable
+    }
+
+    /// Prefill with prefix reuse: seed a virgin session from the longest
+    /// cached prefix of `tokens` (when the cache is on and hits), then
+    /// prefill only the uncached tail. Returns the tail's logits —
+    /// `[tokens.len() - reused, vocab]` — plus the reused position count
+    /// (0 = plain prefill, byte-identical to the cache-less path).
+    pub fn prefill_cached(
+        &mut self,
+        sess: &mut Session,
+        tokens: &[u32],
+    ) -> Result<(Tensor, usize)> {
+        let reused = self.seed_from_prefix(sess, tokens)?;
+        let logits = self.prefill(sess, &tokens[reused..])?;
+        Ok((logits, reused))
+    }
+
+    /// Seed `sess` from the prefix cache. The match is capped one short
+    /// of the full prompt so prefill always has at least one position to
+    /// produce first-token logits from. The seeded H2D copy is charged
+    /// to the timeline like a session resume of the same byte count.
+    fn seed_from_prefix(&mut self, sess: &mut Session, tokens: &[u32]) -> Result<usize> {
+        if sess.pos != 0 || tokens.len() < 2 {
+            return Ok(0);
+        }
+        let Some(cache) = self.prefix.as_mut() else { return Ok(0) };
+        let Some(seed) = cache.lookup(tokens, tokens.len() - 1) else { return Ok(0) };
+        let matched = seed.matched;
+        let bytes = sess.kv.seed(seed.layers, seed.blocks)?;
+        sess.pos = matched;
+        // trace indexing stays aligned with sequence positions
+        sess.token_counter = matched;
+        sess.run.prefix_reused_tokens += matched;
+        if bytes > 0 {
+            let span = self
+                .timeline
+                .transfer(self.cost.kv_swap_s(bytes), self.timeline.now());
+            self.timeline.wait_until(span.end);
+        }
+        Ok(matched)
+    }
+
+    /// Insert a finished stream into the prefix cache: `tokens` must be
+    /// the tokens actually fed (prompt + sampled-and-fed), i.e. the
+    /// sequence the session's KV positions were written from. The tree
+    /// RETAINS the session's own page-table blocks for every new chunk —
+    /// when the session drops a moment later, its blocks survive as
+    /// cache instead of dying, so inserting costs no free pool capacity.
+    /// Best effort — the token cap just caches less. Returns the number
+    /// of blocks admitted.
+    pub fn prefix_insert(&mut self, sess: &Session, tokens: &[u32]) -> Result<usize> {
+        if self.prefix.is_none() || sess.kv.is_swapped() {
+            return Ok(0);
+        }
+        let n = tokens.len().min(sess.pos);
+        let bt = self.kv_pool.block_tokens();
+        // the session's blocks, in position order, one per full chunk
+        let Some(blocks) = (0..n / bt)
+            .map(|ci| sess.kv.page_table().block_of(ci * bt))
+            .collect::<Option<Vec<_>>>()
+        else {
+            return Ok(0); // defensive: positions without blocks — skip
+        };
+        let cfg = &self.weights.cfg;
+        let image_len = cfg.max_seq * cfg.n_kv_heads * cfg.head_dim;
+        let cache = self.prefix.as_mut().expect("checked above");
+        cache.insert(&tokens[..n], &blocks, |l| match sess.kv.layer(l)? {
+            Some((k, v)) => Ok((k.to_vec::<f32>()?, v.to_vec::<f32>()?)),
+            None => Ok((vec![0.0; image_len], vec![0.0; image_len])),
+        })
     }
 
     // ---------------------------------------------------------------------
@@ -319,10 +474,11 @@ impl MoeEngine {
             )));
         }
         // commit KV blocks for the new position up front (all layers
-        // advance in lockstep, one page table covers them all). On a dry
+        // advance in lockstep, one page table covers them all), evicting
+        // cold cached prefixes first when the pool is dry. On a truly dry
         // pool this fails BEFORE any compute or state change, so the
         // scheduler can preempt a session and retry the step cleanly.
-        sess.kv.ensure_tokens(sess.pos + 1)?;
+        self.ensure_kv(sess, sess.pos + 1)?;
         let sim_start = self.timeline.now();
         let wall_start = Instant::now();
         let mut tstats = TokenStats::default();
@@ -585,9 +741,10 @@ impl MoeEngine {
         if sess.pos + tokens.len() > self.weights.cfg.max_seq {
             return Err(Error::Engine("prompt exceeds max_seq".into()));
         }
-        // whole-prompt block commit, all-or-nothing: a refused admission
-        // holds no blocks and the request can be requeued untouched
-        sess.kv.ensure_tokens(sess.pos + tokens.len())?;
+        // whole-prompt block commit, all-or-nothing (cold cached prefixes
+        // are evicted first): a refused admission holds no blocks and the
+        // request can be requeued untouched
+        self.ensure_kv(sess, sess.pos + tokens.len())?;
         let sim_start = self.timeline.now();
         let c = self.weights.cfg.prefill_chunk;
         let d = self.weights.cfg.d_model;

@@ -23,6 +23,8 @@ pub struct RunStats {
     pub wall_total_s: f64,
     pub prefill_sim_s: f64,
     pub prefill_tokens: usize,
+    /// Prefill positions skipped by seeding from the prefix cache.
+    pub prefix_reused_tokens: usize,
 }
 
 impl RunStats {

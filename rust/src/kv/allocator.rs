@@ -7,6 +7,14 @@
 //! same size, like a page frame allocator). The allocator tracks an
 //! in-use bitmap so double-allocation and double-free — the classic paging
 //! bugs — are hard failures instead of silent accounting drift.
+//!
+//! Blocks are REFCOUNTED so the prefix cache (see [`crate::prefix`]) can
+//! share them at the accounting level: `alloc` hands a block out with one
+//! reference, [`BlockAllocator::retain`] adds holders (e.g. a session
+//! seeded from a cached prefix plus the radix-tree node that owns it),
+//! and [`BlockAllocator::free`] drops one reference — the block returns
+//! to the free list exactly when the LAST holder releases it. Unshared
+//! blocks (refcount 1 for their whole life) behave exactly as before.
 
 /// Index of one physical KV block inside the pool.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -20,6 +28,12 @@ pub struct BlockAllocator {
     free: Vec<u32>,
     /// Double-alloc / double-free guard.
     in_use: Vec<bool>,
+    /// Holders per block; 0 for free blocks, bumped by [`Self::retain`].
+    refs: Vec<u32>,
+    /// Blocks with more than one holder — maintained incrementally so
+    /// [`Self::shared_blocks`] is O(1) (it feeds per-tick gauges and the
+    /// scheduler's admission gate).
+    shared: usize,
     total: usize,
     /// High-water mark of simultaneously allocated blocks.
     pub peak_in_use: usize,
@@ -33,6 +47,8 @@ impl BlockAllocator {
             // reversed so the first alloc hands out block 0
             free: (0..total as u32).rev().collect(),
             in_use: vec![false; total],
+            refs: vec![0; total],
+            shared: 0,
             total,
             peak_in_use: 0,
             total_allocs: 0,
@@ -52,11 +68,24 @@ impl BlockAllocator {
         self.total - self.free.len()
     }
 
-    /// Allocate one block, or None when the pool is dry.
+    /// Blocks currently held by more than one owner (prefix sharing).
+    pub fn shared_blocks(&self) -> usize {
+        self.shared
+    }
+
+    /// Current holder count of a block; 0 when it sits on the free list.
+    pub fn refcount(&self, id: BlockId) -> u32 {
+        let i = id.0 as usize;
+        assert!(i < self.total, "block {i} outside pool of {}", self.total);
+        self.refs[i]
+    }
+
+    /// Allocate one block (refcount 1), or None when the pool is dry.
     pub fn alloc(&mut self) -> Option<BlockId> {
         let id = self.free.pop()?;
         debug_assert!(!self.in_use[id as usize], "free list handed out a live block");
         self.in_use[id as usize] = true;
+        self.refs[id as usize] = 1;
         self.total_allocs += 1;
         self.peak_in_use = self.peak_in_use.max(self.in_use_blocks());
         Some(BlockId(id))
@@ -71,16 +100,38 @@ impl BlockAllocator {
         Some((0..n).map(|_| self.alloc().expect("checked free count")).collect())
     }
 
-    /// Return a block to the pool. Panics on double-free or an id from
-    /// another pool — both are allocator-invariant violations, not
-    /// recoverable runtime conditions.
-    pub fn free(&mut self, id: BlockId) {
+    /// Add one holder to a live block (accounting-level sharing: the
+    /// prefix cache's tree node and a seeded session both hold the same
+    /// block). Panics on a free block — retaining nothing is a bug.
+    pub fn retain(&mut self, id: BlockId) {
+        let i = id.0 as usize;
+        assert!(i < self.total, "block {i} outside pool of {}", self.total);
+        assert!(self.in_use[i], "retain of free KV block {i}");
+        self.refs[i] += 1;
+        if self.refs[i] == 2 {
+            self.shared += 1;
+        }
+    }
+
+    /// Drop one holder; the block returns to the pool when the LAST
+    /// holder releases it (returns true in that case). Panics on
+    /// double-free or an id from another pool — both are
+    /// allocator-invariant violations, not recoverable runtime conditions.
+    pub fn free(&mut self, id: BlockId) -> bool {
         let i = id.0 as usize;
         assert!(i < self.total, "block {i} outside pool of {}", self.total);
         assert!(self.in_use[i], "double free of KV block {i}");
+        self.refs[i] -= 1;
+        if self.refs[i] == 1 {
+            self.shared -= 1;
+        }
+        if self.refs[i] > 0 {
+            return false;
+        }
         self.in_use[i] = false;
         self.free.push(id.0);
         self.total_frees += 1;
+        true
     }
 }
 
@@ -118,6 +169,36 @@ mod tests {
         let id = a.alloc().unwrap();
         a.free(id);
         a.free(id);
+    }
+
+    #[test]
+    fn refcounts_free_exactly_on_last_release() {
+        let mut a = BlockAllocator::new(2);
+        let id = a.alloc().unwrap();
+        assert_eq!(a.refcount(id), 1);
+        assert_eq!(a.shared_blocks(), 0);
+        a.retain(id);
+        a.retain(id);
+        assert_eq!(a.refcount(id), 3);
+        assert_eq!(a.shared_blocks(), 1);
+        assert!(!a.free(id), "two holders remain");
+        assert!(!a.free(id), "one holder remains");
+        assert_eq!(a.in_use_blocks(), 1, "shared block stays allocated");
+        assert!(a.free(id), "last holder frees the block");
+        assert_eq!(a.refcount(id), 0);
+        assert_eq!(a.free_blocks(), 2);
+        // the freed id is allocatable again with a fresh refcount
+        let again = a.alloc().unwrap();
+        assert_eq!(a.refcount(again), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "retain of free")]
+    fn retain_of_free_block_is_detected() {
+        let mut a = BlockAllocator::new(1);
+        let id = a.alloc().unwrap();
+        a.free(id);
+        a.retain(id);
     }
 
     /// Fragmentation stress: random alloc/free interleavings over a small

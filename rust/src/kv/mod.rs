@@ -9,7 +9,10 @@
 //! * [`BlockAllocator`] — the engine carves the KV byte budget out of
 //!   [`crate::memory::DeviceMemory`] into uniform blocks of
 //!   `kv_block_tokens` sequence positions (all layers, K and V). A free
-//!   list hands them out in O(1) with no external fragmentation.
+//!   list hands them out in O(1) with no external fragmentation. Blocks
+//!   are REFCOUNTED so the prefix cache ([`crate::prefix`]) can share
+//!   them between its radix-tree nodes and seeded sessions: a block
+//!   frees exactly when its last holder releases it.
 //! * [`PageTable`] — each session maps its sequence positions densely
 //!   onto physical blocks; one table serves every layer because layers
 //!   advance in lockstep.

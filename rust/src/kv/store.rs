@@ -35,6 +35,8 @@ pub struct KvPoolStats {
     pub free_blocks: usize,
     pub in_use_blocks: usize,
     pub peak_in_use_blocks: usize,
+    /// Blocks with more than one holder (prefix-cache sharing).
+    pub shared_blocks: usize,
     /// Sessions swapped out to host since engine start.
     pub preemptions: u64,
 }
@@ -113,8 +115,36 @@ impl KvPool {
             free_blocks: a.free_blocks(),
             in_use_blocks: a.in_use_blocks(),
             peak_in_use_blocks: a.peak_in_use,
+            shared_blocks: a.shared_blocks(),
             preemptions: self.preemptions.load(Ordering::Relaxed),
         }
+    }
+
+    /// Current holder count of a block (0 = on the free list).
+    pub fn refcount(&self, id: crate::kv::BlockId) -> u32 {
+        self.alloc.lock().unwrap().refcount(id)
+    }
+
+    /// Allocate a single block (refcount 1), or None when the pool is
+    /// dry — the prefix cache's soft allocation path (it evicts or gives
+    /// up instead of erroring).
+    pub(crate) fn alloc_one(&self) -> Option<crate::kv::BlockId> {
+        self.alloc.lock().unwrap().alloc()
+    }
+
+    /// Add one holder to every block in `ids` (accounting-level prefix
+    /// sharing: tree node + seeded session hold the same block).
+    pub(crate) fn retain_all(&self, ids: &[crate::kv::BlockId]) {
+        let mut a = self.alloc.lock().unwrap();
+        for &id in ids {
+            a.retain(id);
+        }
+    }
+
+    /// Drop one holder of `id`; true when the block actually returned to
+    /// the free list (last holder released).
+    pub(crate) fn release_one(&self, id: crate::kv::BlockId) -> bool {
+        self.alloc.lock().unwrap().free(id)
     }
 
     pub fn note_preemption(&self) {
@@ -186,6 +216,66 @@ impl PagedKv {
 
     pub fn pool(&self) -> &Arc<KvPool> {
         &self.pool
+    }
+
+    /// Seed a VIRGIN session from cached prefix KV: install per-layer
+    /// full-shape `[max_seq, n_kv_heads, head_dim]` host images (prefix
+    /// positions filled, the rest zeros — the position mask hides them)
+    /// and map the prefix's `blocks` into the page table. The blocks
+    /// arrive with a holder reference already added by the prefix cache
+    /// (accounting-level sharing: the radix-tree node keeps its own
+    /// reference), so this store releases them like any other block on
+    /// reset/preempt/drop. Returns the device bytes the seed committed.
+    /// On any failure the handed-over references are released and the
+    /// session is left untouched (still virgin).
+    pub fn seed(
+        &mut self,
+        layers: Vec<(Vec<f32>, Vec<f32>)>,
+        blocks: Vec<crate::kv::BlockId>,
+    ) -> Result<u64> {
+        let virgin = match &self.state {
+            Residency::Device(ls) => ls.iter().all(|s| s.is_none()),
+            Residency::Host(_) => false,
+        };
+        if !virgin || self.table.mapped_blocks() != 0 {
+            self.pool.free_all(blocks);
+            return Err(Error::Engine(
+                "prefix seed requires a virgin session (no KV written, not swapped)".into(),
+            ));
+        }
+        let n_layers = match &self.state {
+            Residency::Device(ls) => ls.len(),
+            Residency::Host(ls) => ls.len(),
+        };
+        if layers.len() != n_layers {
+            self.pool.free_all(blocks);
+            return Err(Error::Engine(format!(
+                "prefix seed has {} layers, session has {n_layers}",
+                layers.len()
+            )));
+        }
+        let shape = self.pool.kv_shape.clone();
+        let built: Result<Vec<Option<(Literal, Literal)>>> = layers
+            .into_iter()
+            .map(|(k, v)| {
+                Ok(Some((
+                    Runtime::lit_f32(&Tensor::new(k, shape.clone())?)?,
+                    Runtime::lit_f32(&Tensor::new(v, shape.clone())?)?,
+                )))
+            })
+            .collect();
+        match built {
+            Ok(ls) => {
+                let bytes = blocks.len() as u64 * self.pool.block_bytes();
+                self.table.push_blocks(blocks);
+                self.state = Residency::Device(ls);
+                Ok(bytes)
+            }
+            Err(e) => {
+                self.pool.free_all(blocks);
+                Err(e)
+            }
+        }
     }
 
     /// Commit enough blocks to back `tokens` sequence positions,
@@ -433,6 +523,33 @@ mod tests {
         assert_eq!(kv.mapped_blocks(), 3);
         assert_eq!(p.stats().in_use_blocks, 3);
         assert_eq!(p.stats().preemptions, 0, "pool counter is the engine's to bump");
+    }
+
+    #[test]
+    fn seed_installs_blocks_with_shared_accounting() {
+        let p = pool(4, 4);
+        // the "tree" owns one block; the seeded session adds a holder
+        let b = p.alloc_one().unwrap();
+        p.retain_all(&[b]);
+        assert_eq!(p.refcount(b), 2);
+        let mut kv = PagedKv::new(1, Arc::clone(&p));
+        let rows = 64 * 2 * 8;
+        let bytes = kv.seed(vec![(vec![0.0; rows], vec![0.0; rows])], vec![b]).unwrap();
+        assert_eq!(bytes, 1024);
+        assert_eq!(kv.mapped_blocks(), 1);
+        assert_eq!(p.stats().in_use_blocks, 1);
+        assert_eq!(p.stats().shared_blocks, 1);
+        // a second seed is refused and releases the handed-over reference
+        p.retain_all(&[b]);
+        assert!(kv.seed(vec![(vec![0.0; rows], vec![0.0; rows])], vec![b]).is_err());
+        assert_eq!(p.refcount(b), 2);
+        // session release drops its holder; the tree's reference keeps
+        // the block allocated until the tree lets go too
+        kv.release();
+        assert_eq!(p.refcount(b), 1);
+        assert_eq!(p.stats().in_use_blocks, 1);
+        assert!(p.release_one(b), "last holder frees the block");
+        assert_eq!(p.stats().free_blocks, 4);
     }
 
     #[test]

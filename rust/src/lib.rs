@@ -42,6 +42,15 @@
 //!   youngest session (KV swaps to host, resumed bit-identically later)
 //!   instead of failing anyone. Block size never changes numerics —
 //!   width-1 decode is bit-identical to a contiguous reservation.
+//! * **Prefix cache** ([`prefix`], opt-in via
+//!   [`config::ServingConfig::prefix_cache`]) — completed prompts become
+//!   reusable KV: a radix tree keyed on block-sized token chunks whose
+//!   nodes hold refcounted pool blocks and per-layer host KV rows. A new
+//!   request sharing a cached prefix seeds its session from the tree and
+//!   prefills only the uncached tail (bit-identical to a cold prefill);
+//!   finished streams are inserted back, inheriting the dying session's
+//!   blocks. Cold prefixes are evicted LRU leaf-first under pool
+//!   pressure BEFORE any live session is preempted.
 //! * **Scheduler** ([`coordinator::Coordinator`]) — a continuous-batching
 //!   loop on the engine worker thread. Queued requests are admitted into
 //!   up to `max_concurrent_sessions` live sessions
@@ -69,6 +78,7 @@ pub mod kv;
 pub mod memory;
 pub mod model;
 pub mod npz;
+pub mod prefix;
 pub mod quant;
 pub mod runtime;
 pub mod telemetry;

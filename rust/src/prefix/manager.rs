@@ -1,0 +1,584 @@
+//! The prefix-cache manager: the policy layer between the radix tree and
+//! the KV block pool.
+//!
+//! [`PrefixCache`] owns the tree and mediates every block movement:
+//!
+//! * **lookup** — longest cached match for an incoming prompt, assembled
+//!   into full-shape per-layer host KV images plus the matched blocks
+//!   with one holder reference added per block (the seeded session's
+//!   share — see [`crate::kv::PagedKv::seed`]).
+//! * **insert** — a completed stream's prompt+generation KV, chunked at
+//!   block granularity and deduplicated against what the tree already
+//!   holds. New chunks do NOT allocate: the tree RETAINS the finishing
+//!   session's own blocks (one extra holder each), so when the session
+//!   drops a moment later the blocks survive as cache instead of dying —
+//!   inserting costs zero pool capacity and never competes with live
+//!   admissions for free blocks.
+//! * **eviction** — LRU leaf-first, in two roles: keeping the cache under
+//!   its `prefix_cache_tokens` cap, and [`PrefixCache::reclaim`]ing cold
+//!   prefixes when the pool runs dry so the scheduler frees memory from
+//!   DEAD data before preempting a LIVE session.
+
+use std::sync::Arc;
+
+use crate::error::Result;
+use crate::kv::{BlockId, KvPool};
+use crate::prefix::radix::{ChunkKv, RadixTree};
+
+/// A cache hit, ready to seed a virgin session: `layers` are full-shape
+/// `[max_seq, n_kv_heads, head_dim]` host images with positions
+/// `[0, matched)` filled, and `blocks` carry one holder reference each
+/// for the session taking them over.
+pub struct Seed {
+    /// Prefix positions covered (a multiple of the block size).
+    pub matched: usize,
+    pub blocks: Vec<BlockId>,
+    pub layers: Vec<(Vec<f32>, Vec<f32>)>,
+}
+
+/// Lifetime counters, surfaced as coordinator telemetry.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PrefixStats {
+    /// Lookups that seeded at least one block.
+    pub hits: u64,
+    /// Lookups that found no reusable prefix.
+    pub misses: u64,
+    /// Prefill positions skipped via seeding, summed over hits.
+    pub tokens_reused: u64,
+    /// Chunks the cache has admitted.
+    pub inserted_blocks: u64,
+    /// Tree references dropped by eviction (cap pressure + reclaim).
+    pub evicted_blocks: u64,
+}
+
+/// Radix-tree prefix cache over the shared KV block pool.
+pub struct PrefixCache {
+    tree: RadixTree,
+    pool: Arc<KvPool>,
+    /// Cap on cached positions (None = bounded only by the pool).
+    max_tokens: Option<usize>,
+    max_seq: usize,
+    /// f32s per sequence position per layer image: `n_kv_heads * head_dim`.
+    kv_rows: usize,
+    n_layers: usize,
+    stats: PrefixStats,
+}
+
+impl PrefixCache {
+    pub fn new(
+        pool: Arc<KvPool>,
+        n_layers: usize,
+        max_seq: usize,
+        kv_rows: usize,
+        max_tokens: Option<usize>,
+    ) -> Self {
+        let tree = RadixTree::new(pool.block_tokens(), n_layers);
+        PrefixCache { tree, pool, max_tokens, max_seq, kv_rows, n_layers, stats: PrefixStats::default() }
+    }
+
+    pub fn stats(&self) -> PrefixStats {
+        self.stats
+    }
+
+    /// Blocks the tree holds a reference to (cached footprint).
+    pub fn cached_blocks(&self) -> usize {
+        self.tree.cached_blocks()
+    }
+
+    pub fn cached_tokens(&self) -> usize {
+        self.tree.cached_tokens()
+    }
+
+    /// Blocks eviction could return to the free list RIGHT NOW: cached
+    /// blocks no live session shares (refcount 1 = tree-only). The
+    /// admission gate counts these as available-with-reclaim, every
+    /// scheduler tick — so this must stay O(1): holders beyond the first
+    /// are only ever added with the block in the tree (lookup shares
+    /// tree→session, insert shares session→tree), so shared blocks are
+    /// tree-held and tree-only blocks are `cached - shared`. The one
+    /// exception — a still-session-shared block whose node was already
+    /// evicted — only UNDERcounts (the gate defers, admission retries),
+    /// never overpromises.
+    pub fn reclaimable_blocks(&self) -> usize {
+        self.tree
+            .cached_blocks()
+            .saturating_sub(self.pool.stats().shared_blocks)
+    }
+
+    /// Read-only probe: blocks a seed of `tokens` would take from the
+    /// tree instead of the free list (same cap rule as [`Self::lookup`]),
+    /// without touching LRU state or refcounts. Admission gates use it
+    /// to avoid sizing a warm request as if its whole prompt needed free
+    /// blocks.
+    pub fn peek_match_blocks(&self, tokens: &[u32], max_usable: usize) -> usize {
+        (max_usable / self.tree.block_tokens()).min(self.tree.match_chunks(tokens))
+    }
+
+    /// Longest cached prefix of `tokens`, usable up to `max_usable`
+    /// positions (the caller passes `tokens.len() - 1` so at least one
+    /// position is left to prefill for first-token logits). Returns None
+    /// on a miss; on a hit the returned blocks carry one extra holder
+    /// reference each — [`crate::kv::PagedKv::seed`] takes them over and
+    /// releases them on failure.
+    pub fn lookup(&mut self, tokens: &[u32], max_usable: usize) -> Option<Seed> {
+        let bt = self.tree.block_tokens();
+        let path = self.tree.longest_match(tokens);
+        let usable_chunks = (max_usable / bt).min(path.len());
+        if usable_chunks == 0 {
+            self.stats.misses += 1;
+            return None;
+        }
+        let matched = usable_chunks * bt;
+        let row = self.kv_rows;
+        let mut layers: Vec<(Vec<f32>, Vec<f32>)> = (0..self.n_layers)
+            .map(|_| (vec![0.0; self.max_seq * row], vec![0.0; self.max_seq * row]))
+            .collect();
+        let mut blocks = Vec::with_capacity(usable_chunks);
+        for (ci, &idx) in path[..usable_chunks].iter().enumerate() {
+            let off = ci * bt * row;
+            for (l, (k, v)) in self.tree.node_kv(idx).iter().enumerate() {
+                layers[l].0[off..off + k.len()].copy_from_slice(k);
+                layers[l].1[off..off + v.len()].copy_from_slice(v);
+            }
+            blocks.push(self.tree.node_block(idx));
+        }
+        self.pool.retain_all(&blocks);
+        self.stats.hits += 1;
+        self.stats.tokens_reused += matched as u64;
+        Some(Seed { matched, blocks, layers })
+    }
+
+    /// Insert a completed stream: `tokens` are the positions actually
+    /// written to its KV (prompt + generated-and-fed tokens), `blocks[i]`
+    /// is the session's block backing positions `[i*bt, (i+1)*bt)` (its
+    /// page table in order), and `layer_kv` reads one layer's full-shape
+    /// host images. Only whole blocks are cacheable (the tail partial
+    /// chunk is dropped) and only chunks the tree is missing copy data;
+    /// each new chunk RETAINS the session's block — one extra holder —
+    /// instead of allocating, so the cache inherits blocks that were
+    /// about to die with the session rather than competing with live
+    /// admissions. The session KV is read at most once, and not at all
+    /// on a full dedup. Returns the number of chunks admitted — fewer
+    /// than offered when the token cap says no (best effort, never an
+    /// error).
+    pub fn insert(
+        &mut self,
+        tokens: &[u32],
+        blocks: &[BlockId],
+        mut layer_kv: impl FnMut(usize) -> Result<(Vec<f32>, Vec<f32>)>,
+    ) -> Result<usize> {
+        let bt = self.tree.block_tokens();
+        let n_chunks = (tokens.len() / bt).min(blocks.len());
+        if n_chunks == 0 {
+            return Ok(0);
+        }
+        let path = self.tree.longest_match(&tokens[..n_chunks * bt]);
+        if path.len() == n_chunks {
+            return Ok(0); // fully cached already — the match refreshed LRU
+        }
+        let mut full: Vec<(Vec<f32>, Vec<f32>)> = Vec::with_capacity(self.n_layers);
+        for l in 0..self.n_layers {
+            full.push(layer_kv(l)?);
+        }
+        // everything the match touched (and everything we add) carries
+        // the current tick — cap eviction below must not eat our own path
+        let protect = self.tree.tick();
+        let mut parent = path.last().copied();
+        let mut inserted = 0usize;
+        for ci in path.len()..n_chunks {
+            if !self.make_room_for_chunk(protect) {
+                break;
+            }
+            let row = self.kv_rows;
+            let off = ci * bt * row;
+            let kv: ChunkKv = full
+                .iter()
+                .map(|(k, v)| (k[off..off + bt * row].to_vec(), v[off..off + bt * row].to_vec()))
+                .collect();
+            let chunk = &tokens[ci * bt..(ci + 1) * bt];
+            self.pool.retain_all(&blocks[ci..ci + 1]);
+            parent = Some(self.tree.insert_chunk(parent, chunk, blocks[ci], kv));
+            inserted += 1;
+        }
+        self.stats.inserted_blocks += inserted as u64;
+        Ok(inserted)
+    }
+
+    /// Stay under the token cap, evicting cold leaves if needed. True
+    /// when one more chunk fits.
+    fn make_room_for_chunk(&mut self, protect: u64) -> bool {
+        let bt = self.tree.block_tokens();
+        let Some(cap) = self.max_tokens else { return true };
+        while self.tree.cached_tokens() + bt > cap {
+            let Some(block) = self.tree.evict_lru_leaf(protect, |_| true) else {
+                return false;
+            };
+            self.pool.release_one(block);
+            self.stats.evicted_blocks += 1;
+        }
+        true
+    }
+
+    /// Pool-pressure eviction: drop cold UNSHARED prefixes leaf-first
+    /// until `needed_blocks` are free or nothing evictable remains.
+    /// Returns the number of blocks actually returned to the free list.
+    /// The engine calls this before surfacing
+    /// [`crate::error::Error::KvPoolExhausted`], so dead cached data is
+    /// always reclaimed before any live session is preempted.
+    pub fn reclaim(&mut self, needed_blocks: usize) -> usize {
+        let mut freed = 0usize;
+        while self.pool.stats().free_blocks < needed_blocks {
+            let pool = Arc::clone(&self.pool);
+            let Some(block) = self.tree.evict_lru_leaf(u64::MAX, |b| pool.refcount(b) == 1)
+            else {
+                break;
+            };
+            if self.pool.release_one(block) {
+                freed += 1;
+            }
+            self.stats.evicted_blocks += 1;
+        }
+        freed
+    }
+}
+
+impl Drop for PrefixCache {
+    fn drop(&mut self) {
+        for block in self.tree.blocks() {
+            self.pool.release_one(block);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kv::{KvPool, PagedKv};
+    use crate::util::prop;
+
+    const MAX_SEQ: usize = 32;
+    const KV_ROWS: usize = 4; // 2 heads × 2 dims
+    const LAYERS: usize = 2;
+
+    fn pool(total_blocks: usize, block_tokens: usize) -> Arc<KvPool> {
+        Arc::new(KvPool::new(total_blocks, block_tokens, 256, vec![MAX_SEQ, 2, 2]))
+    }
+
+    fn cache(p: &Arc<KvPool>, cap: Option<usize>) -> PrefixCache {
+        PrefixCache::new(Arc::clone(p), LAYERS, MAX_SEQ, KV_ROWS, cap)
+    }
+
+    /// Deterministic fake KV: position p of layer l row r = encode(l,p,r).
+    fn fake_kv(pos: usize) -> impl FnMut(usize) -> Result<(Vec<f32>, Vec<f32>)> {
+        move |l| {
+            let mut k = vec![0.0f32; MAX_SEQ * KV_ROWS];
+            let mut v = vec![0.0f32; MAX_SEQ * KV_ROWS];
+            for p in 0..pos {
+                for r in 0..KV_ROWS {
+                    k[p * KV_ROWS + r] = (l * 10_000 + p * 100 + r) as f32;
+                    v[p * KV_ROWS + r] = -((l * 10_000 + p * 100 + r) as f32);
+                }
+            }
+            Ok((k, v))
+        }
+    }
+
+    /// Simulate a live session's page table: one block per `block_tokens`
+    /// positions, allocated from the pool like `PagedKv::ensure_tokens`.
+    fn open_blocks(p: &Arc<KvPool>, tokens: usize) -> Vec<BlockId> {
+        (0..p.blocks_for(tokens))
+            .map(|_| p.alloc_one().expect("test pool must cover the session"))
+            .collect()
+    }
+
+    /// Simulate the session dropping: release its holder on every block.
+    fn close_blocks(p: &Arc<KvPool>, blocks: Vec<BlockId>) {
+        for b in blocks {
+            p.release_one(b);
+        }
+    }
+
+    #[test]
+    fn insert_then_lookup_reassembles_the_prefix() {
+        let p = pool(8, 4);
+        let mut c = cache(&p, None);
+        let tokens: Vec<u32> = (0..10).collect(); // 2 full chunks + partial tail
+        let sb = open_blocks(&p, 10);
+        assert_eq!(c.insert(&tokens, &sb, fake_kv(10)).unwrap(), 2);
+        assert_eq!(c.cached_blocks(), 2);
+        // the tree RETAINED the session's first two blocks — no allocation
+        assert_eq!(p.stats().in_use_blocks, 3);
+        assert_eq!(p.stats().shared_blocks, 2);
+        assert_eq!(p.refcount(sb[0]), 2);
+        assert_eq!(p.refcount(sb[2]), 1, "the partial tail chunk is not cached");
+        close_blocks(&p, sb);
+        assert_eq!(p.stats().in_use_blocks, 2, "cached blocks outlive the session");
+        assert_eq!(p.stats().shared_blocks, 0);
+
+        let seed = c.lookup(&tokens, tokens.len() - 1).unwrap();
+        assert_eq!(seed.matched, 8, "match is block-aligned");
+        assert_eq!(seed.blocks.len(), 2);
+        assert_eq!(seed.layers.len(), LAYERS);
+        // the assembled image carries the inserted values for [0, 8)...
+        let mut expect = fake_kv(8);
+        for (l, (k, v)) in seed.layers.iter().enumerate() {
+            let (ek, ev) = expect(l).unwrap();
+            assert_eq!(&k[..8 * KV_ROWS], &ek[..8 * KV_ROWS]);
+            assert_eq!(&v[..8 * KV_ROWS], &ev[..8 * KV_ROWS]);
+            // ...and zeros beyond the matched prefix
+            assert!(k[8 * KV_ROWS..].iter().all(|&x| x == 0.0));
+        }
+        // the hit added one holder per block for the session to take over
+        for &b in &seed.blocks {
+            assert_eq!(p.refcount(b), 2);
+        }
+        assert_eq!(p.stats().shared_blocks, 2);
+        for b in seed.blocks {
+            p.release_one(b);
+        }
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.tokens_reused), (1, 0, 8));
+    }
+
+    #[test]
+    fn lookup_never_swallows_the_whole_prompt() {
+        let p = pool(8, 4);
+        let mut c = cache(&p, None);
+        let tokens: Vec<u32> = (0..8).collect();
+        let sb = open_blocks(&p, 8);
+        c.insert(&tokens, &sb, fake_kv(8)).unwrap();
+        close_blocks(&p, sb);
+        // identical prompt: at most len-1 positions may seed, so the
+        // match rounds down to one block and leaves 4 tokens to prefill
+        let seed = c.lookup(&tokens, tokens.len() - 1).unwrap();
+        assert_eq!(seed.matched, 4);
+        for b in seed.blocks {
+            p.release_one(b);
+        }
+        // a strict prefix shorter than one block cannot hit at all
+        assert!(c.lookup(&tokens[..3], 2).is_none());
+        assert_eq!(c.stats().misses, 1);
+    }
+
+    #[test]
+    fn insert_dedups_against_the_cached_trunk() {
+        let p = pool(8, 4);
+        let mut c = cache(&p, None);
+        let a: Vec<u32> = (0..12).collect();
+        let sa = open_blocks(&p, 12);
+        assert_eq!(c.insert(&a, &sa, fake_kv(12)).unwrap(), 3);
+        close_blocks(&p, sa);
+        // same first 8 tokens, divergent tail: only the tail is retained
+        let mut b: Vec<u32> = (0..8).collect();
+        b.extend([90, 91, 92, 93]);
+        let sb = open_blocks(&p, 12);
+        assert_eq!(c.insert(&b, &sb, fake_kv(12)).unwrap(), 1);
+        assert_eq!(p.refcount(sb[2]), 2, "only the divergent tail chunk is shared");
+        assert_eq!(p.refcount(sb[0]), 1, "the deduped trunk keeps the tree's copy");
+        assert_eq!(c.cached_blocks(), 4);
+        // re-inserting either is a no-op
+        assert_eq!(c.insert(&a, &sb, fake_kv(12)).unwrap(), 0);
+        assert_eq!(c.insert(&b, &sb, fake_kv(12)).unwrap(), 0);
+        close_blocks(&p, sb);
+        assert_eq!(p.stats().in_use_blocks, 4);
+    }
+
+    #[test]
+    fn token_cap_evicts_cold_leaves_to_make_room() {
+        let p = pool(8, 4);
+        let mut c = cache(&p, Some(8)); // cap: 2 chunks
+        let a: Vec<u32> = (0..8).collect();
+        let sa = open_blocks(&p, 8);
+        c.insert(&a, &sa, fake_kv(8)).unwrap();
+        close_blocks(&p, sa);
+        assert_eq!(c.cached_tokens(), 8);
+        // a disjoint insert must evict the cold prefix to stay capped
+        let b: Vec<u32> = (100..108).collect();
+        let sb = open_blocks(&p, 8);
+        assert_eq!(c.insert(&b, &sb, fake_kv(8)).unwrap(), 2);
+        close_blocks(&p, sb);
+        assert_eq!(c.cached_tokens(), 8);
+        assert!(c.stats().evicted_blocks >= 2);
+        assert_eq!(p.stats().in_use_blocks, 2, "evicted blocks went back to the pool");
+    }
+
+    #[test]
+    fn insert_inherits_session_blocks_even_when_the_pool_is_dry() {
+        let p = pool(2, 4);
+        let mut c = cache(&p, None);
+        let a: Vec<u32> = (0..8).collect();
+        let sa = open_blocks(&p, 8);
+        assert_eq!(p.stats().free_blocks, 0, "the session holds the whole pool");
+        // a dry pool cannot refuse the insert: the tree inherits the
+        // session's own blocks instead of allocating
+        assert_eq!(c.insert(&a, &sa, fake_kv(8)).unwrap(), 2);
+        close_blocks(&p, sa);
+        assert_eq!(c.cached_blocks(), 2);
+        assert_eq!(p.stats().in_use_blocks, 2);
+        let seed = c.lookup(&a, 7).unwrap();
+        assert_eq!(seed.matched, 4);
+        for b in seed.blocks {
+            p.release_one(b);
+        }
+    }
+
+    #[test]
+    fn reclaim_frees_unshared_blocks_only() {
+        let p = pool(4, 4);
+        let mut c = cache(&p, None);
+        let a: Vec<u32> = (0..8).collect();
+        let sa = open_blocks(&p, 8);
+        c.insert(&a, &sa, fake_kv(8)).unwrap();
+        close_blocks(&p, sa);
+        let b: Vec<u32> = (100..108).collect();
+        let sb = open_blocks(&p, 8);
+        c.insert(&b, &sb, fake_kv(8)).unwrap();
+        close_blocks(&p, sb);
+        assert_eq!(p.stats().free_blocks, 0);
+        // a session holds a's prefix: those two blocks are not reclaimable
+        let seed = c.lookup(&a, 7).unwrap(); // matches 1 chunk (7/4 = 1)
+        assert_eq!(seed.blocks.len(), 1);
+        let held = seed.blocks.clone();
+        assert_eq!(c.reclaimable_blocks(), 3);
+        let freed = c.reclaim(4);
+        assert_eq!(freed, 3, "only unshared blocks can be freed");
+        assert_eq!(p.stats().free_blocks, 3);
+        assert_eq!(c.cached_blocks(), 1, "the shared node survived eviction filters");
+        for b in held {
+            assert!(
+                !p.release_one(b),
+                "the tree still holds the surviving shared block"
+            );
+        }
+        // unshared now: one more reclaim pass frees the last cached block
+        assert_eq!(c.reclaim(4), 1);
+        assert_eq!(p.stats().free_blocks, 4);
+        assert!(c.cached_blocks() == 0 && c.stats().evicted_blocks == 4);
+    }
+
+    #[test]
+    fn drop_releases_every_tree_reference() {
+        let p = pool(4, 4);
+        {
+            let mut c = cache(&p, None);
+            let sb = open_blocks(&p, 16);
+            c.insert(&(0..16).collect::<Vec<u32>>(), &sb, fake_kv(16)).unwrap();
+            close_blocks(&p, sb);
+            assert_eq!(p.stats().in_use_blocks, 4);
+        }
+        assert_eq!(p.stats().free_blocks, 4, "dropping the cache frees its blocks");
+    }
+
+    /// Property: random insert/lookup/reclaim traffic keeps tree structure,
+    /// pool accounting and refcounts consistent — no dangling block refs,
+    /// refcounts hit zero exactly when the last holder releases, match
+    /// length never exceeds the query.
+    #[test]
+    fn prop_random_traffic_keeps_invariants() {
+        prop::check(
+            "prefix-cache-invariants",
+            40,
+            |rng| {
+                // a batch of prompts over a tiny alphabet so prefixes collide
+                let n_ops = 30 + rng.below(40);
+                (0..n_ops)
+                    .map(|_| {
+                        let kind = rng.below(10);
+                        let len = 1 + rng.below(MAX_SEQ - 1);
+                        let toks: Vec<u32> =
+                            (0..len).map(|_| rng.below(3) as u32).collect();
+                        (kind, toks)
+                    })
+                    .collect::<Vec<_>>()
+            },
+            |ops| {
+                let p = pool(6, 4);
+                let mut c = cache(&p, Some(16));
+                let mut held: Vec<(PagedKv, Vec<BlockId>)> = Vec::new();
+                for (kind, toks) in ops.iter() {
+                    let kind = *kind;
+                    match kind {
+                        0..=4 => {
+                            // a finishing session: it holds blocks for its
+                            // positions, offers them to the cache, then
+                            // drops. Skip when the pool cannot even admit
+                            // the session (as real admission would).
+                            let needed = p.blocks_for(toks.len());
+                            let mut sb = Vec::new();
+                            while sb.len() < needed {
+                                match p.alloc_one() {
+                                    Some(b) => sb.push(b),
+                                    None => break,
+                                }
+                            }
+                            if sb.len() == needed {
+                                c.insert(toks, &sb, fake_kv(toks.len()))
+                                    .map_err(|e| format!("insert failed: {e}"))?;
+                            }
+                            close_blocks(&p, sb);
+                        }
+                        5..=7 => {
+                            if toks.len() < 2 {
+                                continue;
+                            }
+                            if let Some(seed) = c.lookup(toks, toks.len() - 1) {
+                                prop::ensure(
+                                    seed.matched < toks.len(),
+                                    "match length must stay below the query length",
+                                )?;
+                                prop::ensure(
+                                    seed.matched == seed.blocks.len() * 4,
+                                    "matched tokens must equal matched blocks",
+                                )?;
+                                // hand the blocks to a real paged store so
+                                // release goes through the session path
+                                let mut kv = PagedKv::new(LAYERS, Arc::clone(&p));
+                                let ids = seed.blocks.clone();
+                                kv.seed(seed.layers, seed.blocks)
+                                    .map_err(|e| format!("seed failed: {e}"))?;
+                                held.push((kv, ids));
+                            }
+                        }
+                        _ => {
+                            if !held.is_empty() && kind == 8 {
+                                held.remove(0); // drop a session mid-flight
+                            } else {
+                                c.reclaim(1 + toks.len() % 3);
+                            }
+                        }
+                    }
+                    // invariants after every op
+                    c.tree.check_invariants()?;
+                    let st = p.stats();
+                    prop::ensure(
+                        st.free_blocks + st.in_use_blocks == st.total_blocks,
+                        "pool accounting must balance",
+                    )?;
+                    for b in c.tree.blocks() {
+                        prop::ensure(
+                            p.refcount(b) >= 1,
+                            "tree-held block must stay referenced",
+                        )?;
+                    }
+                    for (_, ids) in &held {
+                        for &b in ids {
+                            prop::ensure(
+                                p.refcount(b) >= 1,
+                                "session-held block must stay referenced",
+                            )?;
+                        }
+                    }
+                }
+                // tear down: sessions first, then the cache — the pool
+                // must recover completely (refcounts hit zero exactly at
+                // the last release)
+                held.clear();
+                drop(c);
+                let st = p.stats();
+                prop::ensure(st.free_blocks == st.total_blocks, "pool must fully drain")?;
+                prop::ensure(st.shared_blocks == 0, "no shared blocks after teardown")?;
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,47 @@
+//! Prefix-cache subsystem: radix-tree KV reuse across requests.
+//!
+//! Serving millions of users means most prompts SHARE long prefixes —
+//! system prompts, few-shot templates, chat history — yet a stateless
+//! serving path pays full prefill compute for every admission. On the
+//! paper's target hardware that cost is doubled: every prefill token
+//! re-routes experts and re-stages them over the offload link, so prefill
+//! dominates time-to-first-token exactly where VRAM is scarcest. This
+//! subsystem turns completed prompts into reusable KV, the same move the
+//! paper makes for expert weights (LRU cache, §3.1): never recompute what
+//! you can cache.
+//!
+//! * [`RadixTree`] — cached prefixes indexed at KV-block granularity:
+//!   each node owns one block-sized token chunk, its per-layer host KV
+//!   rows, and one allocator reference to the KV block accounting for
+//!   those positions. Shared trunks are stored once; LRU eviction is
+//!   leaf-first so a warm descendant keeps its trunk alive.
+//! * [`PrefixCache`] — the manager. On admission it finds the longest
+//!   cached match and emits a [`Seed`]: full-shape per-layer KV images
+//!   (the fixed-shape AOT attention reads them directly — copy-into-
+//!   literal today, physical block sharing when attention goes
+//!   block-strided) plus the matched blocks with a holder reference
+//!   added for the session ([`crate::kv::PagedKv::seed`] takes them
+//!   over; refcounts in [`crate::kv::BlockAllocator`] free a block
+//!   exactly when its last holder — tree node or session — releases).
+//!   On completion the coordinator inserts the finished stream, dedup'd
+//!   against the tree.
+//! * **Eviction ordering** — under pool pressure the engine reclaims
+//!   cold, unshared prefixes ([`PrefixCache::reclaim`]) BEFORE the
+//!   scheduler preempts any live session: dead data always loses to
+//!   live streams.
+//!
+//! The engine seeds a matched session's [`crate::kv::PagedKv`], rewinds
+//! its prefill to the first uncached token, and charges the timeline the
+//! same H2D transfer a resume pays — skipped prefill tokens also skip
+//! expert routing, demand loads and speculation, which is where the
+//! latency win comes from. `ServingConfig::prefix_cache` (default off:
+//! byte-identical scheduling to the cache-less path) opts a deployment
+//! in; `prefix_cache_tokens` caps the cached footprint. Warm admissions
+//! decode bit-identically to cold ones — see `rust/tests/prefix_cache.rs`
+//! and the `prefix_reuse` bench section in `rust/benches/engine_decode.rs`.
+
+pub mod manager;
+pub mod radix;
+
+pub use manager::{PrefixCache, PrefixStats, Seed};
+pub use radix::{ChunkKv, RadixTree};

@@ -1,0 +1,363 @@
+//! Radix tree over token sequences at KV-block granularity.
+//!
+//! The tree indexes every cached prefix as a path of CHUNKS — spans of
+//! exactly `block_tokens` tokens, the same granularity the
+//! [`crate::kv::BlockAllocator`] hands out physical blocks at. Each node
+//! owns one chunk: its token span, the KV block accounting for those
+//! positions (one allocator reference held by the tree), and the
+//! per-layer host KV rows for the span. Two prompts that share a prefix
+//! share the nodes (and therefore the blocks) covering it; they diverge
+//! at the first differing chunk. Because chunks are fixed-size, children
+//! are keyed by exact chunk content — a hash lookup instead of the
+//! byte-wise edge splitting of a classic radix tree, with identical
+//! sharing behaviour at block granularity (a sub-chunk match could not
+//! reuse a block anyway).
+//!
+//! Longest-prefix match walks chunk by chunk and touches every node on
+//! the path with a fresh LRU tick; eviction removes the LEAST RECENTLY
+//! USED LEAF, so cold prefixes die tail-first while their shared trunk
+//! survives as long as any descendant is warm.
+
+use std::collections::HashMap;
+
+use crate::kv::BlockId;
+
+/// Per-layer host KV rows for one chunk: `(K rows, V rows)`, each
+/// `block_tokens * n_kv_heads * head_dim` f32s.
+pub type ChunkKv = Vec<(Vec<f32>, Vec<f32>)>;
+
+struct Node {
+    chunk: Vec<u32>,
+    block: BlockId,
+    kv: ChunkKv,
+    children: HashMap<Vec<u32>, usize>,
+    parent: Option<usize>,
+    last_use: u64,
+}
+
+/// Chunk-granular radix tree: arena of nodes + root child map.
+pub struct RadixTree {
+    nodes: Vec<Option<Node>>,
+    free_slots: Vec<usize>,
+    root_children: HashMap<Vec<u32>, usize>,
+    block_tokens: usize,
+    n_layers: usize,
+    /// Logical LRU clock: bumped once per tree operation; every node an
+    /// operation touches gets the operation's tick.
+    tick: u64,
+    live: usize,
+}
+
+impl RadixTree {
+    pub fn new(block_tokens: usize, n_layers: usize) -> Self {
+        assert!(block_tokens >= 1, "block_tokens must be >= 1");
+        assert!(n_layers >= 1, "n_layers must be >= 1");
+        RadixTree {
+            nodes: Vec::new(),
+            free_slots: Vec::new(),
+            root_children: HashMap::new(),
+            block_tokens,
+            n_layers,
+            tick: 0,
+            live: 0,
+        }
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    /// Live nodes ≡ blocks the tree holds a reference to.
+    pub fn cached_blocks(&self) -> usize {
+        self.live
+    }
+
+    /// Cached sequence positions (every chunk is full by construction).
+    pub fn cached_tokens(&self) -> usize {
+        self.live * self.block_tokens
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    /// The current LRU tick — nodes touched by the latest operation carry
+    /// it; pass it to [`Self::evict_lru_leaf`] as `protect_from` to keep
+    /// the path an insert is building on.
+    pub fn tick(&self) -> u64 {
+        self.tick
+    }
+
+    fn node(&self, idx: usize) -> &Node {
+        self.nodes[idx].as_ref().expect("live node index")
+    }
+
+    pub fn node_block(&self, idx: usize) -> BlockId {
+        self.node(idx).block
+    }
+
+    pub fn node_kv(&self, idx: usize) -> &ChunkKv {
+        &self.node(idx).kv
+    }
+
+    #[cfg(test)]
+    fn node_chunk(&self, idx: usize) -> &[u32] {
+        &self.node(idx).chunk
+    }
+
+    /// Every block the tree currently holds a reference to.
+    pub fn blocks(&self) -> Vec<BlockId> {
+        self.nodes
+            .iter()
+            .filter_map(|slot| slot.as_ref().map(|n| n.block))
+            .collect()
+    }
+
+    /// Longest cached prefix of `tokens`, as the node path of matched
+    /// chunks (empty = no cached prefix). Bumps the LRU clock and touches
+    /// every node on the path. Matched tokens = `path.len() *
+    /// block_tokens`, never more than `tokens.len()`.
+    pub fn longest_match(&mut self, tokens: &[u32]) -> Vec<usize> {
+        self.tick += 1;
+        let tick = self.tick;
+        let mut path: Vec<usize> = Vec::new();
+        for chunk in tokens.chunks_exact(self.block_tokens) {
+            let next = match path.last() {
+                None => self.root_children.get(chunk).copied(),
+                Some(&p) => self.node(p).children.get(chunk).copied(),
+            };
+            let Some(idx) = next else { break };
+            self.nodes[idx].as_mut().expect("live node index").last_use = tick;
+            path.push(idx);
+        }
+        path
+    }
+
+    /// Read-only longest match: how many whole chunks of `tokens` are
+    /// cached, WITHOUT touching the LRU clock — for admission gates that
+    /// probe repeatedly without committing to a seed.
+    pub fn match_chunks(&self, tokens: &[u32]) -> usize {
+        let mut cur: Option<usize> = None;
+        let mut matched = 0usize;
+        for chunk in tokens.chunks_exact(self.block_tokens) {
+            let next = match cur {
+                None => self.root_children.get(chunk).copied(),
+                Some(p) => self.node(p).children.get(chunk).copied(),
+            };
+            let Some(idx) = next else { break };
+            cur = Some(idx);
+            matched += 1;
+        }
+        matched
+    }
+
+    /// Insert one chunk under `parent` (None = root). The chunk must be
+    /// exactly `block_tokens` long, carry KV for every layer, and must
+    /// not already exist at that position — callers walk
+    /// [`Self::longest_match`] first and only insert the missing tail.
+    /// Returns the new node's index.
+    pub fn insert_chunk(
+        &mut self,
+        parent: Option<usize>,
+        chunk: &[u32],
+        block: BlockId,
+        kv: ChunkKv,
+    ) -> usize {
+        assert_eq!(chunk.len(), self.block_tokens, "chunk must be one full block");
+        assert_eq!(kv.len(), self.n_layers, "chunk KV must cover every layer");
+        let node = Node {
+            chunk: chunk.to_vec(),
+            block,
+            kv,
+            children: HashMap::new(),
+            parent,
+            last_use: self.tick,
+        };
+        let idx = match self.free_slots.pop() {
+            Some(slot) => {
+                self.nodes[slot] = Some(node);
+                slot
+            }
+            None => {
+                self.nodes.push(Some(node));
+                self.nodes.len() - 1
+            }
+        };
+        let siblings = match parent {
+            None => &mut self.root_children,
+            Some(p) => {
+                &mut self.nodes[p].as_mut().expect("live parent index").children
+            }
+        };
+        let prev = siblings.insert(chunk.to_vec(), idx);
+        assert!(prev.is_none(), "duplicate chunk insert under one parent");
+        self.live += 1;
+        idx
+    }
+
+    /// Evict the least-recently-used LEAF whose block passes `eligible`,
+    /// skipping nodes with `last_use >= protect_from` (pass
+    /// [`Self::tick`] to shield the path the current operation touched,
+    /// `u64::MAX` to shield nothing). Returns the evicted node's block —
+    /// the caller owns releasing the tree's reference to the allocator.
+    pub fn evict_lru_leaf(
+        &mut self,
+        protect_from: u64,
+        eligible: impl Fn(BlockId) -> bool,
+    ) -> Option<BlockId> {
+        let mut best: Option<(u64, usize)> = None;
+        for (i, slot) in self.nodes.iter().enumerate() {
+            let Some(n) = slot else { continue };
+            if !n.children.is_empty() || n.last_use >= protect_from || !eligible(n.block) {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some((lu, _)) => n.last_use < lu,
+            };
+            if better {
+                best = Some((n.last_use, i));
+            }
+        }
+        let (_, idx) = best?;
+        Some(self.remove_leaf(idx))
+    }
+
+    fn remove_leaf(&mut self, idx: usize) -> BlockId {
+        let node = self.nodes[idx].take().expect("live node index");
+        assert!(node.children.is_empty(), "only leaves are evictable");
+        let siblings = match node.parent {
+            None => &mut self.root_children,
+            Some(p) => {
+                &mut self.nodes[p].as_mut().expect("live parent index").children
+            }
+        };
+        let removed = siblings.remove(node.chunk.as_slice());
+        debug_assert_eq!(removed, Some(idx), "parent must link the evicted leaf");
+        self.free_slots.push(idx);
+        self.live -= 1;
+        node.block
+    }
+
+    /// Structural invariants, used by the property tests: every live node
+    /// is reachable from the root exactly once, child links and parent
+    /// back-pointers agree, chunks are full blocks, KV covers every
+    /// layer, and the live counter matches.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut seen = vec![false; self.nodes.len()];
+        let mut stack: Vec<(Option<usize>, &HashMap<Vec<u32>, usize>)> =
+            vec![(None, &self.root_children)];
+        let mut reached = 0usize;
+        while let Some((parent, children)) = stack.pop() {
+            for (key, &idx) in children {
+                let Some(node) = self.nodes.get(idx).and_then(|s| s.as_ref()) else {
+                    return Err(format!("child link to dead slot {idx}"));
+                };
+                if seen[idx] {
+                    return Err(format!("node {idx} reachable twice"));
+                }
+                seen[idx] = true;
+                reached += 1;
+                if node.parent != parent {
+                    return Err(format!("node {idx} parent back-pointer mismatch"));
+                }
+                if node.chunk.as_slice() != key.as_slice() {
+                    return Err(format!("node {idx} keyed under the wrong chunk"));
+                }
+                if node.chunk.len() != self.block_tokens {
+                    return Err(format!("node {idx} chunk is not one full block"));
+                }
+                if node.kv.len() != self.n_layers {
+                    return Err(format!("node {idx} KV does not cover every layer"));
+                }
+                stack.push((Some(idx), &node.children));
+            }
+        }
+        let live = self.nodes.iter().filter(|s| s.is_some()).count();
+        if reached != live || live != self.live {
+            return Err(format!(
+                "live accounting drift: reached {reached}, arena {live}, counter {}",
+                self.live
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kv(n_layers: usize) -> ChunkKv {
+        (0..n_layers).map(|_| (vec![0.0; 4], vec![0.0; 4])).collect()
+    }
+
+    #[test]
+    fn match_walks_shared_trunk_and_stops_at_divergence() {
+        let mut t = RadixTree::new(2, 1);
+        let a = t.insert_chunk(None, &[1, 2], BlockId(0), kv(1));
+        let b = t.insert_chunk(Some(a), &[3, 4], BlockId(1), kv(1));
+        let c = t.insert_chunk(Some(a), &[9, 9], BlockId(2), kv(1));
+        assert_eq!(t.longest_match(&[1, 2, 3, 4, 5, 6]), vec![a, b]);
+        assert_eq!(t.longest_match(&[1, 2, 9, 9]), vec![a, c]);
+        assert_eq!(t.longest_match(&[1, 2, 7]), vec![a], "partial chunk never matches");
+        assert!(t.longest_match(&[2, 1]).is_empty());
+        // the read-only probe agrees with the mutating match
+        let tick_before = t.tick();
+        assert_eq!(t.match_chunks(&[1, 2, 3, 4, 5]), 2);
+        assert_eq!(t.match_chunks(&[2, 1]), 0);
+        assert_eq!(t.tick(), tick_before, "probing must not advance the LRU clock");
+        assert_eq!(t.cached_blocks(), 3);
+        assert_eq!(t.cached_tokens(), 6);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn eviction_is_leaf_first_and_lru() {
+        let mut t = RadixTree::new(2, 1);
+        let a = t.insert_chunk(None, &[1, 2], BlockId(0), kv(1));
+        let b = t.insert_chunk(Some(a), &[3, 4], BlockId(1), kv(1));
+        let _c = t.insert_chunk(Some(a), &[9, 9], BlockId(2), kv(1));
+        // warm the [1,2]→[9,9] path; [3,4] becomes the coldest leaf
+        t.longest_match(&[1, 2, 9, 9]);
+        let evicted = t.evict_lru_leaf(u64::MAX, |_| true).unwrap();
+        assert_eq!(evicted, BlockId(1), "coldest leaf goes first");
+        assert!(t.longest_match(&[1, 2, 3, 4]).len() == 1, "only the trunk remains");
+        // trunk is not evictable while a child lives
+        let evicted = t.evict_lru_leaf(u64::MAX, |_| true).unwrap();
+        assert_eq!(evicted, BlockId(2));
+        let evicted = t.evict_lru_leaf(u64::MAX, |_| true).unwrap();
+        assert_eq!(evicted, BlockId(0), "trunk falls once its children are gone");
+        assert!(t.is_empty());
+        assert!(t.evict_lru_leaf(u64::MAX, |_| true).is_none());
+        t.check_invariants().unwrap();
+        // slots are recycled
+        let d = t.insert_chunk(None, &[5, 5], BlockId(3), kv(1));
+        assert_eq!(t.node_chunk(d), &[5, 5]);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn protect_from_shields_the_current_operation() {
+        let mut t = RadixTree::new(2, 1);
+        let a = t.insert_chunk(None, &[1, 2], BlockId(0), kv(1));
+        t.longest_match(&[1, 2]); // touch with the current tick
+        assert!(
+            t.evict_lru_leaf(t.tick(), |_| true).is_none(),
+            "the just-touched path must survive"
+        );
+        assert!(t.evict_lru_leaf(t.tick() + 1, |_| true).is_some());
+        let _ = a;
+    }
+
+    #[test]
+    fn eligibility_filter_skips_shared_blocks() {
+        let mut t = RadixTree::new(2, 1);
+        t.insert_chunk(None, &[1, 2], BlockId(0), kv(1));
+        t.insert_chunk(None, &[3, 4], BlockId(1), kv(1));
+        // pretend block 0 is shared with a live session: ineligible
+        let evicted = t.evict_lru_leaf(u64::MAX, |b| b != BlockId(0)).unwrap();
+        assert_eq!(evicted, BlockId(1));
+        assert!(t.evict_lru_leaf(u64::MAX, |b| b != BlockId(0)).is_none());
+    }
+}

@@ -106,6 +106,33 @@ impl Metrics {
         g.insert("kv_preemptions".to_string(), preemptions);
     }
 
+    /// Record the prefix cache's footprint and lifetime counters in one
+    /// shot (`prefix_cache_blocks` / `prefix_cache_tokens` /
+    /// `prefix_hits` / `prefix_misses` / `prefix_tokens_reused` /
+    /// `prefix_inserted_blocks` / `prefix_evicted_blocks`) — the
+    /// scheduler calls this every tick, mirroring
+    /// [`Self::record_kv_pool`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn record_prefix(
+        &self,
+        blocks: u64,
+        tokens: u64,
+        hits: u64,
+        misses: u64,
+        tokens_reused: u64,
+        inserted_blocks: u64,
+        evicted_blocks: u64,
+    ) {
+        let mut g = self.gauges.lock().unwrap();
+        g.insert("prefix_cache_blocks".to_string(), blocks);
+        g.insert("prefix_cache_tokens".to_string(), tokens);
+        g.insert("prefix_hits".to_string(), hits);
+        g.insert("prefix_misses".to_string(), misses);
+        g.insert("prefix_tokens_reused".to_string(), tokens_reused);
+        g.insert("prefix_inserted_blocks".to_string(), inserted_blocks);
+        g.insert("prefix_evicted_blocks".to_string(), evicted_blocks);
+    }
+
     pub fn observe(&self, name: &str, v: f64) {
         self.histograms
             .lock()
@@ -235,6 +262,20 @@ mod tests {
         assert_eq!(m.gauge("kv_preemptions"), 2);
         let r = m.render();
         assert!(r.contains("kv_blocks_in_use 5"));
+    }
+
+    #[test]
+    fn prefix_gauges_record_together() {
+        let m = Metrics::new();
+        m.record_prefix(4, 128, 3, 1, 96, 6, 2);
+        assert_eq!(m.gauge("prefix_cache_blocks"), 4);
+        assert_eq!(m.gauge("prefix_cache_tokens"), 128);
+        assert_eq!(m.gauge("prefix_hits"), 3);
+        assert_eq!(m.gauge("prefix_misses"), 1);
+        assert_eq!(m.gauge("prefix_tokens_reused"), 96);
+        assert_eq!(m.gauge("prefix_inserted_blocks"), 6);
+        assert_eq!(m.gauge("prefix_evicted_blocks"), 2);
+        assert!(m.render().contains("prefix_tokens_reused 96"));
     }
 
     #[test]

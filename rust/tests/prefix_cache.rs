@@ -1,0 +1,259 @@
+//! Integration: the prefix-cache subsystem against the real engine.
+//! Requires `make artifacts` (skips cleanly otherwise); the tree/manager
+//! contracts are also covered by always-on unit + property tests in
+//! `rust/src/prefix/`.
+//!
+//! Covers the subsystem's contracts:
+//! * a session admitted on a warm prefix prefills only the uncached tail
+//!   and decodes BIT-IDENTICALLY to the same prompt cold-prefilled;
+//! * preempt→resume of a seeded session stays bit-exact;
+//! * the coordinator surfaces hits/reuse in the done event and produces
+//!   byte-identical greedy text warm vs. cold;
+//! * under pool pressure, cold cached prefixes are evicted before any
+//!   live session is preempted.
+
+use std::path::{Path, PathBuf};
+
+use moe_offload::config::{
+    HardwareProfile, OffloadPolicy, QuantScheme, ServingConfig, SimScale,
+};
+use moe_offload::coordinator::{collect_events, Coordinator, Event, Request};
+use moe_offload::engine::MoeEngine;
+use moe_offload::harness;
+use moe_offload::Result;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() && dir.join("weights.npz").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn make_engine(
+    dir: &Path,
+    sessions: usize,
+    kv_pool_tokens: Option<usize>,
+    prefix_cache: bool,
+) -> Result<MoeEngine> {
+    let serving = ServingConfig {
+        policy: OffloadPolicy::Full { cache_k: 2, spec_n: 2 },
+        expert_quant: QuantScheme::Hqq { bits: 3 },
+        attn_quant: QuantScheme::Hqq { bits: 4 },
+        sim_scale: SimScale::Tiny,
+        max_concurrent_sessions: sessions,
+        kv_block_tokens: 16,
+        kv_pool_tokens,
+        prefix_cache,
+        ..Default::default()
+    };
+    harness::build_engine_with_serving(dir, &serving, HardwareProfile::rtx3060())
+}
+
+fn bits(logits: &[Vec<f32>]) -> Vec<Vec<u32>> {
+    logits.iter().map(|row| row.iter().map(|x| x.to_bits()).collect()).collect()
+}
+
+fn row_bits(row: &[f32]) -> Vec<u32> {
+    row.iter().map(|x| x.to_bits()).collect()
+}
+
+/// 44 prompt tokens (2 full 16-token blocks + a partial tail) and a
+/// continuation decoded on top of them.
+fn workload() -> (Vec<u32>, Vec<u32>) {
+    let prompt: Vec<u32> = "please summarize the mixture of experts paper"
+        .bytes()
+        .take(44)
+        .map(|b| b as u32)
+        .collect();
+    let cont: Vec<u32> = "briefly".bytes().map(|b| b as u32).collect();
+    assert_eq!(prompt.len(), 44);
+    (prompt, cont)
+}
+
+#[test]
+fn warm_prefix_admission_is_bit_identical_to_cold_prefill() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (prompt, cont) = workload();
+
+    // cold reference: prefix cache off entirely
+    let mut cold = make_engine(&dir, 1, Some(256), false).unwrap();
+    assert!(cold.prefix.is_none(), "cache must be strictly opt-in");
+    let mut cs = cold.new_session().unwrap();
+    let cold_logits = cold.prefill(&mut cs, &prompt).unwrap();
+    let cold_cont: Vec<Vec<f32>> =
+        cont.iter().map(|&t| cold.decode_step(&mut cs, t).unwrap()).collect();
+
+    // warm path: first request populates the cache, second one seeds
+    let mut warm = make_engine(&dir, 1, Some(256), true).unwrap();
+    let mut s1 = warm.new_session().unwrap();
+    let (first_logits, reused1) = warm.prefill_cached(&mut s1, &prompt).unwrap();
+    assert_eq!(reused1, 0, "empty cache cannot seed");
+    assert_eq!(
+        bits(&[first_logits.row(prompt.len() - 1).to_vec()]),
+        bits(&[cold_logits.row(prompt.len() - 1).to_vec()]),
+        "cache-on cold prefill must equal cache-off prefill"
+    );
+    let inserted = warm.prefix_insert(&s1, &prompt).unwrap();
+    assert_eq!(inserted, 2, "44 tokens cache as 2 full 16-token blocks");
+    drop(s1);
+
+    let mut s2 = warm.new_session().unwrap();
+    let (tail_logits, reused2) = warm.prefill_cached(&mut s2, &prompt).unwrap();
+    assert_eq!(reused2, 32, "longest block-aligned cached prefix");
+    assert_eq!(s2.position(), prompt.len(), "seed + tail covers the prompt");
+    assert_eq!(tail_logits.shape[0], prompt.len() - 32, "logits cover the tail only");
+    // every tail position must match the cold prefill bit for bit...
+    for t in 0..prompt.len() - 32 {
+        assert_eq!(
+            row_bits(tail_logits.row(t)),
+            row_bits(cold_logits.row(32 + t)),
+            "tail prefill position {t} diverged from cold prefill"
+        );
+    }
+    // ...and so must every decoded continuation token
+    let warm_cont: Vec<Vec<f32>> =
+        cont.iter().map(|&t| warm.decode_step(&mut s2, t).unwrap()).collect();
+    assert_eq!(
+        bits(&cold_cont),
+        bits(&warm_cont),
+        "a warm-admitted session must decode bit-identically to a cold one"
+    );
+    // accounting: the seeded blocks are shared between tree and session
+    assert_eq!(s2.kv.mapped_blocks(), warm.kv_pool.blocks_for(s2.position() + cont.len()));
+    assert!(warm.kv_pool.stats().shared_blocks >= 2);
+}
+
+#[test]
+fn preempt_resume_of_a_seeded_session_stays_bit_exact() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (prompt, cont) = workload();
+    let (head, tail) = cont.split_at(3);
+
+    // reference: uninterrupted cold stream
+    let mut cold = make_engine(&dir, 1, Some(256), false).unwrap();
+    let mut cs = cold.new_session().unwrap();
+    cold.prefill(&mut cs, &prompt).unwrap();
+    for &t in head {
+        cold.decode_step(&mut cs, t).unwrap();
+    }
+    let ref_tail: Vec<Vec<f32>> =
+        tail.iter().map(|&t| cold.decode_step(&mut cs, t).unwrap()).collect();
+
+    // warm + preempted stream
+    let mut warm = make_engine(&dir, 1, Some(256), true).unwrap();
+    let mut s1 = warm.new_session().unwrap();
+    warm.prefill_cached(&mut s1, &prompt).unwrap();
+    warm.prefix_insert(&s1, &prompt).unwrap();
+    drop(s1);
+    let mut s2 = warm.new_session().unwrap();
+    let (_, reused) = warm.prefill_cached(&mut s2, &prompt).unwrap();
+    assert_eq!(reused, 32);
+    for &t in head {
+        warm.decode_step(&mut s2, t).unwrap();
+    }
+    let shared_before = warm.kv_pool.stats().shared_blocks;
+    assert!(shared_before >= 2, "seeded prefix blocks are shared pre-preemption");
+    warm.preempt_session(&mut s2).unwrap();
+    assert_eq!(
+        warm.kv_pool.stats().shared_blocks,
+        0,
+        "preemption releases the session's share; the tree keeps its own"
+    );
+    assert_eq!(warm.prefix.as_ref().unwrap().cached_blocks(), 2);
+    warm.resume_session(&mut s2).unwrap();
+    let got_tail: Vec<Vec<f32>> =
+        tail.iter().map(|&t| warm.decode_step(&mut s2, t).unwrap()).collect();
+    assert_eq!(
+        bits(&ref_tail),
+        bits(&got_tail),
+        "preempt+resume of a seeded session must continue bit-identically"
+    );
+}
+
+#[test]
+fn coordinator_repeated_prompt_hits_the_cache_with_identical_text() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mk = |prompt: &str| {
+        let mut r = Request::new(prompt.to_string());
+        r.chat = false;
+        r.max_tokens = 6;
+        r.temperature = 0.0; // greedy: text depends only on logits
+        r
+    };
+    let done = |evs: &[Event]| -> (String, bool, u64) {
+        evs.iter()
+            .find_map(|ev| match ev {
+                Event::Done { text, prefix_hit, prefix_tokens_reused, .. } => {
+                    Some((text.clone(), *prefix_hit, *prefix_tokens_reused))
+                }
+                _ => None,
+            })
+            .expect("request must finish, not error")
+    };
+    let prompt = "w".repeat(40);
+
+    // cache off: the stateless baseline text
+    let dir2 = dir.clone();
+    let coord_off = Coordinator::new(move || make_engine(&dir2, 1, Some(256), false), 7);
+    let (cold_text, hit, reused) = done(&collect_events(coord_off.submit(mk(&prompt))));
+    assert!(!hit && reused == 0, "cache-off path must never report reuse");
+    coord_off.shutdown();
+
+    // cache on: first request inserts, second seeds
+    let dir2 = dir.clone();
+    let coord = Coordinator::new(move || make_engine(&dir2, 1, Some(256), true), 7);
+    let (first_text, first_hit, _) = done(&collect_events(coord.submit(mk(&prompt))));
+    assert!(!first_hit, "nothing cached yet");
+    assert_eq!(first_text, cold_text, "cache-on cold request matches cache-off");
+    let (second_text, second_hit, second_reused) =
+        done(&collect_events(coord.submit(mk(&prompt))));
+    assert!(second_hit, "repeated prompt must hit the prefix cache");
+    assert_eq!(second_reused, 32, "40-token prompt reuses 2 full 16-token blocks");
+    assert_eq!(second_text, cold_text, "warm text must equal cold text under greedy");
+    assert!(coord.metrics.gauge("prefix_hits") >= 1);
+    assert!(coord.metrics.gauge("prefix_tokens_reused") >= 32);
+    assert!(coord.metrics.gauge("prefix_cache_blocks") >= 2);
+    coord.shutdown();
+}
+
+#[test]
+fn cold_prefixes_are_evicted_before_any_session_is_preempted() {
+    let Some(dir) = artifacts_dir() else { return };
+    // pool of 6 blocks × 16 tokens. Request A (64-token prompt) caches 4
+    // blocks on completion, leaving 2 free; request B (disjoint 64-token
+    // prompt) then needs 4+ blocks — the engine must reclaim A's cold
+    // prefix instead of failing or preempting anyone.
+    let dir2 = dir.clone();
+    let coord = Coordinator::new(move || make_engine(&dir2, 2, Some(96), true), 7);
+    let mk = |prompt: String| {
+        let mut r = Request::new(prompt);
+        r.chat = false;
+        r.max_tokens = 4;
+        r.temperature = 0.0;
+        r
+    };
+    let ea = collect_events(coord.submit(mk("a".repeat(64))));
+    assert!(
+        ea.iter().any(|e| matches!(e, Event::Done { .. })),
+        "request A must finish"
+    );
+    let eb = collect_events(coord.submit(mk("b".repeat(64))));
+    let evicted = eb
+        .iter()
+        .find_map(|ev| match ev {
+            Event::Done { prefix_evicted_blocks, .. } => Some(*prefix_evicted_blocks),
+            _ => None,
+        })
+        .expect("request B must finish, not error");
+    assert!(evicted >= 1, "B's admission must have reclaimed A's cold prefix");
+    assert_eq!(coord.metrics.counter("requests_failed"), 0);
+    assert_eq!(
+        coord.metrics.gauge("kv_preemptions"),
+        0,
+        "eviction must come BEFORE preemption"
+    );
+    coord.shutdown();
+}
