@@ -20,6 +20,14 @@ fn main() {
         return;
     };
     let tokens = harness::chat_tokens(&dir, 512).expect("chat corpus");
+    // MOE_BENCH_SMOKE=1 (CI) shrinks budgets/tick counts so the bench
+    // binary is exercised end to end without burning minutes; unset,
+    // empty or "0" means a full measured run
+    let smoke = std::env::var("MOE_BENCH_SMOKE")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false);
+    let token_budget_ms: u64 = if smoke { 100 } else { 2500 };
+    let prefill_budget_ms: u64 = if smoke { 200 } else { 4000 };
 
     println!("== engine decode benches (real PJRT CPU execution) ==");
     for (name, policy) in [
@@ -39,7 +47,7 @@ fn main() {
         .unwrap();
         let mut sess = engine.new_session().unwrap();
         let mut i = 0usize;
-        let r = bench(&format!("decode_token_{name}_q3"), 2500, || {
+        let r = bench(&format!("decode_token_{name}_q3"), token_budget_ms, || {
             if sess.position() + 1 >= engine.weights.cfg.max_seq {
                 sess.reset();
             }
@@ -61,7 +69,7 @@ fn main() {
         .unwrap();
         let mut sess = engine.new_session().unwrap();
         let mut i = 0usize;
-        let r = bench(&format!("decode_token_full_q{bits}"), 2500, || {
+        let r = bench(&format!("decode_token_full_q{bits}"), token_budget_ms, || {
             if sess.position() + 1 >= engine.weights.cfg.max_seq {
                 sess.reset();
             }
@@ -82,7 +90,7 @@ fn main() {
     )
     .unwrap();
     let chunk: Vec<u32> = tokens[..64].to_vec();
-    let r = bench("prefill_64_tokens_chunked", 4000, || {
+    let r = bench("prefill_64_tokens_chunked", prefill_budget_ms, || {
         let mut sess = engine.new_session().unwrap();
         engine.prefill(&mut sess, &chunk).unwrap();
     });
@@ -222,6 +230,98 @@ fn main() {
         on_skipped,
         (n_requests - 1) * prompt_len,
     );
+
+    // batched decode: expert loads per tick and sim throughput, batched
+    // layer-lockstep vs sequential round-robin, over a SHARED workload
+    // of per-session streams drawn from the chat corpus at staggered
+    // offsets. Emits the machine-readable perf trajectory to
+    // ../BENCH_4.json (repo root).
+    let ticks = if smoke { 8 } else { 64 };
+    println!("\nbatched_decode ({ticks} ticks per run, full_k2_spec2):");
+    let mut json_rows: Vec<String> = Vec::new();
+    for width in [1usize, 4, 8] {
+        let streams: Vec<Vec<u32>> = (0..width)
+            .map(|i| (0..ticks).map(|t| tokens[(i * 97 + t) % tokens.len()]).collect())
+            .collect();
+        // (sim tokens/s, expert loads per tick, loads deduped, kernel calls)
+        let run = |batched: bool| -> (f64, f64, u64, u64) {
+            let serving = ServingConfig {
+                policy: OffloadPolicy::Full { cache_k: 2, spec_n: 2 },
+                expert_quant: QuantScheme::Hqq { bits: 3 },
+                attn_quant: QuantScheme::Hqq { bits: 4 },
+                sim_scale: SimScale::Tiny,
+                max_concurrent_sessions: width,
+                ..Default::default()
+            };
+            let mut engine =
+                harness::build_engine_with_serving(&dir, &serving, HardwareProfile::rtx3060())
+                    .unwrap();
+            let mut sessions: Vec<moe_offload::engine::Session> =
+                (0..width).map(|_| engine.new_session().unwrap()).collect();
+            let sim0 = engine.timeline.now();
+            for t in 0..ticks {
+                if batched {
+                    let tick_toks: Vec<u32> =
+                        (0..width).map(|i| streams[i][t]).collect();
+                    let mut refs: Vec<&mut moe_offload::engine::Session> =
+                        sessions.iter_mut().collect();
+                    for slot in engine.decode_batch(&mut refs, &tick_toks).unwrap() {
+                        slot.unwrap();
+                    }
+                } else {
+                    for (i, sess) in sessions.iter_mut().enumerate() {
+                        engine.decode_step(sess, streams[i][t]).unwrap();
+                    }
+                }
+            }
+            let sim_s = engine.cost.scale_token_time(engine.timeline.now() - sim0);
+            let loads: u64 = sessions.iter().map(|s| s.run.total_misses()).sum();
+            (
+                (width * ticks) as f64 / sim_s.max(1e-12),
+                loads as f64 / ticks as f64,
+                engine.batch.loads_deduped,
+                engine.batch.kernel_calls,
+            )
+        };
+        let (seq_tps, seq_loads, _, _) = run(false);
+        let (bat_tps, bat_loads, deduped, kernel_calls) = run(true);
+        println!(
+            "  width {width}: sequential {seq_loads:.2} loads/tick {seq_tps:.1} tok/s(sim)  \
+             batched {bat_loads:.2} loads/tick {bat_tps:.1} tok/s(sim)  \
+             ({deduped} stagings deduped, {kernel_calls} kernel calls)"
+        );
+        if width >= 4 {
+            assert!(
+                bat_loads < seq_loads,
+                "batched decode must stage strictly fewer experts per tick than \
+                 sequential at width {width} ({bat_loads:.2} vs {seq_loads:.2})"
+            );
+        }
+        json_rows.push(format!(
+            concat!(
+                "{{\"width\":{},",
+                "\"sequential\":{{\"sim_tokens_per_s\":{:.3},\"expert_loads_per_tick\":{:.4}}},",
+                "\"batched\":{{\"sim_tokens_per_s\":{:.3},\"expert_loads_per_tick\":{:.4},",
+                "\"expert_loads_deduped\":{},\"batched_kernel_calls\":{}}}}}"
+            ),
+            width, seq_tps, seq_loads, bat_tps, bat_loads, deduped, kernel_calls
+        ));
+    }
+    let bench_json = format!(
+        concat!(
+            "{{\"bench\":\"batched_decode\",\"schema\":1,\"status\":\"measured\",",
+            "\"policy\":\"full_k2_spec2\",\"sim_scale\":\"tiny\",\"ticks\":{},",
+            "\"smoke\":{},\"widths\":[{}]}}\n"
+        ),
+        ticks,
+        smoke,
+        json_rows.join(",")
+    );
+    let bench_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_4.json");
+    match std::fs::write(bench_path, &bench_json) {
+        Ok(()) => println!("  wrote {bench_path}"),
+        Err(e) => eprintln!("  could not write {bench_path}: {e}"),
+    }
 
     // host wall-time breakdown per module (perf-pass diagnostics)
     println!("\nper-module host wall time (from the prefill engine):");

@@ -10,8 +10,21 @@
 //! * evicting an expert just drops the device copy (host keeps masters);
 //! * k = 0 models the cache-less ablation: demand loads are transient and
 //!   freed right after use.
+//!
+//! Batched decode adds tick-scoped *pinning*: an expert staged for the
+//! current layer-tick is [`CacheManager::pin`]ned so that no eviction
+//! path can drop its device copy before every routed session has
+//! consumed it (the mid-tick eviction hazard). A pinned victim keeps its
+//! device copy — the bookkeeping eviction is deferred and settled by
+//! [`CacheManager::unpin_all`] at the end of the tick. The engine's
+//! batched path additionally AVOIDS the hazard structurally (it only
+//! batch-stages a union that fits the layer cache, and interleaves
+//! load/run otherwise), so the pin is the enforced invariant backing
+//! that reasoning: if a future eviction path or placement change does
+//! reach a staged-but-unconsumed expert, the batch still computes
+//! correctly instead of failing or silently re-staging.
 
-use std::collections::VecDeque;
+use std::collections::{HashSet, VecDeque};
 
 use crate::cache::lru::LruSet;
 use crate::cache::speculative::SpeculativeStats;
@@ -62,6 +75,12 @@ pub struct CacheManager {
     /// Unclaimed speculative loads, oldest first (bounded by spec_cap).
     spec_resident: VecDeque<ExpertId>,
     spec_cap: usize,
+    /// Experts pinned for the current batched layer-tick: their device
+    /// copies may not be dropped until [`Self::unpin_all`].
+    pinned: HashSet<ExpertId>,
+    /// Device evictions deferred because the victim was pinned; settled
+    /// by [`Self::unpin_all`].
+    deferred_evict: Vec<ExpertId>,
     pub device: DeviceMemory,
     pub stats: CacheStats,
 }
@@ -72,6 +91,8 @@ impl CacheManager {
             layers: (0..n_layers).map(|_| LruSet::new(cache_k)).collect(),
             spec_resident: VecDeque::new(),
             spec_cap,
+            pinned: HashSet::new(),
+            deferred_evict: Vec::new(),
             device,
             stats: CacheStats { per_layer: vec![(0, 0); n_layers], ..Default::default() },
         }
@@ -141,7 +162,7 @@ impl CacheManager {
         }
         while self.spec_resident.len() >= self.spec_cap.max(1) {
             if let Some(old) = self.spec_resident.pop_front() {
-                self.device.evict(old);
+                self.evict_or_defer(old);
                 self.stats.evictions += 1;
             }
         }
@@ -157,7 +178,7 @@ impl CacheManager {
     pub fn release_transient(&mut self, id: ExpertId) {
         let li = id.layer as usize;
         if self.layers[li].capacity() == 0 && !self.spec_resident.contains(&id) {
-            self.device.evict(id);
+            self.evict_or_defer(id);
         }
     }
 
@@ -165,7 +186,7 @@ impl CacheManager {
     fn insert_into_layer(&mut self, id: ExpertId) {
         let li = id.layer as usize;
         if let Some(evicted) = self.layers[li].insert(id.expert) {
-            self.device.evict(ExpertId { layer: id.layer, expert: evicted });
+            self.evict_or_defer(ExpertId { layer: id.layer, expert: evicted });
             self.stats.evictions += 1;
         }
     }
@@ -176,13 +197,58 @@ impl CacheManager {
         while self.device.resident_count() + 1 > self.device.expert_capacity() {
             match self.spec_resident.pop_front() {
                 Some(old) => {
-                    self.device.evict(old);
+                    self.evict_or_defer(old);
                     self.stats.evictions += 1;
                 }
                 None => break, // let device.insert surface the OOM
             }
         }
         Ok(())
+    }
+
+    // ---------------------------------------------------------------------
+    // tick-scoped pinning (batched decode)
+    // ---------------------------------------------------------------------
+
+    /// Pin `id` for the current layer-tick: its device copy survives any
+    /// bookkeeping eviction until [`Self::unpin_all`]. The batched decode
+    /// path pins the whole routed-expert union right after staging it, so
+    /// staging expert B for one batch neighbor can never drop expert A
+    /// before another neighbor's rows ran through it.
+    pub fn pin(&mut self, id: ExpertId) {
+        self.pinned.insert(id);
+    }
+
+    pub fn is_pinned(&self, id: ExpertId) -> bool {
+        self.pinned.contains(&id)
+    }
+
+    /// End the tick: release every pin and settle deferred evictions —
+    /// a deferred victim that was not re-admitted meanwhile loses its
+    /// device copy now. (Deferral can hold the device over its expert
+    /// budget for the tick's duration, bounded by the batch's routed
+    /// union; the accounting settles here.)
+    pub fn unpin_all(&mut self) {
+        self.pinned.clear();
+        let deferred = std::mem::take(&mut self.deferred_evict);
+        for id in deferred {
+            if self.lookup(id) == Lookup::Absent {
+                self.device.evict(id);
+            }
+        }
+    }
+
+    /// Drop `id`'s device copy — unless it is pinned for the current
+    /// tick, in which case the drop is deferred to [`Self::unpin_all`].
+    /// (Callers count `stats.evictions` themselves, exactly where the
+    /// pre-pinning code did, so stats are unchanged when nothing is
+    /// pinned.)
+    fn evict_or_defer(&mut self, id: ExpertId) {
+        if self.pinned.contains(&id) {
+            self.deferred_evict.push(id);
+        } else {
+            self.device.evict(id);
+        }
     }
 
     /// Cached experts of a layer, MRU first (Fig 1 overlay).
@@ -305,6 +371,68 @@ mod tests {
         assert_eq!(m.lookup(id(0, 2)), Lookup::Absent);
         assert_eq!(m.lookup(id(1, 1)), Lookup::Absent);
         assert_eq!(m.lookup(id(1, 2)), Lookup::InCache);
+    }
+
+    #[test]
+    fn pinned_expert_survives_mid_tick_lru_eviction() {
+        // the batched-decode hazard: with cache_k = 1, staging expert 2
+        // for session B would evict expert 1 staged moments earlier for
+        // session A — before A's rows ran through it. Pinning must keep
+        // the device copy alive until the tick ends.
+        let mut m = mgr(1, 4, 16);
+        m.insert_loaded(id(0, 1), dummy()).unwrap();
+        m.pin(id(0, 1));
+        m.insert_loaded(id(0, 2), dummy()).unwrap(); // LRU-evicts (0,1)'s slot
+        assert_eq!(m.lookup(id(0, 1)), Lookup::Absent, "bookkeeping eviction proceeds");
+        assert!(
+            m.device.contains(id(0, 1)),
+            "pinned expert keeps its device copy until unpin"
+        );
+        assert!(m.device.contains(id(0, 2)));
+        // tick over: the deferred eviction settles
+        m.unpin_all();
+        assert!(!m.device.contains(id(0, 1)), "deferred eviction lands at unpin");
+        assert!(m.device.contains(id(0, 2)));
+        assert!(!m.is_pinned(id(0, 1)));
+    }
+
+    #[test]
+    fn unpin_keeps_a_readmitted_expert() {
+        // evicted-while-pinned, then re-admitted before the tick ended:
+        // the deferred eviction must NOT tear down the new residency
+        let mut m = mgr(1, 4, 16);
+        m.insert_loaded(id(0, 1), dummy()).unwrap();
+        m.pin(id(0, 1));
+        m.insert_loaded(id(0, 2), dummy()).unwrap(); // defers (0,1)
+        m.pin(id(0, 2));
+        m.insert_loaded(id(0, 1), dummy()).unwrap(); // re-admitted, defers (0,2)
+        m.unpin_all();
+        assert!(m.device.contains(id(0, 1)), "re-admitted expert survives unpin");
+        assert_eq!(m.lookup(id(0, 1)), Lookup::InCache);
+        assert!(!m.device.contains(id(0, 2)), "the other deferred victim settles");
+    }
+
+    #[test]
+    fn pin_without_eviction_is_inert() {
+        let mut m = mgr(2, 4, 16);
+        m.insert_loaded(id(0, 1), dummy()).unwrap();
+        m.pin(id(0, 1));
+        m.unpin_all();
+        assert!(m.device.contains(id(0, 1)));
+        assert_eq!(m.lookup(id(0, 1)), Lookup::InCache);
+    }
+
+    #[test]
+    fn pinned_transient_release_is_deferred() {
+        // k = 0: release_transient normally frees right after use; a pin
+        // must hold the copy until the batch's last consumer is done
+        let mut m = mgr(0, 4, 16);
+        m.insert_loaded(id(0, 2), dummy()).unwrap();
+        m.pin(id(0, 2));
+        m.release_transient(id(0, 2));
+        assert!(m.device.contains(id(0, 2)), "pinned transient survives release");
+        m.unpin_all();
+        assert!(!m.device.contains(id(0, 2)), "transient freed once unpinned");
     }
 
     #[test]

@@ -158,6 +158,24 @@ pub struct ServingConfig {
     /// the KV pool itself (cold prefixes are evicted leaf-first under
     /// pool pressure, before any live session is preempted).
     pub prefix_cache_tokens: Option<usize>,
+    /// Layer-lockstep batched decode (see [`crate::engine::MoeEngine::decode_batch`]):
+    /// the scheduler advances all live sessions through each layer
+    /// together, resolves the union of routed experts against the cache
+    /// once per layer-tick, and runs one expert kernel over the stacked
+    /// rows. A pure execution-order/dedup optimization — per-session
+    /// output is bit-identical to the sequential round-robin path. On by
+    /// default; `false` (or width 1) is byte-identical to the sequential
+    /// scheduler.
+    pub batched_decode: bool,
+    /// Generation stops once the decoded text ends with this suffix
+    /// (after `min_tokens` tokens). The scheduler checks it against the
+    /// incrementally maintained text tail, so it must stay short (≤ 64
+    /// bytes, enforced by [`Self::validate`]). Empty disables suffix
+    /// stopping — only the token budget ends the stream.
+    pub stop_suffix: String,
+    /// Tokens that must be generated before `stop_suffix` can end the
+    /// stream (guards against stopping on a degenerate first token).
+    pub min_tokens: usize,
 }
 
 impl Default for ServingConfig {
@@ -176,6 +194,11 @@ impl Default for ServingConfig {
             kv_pool_tokens: None,
             prefix_cache: false,
             prefix_cache_tokens: None,
+            batched_decode: true,
+            // defaults preserve the scheduler's historical hard-coded
+            // stop heuristic (`generated > 4 && text.ends_with(".\n")`)
+            stop_suffix: ".\n".to_string(),
+            min_tokens: 4,
         }
     }
 }
@@ -216,6 +239,21 @@ impl ServingConfig {
                     pool, self.kv_block_tokens
                 )));
             }
+        }
+        if self.stop_suffix.len() > 64 {
+            return Err(Error::Config(format!(
+                "stop_suffix of {} bytes is unreasonably long (the stop check \
+                 runs against the text tail every token; limit 64)",
+                self.stop_suffix.len()
+            )));
+        }
+        if self.min_tokens > 1 << 20 {
+            return Err(Error::Config(format!(
+                "min_tokens {} is unreasonably large (no stream generates \
+                 that many tokens; limit {})",
+                self.min_tokens,
+                1 << 20
+            )));
         }
         // the cap is inert while the cache is off — don't reject a config
         // for a knob that builds nothing
@@ -322,6 +360,31 @@ mod tests {
             ..Default::default()
         };
         assert!(ok.validate().is_ok());
+    }
+
+    #[test]
+    fn stop_knob_defaults_preserve_legacy_heuristic() {
+        // the scheduler's historical hard-coded stop condition was
+        // `generated > 4 && text.ends_with(".\n")` — the knobs must
+        // default to exactly that
+        let c = ServingConfig::default();
+        assert_eq!(c.stop_suffix, ".\n");
+        assert_eq!(c.min_tokens, 4);
+        assert!(c.batched_decode, "batched decode is on by default");
+    }
+
+    #[test]
+    fn stop_knob_validation() {
+        let long = ServingConfig { stop_suffix: "x".repeat(65), ..Default::default() };
+        assert!(long.validate().is_err());
+        let max_len = ServingConfig { stop_suffix: "x".repeat(64), ..Default::default() };
+        assert!(max_len.validate().is_ok());
+        let empty = ServingConfig { stop_suffix: String::new(), ..Default::default() };
+        assert!(empty.validate().is_ok(), "empty suffix just disables suffix stopping");
+        let huge_min = ServingConfig { min_tokens: (1 << 20) + 1, ..Default::default() };
+        assert!(huge_min.validate().is_err());
+        let zero_min = ServingConfig { min_tokens: 0, ..Default::default() };
+        assert!(zero_min.validate().is_ok());
     }
 
     #[test]

@@ -3,9 +3,18 @@
 //! The engine worker runs a continuous-batching scheduler. Requests queue
 //! FIFO (std mpsc; tokio is not in the offline crate set and one
 //! CPU-bound worker needs no reactor); the worker admits up to
-//! `max_concurrent_sessions` of them into live [`Session`]s and
-//! round-robin interleaves ONE decode step per live session per
-//! scheduling tick. Every live session shares the engine's warm expert
+//! `max_concurrent_sessions` of them into live [`Session`]s and gives
+//! every live session ONE decode step per scheduling tick. With
+//! `ServingConfig::batched_decode` (default on) and two or more live
+//! sessions, the tick runs them through
+//! [`MoeEngine::decode_batch`] in layer lockstep: one expert staging and
+//! one stacked kernel call per DISTINCT routed expert per layer-tick,
+//! instead of each session paying its own lookups, transfers and
+//! per-token kernel calls. With the knob off — or at width 1 — the tick
+//! round-robin interleaves sequential `decode_step` calls, byte-
+//! identical to the pre-batching scheduler; either way per-session
+//! output is the same, since batching is a pure execution-order/dedup
+//! optimization. Every live session shares the engine's warm expert
 //! LRU cache and amortizes speculative transfers — the cross-request
 //! reuse that makes offloading pay off under load — while keeping its own
 //! KV cache, sampler and token budget, so streams stay numerically
@@ -106,6 +115,15 @@ pub enum Event {
         prefix_tokens_reused: u64,
         /// Total prefix-cache blocks evicted since engine start.
         prefix_evicted_blocks: u64,
+        /// Total redundant expert stagings avoided by batched-tick union
+        /// dedup since engine start (0 with batched decode off).
+        expert_loads_deduped: u64,
+        /// Total expert kernel invocations issued by the batched decode
+        /// path since engine start.
+        batched_kernel_calls: u64,
+        /// Batch width of the most recent batched tick when the request
+        /// finished (0 = scheduler has been running sequentially).
+        batch_occupancy: u64,
     },
     Error { request_id: u64, message: String },
 }
@@ -476,40 +494,134 @@ fn scheduler_loop(
         }
 
         // 4) one scheduling tick: exactly one decode step per live
-        // session, in admission order (round-robin fairness).
+        // session. Batched mode advances them together through
+        // decode_batch (layer lockstep, expert-deduped); sequential mode
+        // round-robins decode_step in admission order. Per-session
+        // output is identical either way.
         m.inc("scheduler_ticks", 1);
-        let n = active.len();
-        for _ in 0..n {
-            let mut live = active.pop_front().unwrap();
-            match step(engine, &tokenizer, &mut live) {
-                Ok(StepOutcome::Continue) => active.push_back(live),
-                Ok(StepOutcome::Finished) => {
-                    finish(m, engine, live, active.len() as u64 + 1)
-                }
-                Ok(StepOutcome::Cancelled) => {
-                    // client went away: free the slot instead of decoding
-                    // the rest of the budget into a dropped channel
-                    m.inc("requests_cancelled", 1);
-                }
-                Err(Error::KvPoolExhausted(msg)) => {
-                    // pool dry mid-decode: swap the youngest session's KV
-                    // to host and requeue it so older streams finish.
-                    // decode_step commits blocks before any state change,
-                    // so `live` retries its step cleanly next tick.
-                    preempt_youngest(engine, m, &mut active, &mut preempted, live, &msg);
-                }
-                Err(e) => {
-                    // the failing session is dropped; its neighbors keep
-                    // their own KV state and continue undisturbed
-                    m.inc("requests_failed", 1);
-                    let _ = live.tx.send(Event::Error {
-                        request_id: live.id,
-                        message: e.to_string(),
-                    });
+        if engine.batched_decode && active.len() >= 2 {
+            batched_tick(engine, &tokenizer, m, &mut active, &mut preempted);
+        } else {
+            let n = active.len();
+            for _ in 0..n {
+                let mut live = active.pop_front().unwrap();
+                match step(engine, &tokenizer, &mut live) {
+                    Ok(StepOutcome::Continue) => active.push_back(live),
+                    Ok(StepOutcome::Finished) => {
+                        finish(m, engine, live, active.len() as u64 + 1)
+                    }
+                    Ok(StepOutcome::Cancelled) => {
+                        // client went away: free the slot instead of decoding
+                        // the rest of the budget into a dropped channel
+                        m.inc("requests_cancelled", 1);
+                    }
+                    Err(Error::KvPoolExhausted(msg)) => {
+                        // pool dry mid-decode: swap the youngest session's KV
+                        // to host and requeue it so older streams finish.
+                        // decode_step commits blocks before any state change,
+                        // so `live` retries its step cleanly next tick.
+                        preempt_youngest(engine, m, &mut active, &mut preempted, live, &msg);
+                    }
+                    Err(e) => {
+                        // the failing session is dropped; its neighbors keep
+                        // their own KV state and continue undisturbed
+                        m.inc("requests_failed", 1);
+                        let _ = live.tx.send(Event::Error {
+                            request_id: live.id,
+                            message: e.to_string(),
+                        });
+                    }
                 }
             }
         }
         m.set_gauge("active_sessions", active.len() as u64);
+    }
+}
+
+/// One batched scheduling tick: all live sessions advance one token
+/// through [`MoeEngine::decode_batch`] in layer lockstep. Per-session
+/// outcomes mirror the sequential loop's: a KV-dry slot degrades that
+/// session to the preempt/retry path (its step didn't run — nothing was
+/// fed, so the retry is clean) WITHOUT poisoning the rest of the batch,
+/// and a failed slot drops only its own session.
+fn batched_tick(
+    engine: &mut MoeEngine,
+    tokenizer: &ByteTokenizer,
+    m: &Metrics,
+    active: &mut VecDeque<LiveSession>,
+    preempted: &mut VecDeque<LiveSession>,
+) {
+    let mut lives: Vec<LiveSession> = active.drain(..).collect();
+    let toks: Vec<u32> = lives.iter().map(|l| l.next).collect();
+    let results = {
+        let mut refs: Vec<&mut Session> =
+            lives.iter_mut().map(|l| &mut l.sess).collect();
+        engine.decode_batch(&mut refs, &toks)
+    };
+    let results = match results {
+        Ok(r) => r,
+        Err(e) => {
+            // engine failure mid-tick: the participants' KV/position
+            // state is indeterminate — fail them all loudly rather than
+            // continue decoding garbage
+            for live in lives {
+                m.inc("requests_failed", 1);
+                let _ = live.tx.send(Event::Error {
+                    request_id: live.id,
+                    message: e.to_string(),
+                });
+            }
+            return;
+        }
+    };
+    let b = engine.batch;
+    m.record_batch(b.last_occupancy, b.ticks, b.kernel_calls, b.loads_deduped);
+
+    // KV-dry sessions are collected and handled AFTER the survivors
+    // rejoin `active`, so the youngest-victim policy sees the same
+    // candidate set the sequential loop would. They are in batch order,
+    // which is admission order.
+    let n_slots = results.len();
+    let mut dry: Vec<(LiveSession, String)> = Vec::new();
+    for (k, (slot, mut live)) in results.into_iter().zip(lives).enumerate() {
+        match slot {
+            Ok(logits) => match advance(engine, tokenizer, &mut live, logits) {
+                StepOutcome::Continue => active.push_back(live),
+                StepOutcome::Finished => {
+                    // count every session still live at this moment, as
+                    // the sequential loop would see them in `active`:
+                    // survivors so far, dry ones awaiting retry, and the
+                    // not-yet-processed rest of the batch
+                    let others = active.len() + dry.len() + (n_slots - k - 1);
+                    finish(m, engine, live, others as u64 + 1)
+                }
+                StepOutcome::Cancelled => {
+                    m.inc("requests_cancelled", 1);
+                }
+            },
+            Err(Error::KvPoolExhausted(msg)) => dry.push((live, msg)),
+            Err(e) => {
+                m.inc("requests_failed", 1);
+                let _ = live.tx.send(Event::Error {
+                    request_id: live.id,
+                    message: e.to_string(),
+                });
+            }
+        }
+    }
+    // A dry session is still live — it couldn't take a block this tick
+    // and retries next tick. Resolve pool pressure for the OLDEST dry
+    // session now; the younger dry ones rejoin `active` FIRST so the
+    // youngest-victim policy can pick one of them (exactly what the
+    // sequential loop does when every live session hits the dry pool in
+    // one pass — preempting the youngest, never failing the oldest).
+    // If the pool stays dry their own retries drive further preemptions.
+    let mut dry = dry.into_iter();
+    if let Some((live, msg)) = dry.next() {
+        for (younger, _) in dry {
+            active.push_back(younger);
+        }
+        preempt_youngest(engine, m, active, preempted, live, &msg);
     }
 }
 
@@ -690,30 +802,46 @@ enum StepOutcome {
     Cancelled,
 }
 
-/// One decode step for one live session.
+/// One decode step for one live session (sequential tick path).
 fn step(
     engine: &mut MoeEngine,
     tokenizer: &ByteTokenizer,
     live: &mut LiveSession,
 ) -> Result<StepOutcome> {
     let logits = engine.decode_step(&mut live.sess, live.next)?;
-    // the step succeeded, so `next` was fed and its KV position written
-    // (on a pool-dry error nothing was fed and the retry re-pushes it)
+    Ok(advance(engine, tokenizer, live, logits))
+}
+
+/// Post-decode bookkeeping shared by the sequential and batched tick
+/// paths: commit the fed token, sample the next one, stream it, and
+/// apply the stop condition. Runs only after a SUCCESSFUL decode — on a
+/// pool-dry error nothing was fed and the retry re-pushes the token.
+fn advance(
+    engine: &MoeEngine,
+    tokenizer: &ByteTokenizer,
+    live: &mut LiveSession,
+    logits: Vec<f32>,
+) -> StepOutcome {
     live.fed_tokens.push(live.next);
     live.next = live.sampler.sample(&logits) as u32;
     live.generated += 1;
     let piece = tokenizer.decode(&[live.next]);
     live.text.push_str(&piece);
     if live.tx.send(Event::Token { request_id: live.id, text: piece }).is_err() {
-        return Ok(StepOutcome::Cancelled);
+        return StepOutcome::Cancelled;
     }
-    // stop at end-of-turn marker (newline after assistant text) — the
-    // incrementally-maintained text makes this O(1) per token
-    let stopped = live.generated > 4 && live.text.ends_with(".\n");
+    // stop at the configured end-of-turn suffix (ServingConfig::
+    // stop_suffix / min_tokens; defaults reproduce the historical
+    // `.\n` + 4-token heuristic) — the incrementally-maintained text
+    // makes this O(1) per token, which validate() preserves by bounding
+    // the suffix length
+    let stopped = live.generated > engine.min_tokens
+        && !engine.stop_suffix.is_empty()
+        && live.text.ends_with(&engine.stop_suffix);
     if stopped || live.generated >= live.budget {
-        Ok(StepOutcome::Finished)
+        StepOutcome::Finished
     } else {
-        Ok(StepOutcome::Continue)
+        StepOutcome::Continue
     }
 }
 
@@ -753,6 +881,9 @@ fn finish(m: &Metrics, engine: &mut MoeEngine, live: LiveSession, active_session
         prefix_hit: live.prefix_reused > 0,
         prefix_tokens_reused: live.prefix_reused as u64,
         prefix_evicted_blocks: prefix_evicted,
+        expert_loads_deduped: engine.batch.loads_deduped,
+        batched_kernel_calls: engine.batch.kernel_calls,
+        batch_occupancy: engine.batch.last_occupancy,
     });
 }
 

@@ -7,7 +7,8 @@
 //! <- {"type":"token","text":"t"}
 //! <- {"type":"done","text":"...","tokens_per_s_wall":...,"queue_wait_s":...,"active_sessions":...,
 //!     "kv_blocks_in_use":...,"kv_blocks_free":...,"kv_preemptions":...,"kv_resumes":...,
-//!     "prefix_hit":...,"prefix_tokens_reused":...,"prefix_evicted_blocks":...}
+//!     "prefix_hit":...,"prefix_tokens_reused":...,"prefix_evicted_blocks":...,
+//!     "expert_loads_deduped":...,"batched_kernel_calls":...,"batch_occupancy":...}
 //! ```
 //!
 //! Each connection gets its own handler thread; the coordinator's
@@ -106,6 +107,9 @@ pub fn event_to_json(ev: &Event) -> Json {
             prefix_hit,
             prefix_tokens_reused,
             prefix_evicted_blocks,
+            expert_loads_deduped,
+            batched_kernel_calls,
+            batch_occupancy,
             ..
         } => Json::obj(vec![
             ("type", "done".into()),
@@ -124,6 +128,9 @@ pub fn event_to_json(ev: &Event) -> Json {
             ("prefix_hit", (*prefix_hit).into()),
             ("prefix_tokens_reused", (*prefix_tokens_reused as usize).into()),
             ("prefix_evicted_blocks", (*prefix_evicted_blocks as usize).into()),
+            ("expert_loads_deduped", (*expert_loads_deduped as usize).into()),
+            ("batched_kernel_calls", (*batched_kernel_calls as usize).into()),
+            ("batch_occupancy", (*batch_occupancy as usize).into()),
         ]),
         Event::Error { message, .. } => Json::obj(vec![
             ("type", "error".into()),
@@ -205,6 +212,9 @@ mod tests {
             prefix_hit: true,
             prefix_tokens_reused: 32,
             prefix_evicted_blocks: 4,
+            expert_loads_deduped: 12,
+            batched_kernel_calls: 48,
+            batch_occupancy: 3,
         };
         let j = event_to_json(&ev);
         assert_eq!(j.get("type").unwrap().as_str(), Some("done"));
@@ -220,5 +230,9 @@ mod tests {
         assert_eq!(j.get("prefix_hit").unwrap().as_bool(), Some(true));
         assert_eq!(j.get("prefix_tokens_reused").unwrap().as_usize(), Some(32));
         assert_eq!(j.get("prefix_evicted_blocks").unwrap().as_usize(), Some(4));
+        // ...and the batched-decode dedup metrics
+        assert_eq!(j.get("expert_loads_deduped").unwrap().as_usize(), Some(12));
+        assert_eq!(j.get("batched_kernel_calls").unwrap().as_usize(), Some(48));
+        assert_eq!(j.get("batch_occupancy").unwrap().as_usize(), Some(3));
     }
 }

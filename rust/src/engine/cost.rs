@@ -20,6 +20,12 @@ pub struct CostModel {
     pub expert_wire_bytes: u64,
     /// Bytes one expert kernel reads from device memory.
     pub expert_hbm_bytes: u64,
+    /// Activation bytes one extra routed row streams through an expert
+    /// kernel (read the hidden row + write the output row, fp16
+    /// accounting). The batched-decode FFN reads the expert's weights
+    /// from HBM once for the whole batch; only this term scales with the
+    /// number of stacked rows.
+    pub expert_act_row_bytes: u64,
     /// Attention weight bytes read per token per layer.
     pub attn_bytes: u64,
     pub gate_bytes: u64,
@@ -54,6 +60,7 @@ impl CostModel {
             // fused kernel reads codes + metadata from HBM (that's the
             // point of on-the-fly dequant)
             expert_hbm_bytes: expert_wire,
+            expert_act_row_bytes: (2 * acc_cfg.d_model * 2) as u64,
             attn_bytes: attn_quant.bytes_for(attn_params, ag),
             gate_bytes: (acc_cfg.d_model * acc_cfg.n_experts * 2) as u64,
             lm_head_bytes: (acc_cfg.d_model * acc_cfg.vocab_size * 2) as u64,
@@ -83,6 +90,20 @@ impl CostModel {
     pub fn expert_compute_s(&self) -> f64 {
         (Self::EXPERT_KERNELS - 1.0) * self.profile.launch_overhead_s
             + self.profile.gemv_time(self.expert_hbm_bytes)
+    }
+
+    /// Batched expert FFN over `rows` stacked token rows (the batched
+    /// decode path's one-kernel-per-expert-per-layer-tick call). Decode
+    /// is memory-bound: the kernel reads the expert's weights from HBM
+    /// once regardless of how many rows ride through it, so the batched
+    /// cost is the single-row cost plus only the extra rows' activation
+    /// traffic — the GEMV→GEMM roofline win that makes expert dedup pay
+    /// twice (no repeat transfer AND no repeat weight read).
+    /// `rows = 1` is exactly [`Self::expert_compute_s`].
+    pub fn expert_compute_batched_s(&self, rows: usize) -> f64 {
+        let extra = rows.saturating_sub(1) as u64 * self.expert_act_row_bytes;
+        (Self::EXPERT_KERNELS - 1.0) * self.profile.launch_overhead_s
+            + self.profile.gemv_time(self.expert_hbm_bytes + extra)
     }
 
     pub fn attn_compute_s(&self) -> f64 {
@@ -159,6 +180,25 @@ mod tests {
             .expert_transfer_s()
         };
         assert!(mk(2) < mk(3) && mk(3) < mk(4));
+    }
+
+    #[test]
+    fn batched_expert_cost_sublinear_in_rows() {
+        let cm = CostModel::new(
+            HardwareProfile::t4_colab(),
+            &model(),
+            SimScale::Mixtral,
+            QuantScheme::Hqq { bits: 4 },
+            QuantScheme::Hqq { bits: 2 },
+        );
+        // one row through the batched path costs exactly the single path
+        assert_eq!(cm.expert_compute_batched_s(1), cm.expert_compute_s());
+        // more rows cost more than one...
+        assert!(cm.expert_compute_batched_s(4) > cm.expert_compute_s());
+        // ...but far less than running the kernel once per row — the
+        // weights are read from HBM once for the whole batch
+        assert!(cm.expert_compute_batched_s(4) < 2.0 * cm.expert_compute_s());
+        assert!(cm.expert_compute_batched_s(8) < 4.0 * cm.expert_compute_s());
     }
 
     #[test]

@@ -64,6 +64,36 @@ struct InFlight {
     ready_at: f64,
 }
 
+/// Lifetime counters for the layer-lockstep batched decode path
+/// ([`MoeEngine::decode_batch`]) — the coordinator surfaces these as the
+/// `batch_occupancy` / `batched_kernel_calls` / `expert_loads_deduped`
+/// gauges and done-JSON fields.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BatchStats {
+    /// Batched layer-lockstep ticks executed (width ≥ 2; width-1 calls
+    /// delegate to the sequential step and are not counted).
+    pub ticks: u64,
+    /// Token rows advanced by batched ticks (Σ batch width).
+    pub rows: u64,
+    /// Expert kernel invocations issued by the batched path (one per
+    /// resident expert per layer-tick, more only when a batch outgrows
+    /// the compiled chunk width).
+    pub kernel_calls: u64,
+    /// Distinct experts resolved against the cache by batched
+    /// layer-ticks (one staging per distinct expert per tick).
+    pub experts_resolved: u64,
+    /// Redundant per-session expert stagings avoided by union dedup:
+    /// Σ routed (session, expert) pairs − Σ distinct experts resolved.
+    pub loads_deduped: u64,
+    /// Batch width of the most recent batched tick.
+    pub last_occupancy: u64,
+}
+
+/// One session's slot in a batched tick's result: next-token logits, or
+/// the per-session refusal ([`Error::KvPoolExhausted`] ⇒ the scheduler
+/// preempts/retries that session; anything else fails it alone).
+pub type BatchSlot = Result<Vec<f32>>;
+
 /// Offline probe for Figure 2 (right): record the speculative router
 /// distribution gate_{l+a}(h_l) at every layer without affecting the
 /// schedule or the virtual clock. Single-session instrumentation: drive
@@ -110,6 +140,18 @@ pub struct MoeEngine {
     /// Live [`Session`] count — [`Session::new`] refuses to exceed the
     /// provisioned pool, [`Session`]'s `Drop` releases the slot.
     live_sessions: Arc<AtomicUsize>,
+    /// Whether the coordinator's scheduler should tick live sessions
+    /// through [`Self::decode_batch`] (layer-lockstep, expert-deduped)
+    /// instead of one sequential [`Self::decode_step`] each. Pure
+    /// execution-order optimization — per-session output is identical.
+    pub batched_decode: bool,
+    /// Scheduler stop condition: generation ends once the decoded text
+    /// ends with this suffix (empty = budget-only stopping)...
+    pub stop_suffix: String,
+    /// ...but only after this many tokens were generated.
+    pub min_tokens: usize,
+    /// Lifetime batched-decode counters (see [`BatchStats`]).
+    pub batch: BatchStats,
 }
 
 impl MoeEngine {
@@ -235,6 +277,10 @@ impl MoeEngine {
             kv_pool,
             prefix,
             live_sessions: Arc::new(AtomicUsize::new(0)),
+            batched_decode: serving.batched_decode,
+            stop_suffix: serving.stop_suffix.clone(),
+            min_tokens: serving.min_tokens,
+            batch: BatchStats::default(),
         })
     }
 
@@ -505,22 +551,356 @@ impl MoeEngine {
         Ok(logits.data)
     }
 
-    /// One transformer layer on a [1, D] residual.
-    fn layer_step(
+    /// Layer-lockstep batched decode: advance ALL given sessions one
+    /// token in a single tick. Per layer, every session runs attention +
+    /// routing (the same T = 1 kernels as [`Self::decode_step`]), then
+    /// the **union** of routed experts is resolved against the cache
+    /// once — one LRU lookup and at most one transfer per distinct
+    /// expert per layer-tick — and each resident expert runs ONE kernel
+    /// over its stacked routed rows. When the union fits the layer cache
+    /// it is staged up front and *pinned* (see [`CacheManager::pin`]) so
+    /// staging a neighbor's expert can never evict one that other
+    /// sessions still need; a union that outgrows the cache is loaded
+    /// and consumed one expert at a time instead (the sequential path's
+    /// interleave). Speculation fires once per layer-tick on the
+    /// batch-aggregated gate distribution.
+    ///
+    /// This is a pure execution-order/dedup optimization: each session's
+    /// logits are bit-identical to what sequential `decode_step` calls
+    /// would produce (attention, routing and the row-parallel expert FFN
+    /// depend only on that session's own state; see
+    /// [`crate::runtime::Runtime::expert_rows_with_lits`] for why
+    /// stacking is bit-safe).
+    ///
+    /// Returns one slot per input session, in order. A slot is `Err` for
+    /// a per-session refusal decided BEFORE any compute — KV-dry
+    /// ([`Error::KvPoolExhausted`]: nothing was fed, the scheduler can
+    /// preempt/retry that session without poisoning the batch) or an
+    /// exhausted context window. The outer `Err` is reserved for engine
+    /// failures mid-tick, after which the participating sessions' state
+    /// is indeterminate.
+    ///
+    /// Width 1 delegates to [`Self::decode_step`] verbatim, so a batch
+    /// of one is bit- and stats-identical to the sequential path. The
+    /// single-session Fig-2 [`SpecProbe`] instrumentation is not
+    /// consulted here (the probe's drivers decode through `decode_step`).
+    pub fn decode_batch(
+        &mut self,
+        sessions: &mut [&mut Session],
+        tokens: &[u32],
+    ) -> Result<Vec<BatchSlot>> {
+        if sessions.len() != tokens.len() {
+            return Err(Error::Engine(format!(
+                "decode_batch: {} sessions but {} tokens",
+                sessions.len(),
+                tokens.len()
+            )));
+        }
+        if sessions.is_empty() {
+            return Ok(Vec::new());
+        }
+        if sessions.len() == 1 {
+            return Ok(vec![self.decode_step(&mut *sessions[0], tokens[0])]);
+        }
+        let max_seq = self.weights.cfg.max_seq;
+        let mut results: Vec<Option<BatchSlot>> =
+            (0..sessions.len()).map(|_| None).collect();
+        // per-session guards + KV block commit, all BEFORE any compute or
+        // state change: a session refused here is untouched this tick
+        let mut live: Vec<usize> = Vec::with_capacity(sessions.len());
+        for i in 0..sessions.len() {
+            let sess = &mut *sessions[i];
+            if sess.pos >= max_seq {
+                results[i] = Some(Err(Error::Engine(format!(
+                    "sequence length {} exceeds max_seq {max_seq}",
+                    sess.pos
+                ))));
+                continue;
+            }
+            let next = sess.pos + 1;
+            match self.ensure_kv(sess, next) {
+                Ok(()) => live.push(i),
+                Err(e) => results[i] = Some(Err(e)),
+            }
+        }
+        if live.is_empty() {
+            return Ok(results.into_iter().map(|r| r.expect("all slots filled")).collect());
+        }
+
+        let sim_start = self.timeline.now();
+        let wall_start = Instant::now();
+        self.batch.ticks += 1;
+        self.batch.rows += live.len() as u64;
+        self.batch.last_occupancy = live.len() as u64;
+        let mut tstats: Vec<TokenStats> = vec![TokenStats::default(); live.len()];
+
+        // embed every live session's token
+        let mut xs: Vec<Tensor> = Vec::with_capacity(live.len());
+        for &i in &live {
+            self.timeline.compute(self.cost.profile.launch_overhead_s, 0.0);
+            xs.push(self.rt.embed(tokens[i], &self.lits.embed)?);
+        }
+
+        for l in 0..self.weights.cfg.n_layers {
+            self.batch_layer_step(sessions, &live, l, &mut xs, &mut tstats)?;
+        }
+
+        // lm head + per-session finalization. Every token in the tick
+        // completed together, so the tick's span is each token's latency
+        // (see TokenStats::sim_s).
+        let mut logits: Vec<Vec<f32>> = Vec::with_capacity(live.len());
+        for x in &xs {
+            self.timeline.compute(self.cost.lm_head_compute_s(), 0.0);
+            logits.push(self.rt.lm_head(x, &self.lits.final_ln, &self.lits.lm_head)?.data);
+        }
+        let sim_s = self.timeline.now() - sim_start;
+        let wall_s = wall_start.elapsed().as_secs_f64();
+        for ((&i, mut ts), row) in live.iter().zip(tstats).zip(logits) {
+            let sess = &mut *sessions[i];
+            sess.pos += 1;
+            sess.token_counter += 1;
+            ts.sim_s = sim_s;
+            ts.wall_s = wall_s;
+            sess.run.sim_total_scaled_s += self.cost.scale_token_time(sim_s);
+            sess.run.wall_total_s += wall_s;
+            sess.run.tokens.push(ts);
+            results[i] = Some(Ok(row));
+        }
+        Ok(results.into_iter().map(|r| r.expect("all slots filled")).collect())
+    }
+
+    /// One transformer layer of a batched tick: per-session attention +
+    /// router (the same shared helper the sequential path uses), union
+    /// expert resolve (one staging per distinct expert), once-per-tick
+    /// speculation, one stacked kernel per expert, weighted accumulation
+    /// back into each session's residual in that session's OWN selection
+    /// order (f32 addition is order-sensitive — summing in union order
+    /// would break bit-identity for top_k ≥ 3).
+    ///
+    /// Placement mirrors the sequential path's two modes: when the whole
+    /// union fits the layer cache it is staged up front and pinned,
+    /// letting speculation overlap the expert compute; when the union
+    /// outgrows the cache — or the policy caches nothing (`OnDemand`,
+    /// k = 0) — each expert is loaded and run in turn (every routed row
+    /// in its one kernel call) with cache-less transients freed right
+    /// after their kernel, so nothing must outlive its own staging and
+    /// the device never holds more expert residency than the sequential
+    /// path would.
+    fn batch_layer_step(
+        &mut self,
+        sessions: &mut [&mut Session],
+        live: &[usize],
+        l: usize,
+        xs: &mut [Tensor],
+        tstats: &mut [TokenStats],
+    ) -> Result<()> {
+        let d = self.weights.cfg.d_model;
+        let e_count = self.weights.cfg.n_experts;
+        let n_live = live.len();
+
+        // 1) attention + router per session — T = 1 kernels on the
+        // session's own KV and residual, bit-identical to layer_step
+        let mut hs: Vec<Tensor> = Vec::with_capacity(n_live);
+        let mut sels: Vec<Vec<usize>> = Vec::with_capacity(n_live);
+        let mut ws: Vec<Vec<f32>> = Vec::with_capacity(n_live);
+        for (j, &i) in live.iter().enumerate() {
+            let sess = &mut *sessions[i];
+            let (x, h, selected, sel_w) = self.attn_route(sess, l, &xs[j])?;
+            xs[j] = x;
+            hs.push(h);
+            sels.push(selected);
+            ws.push(sel_w);
+        }
+
+        // 2) the union of routed experts, in first-appearance (batch)
+        // order — the tick's dedup ledger
+        let mut union: Vec<ExpertId> = Vec::new();
+        let mut routed_pairs = 0u64;
+        for sel in &sels {
+            for &e in sel {
+                routed_pairs += 1;
+                let id = ExpertId::new(l, e);
+                if !union.contains(&id) {
+                    union.push(id);
+                }
+            }
+        }
+        self.batch.experts_resolved += union.len() as u64;
+        self.batch.loads_deduped += routed_pairs - union.len() as u64;
+
+        // 3) placement + one stacked kernel per expert. `outs[u]` holds
+        // the union's u-th expert output rows and which sessions they
+        // belong to; accumulation into residuals happens afterwards, per
+        // session, in selection order.
+        let mut outs: Vec<(Tensor, Vec<usize>)> = Vec::with_capacity(union.len());
+        let routed_of = |sels: &[Vec<usize>], e: usize| -> Vec<usize> {
+            (0..n_live).filter(|&j| sels[j].contains(&e)).collect()
+        };
+        if matches!(self.policy, OffloadPolicy::Naive) {
+            // accelerate-style whole-layer streaming — once per TICK
+            // instead of once per session (the dedup also applies to the
+            // naive baseline; attribution to the first participant, as
+            // for every shared event)
+            self.stream_layer_naive(l, &mut tstats[0])?;
+            for &id in &union {
+                let routed = routed_of(&sels, id.expert as usize);
+                let out = self.run_expert_stacked(id, &hs, &routed)?;
+                outs.push((out, routed));
+            }
+        } else if !matches!(self.policy, OffloadPolicy::OnDemand)
+            && self.cache.cache_k() >= union.len()
+        {
+            // the whole union fits the layer cache: stage it up front —
+            // PINNED, so nothing staged in this tick can be evicted
+            // before a batch neighbor has consumed it — and let
+            // speculation overlap the expert compute (paper §3.3)
+            for &id in &union {
+                self.stage_for_batch(id, &sels, tstats, true)?;
+            }
+            if matches!(self.policy, OffloadPolicy::Full { .. }) {
+                self.speculate_batch(l, xs, tstats)?;
+            }
+            for &id in &union {
+                let routed = routed_of(&sels, id.expert as usize);
+                let out = self.run_expert_stacked(id, &hs, &routed)?;
+                outs.push((out, routed));
+            }
+        } else {
+            // union outgrows the cache (or the policy caches nothing):
+            // load-then-use one expert at a time — each expert is
+            // consumed by ALL its routed rows before the next staging
+            // could displace it, so no pin (and no deferred device copy)
+            // is needed. Cache-less transients are released immediately
+            // after their kernel, so the device never holds more of the
+            // union than the sequential path would (at most one
+            // transient at a time vs. sequential's top_k). Speculation
+            // fires post-compute, as sequential does in this mode.
+            for &id in &union {
+                self.stage_for_batch(id, &sels, tstats, false)?;
+                let routed = routed_of(&sels, id.expert as usize);
+                let out = self.run_expert_stacked(id, &hs, &routed)?;
+                outs.push((out, routed));
+                self.cache.release_transient(id);
+            }
+            if matches!(self.policy, OffloadPolicy::Full { .. }) {
+                self.speculate_batch(l, xs, tstats)?;
+            }
+        }
+
+        // tick over: release pins (settling deferred evictions) and the
+        // k = 0 / naive transients
+        self.cache.unpin_all();
+        for e in 0..e_count {
+            self.cache.release_transient(ExpertId::new(l, e));
+        }
+
+        // 4) weighted accumulation per session, in ITS selection order —
+        // the exact f32 summation order of sequential layer_step
+        for (j, x) in xs.iter_mut().enumerate() {
+            let mut y = vec![0.0f32; d];
+            for (&e, &w) in sels[j].iter().zip(&ws[j]) {
+                let u = union
+                    .iter()
+                    .position(|id| id.expert as usize == e)
+                    .expect("selected expert is in the union");
+                let (out, routed) = &outs[u];
+                let r = routed
+                    .iter()
+                    .position(|&s| s == j)
+                    .expect("session is routed to its own selection");
+                for (acc, v) in y.iter_mut().zip(out.row(r)) {
+                    *acc += w * v;
+                }
+            }
+            for (xi, yi) in x.data.iter_mut().zip(&y) {
+                *xi += yi;
+            }
+        }
+        Ok(())
+    }
+
+    /// Stage one distinct expert for a batched layer-tick and attribute
+    /// the cache event: the first session (batch order) that routed to
+    /// it gets the hit/spec-hit/miss, every other routed session records
+    /// a shared consume ([`TokenStats::batch_shared_hits`]). `pin` makes
+    /// the staging survive any eviction until
+    /// [`CacheManager::unpin_all`] — the enforced invariant behind the
+    /// staged-union mode (placement already guarantees staged experts
+    /// aren't LRU victims while the union fits the cache; the pin keeps
+    /// that true against future placement or eviction-path changes).
+    fn stage_for_batch(
+        &mut self,
+        id: ExpertId,
+        sels: &[Vec<usize>],
+        tstats: &mut [TokenStats],
+        pin: bool,
+    ) -> Result<()> {
+        let e = id.expert as usize;
+        let owner = sels
+            .iter()
+            .position(|sel| sel.contains(&e))
+            .expect("union member is routed by some session");
+        self.ensure_expert(id, &mut tstats[owner])?;
+        if pin {
+            self.cache.pin(id);
+        }
+        for (j, sel) in sels.iter().enumerate() {
+            if j != owner && sel.contains(&e) {
+                tstats[j].batch_shared_hits += 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// Run one resident expert over every routed row in a single kernel
+    /// call (`routed` indexes into `hs`), charging the batched compute
+    /// cost and counting the call.
+    fn run_expert_stacked(
+        &mut self,
+        id: ExpertId,
+        hs: &[Tensor],
+        routed: &[usize],
+    ) -> Result<Tensor> {
+        let d = self.weights.cfg.d_model;
+        self.timeline
+            .compute(self.cost.expert_compute_batched_s(routed.len()), 0.0);
+        let (out, calls) = if routed.len() == 1 {
+            (self.run_expert(id, &hs[routed[0]])?, 1)
+        } else {
+            let mut stacked = Vec::with_capacity(routed.len() * d);
+            for &j in routed {
+                stacked.extend_from_slice(hs[j].row(0));
+            }
+            let stacked = Tensor::new(stacked, vec![routed.len(), d])?;
+            self.run_expert_rows(id, &stacked)?
+        };
+        self.batch.kernel_calls += calls;
+        Ok(out)
+    }
+
+    /// Attention + router for ONE session at layer `l` on a [1, D]
+    /// residual — the shared front half of both the sequential
+    /// [`Self::layer_step`] and the batched [`Self::batch_layer_step`],
+    /// extracted so the two paths cannot drift apart numerically (the
+    /// batched path's bit-identity contract rides on this block being
+    /// the same code). Returns the post-attention residual, the normed
+    /// hidden state, the selected experts and their renormalized top-k
+    /// weights, and records the activation trace.
+    ///
+    /// Attention weights are borrowed in place — no per-layer copies on
+    /// the hot path (see EXPERIMENTS.md §Perf). Virgin layers read the
+    /// shared zero template — bit-identical to a freshly zeroed cache
+    /// since the position mask hides everything at and beyond pos.
+    fn attn_route(
         &mut self,
         sess: &mut Session,
         l: usize,
-        x: Tensor,
-        tstats: &mut TokenStats,
-    ) -> Result<Tensor> {
-        // attention (weights borrowed in place — no per-layer copies on the
-        // hot path; see EXPERIMENTS.md §Perf). Virgin layers read the
-        // shared zero template — bit-identical to a freshly zeroed cache
-        // since the position mask hides everything at and beyond pos.
+        x: &Tensor,
+    ) -> Result<(Tensor, Tensor, Vec<usize>, Vec<f32>)> {
         self.timeline.compute(self.cost.attn_compute_s(), 0.0);
         let (x, kc, vc) = {
             let (k_ref, v_ref) = sess.kv.layer_or(l, &self.lits.zero_kv)?;
-            self.rt.attn(&x, &self.lits.layers[l], k_ref, v_ref, sess.pos)?
+            self.rt.attn(x, &self.lits.layers[l], k_ref, v_ref, sess.pos)?
         };
         sess.kv.set_layer(l, kc, vc)?;
 
@@ -540,10 +920,22 @@ impl MoeEngine {
             session: sess.id,
             token_index: sess.token_counter,
             layer: l,
-            probs: probs.clone(),
+            probs,
             selected: selected.clone(),
             cached_before: self.cache.cached_of_layer(l),
         });
+        Ok((x, h, selected, sel_w))
+    }
+
+    /// One transformer layer on a [1, D] residual.
+    fn layer_step(
+        &mut self,
+        sess: &mut Session,
+        l: usize,
+        x: Tensor,
+        tstats: &mut TokenStats,
+    ) -> Result<Tensor> {
+        let (x, h, selected, sel_w) = self.attn_route(sess, l, &x)?;
 
         // Fig2R probe: speculative gate distributions at several
         // look-aheads (measurement only — no timeline cost)
@@ -566,20 +958,7 @@ impl MoeEngine {
             OffloadPolicy::Naive => {
                 // accelerate-style: synchronously stream the WHOLE MoE
                 // layer through the device, then compute.
-                for e in 0..self.weights.cfg.n_experts {
-                    let id = ExpertId::new(l, e);
-                    let span = self
-                        .timeline
-                        .transfer(self.cost.expert_transfer_s(), self.timeline.now());
-                    let before = self.timeline.now();
-                    self.timeline.wait_until(span.end);
-                    tstats.stall_s += self.timeline.now() - before;
-                    tstats.bytes_transferred += self.cost.expert_wire_bytes;
-                    let ticket = self.copy.submit(id);
-                    let (_, de) = self.copy.wait(ticket)?;
-                    self.cache.insert_loaded(id, de)?;
-                    tstats.misses += 1;
-                }
+                self.stream_layer_naive(l, tstats)?;
             }
             _ => {
                 // with k >= top_k the whole selection fits the layer cache,
@@ -632,6 +1011,28 @@ impl MoeEngine {
         Ok(out)
     }
 
+    /// Naive-offloading transfer pass: synchronously stream EVERY expert
+    /// of layer `l` through the device (accelerate-style), charging the
+    /// link and the caller's stats. Shared by the sequential Naive arm
+    /// (once per session) and the batched tick (once per tick).
+    fn stream_layer_naive(&mut self, l: usize, tstats: &mut TokenStats) -> Result<()> {
+        for e in 0..self.weights.cfg.n_experts {
+            let id = ExpertId::new(l, e);
+            let span = self
+                .timeline
+                .transfer(self.cost.expert_transfer_s(), self.timeline.now());
+            let before = self.timeline.now();
+            self.timeline.wait_until(span.end);
+            tstats.stall_s += self.timeline.now() - before;
+            tstats.bytes_transferred += self.cost.expert_wire_bytes;
+            let ticket = self.copy.submit(id);
+            let (_, de) = self.copy.wait(ticket)?;
+            self.cache.insert_loaded(id, de)?;
+            tstats.misses += 1;
+        }
+        Ok(())
+    }
+
     /// Make `id` resident, classifying hit / spec-hit / miss and advancing
     /// the virtual clock for any wait.
     fn ensure_expert(&mut self, id: ExpertId, tstats: &mut TokenStats) -> Result<()> {
@@ -668,9 +1069,9 @@ impl MoeEngine {
         Ok(())
     }
 
-    /// Run a resident expert on `h`, marshalling (and caching) its
-    /// literals on first use after each transfer.
-    fn run_expert(&mut self, id: ExpertId, h: &Tensor) -> Result<Tensor> {
+    /// Marshal (and cache) a resident expert's literals on first use
+    /// after each transfer.
+    fn ensure_expert_lits(&mut self, id: ExpertId) -> Result<()> {
         if !self.expert_lits.contains_key(&id) {
             let de = self
                 .cache
@@ -684,8 +1085,22 @@ impl MoeEngine {
                 self.expert_lits.retain(|k, _| device.contains(*k));
             }
         }
+        Ok(())
+    }
+
+    /// Run a resident expert on `h`.
+    fn run_expert(&mut self, id: ExpertId, h: &Tensor) -> Result<Tensor> {
+        self.ensure_expert_lits(id)?;
         let lits = &self.expert_lits[&id];
         self.rt.expert_with_lits(h, lits)
+    }
+
+    /// Run a resident expert once over stacked rows `h: [n, D]` (batched
+    /// decode). Returns the `[n, D]` outputs and the kernel-call count.
+    fn run_expert_rows(&mut self, id: ExpertId, h: &Tensor) -> Result<(Tensor, u64)> {
+        self.ensure_expert_lits(id)?;
+        let lits = &self.expert_lits[&id];
+        self.rt.expert_rows_with_lits(h, lits)
     }
 
     /// §3.2: apply layer l+1's gate to layer l's (pre-MoE) hidden state and
@@ -700,8 +1115,22 @@ impl MoeEngine {
         let (spec_logits, _) = self.rt.gate(x, &self.lits.layers[l + 1])?;
         let mut probs = spec_logits.row(0).to_vec();
         softmax(&mut probs);
-        for &e in top_k(&probs, spec_n).iter() {
-            let id = ExpertId::new(l + 1, e);
+        self.prefetch_top(l + 1, &probs, spec_n, tstats)
+    }
+
+    /// Issue speculative transfers for the top `spec_n` experts of
+    /// `layer` under `probs` (shared by the sequential per-session
+    /// [`Self::speculate`] and the batched once-per-tick
+    /// [`Self::speculate_batch`]).
+    fn prefetch_top(
+        &mut self,
+        layer: usize,
+        probs: &[f32],
+        spec_n: usize,
+        tstats: &mut TokenStats,
+    ) -> Result<()> {
+        for &e in top_k(probs, spec_n).iter() {
+            let id = ExpertId::new(layer, e);
             if self.in_flight.contains_key(&id)
                 || self.cache.lookup(id) != crate::cache::manager::Lookup::Absent
             {
@@ -726,6 +1155,42 @@ impl MoeEngine {
             self.spec_queue.push_back(id);
         }
         Ok(())
+    }
+
+    /// Batched speculation: ONE prefetch decision per layer-tick, on the
+    /// batch-aggregated gate distribution, instead of one per session.
+    /// Each session's l+1 gate is still evaluated (and charged) like the
+    /// sequential path; their softmaxed distributions are averaged and
+    /// the union prefetch is issued once — speculative link bandwidth
+    /// follows the batch's consensus instead of being re-spent per
+    /// stream. Transfer bytes are attributed to the batch's first
+    /// participant (the transfers serve the whole batch; splitting them
+    /// across stats rows would misread as N separate prefetches).
+    fn speculate_batch(
+        &mut self,
+        l: usize,
+        xs: &[Tensor],
+        tstats: &mut [TokenStats],
+    ) -> Result<()> {
+        let spec_n = self.policy.spec_n();
+        if spec_n == 0 || l + 1 >= self.weights.cfg.n_layers || xs.is_empty() {
+            return Ok(());
+        }
+        let e_count = self.weights.cfg.n_experts;
+        let mut agg = vec![0.0f32; e_count];
+        for x in xs {
+            self.timeline.compute(self.cost.gate_compute_s(), 0.0);
+            let (spec_logits, _) = self.rt.gate(x, &self.lits.layers[l + 1])?;
+            let mut probs = spec_logits.row(0).to_vec();
+            softmax(&mut probs);
+            for (a, p) in agg.iter_mut().zip(&probs) {
+                *a += p;
+            }
+        }
+        for a in &mut agg {
+            *a /= xs.len() as f32;
+        }
+        self.prefetch_top(l + 1, &agg, spec_n, &mut tstats[0])
     }
 
     // ---------------------------------------------------------------------

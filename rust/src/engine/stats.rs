@@ -3,13 +3,26 @@
 
 #[derive(Debug, Clone, Default)]
 pub struct TokenStats {
-    /// Virtual seconds this token took (timeline delta, unscaled).
+    /// Virtual seconds this token took (timeline delta, unscaled). For a
+    /// token decoded by a batched layer-lockstep tick this is the WHOLE
+    /// tick's span — every token in the batch completes together, so the
+    /// tick duration is each token's latency.
     pub sim_s: f64,
-    /// Host wall seconds (real PJRT execution on this machine).
+    /// Host wall seconds (real PJRT execution on this machine). Batched
+    /// ticks attribute the tick's wall span to every participating token
+    /// (same rationale as `sim_s`).
     pub wall_s: f64,
     pub cache_hits: u64,
     pub spec_hits: u64,
     pub misses: u64,
+    /// Expert stagings this token shared with batch neighbors: the
+    /// expert was already resolved for this layer-tick by an earlier
+    /// session in the batch, so this session consumed it without its own
+    /// cache lookup or transfer. Counts toward [`RunStats::total_hits`]
+    /// (the expert was resident when consumed); the staging session's
+    /// own hit/miss is recorded in ITS stats, so summing misses across a
+    /// batch still equals actual transfers.
+    pub batch_shared_hits: u64,
     pub bytes_transferred: u64,
     /// Virtual seconds the decode front spent stalled on transfers.
     pub stall_s: f64,
@@ -53,9 +66,12 @@ impl RunStats {
         self.tokens.iter().map(|t| t.bytes_transferred).sum()
     }
 
-    /// Demand + speculative hits across the run.
+    /// Demand + speculative + batch-shared hits across the run.
     pub fn total_hits(&self) -> u64 {
-        self.tokens.iter().map(|t| t.cache_hits + t.spec_hits).sum()
+        self.tokens
+            .iter()
+            .map(|t| t.cache_hits + t.spec_hits + t.batch_shared_hits)
+            .sum()
     }
 
     pub fn total_misses(&self) -> u64 {
@@ -109,5 +125,17 @@ mod tests {
             TokenStats { cache_hits: 1, spec_hits: 1, misses: 2, ..Default::default() },
         ];
         assert!((rs.hit_ratio() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn batch_shared_hits_count_as_hits() {
+        // a batch neighbor consuming an expert another session staged in
+        // the same layer-tick had it resident — a hit for ratio purposes
+        let mut rs = RunStats::default();
+        rs.tokens = vec![
+            TokenStats { batch_shared_hits: 3, misses: 1, ..Default::default() },
+        ];
+        assert_eq!(rs.total_hits(), 3);
+        assert!((rs.hit_ratio() - 0.75).abs() < 1e-12);
     }
 }

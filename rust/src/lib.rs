@@ -59,11 +59,18 @@
 //!   instead of static per-session reservation — a pool sized for N full
 //!   sequences admits strictly more than N short streams);
 //!   each scheduling tick gives every live session exactly one decode
-//!   step (round-robin fairness), streaming tokens out per session as
-//!   they decode. Queue wait, live-session counts and KV-pool pressure
+//!   step, streaming tokens out per session as they decode. With
+//!   [`config::ServingConfig::batched_decode`] (default on) and 2+ live
+//!   sessions the tick runs layer-lockstep through
+//!   [`engine::MoeEngine::decode_batch`]: the union of routed experts is
+//!   staged once per layer-tick (pinned against mid-tick eviction) and
+//!   each expert runs one kernel over its stacked routed rows —
+//!   bit-identical per-session output, strictly less expert traffic.
+//!   Queue wait, live-session counts, KV-pool pressure and batch dedup
 //!   are recorded in [`telemetry::Metrics`] (`queue_wait_s`,
-//!   `active_sessions`, `kv_blocks_*`, `kv_preemptions`) and surfaced in
-//!   the server's `done` event. Width 1 reproduces the paper's batch-1
+//!   `active_sessions`, `kv_blocks_*`, `kv_preemptions`,
+//!   `batch_occupancy`, `expert_loads_deduped`) and surfaced in the
+//!   server's `done` event. Width 1 reproduces the paper's batch-1
 //!   serving exactly; width ≥ 2 lets concurrent requests share hot
 //!   experts, which is where offloading wins under load.
 

@@ -340,6 +340,45 @@ impl Runtime {
         Self::tensor_from(&out[0], vec![t, self.cfg.d_model])
     }
 
+    /// Batched-decode expert FFN over stacked token rows `h: [n, D]`
+    /// (one row per routed session in the layer-tick). Returns the
+    /// `[n, D]` outputs plus the number of kernel invocations issued.
+    ///
+    /// `n = 1` uses the decode-shape module — bitwise the sequential
+    /// path. For `n > 1` the AOT artifact set has exactly one wide
+    /// expert shape, the `[prefill_chunk, D]` prefill module, so rows
+    /// are zero-padded up to the chunk width (and chunked in the
+    /// unusual case `n > prefill_chunk`). Padding is bit-safe for the
+    /// same reason prefill's tail padding is: each output row of the
+    /// row-parallel FFN depends only on its own input row, so the valid
+    /// rows are unaffected by the zero rows riding along.
+    pub fn expert_rows_with_lits(
+        &mut self,
+        h: &Tensor,
+        e: &ExpertLits,
+    ) -> Result<(Tensor, u64)> {
+        let n = h.shape[0];
+        if n == 1 {
+            return Ok((self.expert_with_lits(h, e)?, 1));
+        }
+        let c = self.cfg.prefill_chunk;
+        let d = self.cfg.d_model;
+        let mut out = Vec::with_capacity(n * d);
+        let mut calls = 0u64;
+        let mut done = 0usize;
+        while done < n {
+            let take = (n - done).min(c);
+            let mut chunk = vec![0.0f32; c * d];
+            chunk[..take * d].copy_from_slice(&h.data[done * d..(done + take) * d]);
+            let x = Tensor::new(chunk, vec![c, d])?;
+            let o = self.expert_with_lits(&x, e)?;
+            out.extend_from_slice(&o.data[..take * d]);
+            done += take;
+            calls += 1;
+        }
+        Ok((Tensor::new(out, vec![n, d])?, calls))
+    }
+
     /// lm head: x [T, D] -> logits [T, V].
     pub fn lm_head(&mut self, x: &Tensor, final_ln: &Literal, w: &Literal) -> Result<Tensor> {
         let t = x.shape[0];

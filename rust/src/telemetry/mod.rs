@@ -133,6 +133,26 @@ impl Metrics {
         g.insert("prefix_evicted_blocks".to_string(), evicted_blocks);
     }
 
+    /// Record the batched-decode gauges in one shot (`batch_occupancy` /
+    /// `batched_kernel_calls` / `expert_loads_deduped` /
+    /// `batched_ticks`) — the scheduler calls this every batched tick,
+    /// mirroring [`Self::record_kv_pool`]. The counters are engine-
+    /// lifetime totals, published as gauges so re-recording is
+    /// idempotent.
+    pub fn record_batch(
+        &self,
+        occupancy: u64,
+        ticks: u64,
+        kernel_calls: u64,
+        loads_deduped: u64,
+    ) {
+        let mut g = self.gauges.lock().unwrap();
+        g.insert("batch_occupancy".to_string(), occupancy);
+        g.insert("batched_ticks".to_string(), ticks);
+        g.insert("batched_kernel_calls".to_string(), kernel_calls);
+        g.insert("expert_loads_deduped".to_string(), loads_deduped);
+    }
+
     pub fn observe(&self, name: &str, v: f64) {
         self.histograms
             .lock()
@@ -276,6 +296,17 @@ mod tests {
         assert_eq!(m.gauge("prefix_inserted_blocks"), 6);
         assert_eq!(m.gauge("prefix_evicted_blocks"), 2);
         assert!(m.render().contains("prefix_tokens_reused 96"));
+    }
+
+    #[test]
+    fn batch_gauges_record_together() {
+        let m = Metrics::new();
+        m.record_batch(4, 10, 120, 36);
+        assert_eq!(m.gauge("batch_occupancy"), 4);
+        assert_eq!(m.gauge("batched_ticks"), 10);
+        assert_eq!(m.gauge("batched_kernel_calls"), 120);
+        assert_eq!(m.gauge("expert_loads_deduped"), 36);
+        assert!(m.render().contains("expert_loads_deduped 36"));
     }
 
     #[test]

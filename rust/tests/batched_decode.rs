@@ -1,0 +1,421 @@
+//! Integration: layer-lockstep batched decode against the real engine.
+//! Requires `make artifacts` (skips cleanly otherwise); the pinning and
+//! accounting contracts are also covered by always-on unit tests in
+//! `rust/src/cache/manager.rs`.
+//!
+//! Batched decode is a pure execution-order/dedup optimization, so the
+//! contracts are equivalences:
+//! * a width-1 batch delegates to the sequential step — bit-identical
+//!   to the seed path, stats included;
+//! * width-N batched produces bit-identical per-session logits to
+//!   width-N sequential round-robin, while staging each distinct
+//!   routed expert once per layer-tick (strictly fewer expert loads
+//!   than sequential when sessions collide under a small cache — the
+//!   case that also exercises the mid-tick pinning hazard);
+//! * the equivalence survives preemption/resume mid-stream;
+//! * end to end, a batched coordinator emits the same per-request text
+//!   as a sequential one — including under KV pressure (preemption)
+//!   and with the prefix cache on.
+
+use std::path::{Path, PathBuf};
+
+use moe_offload::config::{
+    HardwareProfile, OffloadPolicy, QuantScheme, ServingConfig, SimScale,
+};
+use moe_offload::coordinator::{collect_events, Coordinator, Event, Request};
+use moe_offload::engine::{MoeEngine, Session};
+use moe_offload::harness;
+use moe_offload::Result;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() && dir.join("weights.npz").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn make_engine(dir: &Path, sessions: usize, policy: OffloadPolicy) -> Result<MoeEngine> {
+    let serving = ServingConfig {
+        policy,
+        expert_quant: QuantScheme::Hqq { bits: 3 },
+        attn_quant: QuantScheme::Hqq { bits: 4 },
+        sim_scale: SimScale::Tiny,
+        max_concurrent_sessions: sessions,
+        ..Default::default()
+    };
+    harness::build_engine_with_serving(dir, &serving, HardwareProfile::rtx3060())
+}
+
+fn bits(logits: &[Vec<f32>]) -> Vec<Vec<u32>> {
+    logits.iter().map(|row| row.iter().map(|x| x.to_bits()).collect()).collect()
+}
+
+fn toks(s: &str) -> Vec<u32> {
+    s.bytes().map(|b| b as u32).collect()
+}
+
+/// Width-N sequential reference: one round-robin decode_step per session
+/// per tick (exactly the pre-batching scheduler's order). Returns
+/// per-session, per-tick logits.
+fn drive_sequential(
+    engine: &mut MoeEngine,
+    sessions: &mut [Session],
+    streams: &[Vec<u32>],
+    ticks: usize,
+) -> Vec<Vec<Vec<f32>>> {
+    let mut out = vec![Vec::new(); sessions.len()];
+    for t in 0..ticks {
+        for (i, sess) in sessions.iter_mut().enumerate() {
+            out[i].push(engine.decode_step(sess, streams[i][t]).unwrap());
+        }
+    }
+    out
+}
+
+/// Width-N batched: one decode_batch tick over all sessions.
+fn drive_batched(
+    engine: &mut MoeEngine,
+    sessions: &mut [Session],
+    streams: &[Vec<u32>],
+    ticks: usize,
+) -> Vec<Vec<Vec<f32>>> {
+    let mut out = vec![Vec::new(); sessions.len()];
+    for t in 0..ticks {
+        let tick_toks: Vec<u32> = (0..sessions.len()).map(|i| streams[i][t]).collect();
+        let mut refs: Vec<&mut Session> = sessions.iter_mut().collect();
+        let results = engine.decode_batch(&mut refs, &tick_toks).unwrap();
+        for (i, slot) in results.into_iter().enumerate() {
+            out[i].push(slot.unwrap());
+        }
+    }
+    out
+}
+
+#[test]
+fn width1_batch_is_bit_identical_to_sequential_step() {
+    let Some(dir) = artifacts_dir() else { return };
+    let stream = toks("the quick brown fox jumps");
+    let policy = OffloadPolicy::Full { cache_k: 2, spec_n: 2 };
+
+    let mut es = make_engine(&dir, 1, policy).unwrap();
+    let mut ss = es.new_session().unwrap();
+    let mut ref_logits = Vec::new();
+    for &t in &stream {
+        ref_logits.push(es.decode_step(&mut ss, t).unwrap());
+    }
+
+    let mut eb = make_engine(&dir, 1, policy).unwrap();
+    let mut sb = eb.new_session().unwrap();
+    let mut got_logits = Vec::new();
+    for &t in &stream {
+        let mut refs: Vec<&mut Session> = vec![&mut sb];
+        let r = eb.decode_batch(&mut refs, &[t]).unwrap();
+        got_logits.push(r.into_iter().next().unwrap().unwrap());
+    }
+
+    assert_eq!(
+        bits(&ref_logits),
+        bits(&got_logits),
+        "a width-1 batch must be bit-identical to the sequential step"
+    );
+    assert_eq!(
+        eb.batch.ticks, 0,
+        "width-1 delegates — it is not a batched tick"
+    );
+    // stats delegate too: same per-token accounting, to the bit
+    assert_eq!(ss.run.total_misses(), sb.run.total_misses());
+    assert_eq!(ss.run.total_hits(), sb.run.total_hits());
+    assert_eq!(
+        ss.run.sim_total_scaled_s.to_bits(),
+        sb.run.sim_total_scaled_s.to_bits(),
+        "width-1 timeline accounting must not change"
+    );
+}
+
+#[test]
+fn width4_batched_logits_match_width4_sequential_bitwise() {
+    let Some(dir) = artifacts_dir() else { return };
+    // four streams sharing a head (guaranteed routing collisions early
+    // on) that diverge into distinct tails
+    let streams: Vec<Vec<u32>> = [
+        "the quick brown fox jumps",
+        "the quick brown lazy dogs",
+        "the quick brown lru cache",
+        "the quick brown mixtures!",
+    ]
+    .iter()
+    .map(|s| toks(s))
+    .collect();
+    let ticks = streams[0].len();
+    let policy = OffloadPolicy::Full { cache_k: 2, spec_n: 2 };
+
+    let mut es = make_engine(&dir, 4, policy).unwrap();
+    let mut seq: Vec<Session> = (0..4).map(|_| es.new_session().unwrap()).collect();
+    let ref_logits = drive_sequential(&mut es, &mut seq, &streams, ticks);
+
+    let mut eb = make_engine(&dir, 4, policy).unwrap();
+    let mut bat: Vec<Session> = (0..4).map(|_| eb.new_session().unwrap()).collect();
+    let got_logits = drive_batched(&mut eb, &mut bat, &streams, ticks);
+
+    for i in 0..4 {
+        assert_eq!(
+            bits(&ref_logits[i]),
+            bits(&got_logits[i]),
+            "session {i} diverged between batched and sequential decode"
+        );
+    }
+    assert_eq!(eb.batch.ticks, ticks as u64);
+    assert_eq!(eb.batch.rows, 4 * ticks as u64);
+    assert_eq!(eb.batch.last_occupancy, 4);
+    assert!(eb.batch.kernel_calls > 0);
+    assert!(
+        eb.batch.loads_deduped > 0,
+        "a shared stream head must produce routing collisions to dedup"
+    );
+}
+
+#[test]
+fn colliding_batch_stages_strictly_fewer_expert_loads() {
+    let Some(dir) = artifacts_dir() else { return };
+    // IDENTICAL streams + cache_k = 1 < top_k = 2: the worst thrash
+    // case — sequentially, loading a session's second expert evicts its
+    // first, so every session re-stages both every layer (8 loads per
+    // layer-tick at width 4); the batched tick resolves the union once
+    // (≤ 2 loads) and runs each expert for ALL routed rows before the
+    // next staging could evict it. Identical streams also force the
+    // stacked kernel through the multi-row path, so this doubles as the
+    // row-stability check for the one-kernel-per-expert call.
+    let stream = toks("an lru cache evicts expert");
+    let streams: Vec<Vec<u32>> = (0..4).map(|_| stream.clone()).collect();
+    let ticks = stream.len();
+    let policy = OffloadPolicy::LruOnly { cache_k: 1 };
+
+    let mut es = make_engine(&dir, 4, policy).unwrap();
+    let mut seq: Vec<Session> = (0..4).map(|_| es.new_session().unwrap()).collect();
+    let ref_logits = drive_sequential(&mut es, &mut seq, &streams, ticks);
+
+    let mut eb = make_engine(&dir, 4, policy).unwrap();
+    let mut bat: Vec<Session> = (0..4).map(|_| eb.new_session().unwrap()).collect();
+    let got_logits = drive_batched(&mut eb, &mut bat, &streams, ticks);
+
+    for i in 0..4 {
+        assert_eq!(
+            bits(&ref_logits[i]),
+            bits(&got_logits[i]),
+            "session {i} diverged under expert-cache thrash"
+        );
+    }
+    let seq_misses: u64 = seq.iter().map(|s| s.run.total_misses()).sum();
+    let bat_misses: u64 = bat.iter().map(|s| s.run.total_misses()).sum();
+    assert!(
+        bat_misses < seq_misses,
+        "batched union staging must transfer strictly less than sequential \
+         thrash ({bat_misses} vs {seq_misses})"
+    );
+    // identical routing across 4 sessions: 8 routed pairs collapse to 2
+    // distinct experts per layer-tick
+    assert!(eb.batch.loads_deduped >= eb.batch.experts_resolved * 3);
+    // hit accounting stays conserved: every routed pair is a miss, a
+    // hit, or a batch-shared consume
+    let bat_hits: u64 = bat.iter().map(|s| s.run.total_hits()).sum();
+    assert_eq!(bat_hits + bat_misses, seq_misses + seq.iter().map(|s| s.run.total_hits()).sum::<u64>());
+}
+
+#[test]
+fn batched_decode_is_bit_exact_across_preempt_resume() {
+    let Some(dir) = artifacts_dir() else { return };
+    let streams: Vec<Vec<u32>> = vec![
+        toks("a stream that keeps running"),
+        toks("a stream that gets swapped"),
+    ];
+    let policy = OffloadPolicy::Full { cache_k: 2, spec_n: 2 };
+    let split = 8usize;
+    let solo = 4usize;
+
+    // reference: sequential schedule with B preempted for `solo` ticks
+    let mut es = make_engine(&dir, 2, policy).unwrap();
+    let mut sa = es.new_session().unwrap();
+    let mut sb = es.new_session().unwrap();
+    let mut ref_a = Vec::new();
+    let mut ref_b = Vec::new();
+    for t in 0..split {
+        ref_a.push(es.decode_step(&mut sa, streams[0][t]).unwrap());
+        ref_b.push(es.decode_step(&mut sb, streams[1][t]).unwrap());
+    }
+    es.preempt_session(&mut sb).unwrap();
+    for t in split..split + solo {
+        ref_a.push(es.decode_step(&mut sa, streams[0][t]).unwrap());
+    }
+    es.resume_session(&mut sb).unwrap();
+    for t in split + solo..streams[0].len() {
+        ref_a.push(es.decode_step(&mut sa, streams[0][t]).unwrap());
+        ref_b.push(es.decode_step(&mut sb, streams[1][t - solo]).unwrap());
+    }
+
+    // batched: same schedule through decode_batch (width drops to 1
+    // while B is swapped out, then returns to 2)
+    let mut eb = make_engine(&dir, 2, policy).unwrap();
+    let mut ba = eb.new_session().unwrap();
+    let mut bb = eb.new_session().unwrap();
+    let mut got_a = Vec::new();
+    let mut got_b = Vec::new();
+    for t in 0..split {
+        let mut refs: Vec<&mut Session> = vec![&mut ba, &mut bb];
+        let r = eb.decode_batch(&mut refs, &[streams[0][t], streams[1][t]]).unwrap();
+        let mut it = r.into_iter();
+        got_a.push(it.next().unwrap().unwrap());
+        got_b.push(it.next().unwrap().unwrap());
+    }
+    eb.preempt_session(&mut bb).unwrap();
+    for t in split..split + solo {
+        let mut refs: Vec<&mut Session> = vec![&mut ba];
+        let r = eb.decode_batch(&mut refs, &[streams[0][t]]).unwrap();
+        got_a.push(r.into_iter().next().unwrap().unwrap());
+    }
+    eb.resume_session(&mut bb).unwrap();
+    for t in split + solo..streams[0].len() {
+        let mut refs: Vec<&mut Session> = vec![&mut ba, &mut bb];
+        let r = eb
+            .decode_batch(&mut refs, &[streams[0][t], streams[1][t - solo]])
+            .unwrap();
+        let mut it = r.into_iter();
+        got_a.push(it.next().unwrap().unwrap());
+        got_b.push(it.next().unwrap().unwrap());
+    }
+
+    assert_eq!(bits(&ref_a), bits(&got_a), "uninterrupted stream diverged");
+    assert_eq!(
+        bits(&ref_b),
+        bits(&got_b),
+        "preempted+resumed stream must continue bit-identically under batching"
+    );
+}
+
+/// End-to-end scheduler equivalence: same requests, batched on vs off,
+/// must stream the same per-request text — here under KV pressure
+/// (forced preemption) AND with the prefix cache on, the two subsystems
+/// the batched tick has to degrade gracefully around.
+#[test]
+fn coordinator_texts_identical_batched_vs_sequential() {
+    let Some(dir) = artifacts_dir() else { return };
+    let run = |batched: bool| {
+        let dir2 = dir.clone();
+        let coord = Coordinator::new(
+            move || {
+                let serving = ServingConfig {
+                    policy: OffloadPolicy::Full { cache_k: 2, spec_n: 2 },
+                    expert_quant: QuantScheme::Hqq { bits: 3 },
+                    attn_quant: QuantScheme::Hqq { bits: 4 },
+                    sim_scale: SimScale::Tiny,
+                    max_concurrent_sessions: 2,
+                    kv_block_tokens: 16,
+                    kv_pool_tokens: Some(96),
+                    prefix_cache: true,
+                    batched_decode: batched,
+                    ..Default::default()
+                };
+                harness::build_engine_with_serving(
+                    &dir2,
+                    &serving,
+                    HardwareProfile::rtx3060(),
+                )
+            },
+            7,
+        );
+        let mk = |prompt: String, max_tokens: usize| {
+            let mut r = Request::new(prompt);
+            r.chat = false;
+            r.max_tokens = max_tokens;
+            r
+        };
+        // paged-KV pressure workload: A (60 tokens = 4 blocks with 4
+        // free positions) and B (30 tokens = 2 blocks with 2 free
+        // positions) fill the 6-block pool at admission, decode a few
+        // lockstep ticks together, then B's third decode crosses a
+        // block boundary with the pool dry — forcing a preemption mid-
+        // stream. The third request repeats A's prompt so it can seed
+        // from the prefix cache once a slot frees up.
+        let sa = coord.submit(mk("a".repeat(60), 8));
+        let sb = coord.submit(mk("b".repeat(30), 8));
+        let sc = coord.submit(mk("a".repeat(60), 8));
+        let texts: Vec<String> = [sa, sb, sc]
+            .into_iter()
+            .map(|s| {
+                collect_events(s)
+                    .iter()
+                    .find_map(|ev| match ev {
+                        Event::Done { text, .. } => Some(text.clone()),
+                        _ => None,
+                    })
+                    .expect("request must finish, not error")
+            })
+            .collect();
+        let failed = coord.metrics.counter("requests_failed");
+        let batched_ticks = coord.metrics.gauge("batched_ticks");
+        let occupancy = coord.metrics.gauge("batch_occupancy");
+        (texts, failed, batched_ticks, occupancy)
+    };
+
+    let (seq_texts, seq_failed, seq_ticks, _) = run(false);
+    let (bat_texts, bat_failed, bat_ticks, bat_occ) = run(true);
+    assert_eq!(seq_failed, 0);
+    assert_eq!(bat_failed, 0);
+    assert_eq!(
+        seq_texts, bat_texts,
+        "batched scheduling must not change any request's text"
+    );
+    assert_eq!(seq_ticks, 0, "sequential mode must never run a batched tick");
+    assert!(bat_ticks >= 1, "two live sessions must have batched at least once");
+    // the gauge holds the LAST batched tick's width, which can be 1 when
+    // a neighbor went KV-dry — only assert it was recorded
+    assert!(bat_occ >= 1, "batch occupancy gauge records the lockstep width");
+}
+
+/// Width-1 serving is the paper's batch-1 path: the batched_decode knob
+/// must be inert there, token for token.
+#[test]
+fn width1_coordinator_is_unaffected_by_batched_knob() {
+    let Some(dir) = artifacts_dir() else { return };
+    let run = |batched: bool| {
+        let dir2 = dir.clone();
+        let coord = Coordinator::new(
+            move || {
+                let serving = ServingConfig {
+                    policy: OffloadPolicy::Full { cache_k: 2, spec_n: 2 },
+                    expert_quant: QuantScheme::Hqq { bits: 3 },
+                    attn_quant: QuantScheme::Hqq { bits: 4 },
+                    sim_scale: SimScale::Tiny,
+                    max_concurrent_sessions: 1,
+                    batched_decode: batched,
+                    ..Default::default()
+                };
+                harness::build_engine_with_serving(
+                    &dir2,
+                    &serving,
+                    HardwareProfile::rtx3060(),
+                )
+            },
+            42,
+        );
+        let mut req = Request::new("what is a mixture of experts?".to_string());
+        req.max_tokens = 12;
+        let events = collect_events(coord.submit(req));
+        let (text, ticks) = events
+            .iter()
+            .find_map(|ev| match ev {
+                Event::Done { text, .. } => {
+                    Some((text.clone(), coord.metrics.gauge("batched_ticks")))
+                }
+                _ => None,
+            })
+            .expect("request must finish");
+        (text, ticks)
+    };
+    let (t_off, _) = run(false);
+    let (t_on, ticks_on) = run(true);
+    assert_eq!(t_off, t_on, "width-1 output must not depend on the knob");
+    assert_eq!(ticks_on, 0, "width 1 never enters the batched path");
+}
