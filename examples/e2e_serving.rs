@@ -1,7 +1,11 @@
-//! End-to-end serving driver (the DESIGN.md validation workload): boot the
-//! full stack — artifacts → PJRT runtime → engine → coordinator → TCP
-//! server — then fire a batch of chat requests at the socket and report
-//! latency/throughput percentiles.
+//! End-to-end serving driver: boot the full stack — artifacts → PJRT
+//! runtime → engine → coordinator → TCP server — and fire a MIXED
+//! workload at the socket: one long-prompt admission against three
+//! chatty short-decode clients, concurrently, the head-of-line case the
+//! chunked-prefill tick scheduler exists for. The workload runs twice —
+//! synchronous admission, then chunked prefill — and reports what each
+//! client experiences: time-to-first-token and the decode stalls the
+//! long prefill inflicts on its neighbors.
 //!
 //! ```bash
 //! cargo run --release --example e2e_serving
@@ -12,30 +16,68 @@ use std::net::TcpStream;
 use std::sync::Arc;
 use std::time::Instant;
 
-use moe_offload::config::{HardwareProfile, OffloadPolicy, QuantScheme, ServingConfig, SimScale};
 use moe_offload::config::Manifest;
+use moe_offload::config::{HardwareProfile, OffloadPolicy, QuantScheme, ServingConfig, SimScale};
 use moe_offload::coordinator::{server::Server, Coordinator};
 use moe_offload::engine::MoeEngine;
 use moe_offload::harness;
 use moe_offload::model::ModelWeights;
 use moe_offload::util::json::Json;
 
-const PROMPTS: &[&str] = &[
+const SHORT_PROMPTS: &[&str] = &[
     "what is a mixture of experts model",
     "explain how an LRU cache works",
-    "why is my program slow",
-    "what does quantization do to a neural network",
-    "how does speculative loading help",
-    "can I run large models on a laptop",
-    "what is the difference between ram and vram",
-    "what is perplexity",
+    "what does quantization do to a network",
 ];
+const LONG_PROMPT_TOKENS: usize = 200;
+const SHORT_MAX_TOKENS: usize = 24;
 
-fn main() -> anyhow::Result<()> {
-    let dir = harness::artifacts_dir()?;
-    let dir2 = dir.clone();
+/// What one client measured: TTFT plus the wall gaps between its tokens.
+struct ClientReport {
+    ttft_s: f64,
+    gaps_s: Vec<f64>,
+    new_tokens: usize,
+}
 
-    // 1. boot the full stack
+fn drive_client(
+    addr: std::net::SocketAddr,
+    prompt: &str,
+    max_tokens: usize,
+) -> anyhow::Result<ClientReport> {
+    let mut conn = TcpStream::connect(addr)?;
+    let reader = BufReader::new(conn.try_clone()?);
+    writeln!(
+        conn,
+        r#"{{"prompt":"{prompt}","max_tokens":{max_tokens},"temperature":0.9,"chat":false}}"#
+    )?;
+    conn.flush()?;
+    let mut stamps: Vec<Instant> = Vec::new();
+    let mut ttft_s = 0.0f64;
+    let mut new_tokens = 0usize;
+    for line in reader.lines() {
+        let line = line?;
+        let v = Json::parse(&line)?;
+        match v.get("type").and_then(Json::as_str) {
+            Some("token") => stamps.push(Instant::now()),
+            Some("done") => {
+                ttft_s = v.get("ttft_s").and_then(Json::as_f64).unwrap_or(0.0);
+                new_tokens = v.get("new_tokens").and_then(Json::as_usize).unwrap_or(0);
+                break;
+            }
+            _ => anyhow::bail!("unexpected line: {line}"),
+        }
+    }
+    let gaps_s = stamps
+        .windows(2)
+        .map(|w| w[1].duration_since(w[0]).as_secs_f64())
+        .collect();
+    Ok(ClientReport { ttft_s, gaps_s, new_tokens })
+}
+
+/// Boot one full stack and run the mixed workload against the socket.
+/// Returns (long ttft, short ttft p50, stall p50, stall p99, tokens/s).
+fn run_mode(dir: &std::path::Path, chunked: bool) -> anyhow::Result<(f64, f64, f64, f64, f64)> {
+    let dir2 = dir.to_path_buf();
     let coordinator = Arc::new(Coordinator::new(
         move || -> moe_offload::Result<MoeEngine> {
             let manifest = Manifest::load(&dir2)?;
@@ -50,6 +92,8 @@ fn main() -> anyhow::Result<()> {
                 expert_quant: QuantScheme::Hqq { bits: 3 },
                 attn_quant: QuantScheme::Hqq { bits: 4 },
                 sim_scale: SimScale::Tiny,
+                max_concurrent_sessions: 4,
+                chunked_prefill: chunked,
                 ..Default::default()
             };
             MoeEngine::new(&manifest, weights, &serving, HardwareProfile::rtx3060())
@@ -59,72 +103,80 @@ fn main() -> anyhow::Result<()> {
     let server = Server::bind("127.0.0.1:0", Arc::clone(&coordinator))?;
     let addr = server.local_addr()?;
     std::thread::spawn(move || {
-        let _ = server.serve(Some(1));
+        let _ = server.serve(Some(SHORT_PROMPTS.len() + 1));
     });
-    println!("=== e2e serving: {} requests against {addr} ===\n", PROMPTS.len());
 
-    // 2. drive the socket like a client would
-    let mut conn = TcpStream::connect(addr)?;
-    let reader = BufReader::new(conn.try_clone()?);
-    let mut lines = reader.lines();
-    let mut latencies = Vec::new();
-    let mut first_token_lats = Vec::new();
-    let mut total_new_tokens = 0usize;
     let t_all = Instant::now();
+    // chatty short decoders first, then the long admission they must
+    // survive
+    let shorts: Vec<_> = SHORT_PROMPTS
+        .iter()
+        .map(|p| {
+            let p = p.to_string();
+            std::thread::spawn(move || drive_client(addr, &p, SHORT_MAX_TOKENS))
+        })
+        .collect();
+    let long_prompt = "x".repeat(LONG_PROMPT_TOKENS);
+    let long = drive_client(addr, &long_prompt, 4)?;
 
-    for prompt in PROMPTS {
-        let t0 = Instant::now();
-        writeln!(
-            conn,
-            r#"{{"prompt":"{prompt}","max_tokens":32,"temperature":0.9}}"#
-        )?;
-        conn.flush()?;
-        let mut first_token = None;
-        loop {
-            let line = lines.next().expect("server closed")?;
-            let v = Json::parse(&line)?;
-            match v.get("type").and_then(Json::as_str) {
-                Some("token") => {
-                    first_token.get_or_insert_with(|| t0.elapsed().as_secs_f64());
-                }
-                Some("done") => {
-                    let lat = t0.elapsed().as_secs_f64();
-                    let n = v.get("new_tokens").unwrap().as_usize().unwrap();
-                    total_new_tokens += n;
-                    latencies.push(lat);
-                    first_token_lats.push(first_token.unwrap_or(lat));
-                    println!(
-                        "  {prompt:52} {n:>3} tok  {lat:>6.2}s  ttft {:>5.2}s",
-                        first_token.unwrap_or(lat)
-                    );
-                    break;
-                }
-                _ => anyhow::bail!("unexpected line: {line}"),
-            }
-        }
+    let mut short_ttfts: Vec<f64> = Vec::new();
+    let mut gaps: Vec<f64> = Vec::new();
+    let mut total_tokens = long.new_tokens;
+    for h in shorts {
+        let r = h.join().expect("client thread")?;
+        short_ttfts.push(r.ttft_s);
+        gaps.extend(r.gaps_s);
+        total_tokens += r.new_tokens;
     }
     let wall = t_all.elapsed().as_secs_f64();
-
-    // 3. report
-    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    first_token_lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let pct = |v: &[f64], q: f64| v[((v.len() - 1) as f64 * q) as usize];
+    short_ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    gaps.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |v: &[f64], q: f64| {
+        if v.is_empty() {
+            0.0
+        } else {
+            v[((v.len() - 1) as f64 * q) as usize]
+        }
+    };
     println!(
-        "\nthroughput : {:.2} tokens/s end-to-end ({} tokens / {:.1}s wall)\n\
-         latency    : p50 {:.2}s  p90 {:.2}s  max {:.2}s\n\
-         ttft       : p50 {:.2}s  p90 {:.2}s\n\
-         server     : {} ok / {} requests, mean request {:.2}s",
-        total_new_tokens as f64 / wall,
-        total_new_tokens,
-        wall,
-        pct(&latencies, 0.5),
-        pct(&latencies, 0.9),
-        latencies.last().unwrap(),
-        pct(&first_token_lats, 0.5),
-        pct(&first_token_lats, 0.9),
-        coordinator.metrics.counter("requests_ok"),
-        coordinator.metrics.counter("requests_started"),
-        coordinator.metrics.histogram_mean("request_latency_s"),
+        "  {} admission: long ttft {:.3}s | short ttft p50 {:.3}s | decode stall \
+         p50 {:.4}s p99 {:.4}s | {} mixed ticks | {:.1} tok/s end-to-end",
+        if chunked { "chunked   " } else { "synchronous" },
+        long.ttft_s,
+        pct(&short_ttfts, 0.5),
+        pct(&gaps, 0.5),
+        pct(&gaps, 0.99),
+        coordinator.metrics.gauge("mixed_ticks"),
+        total_tokens as f64 / wall,
+    );
+    Ok((
+        long.ttft_s,
+        pct(&short_ttfts, 0.5),
+        pct(&gaps, 0.5),
+        pct(&gaps, 0.99),
+        total_tokens as f64 / wall,
+    ))
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = harness::artifacts_dir()?;
+    println!(
+        "=== e2e serving: one {LONG_PROMPT_TOKENS}-token admission vs {} chatty \
+         decoders, synchronous vs chunked prefill ===\n",
+        SHORT_PROMPTS.len()
+    );
+    let (sync_ttft, _, _, sync_p99, _) = run_mode(&dir, false)?;
+    let (ch_ttft, _, _, ch_p99, _) = run_mode(&dir, true)?;
+    println!(
+        "\nchunked prefill: long ttft {:.2}x of synchronous, neighbor decode-stall \
+         p99 {:.2}x",
+        ch_ttft / sync_ttft.max(1e-9),
+        ch_p99 / sync_p99.max(1e-9),
+    );
+    println!(
+        "(the long admission trades a little TTFT for the neighbors' tail \
+         latency — the Sarathi trade the tick planner makes tunable via \
+         prefill_chunk_tokens / max_batch_tokens)"
     );
     Ok(())
 }

@@ -11,6 +11,7 @@ use bench_harness::bench;
 use moe_offload::config::{
     HardwareProfile, OffloadPolicy, QuantScheme, ServingConfig, SimScale,
 };
+use moe_offload::coordinator::{Coordinator, Event, Request};
 use moe_offload::harness;
 use moe_offload::Error;
 
@@ -321,6 +322,128 @@ fn main() {
     match std::fs::write(bench_path, &bench_json) {
         Ok(()) => println!("  wrote {bench_path}"),
         Err(e) => eprintln!("  could not write {bench_path}: {e}"),
+    }
+
+    // chunked prefill: TTFT of a long admission and the decode stall it
+    // inflicts on chatty neighbors, chunked vs synchronous, at width 4.
+    // Decode stall = wall gap between consecutive streamed tokens of the
+    // short requests (the p99 is what a synchronous prefill wrecks).
+    // Emits the machine-readable trajectory to ../BENCH_5.json.
+    let long_len = if smoke { 80 } else { 200 };
+    let short_budget = if smoke { 8 } else { 24 };
+    println!(
+        "\nchunked_prefill (width 4: one {long_len}-token admission vs 3 chatty \
+         {short_budget}-token decoders):"
+    );
+    // (long ttft_s, stall p50, stall p99, mixed ticks)
+    let run_mixed_workload = |chunked: bool| -> (f64, f64, f64, u64) {
+        let dir2 = dir.clone();
+        let serving = ServingConfig {
+            policy: OffloadPolicy::Full { cache_k: 2, spec_n: 2 },
+            expert_quant: QuantScheme::Hqq { bits: 3 },
+            attn_quant: QuantScheme::Hqq { bits: 4 },
+            sim_scale: SimScale::Tiny,
+            max_concurrent_sessions: 4,
+            chunked_prefill: chunked,
+            // budget-only stopping: identical stream lengths either mode
+            stop_suffix: String::new(),
+            ..Default::default()
+        };
+        let coord = Coordinator::new(
+            move || {
+                harness::build_engine_with_serving(&dir2, &serving, HardwareProfile::rtx3060())
+            },
+            11,
+        );
+        let shorts: Vec<_> = (0..3)
+            .map(|i| {
+                let mut r = Request::new(format!("chatty stream number {i} says hi"));
+                r.chat = false;
+                r.max_tokens = short_budget;
+                coord.submit(r)
+            })
+            .collect();
+        let mut long_req = Request::new("x".repeat(long_len));
+        long_req.chat = false;
+        long_req.max_tokens = 4;
+        let long_stream = coord.submit(long_req);
+
+        // drain every short stream on its own thread, timestamping tokens
+        let collectors: Vec<_> = shorts
+            .into_iter()
+            .map(|s| {
+                std::thread::spawn(move || {
+                    let mut stamps = Vec::new();
+                    for ev in s.events.iter() {
+                        match ev {
+                            Event::Token { .. } => stamps.push(std::time::Instant::now()),
+                            Event::Done { .. } | Event::Error { .. } => break,
+                        }
+                    }
+                    stamps
+                })
+            })
+            .collect();
+        // the long request's TTFT comes straight from its done event
+        let mut long_ttft = 0.0f64;
+        for ev in long_stream.events.iter() {
+            match ev {
+                Event::Done { ttft_s, .. } => {
+                    long_ttft = ttft_s;
+                    break;
+                }
+                Event::Error { message, .. } => panic!("long request failed: {message}"),
+                Event::Token { .. } => {}
+            }
+        }
+        let mut gaps: Vec<f64> = Vec::new();
+        for c in collectors {
+            let stamps = c.join().expect("collector thread");
+            for w in stamps.windows(2) {
+                gaps.push(w[1].duration_since(w[0]).as_secs_f64());
+            }
+        }
+        gaps.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |q: f64| -> f64 {
+            if gaps.is_empty() {
+                0.0
+            } else {
+                gaps[((gaps.len() - 1) as f64 * q) as usize]
+            }
+        };
+        (long_ttft, pct(0.5), pct(0.99), coord.metrics.gauge("mixed_ticks"))
+    };
+    let (sync_ttft, sync_p50, sync_p99, sync_mixed) = run_mixed_workload(false);
+    let (ch_ttft, ch_p50, ch_p99, ch_mixed) = run_mixed_workload(true);
+    println!(
+        "  synchronous: long ttft {sync_ttft:.4}s  decode stall p50 {sync_p50:.4}s \
+         p99 {sync_p99:.4}s"
+    );
+    println!(
+        "  chunked    : long ttft {ch_ttft:.4}s  decode stall p50 {ch_p50:.4}s \
+         p99 {ch_p99:.4}s  ({ch_mixed} mixed ticks)"
+    );
+    assert_eq!(sync_mixed, 0, "synchronous admission must never run a mixed tick");
+    assert!(ch_mixed >= 1, "chunked admission must fuse at least one mixed tick");
+    let bench5 = format!(
+        concat!(
+            "{{\"bench\":\"chunked_prefill\",\"schema\":1,\"status\":\"measured\",",
+            "\"policy\":\"full_k2_spec2\",\"sim_scale\":\"tiny\",\"width\":4,",
+            "\"long_prompt_tokens\":{},\"short_decode_tokens\":{},\"smoke\":{},",
+            "\"modes\":[",
+            "{{\"chunked\":false,\"long_ttft_s\":{:.6},\"decode_stall_p50_s\":{:.6},",
+            "\"decode_stall_p99_s\":{:.6},\"mixed_ticks\":{}}},",
+            "{{\"chunked\":true,\"long_ttft_s\":{:.6},\"decode_stall_p50_s\":{:.6},",
+            "\"decode_stall_p99_s\":{:.6},\"mixed_ticks\":{}}}]}}\n"
+        ),
+        long_len, short_budget, smoke,
+        sync_ttft, sync_p50, sync_p99, sync_mixed,
+        ch_ttft, ch_p50, ch_p99, ch_mixed
+    );
+    let bench5_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_5.json");
+    match std::fs::write(bench5_path, &bench5) {
+        Ok(()) => println!("  wrote {bench5_path}"),
+        Err(e) => eprintln!("  could not write {bench5_path}: {e}"),
     }
 
     // host wall-time breakdown per module (perf-pass diagnostics)

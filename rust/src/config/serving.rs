@@ -175,7 +175,39 @@ pub struct ServingConfig {
     pub stop_suffix: String,
     /// Tokens that must be generated before `stop_suffix` can end the
     /// stream (guards against stopping on a degenerate first token).
+    /// Interacts with the token-budget clamp only one way: a stream
+    /// whose (pool-clamped) budget is smaller than `min_tokens` simply
+    /// ends at the budget with the suffix check never armed — the knob
+    /// is a floor for suffix stopping, never a promised length, so the
+    /// combination is valid and needs no validation coupling.
     pub min_tokens: usize,
+    /// Chunked-prefill admission (see [`crate::sched`]): instead of
+    /// prefilling a prompt synchronously at admission — stalling every
+    /// live decode stream for the whole prefill — the scheduler feeds
+    /// the prompt in `prefill_chunk_tokens`-sized chunks, at most one
+    /// chunk per tick, fused into the batched decode lockstep
+    /// ([`crate::engine::MoeEngine::step_mixed`]: one cache resolve and
+    /// one stacked kernel per distinct expert per layer-tick, decode
+    /// rows riding the experts the chunk loads anyway). A pure
+    /// execution-order optimization for the emitted streams: per-session
+    /// tokens are bit-identical, only tick boundaries move. Off by
+    /// default — off is byte-identical to the synchronous-admission
+    /// scheduler.
+    pub chunked_prefill: bool,
+    /// Prompt positions fed per scheduling tick while an admission is
+    /// prefilling (chunked prefill only). Fused mixed ticks additionally
+    /// clamp the chunk to the compiled prefill module width
+    /// (`ModelConfig::prefill_chunk`); larger values only affect the
+    /// sequential (`batched_decode = false`) fallback, which sub-chunks
+    /// internally. Inert while `chunked_prefill` is off.
+    pub prefill_chunk_tokens: usize,
+    /// Token budget for one mixed tick: each decoding session costs one
+    /// token and the prefill chunk costs its length. Decode rows are
+    /// never budgeted out — the budget only shrinks (or defers) the
+    /// chunk, bounding how much prefill work a tick may add on top of
+    /// the live decodes. `None` bounds the chunk only by
+    /// `prefill_chunk_tokens`. Inert while `chunked_prefill` is off.
+    pub max_batch_tokens: Option<usize>,
 }
 
 impl Default for ServingConfig {
@@ -199,6 +231,11 @@ impl Default for ServingConfig {
             // stop heuristic (`generated > 4 && text.ends_with(".\n")`)
             stop_suffix: ".\n".to_string(),
             min_tokens: 4,
+            chunked_prefill: false,
+            // matches the tiny testbed's compiled prefill module width, so
+            // a fused mixed tick feeds exactly one module call per layer
+            prefill_chunk_tokens: 16,
+            max_batch_tokens: None,
         }
     }
 }
@@ -264,6 +301,41 @@ impl ServingConfig {
                         "prefix_cache_tokens {} is smaller than one block ({} tokens) — \
                          the cache could never hold a prefix",
                         cap, self.kv_block_tokens
+                    )));
+                }
+            }
+        }
+        // same inertness rule for the chunked-prefill knobs: they gate
+        // nothing while the scheduler admits synchronously
+        if self.chunked_prefill {
+            if self.prefill_chunk_tokens == 0 {
+                return Err(Error::Config(
+                    "prefill_chunk_tokens must be >= 1 with chunked_prefill on \
+                     (a zero-token chunk can never finish a prompt)"
+                        .into(),
+                ));
+            }
+            if self.prefill_chunk_tokens > 8192 {
+                return Err(Error::Config(format!(
+                    "prefill_chunk_tokens {} is unreasonably large (a chunk should \
+                     be a small fraction of the sequence; limit 8192)",
+                    self.prefill_chunk_tokens
+                )));
+            }
+            if let Some(budget) = self.max_batch_tokens {
+                if budget == 0 {
+                    return Err(Error::Config(
+                        "max_batch_tokens must be >= 1 with chunked_prefill on — a \
+                         zero budget could never feed a prefill chunk"
+                            .into(),
+                    ));
+                }
+                if budget > 1 << 20 {
+                    return Err(Error::Config(format!(
+                        "max_batch_tokens {} is unreasonably large (no tick batches \
+                         that many tokens; limit {})",
+                        budget,
+                        1 << 20
                     )));
                 }
             }
@@ -385,6 +457,100 @@ mod tests {
         assert!(huge_min.validate().is_err());
         let zero_min = ServingConfig { min_tokens: 0, ..Default::default() };
         assert!(zero_min.validate().is_ok());
+    }
+
+    #[test]
+    fn empty_stop_suffix_composes_with_min_tokens() {
+        // an empty suffix disables suffix stopping entirely; min_tokens
+        // is then inert but must not be rejected (the knob pair is
+        // common when callers want budget-only streams)
+        let c = ServingConfig {
+            stop_suffix: String::new(),
+            min_tokens: 1 << 20,
+            ..Default::default()
+        };
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn min_tokens_beyond_the_token_budget_is_valid() {
+        // min_tokens is a floor for SUFFIX stopping, not a promised
+        // stream length: a budget (max_new_tokens, or the KV pool clamp
+        // applied at admission) smaller than min_tokens simply ends the
+        // stream at the budget with the suffix check never armed. The
+        // combination therefore validates — rejecting it would couple a
+        // per-request clamp to a global knob.
+        let c = ServingConfig {
+            min_tokens: 1000,
+            max_new_tokens: 4,
+            ..Default::default()
+        };
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn chunked_prefill_knob_defaults_and_validation() {
+        // opt-in, with defaults that never reject
+        let d = ServingConfig::default();
+        assert!(!d.chunked_prefill, "chunked prefill is opt-in");
+        assert_eq!(d.prefill_chunk_tokens, 16);
+        assert_eq!(d.max_batch_tokens, None);
+
+        let zero_chunk = ServingConfig {
+            chunked_prefill: true,
+            prefill_chunk_tokens: 0,
+            ..Default::default()
+        };
+        assert!(zero_chunk.validate().is_err());
+        let huge_chunk = ServingConfig {
+            chunked_prefill: true,
+            prefill_chunk_tokens: 10_000,
+            ..Default::default()
+        };
+        assert!(huge_chunk.validate().is_err());
+        let zero_budget = ServingConfig {
+            chunked_prefill: true,
+            max_batch_tokens: Some(0),
+            ..Default::default()
+        };
+        assert!(zero_budget.validate().is_err());
+        let huge_budget = ServingConfig {
+            chunked_prefill: true,
+            max_batch_tokens: Some((1 << 20) + 1),
+            ..Default::default()
+        };
+        assert!(huge_budget.validate().is_err());
+        // a budget smaller than the chunk knob only shrinks chunks — valid
+        let small_budget = ServingConfig {
+            chunked_prefill: true,
+            prefill_chunk_tokens: 16,
+            max_batch_tokens: Some(4),
+            ..Default::default()
+        };
+        assert!(small_budget.validate().is_ok());
+        let ok = ServingConfig {
+            chunked_prefill: true,
+            prefill_chunk_tokens: 32,
+            max_batch_tokens: Some(64),
+            ..Default::default()
+        };
+        assert!(ok.validate().is_ok());
+    }
+
+    #[test]
+    fn chunked_prefill_knobs_are_inert_when_off() {
+        // invalid values behind the off switch must not reject the
+        // config (same rule prefix_cache_tokens follows)
+        let inert = ServingConfig {
+            chunked_prefill: false,
+            prefill_chunk_tokens: 0,
+            max_batch_tokens: Some(0),
+            ..Default::default()
+        };
+        assert!(
+            inert.validate().is_ok(),
+            "inert chunked-prefill knobs must not block a chunked-off deployment"
+        );
     }
 
     #[test]

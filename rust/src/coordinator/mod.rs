@@ -21,6 +21,21 @@
 //! independent. With `max_concurrent_sessions = 1` the schedule degrades
 //! to the paper's batch-1 serving, token for token.
 //!
+//! With `ServingConfig::chunked_prefill` (default off, see
+//! [`crate::sched`]), admission stops prefilling synchronously: an
+//! admitted request enters a `Prefilling` phase and its prompt is fed in
+//! `prefill_chunk_tokens`-sized chunks — at most one chunk per tick,
+//! token-budgeted by `max_batch_tokens` — fused into the batched decode
+//! lockstep via [`MoeEngine::step_mixed`] (one cache resolve and one
+//! stacked kernel per distinct expert per layer-tick, decode rows riding
+//! the experts the chunk loads anyway). A long prompt therefore no
+//! longer stalls every live decode for its whole prefill; per-session
+//! token streams are bit-identical either way, only tick boundaries
+//! move. Prefilling sessions are preempt/resume-safe mid-prompt (their
+//! partial KV swaps to host like any other session's) and prefix-cache
+//! seeding composes with tail chunking. Off, admission is byte-identical
+//! to the synchronous scheduler.
+//!
 //! Admission is memory-elastic (see [`crate::kv`]): beyond the width cap,
 //! a request is admitted only when the paged KV pool has free blocks for
 //! its prompt — and if the pool runs dry *mid-decode*, the scheduler
@@ -99,8 +114,14 @@ pub enum Event {
         tokens_per_s_sim: f64,
         /// Seconds the request waited in the queue before admission.
         queue_wait_s: f64,
+        /// Seconds from admission (prefill start) to the first emitted
+        /// token — the time-to-first-token the chunked-prefill scheduler
+        /// trades against decode stall.
+        ttft_s: f64,
         /// Live sessions (including this one) when the request finished.
         active_sessions: u64,
+        /// KV pool size in blocks (fixed at engine construction).
+        kv_blocks_total: u64,
         /// KV pool occupancy when the request finished (this session's
         /// blocks still counted — they free on drop).
         kv_blocks_in_use: u64,
@@ -113,6 +134,14 @@ pub enum Event {
         prefix_hit: bool,
         /// Prefill positions this request skipped via the prefix cache.
         prefix_tokens_reused: u64,
+        /// Prefix-cache footprint when the request finished.
+        prefix_cache_blocks: u64,
+        prefix_cache_tokens: u64,
+        /// Total prefix-cache lookup hits / misses since engine start.
+        prefix_hits: u64,
+        prefix_misses: u64,
+        /// Total prefix-cache blocks inserted since engine start.
+        prefix_inserted_blocks: u64,
         /// Total prefix-cache blocks evicted since engine start.
         prefix_evicted_blocks: u64,
         /// Total redundant expert stagings avoided by batched-tick union
@@ -121,6 +150,11 @@ pub enum Event {
         /// Total expert kernel invocations issued by the batched decode
         /// path since engine start.
         batched_kernel_calls: u64,
+        /// Total batched layer-lockstep ticks since engine start.
+        batched_ticks: u64,
+        /// Total mixed (prefill-chunk + decode) ticks since engine start
+        /// (0 with chunked prefill off).
+        mixed_ticks: u64,
         /// Batch width of the most recent batched tick when the request
         /// finished (0 = scheduler has been running sequentially).
         batch_occupancy: u64,
@@ -165,12 +199,28 @@ struct Pending {
     tokens: Option<Vec<u32>>,
 }
 
+/// Where a live session is in its lifecycle. With chunked prefill a
+/// session is admitted BEFORE its prompt ran: it stays `Prefilling`
+/// across ticks (preempt/resume-safe — `fed` counts the positions
+/// already written to its KV, prefix-cache seed included) until the
+/// last chunk lands, then samples its first token and decodes.
+enum Phase {
+    /// Prompt still being fed chunk-by-chunk: `prompt[fed..]` remains.
+    Prefilling { prompt: Vec<u32>, fed: usize },
+    /// Prompt complete; one sampled token per tick.
+    Decoding,
+}
+
 /// One admitted request: its engine session plus streaming state.
 struct LiveSession {
     id: u64,
     tx: Sender<Event>,
     sess: Session,
     sampler: Sampler,
+    /// Admission lifecycle: synchronous admission starts `Decoding`;
+    /// chunked admission starts `Prefilling` and transitions when the
+    /// last prompt chunk lands.
+    phase: Phase,
     /// Last sampled token (input to the next decode step).
     next: u32,
     /// Incrementally decoded generation text — also the stop-condition
@@ -191,6 +241,10 @@ struct LiveSession {
     prefix_reused: usize,
     started: Instant,
     queue_wait_s: f64,
+    /// Admission → first emitted token, set when that token is sent
+    /// (at admission for synchronous prefill; at the final chunk for
+    /// chunked prefill).
+    ttft_s: f64,
     /// Admission order (monotone): preemption always picks the youngest.
     admit_seq: u64,
     /// How many times this session has been swapped out (runaway guard).
@@ -412,6 +466,23 @@ fn scheduler_loop(
             // capacity its own prefix already covers. With nothing live
             // the gate is bypassed so an impossible request still fails
             // permanently in admit().
+            // chunked prefill commits blocks chunk-by-chunk, so the
+            // free list overstates what a NEW admission may take:
+            // reserve the unfed remainder of every in-flight prefilling
+            // session (zero with chunked off — no session ever parks in
+            // Prefilling there, keeping the gate byte-identical)
+            let reserved_blocks: usize = active
+                .iter()
+                .filter_map(|l| match &l.phase {
+                    Phase::Prefilling { prompt, .. } => Some(
+                        engine
+                            .kv_pool
+                            .blocks_for(prompt.len() + 1)
+                            .saturating_sub(l.sess.kv.mapped_blocks()),
+                    ),
+                    Phase::Decoding => None,
+                })
+                .sum();
             let gate_open = {
                 let head = pending.front_mut().unwrap();
                 if engine.prefix.is_some() {
@@ -422,9 +493,12 @@ fn scheduler_loop(
                             tokenizer.encode(&head.req.prompt)
                         });
                     }
-                    engine.kv_can_admit_prompt(head.tokens.as_ref().expect("just filled"))
+                    engine.kv_can_admit_prompt_reserving(
+                        head.tokens.as_ref().expect("just filled"),
+                        reserved_blocks,
+                    )
                 } else {
-                    engine.kv_can_admit(head.req.prompt.len() + 1)
+                    engine.kv_can_admit_reserving(head.req.prompt.len() + 1, reserved_blocks)
                 }
             };
             if !gate_open && !(active.is_empty() && preempted.is_empty()) {
@@ -433,11 +507,26 @@ fn scheduler_loop(
             let head = pending.pop_front().unwrap();
             let (tx, enqueued, tokens) = (head.tx, head.enqueued, head.tokens);
             let queue_wait_s = enqueued.elapsed().as_secs_f64();
-            match admit(engine, &tokenizer, head.req, tokens, seed, tx, queue_wait_s, next_admit_seq) {
+            // chunked admission opens the session (and seeds it from the
+            // prefix cache) but feeds the prompt across ticks instead of
+            // stalling every live decode on a synchronous prefill
+            let seq = next_admit_seq;
+            let outcome = if engine.planner.chunked_prefill {
+                admit_chunked(engine, &tokenizer, head.req, tokens, seed, tx, queue_wait_s, seq)
+            } else {
+                admit(engine, &tokenizer, head.req, tokens, seed, tx, queue_wait_s, seq)
+            };
+            match outcome {
                 Ok(Some(live)) => {
                     next_admit_seq += 1;
                     m.inc("requests_started", 1);
                     m.observe("queue_wait_s", queue_wait_s);
+                    if matches!(live.phase, Phase::Decoding) {
+                        // synchronous prefill already emitted the first
+                        // token; chunked admissions record TTFT at their
+                        // final chunk instead
+                        m.observe("ttft_s", live.ttft_s);
+                    }
                     if live.generated >= live.budget {
                         // single-token budget: finished at prefill
                         finish(m, engine, live, active.len() as u64 + 1);
@@ -494,12 +583,21 @@ fn scheduler_loop(
         }
 
         // 4) one scheduling tick: exactly one decode step per live
-        // session. Batched mode advances them together through
-        // decode_batch (layer lockstep, expert-deduped); sequential mode
+        // decoding session, plus — with chunked prefill — at most one
+        // prompt chunk of the oldest admission still prefilling.
+        // Batched mode advances them together through decode_batch /
+        // step_mixed (layer lockstep, expert-deduped); sequential mode
         // round-robins decode_step in admission order. Per-session
         // output is identical either way.
         m.inc("scheduler_ticks", 1);
-        if engine.batched_decode && active.len() >= 2 {
+        let has_prefilling = active
+            .iter()
+            .any(|l| matches!(l.phase, Phase::Prefilling { .. }));
+        if has_prefilling {
+            // only reachable with chunked_prefill on — the synchronous
+            // admission path never parks a Prefilling session
+            mixed_tick(engine, &tokenizer, m, &mut active, &mut preempted);
+        } else if engine.batched_decode && active.len() >= 2 {
             batched_tick(engine, &tokenizer, m, &mut active, &mut preempted);
         } else {
             let n = active.len();
@@ -575,7 +673,7 @@ fn batched_tick(
         }
     };
     let b = engine.batch;
-    m.record_batch(b.last_occupancy, b.ticks, b.kernel_calls, b.loads_deduped);
+    m.record_batch(b.last_occupancy, b.ticks, b.kernel_calls, b.loads_deduped, b.mixed_ticks);
 
     // KV-dry sessions are collected and handled AFTER the survivors
     // rejoin `active`, so the youngest-victim policy sees the same
@@ -622,6 +720,317 @@ fn batched_tick(
             active.push_back(younger);
         }
         preempt_youngest(engine, m, active, preempted, live, &msg);
+    }
+}
+
+/// One MIXED scheduling tick (chunked prefill on, ≥ 1 session still
+/// prefilling): plan the tick — every decoding session gets its one
+/// decode step, and the oldest prefilling session gets at most one
+/// token-budgeted prompt chunk — then execute it fused through
+/// [`MoeEngine::step_mixed`] (batched mode) or interleaved (sequential
+/// fallback). Slot outcomes map to the same handling as the plain
+/// batched tick: KV-dry slots degrade to preempt/retry (a dry CHUNK
+/// preempts too — typically the prefilling session itself, which is the
+/// youngest; it resumes mid-prompt bit-identically), failures drop only
+/// their own session.
+fn mixed_tick(
+    engine: &mut MoeEngine,
+    tokenizer: &ByteTokenizer,
+    m: &Metrics,
+    active: &mut VecDeque<LiveSession>,
+    preempted: &mut VecDeque<LiveSession>,
+) {
+    // plan over the live set in ADMISSION order: `active` is only
+    // approximately admission-ordered (resume and dry-requeue append at
+    // the back), and the chunk contract is the OLDEST pending admission
+    // — a resumed older prefill must not lose its turn to a younger one
+    let mut order: Vec<usize> = (0..active.len()).collect();
+    order.sort_by_key(|&i| active[i].admit_seq);
+    let items: Vec<crate::sched::WorkItem> = order
+        .iter()
+        .map(|&i| match &active[i].phase {
+            Phase::Decoding => crate::sched::WorkItem::Decode,
+            Phase::Prefilling { prompt, fed } => {
+                crate::sched::WorkItem::Prefill { remaining: prompt.len() - fed }
+            }
+        })
+        .collect();
+    let plan = engine.planner.plan(&items);
+    // translate the plan's chunk target back to `active` indexing
+    let chunk_plan: Option<(usize, usize)> =
+        plan.chunk.map(|cp| (order[cp.idx], cp.tokens));
+    if !engine.batched_decode {
+        let chunk = chunk_plan.map(|(i, n)| (active[i].admit_seq, n));
+        mixed_tick_sequential(engine, tokenizer, m, active, preempted, chunk);
+        return;
+    }
+
+    let mut lives: Vec<LiveSession> = active.drain(..).collect();
+    // pull the chunk's session out of the vec so the borrow checker sees
+    // disjoint &mut Sessions; fused ticks feed at most one compiled
+    // prefill module call per layer, so clamp to that width
+    let chunk_cap = engine.weights.cfg.prefill_chunk;
+    let mut chunk_live: Option<(LiveSession, usize)> =
+        chunk_plan.map(|(idx, tokens)| (lives.remove(idx), tokens.min(chunk_cap)));
+    let toks: Vec<u32> = lives
+        .iter()
+        .filter(|l| matches!(l.phase, Phase::Decoding))
+        .map(|l| l.next)
+        .collect();
+    let outcome = {
+        let mut refs: Vec<&mut Session> = lives
+            .iter_mut()
+            .filter(|l| matches!(l.phase, Phase::Decoding))
+            .map(|l| &mut l.sess)
+            .collect();
+        let chunk = chunk_live.as_mut().map(|(cl, n)| {
+            let Phase::Prefilling { prompt, fed } = &cl.phase else {
+                unreachable!("the planner only schedules Prefilling sessions")
+            };
+            let end = (*fed + *n).min(prompt.len());
+            chunk_of(&mut cl.sess, &prompt[*fed..end])
+        });
+        engine.step_mixed(&mut refs, &toks, chunk)
+    };
+    let (results, chunk_slot) = match outcome {
+        Ok(r) => r,
+        Err(e) => {
+            // engine failure mid-tick: the PARTICIPANTS' state is
+            // indeterminate — fail them loudly (as batched_tick). Idle
+            // prefilling sessions never entered the tick (the chunk's
+            // session was extracted from `lives`, so any Prefilling
+            // session still there sat this tick out): their state is
+            // untouched and they simply survive to the next one.
+            for live in lives {
+                if matches!(live.phase, Phase::Prefilling { .. }) {
+                    active.push_back(live);
+                    continue;
+                }
+                m.inc("requests_failed", 1);
+                let _ = live.tx.send(Event::Error {
+                    request_id: live.id,
+                    message: e.to_string(),
+                });
+            }
+            if let Some((cl, _)) = chunk_live {
+                m.inc("requests_failed", 1);
+                let _ = cl.tx.send(Event::Error {
+                    request_id: cl.id,
+                    message: e.to_string(),
+                });
+            }
+            return;
+        }
+    };
+    let b = engine.batch;
+    m.record_batch(b.last_occupancy, b.ticks, b.kernel_calls, b.loads_deduped, b.mixed_ticks);
+
+    // process outcomes; survivors re-queue in admission order afterwards
+    let mut survivors: Vec<LiveSession> = Vec::new();
+    let mut dry: Vec<(LiveSession, String)> = Vec::new();
+    let mut finished: Vec<LiveSession> = Vec::new();
+    let mut slots = results.into_iter();
+    for mut live in lives {
+        if !matches!(live.phase, Phase::Decoding) {
+            // a prefilling session not scheduled this tick idles
+            survivors.push(live);
+            continue;
+        }
+        let slot = slots.next().expect("one slot per decoding session");
+        match slot {
+            Ok(logits) => match advance(engine, tokenizer, &mut live, logits) {
+                StepOutcome::Continue => survivors.push(live),
+                StepOutcome::Finished => finished.push(live),
+                StepOutcome::Cancelled => {
+                    m.inc("requests_cancelled", 1);
+                }
+            },
+            Err(Error::KvPoolExhausted(msg)) => dry.push((live, msg)),
+            Err(e) => {
+                m.inc("requests_failed", 1);
+                let _ = live.tx.send(Event::Error {
+                    request_id: live.id,
+                    message: e.to_string(),
+                });
+            }
+        }
+    }
+    if let Some((mut cl, _)) = chunk_live {
+        match chunk_slot.expect("a submitted chunk always yields a slot") {
+            Ok(logits) => {
+                let fed_now = logits.shape[0];
+                match advance_prefill(m, tokenizer, &mut cl, fed_now, &logits) {
+                    StepOutcome::Continue => survivors.push(cl),
+                    StepOutcome::Finished => finished.push(cl),
+                    StepOutcome::Cancelled => {
+                        m.inc("requests_cancelled", 1);
+                    }
+                }
+            }
+            Err(Error::KvPoolExhausted(msg)) => dry.push((cl, msg)),
+            Err(e) => {
+                m.inc("requests_failed", 1);
+                let _ = cl.tx.send(Event::Error { request_id: cl.id, message: e.to_string() });
+            }
+        }
+    }
+
+    // re-queue in admission order (mixed processing visits decode slots
+    // before idle/chunk sessions, which can interleave arbitrarily)
+    survivors.sort_by_key(|l| l.admit_seq);
+    active.extend(survivors);
+    // as in batched_tick, a finishing session counts its co-finishers
+    // that have not been emitted yet as still live
+    let n_finished = finished.len();
+    for (k, live) in finished.into_iter().enumerate() {
+        let others = active.len() + dry.len() + (n_finished - k - 1);
+        finish(m, engine, live, others as u64 + 1);
+    }
+    // resolve pool pressure for the OLDEST dry session; younger dry ones
+    // rejoin first so the youngest-victim policy can pick one of them
+    // (exactly as batched_tick)
+    let mut dry = dry.into_iter();
+    if let Some((live, msg)) = dry.next() {
+        for (younger, _) in dry {
+            active.push_back(younger);
+        }
+        preempt_youngest(engine, m, active, preempted, live, &msg);
+    }
+}
+
+/// Borrow helper: a [`crate::engine::PrefillChunk`] over one live
+/// session's next prompt span (split borrows of disjoint `LiveSession`
+/// fields).
+fn chunk_of<'a>(sess: &'a mut Session, tokens: &'a [u32]) -> crate::engine::PrefillChunk<'a> {
+    crate::engine::PrefillChunk { sess, tokens }
+}
+
+/// The sequential fallback of a mixed tick (`batched_decode = false`):
+/// round-robin one decode step per decoding session, and feed the
+/// planned chunk — `(admit_seq of the target, tokens)`, matched by seq
+/// because rotation order is not admission order after preempt/resume —
+/// via a plain resumable [`MoeEngine::prefill`] call. No expert-union
+/// fusion, but the same chunked admission semantics (and the same
+/// bit-identical streams).
+fn mixed_tick_sequential(
+    engine: &mut MoeEngine,
+    tokenizer: &ByteTokenizer,
+    m: &Metrics,
+    active: &mut VecDeque<LiveSession>,
+    preempted: &mut VecDeque<LiveSession>,
+    chunk: Option<(u64, usize)>,
+) {
+    let n = active.len();
+    let mut chunk = chunk;
+    for _ in 0..n {
+        let mut live = active.pop_front().unwrap();
+        if let Phase::Prefilling { .. } = live.phase {
+            let scheduled = matches!(chunk, Some((seq, _)) if seq == live.admit_seq);
+            if !scheduled {
+                active.push_back(live);
+                continue;
+            }
+            let n_tok = chunk.take().expect("matched above").1;
+            let (fed_now, result) = {
+                let Phase::Prefilling { prompt, fed } = &live.phase else {
+                    unreachable!("checked above")
+                };
+                let end = (*fed + n_tok).min(prompt.len());
+                let chunk = &prompt[*fed..end];
+                (chunk.len(), engine.prefill(&mut live.sess, chunk))
+            };
+            match result {
+                Ok(logits) => {
+                    match advance_prefill(m, tokenizer, &mut live, fed_now, &logits) {
+                        StepOutcome::Continue => active.push_back(live),
+                        StepOutcome::Finished => {
+                            finish(m, engine, live, active.len() as u64 + 1)
+                        }
+                        StepOutcome::Cancelled => {
+                            m.inc("requests_cancelled", 1);
+                        }
+                    }
+                }
+                Err(Error::KvPoolExhausted(msg)) => {
+                    // prefill commits blocks all-or-nothing before any
+                    // compute, so the chunk retries cleanly after a
+                    // preemption frees memory
+                    preempt_youngest(engine, m, active, preempted, live, &msg);
+                }
+                Err(e) => {
+                    m.inc("requests_failed", 1);
+                    let _ = live.tx.send(Event::Error {
+                        request_id: live.id,
+                        message: e.to_string(),
+                    });
+                }
+            }
+        } else {
+            match step(engine, tokenizer, &mut live) {
+                Ok(StepOutcome::Continue) => active.push_back(live),
+                Ok(StepOutcome::Finished) => {
+                    finish(m, engine, live, active.len() as u64 + 1)
+                }
+                Ok(StepOutcome::Cancelled) => {
+                    m.inc("requests_cancelled", 1);
+                }
+                Err(Error::KvPoolExhausted(msg)) => {
+                    preempt_youngest(engine, m, active, preempted, live, &msg);
+                }
+                Err(e) => {
+                    m.inc("requests_failed", 1);
+                    let _ = live.tx.send(Event::Error {
+                        request_id: live.id,
+                        message: e.to_string(),
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// Advance a `Prefilling` session by one successfully fed chunk. While
+/// prompt remains the session just keeps waiting its turn; the FINAL
+/// chunk samples the first token from its last logits row (bit-identical
+/// to synchronous admission's sample — same position, same sampler
+/// state), emits it (TTFT), and flips the session to `Decoding`.
+fn advance_prefill(
+    m: &Metrics,
+    tokenizer: &ByteTokenizer,
+    live: &mut LiveSession,
+    fed_now: usize,
+    logits: &crate::tensor::Tensor,
+) -> StepOutcome {
+    let Phase::Prefilling { prompt, fed } = &mut live.phase else {
+        unreachable!("advance_prefill is only called on Prefilling sessions")
+    };
+    *fed += fed_now;
+    if *fed < prompt.len() {
+        return StepOutcome::Continue;
+    }
+    // last chunk: first token, exactly as synchronous admission emits it
+    live.next = live.sampler.sample(logits.row(fed_now - 1)) as u32;
+    let piece = tokenizer.decode(&[live.next]);
+    live.fed_tokens = std::mem::take(prompt);
+    live.phase = Phase::Decoding;
+    live.generated = 1;
+    live.text = piece.clone();
+    live.ttft_s = live.started.elapsed().as_secs_f64();
+    if live
+        .tx
+        .send(Event::Token { request_id: live.id, text: piece })
+        .is_err()
+    {
+        // client went away while the prompt was feeding — don't let the
+        // dead request's (idle-inflated) TTFT skew the histogram; the
+        // synchronous path likewise records nothing for a dropped stream
+        return StepOutcome::Cancelled;
+    }
+    m.observe("ttft_s", live.ttft_s);
+    if live.generated >= live.budget {
+        StepOutcome::Finished
+    } else {
+        StepOutcome::Continue
     }
 }
 
@@ -690,26 +1099,20 @@ fn preempt_youngest(
     }
 }
 
-/// Tokenize, budget and prefill a request into a live session, emitting
-/// its first token. `Ok(None)` means the submitter already dropped its
-/// stream; on failure the request, its tokenized prompt AND the channel
-/// are handed back so the caller can either requeue (transient
-/// [`Error::KvPoolExhausted`], without re-tokenizing on retry) or report
-/// the error. The prompt's KV blocks are committed all-or-nothing
-/// before any compute, so a refused admission leaves no residue.
-#[allow(clippy::too_many_arguments)]
-fn admit(
+/// Shared admission prologue for BOTH admission paths: tokenize
+/// (reusing the pre-gate's cached tokens), validate against the context
+/// window, permanently fail prompts the pool can never hold, clamp the
+/// token budget to pool capacity, and open the session + its sampler.
+/// One copy means synchronous and chunked admission can never drift
+/// apart on request validation or budgeting. Errors hand the tokenized
+/// prompt back so the caller's requeue path never re-tokenizes.
+fn open_session(
     engine: &mut MoeEngine,
     tokenizer: &ByteTokenizer,
-    req: Request,
+    req: &Request,
     tokens: Option<Vec<u32>>,
     base_seed: u64,
-    tx: Sender<Event>,
-    queue_wait_s: f64,
-    admit_seq: u64,
-) -> std::result::Result<Option<LiveSession>, AdmitRefusal> {
-    let started = Instant::now();
-
+) -> std::result::Result<(Vec<u32>, usize, Session, Sampler), (Vec<u32>, Error)> {
     // the pre-gate may already have tokenized the prompt
     let prompt_tokens = match tokens {
         Some(t) => t,
@@ -717,18 +1120,13 @@ fn admit(
         None => tokenizer.encode(&req.prompt),
     };
     if prompt_tokens.is_empty() {
-        return Err((req, prompt_tokens, tx, Error::Serving("empty prompt".into())));
+        return Err((prompt_tokens, Error::Serving("empty prompt".into())));
     }
     let budget = req
         .max_tokens
         .min(engine.weights.cfg.max_seq.saturating_sub(prompt_tokens.len()).saturating_sub(1));
     if budget == 0 {
-        return Err((
-            req,
-            prompt_tokens,
-            tx,
-            Error::Serving("prompt exceeds context window".into()),
-        ));
+        return Err((prompt_tokens, Error::Serving("prompt exceeds context window".into())));
     }
     // a prompt bigger than the ENTIRE pool can never be served — fail it
     // permanently instead of deferring it forever at the queue head
@@ -738,7 +1136,7 @@ fn admit(
             prompt_tokens.len(),
             engine.kv_pool.capacity_tokens()
         ));
-        return Err((req, prompt_tokens, tx, e));
+        return Err((prompt_tokens, e));
     }
     // ...and clamp the token budget to what the pool can EVER back, so a
     // generation finishes at the capacity wall instead of erroring after
@@ -752,11 +1150,39 @@ fn admit(
     // request-id-derived seed: independent of admission order, and equal
     // to the old sequential derivation when requests are served one at a
     // time in submit order.
-    let mut sess = match Session::with_seed(engine, base_seed.wrapping_add(req.id)) {
+    let sess = match Session::with_seed(engine, base_seed.wrapping_add(req.id)) {
         Ok(s) => s,
-        Err(e) => return Err((req, prompt_tokens, tx, e)),
+        Err(e) => return Err((prompt_tokens, e)),
     };
-    let mut sampler = sess.sampler(req.temperature, req.top_p);
+    let sampler = sess.sampler(req.temperature, req.top_p);
+    Ok((prompt_tokens, budget, sess, sampler))
+}
+
+/// Synchronous admission: tokenize, budget and prefill a request into a
+/// live session, emitting its first token. `Ok(None)` means the
+/// submitter already dropped its stream; on failure the request, its
+/// tokenized prompt AND the channel are handed back so the caller can
+/// either requeue (transient [`Error::KvPoolExhausted`], without
+/// re-tokenizing on retry) or report the error. The prompt's KV blocks
+/// are committed all-or-nothing before any compute, so a refused
+/// admission leaves no residue.
+#[allow(clippy::too_many_arguments)]
+fn admit(
+    engine: &mut MoeEngine,
+    tokenizer: &ByteTokenizer,
+    req: Request,
+    tokens: Option<Vec<u32>>,
+    base_seed: u64,
+    tx: Sender<Event>,
+    queue_wait_s: f64,
+    admit_seq: u64,
+) -> std::result::Result<Option<LiveSession>, AdmitRefusal> {
+    let started = Instant::now();
+    let (prompt_tokens, budget, mut sess, mut sampler) =
+        match open_session(engine, tokenizer, &req, tokens, base_seed) {
+            Ok(x) => x,
+            Err((toks, e)) => return Err((req, toks, tx, e)),
+        };
     // prefix-cache admission lookup: a warm prefix seeds the session's
     // KV and prefill resumes at the first uncached token (reused = 0 and
     // plain prefill when the cache is off or misses)
@@ -767,6 +1193,7 @@ fn admit(
     // logits cover only the prefilled tail: [prompt - reused, vocab]
     let next = sampler.sample(logits.row(prompt_tokens.len() - reused - 1)) as u32;
     let piece = tokenizer.decode(&[next]);
+    let ttft_s = started.elapsed().as_secs_f64();
     if tx.send(Event::Token { request_id: req.id, text: piece.clone() }).is_err() {
         // client dropped its stream while queued — don't occupy a slot
         return Ok(None);
@@ -776,6 +1203,7 @@ fn admit(
         tx,
         sess,
         sampler,
+        phase: Phase::Decoding,
         next,
         text: piece,
         generated: 1,
@@ -785,8 +1213,63 @@ fn admit(
         prefix_reused: reused,
         started,
         queue_wait_s,
+        ttft_s,
         admit_seq,
         preempt_count: 0,
+    }))
+}
+
+/// Chunked admission (`ServingConfig::chunked_prefill`): the same
+/// request validation and budgeting as [`admit`], but instead of
+/// prefilling the prompt synchronously the session is opened, seeded
+/// from the prefix cache (tail chunking composes with the seed), and
+/// parked in the `Prefilling` phase — the scheduler's mixed ticks feed
+/// the prompt chunk-by-chunk and the first token is sampled when the
+/// last chunk lands, bit-identical to the synchronous path's. No KV
+/// blocks are committed here: each chunk commits its own positions
+/// incrementally, so a long prompt's memory footprint ramps with its
+/// progress instead of being claimed up front.
+#[allow(clippy::too_many_arguments)]
+fn admit_chunked(
+    engine: &mut MoeEngine,
+    tokenizer: &ByteTokenizer,
+    req: Request,
+    tokens: Option<Vec<u32>>,
+    base_seed: u64,
+    tx: Sender<Event>,
+    queue_wait_s: f64,
+    admit_seq: u64,
+) -> std::result::Result<Option<LiveSession>, AdmitRefusal> {
+    let started = Instant::now();
+    let (prompt_tokens, budget, mut sess, sampler) =
+        match open_session(engine, tokenizer, &req, tokens, base_seed) {
+            Ok(x) => x,
+            Err((toks, e)) => return Err((req, toks, tx, e)),
+        };
+    // prefix-cache seed only — the uncached tail enters the engine in
+    // planner-sized chunks across the following ticks
+    let reused = match engine.prefill_start(&mut sess, &prompt_tokens) {
+        Ok(r) => r,
+        Err(e) => return Err((req, prompt_tokens, tx, e)),
+    };
+    Ok(Some(LiveSession {
+        id: req.id,
+        tx,
+        sess,
+        sampler,
+        next: 0,
+        text: String::new(),
+        generated: 0,
+        budget,
+        prompt_tokens: prompt_tokens.len(),
+        fed_tokens: Vec::new(),
+        prefix_reused: reused,
+        started,
+        queue_wait_s,
+        ttft_s: 0.0,
+        admit_seq,
+        preempt_count: 0,
+        phase: Phase::Prefilling { prompt: prompt_tokens, fed: reused },
     }))
 }
 
@@ -858,7 +1341,18 @@ fn finish(m: &Metrics, engine: &mut MoeEngine, live: LiveSession, active_session
     let hits = live.sess.run.total_hits();
     let misses = live.sess.run.total_misses();
     let kv = engine.kv_pool.stats();
-    let prefix_evicted = engine.prefix.as_ref().map_or(0, |c| c.stats().evicted_blocks);
+    let (pblocks, ptokens, phits, pmisses, pinserted, pevicted) =
+        engine.prefix.as_ref().map_or((0, 0, 0, 0, 0, 0), |c| {
+            let s = c.stats();
+            (
+                c.cached_blocks() as u64,
+                c.cached_tokens() as u64,
+                s.hits,
+                s.misses,
+                s.inserted_blocks,
+                s.evicted_blocks,
+            )
+        });
     m.inc("requests_ok", 1);
     m.inc("tokens_generated", live.generated as u64);
     m.inc("expert_cache_hits", hits);
@@ -873,16 +1367,25 @@ fn finish(m: &Metrics, engine: &mut MoeEngine, live: LiveSession, active_session
         tokens_per_s_wall: live.generated as f64 / wall.max(1e-9),
         tokens_per_s_sim: sim_tps,
         queue_wait_s: live.queue_wait_s,
+        ttft_s: live.ttft_s,
         active_sessions,
+        kv_blocks_total: kv.total_blocks as u64,
         kv_blocks_in_use: kv.in_use_blocks as u64,
         kv_blocks_free: kv.free_blocks as u64,
         kv_preemptions: kv.preemptions,
         kv_resumes: m.counter("kv_resumes"),
         prefix_hit: live.prefix_reused > 0,
         prefix_tokens_reused: live.prefix_reused as u64,
-        prefix_evicted_blocks: prefix_evicted,
+        prefix_cache_blocks: pblocks,
+        prefix_cache_tokens: ptokens,
+        prefix_hits: phits,
+        prefix_misses: pmisses,
+        prefix_inserted_blocks: pinserted,
+        prefix_evicted_blocks: pevicted,
         expert_loads_deduped: engine.batch.loads_deduped,
         batched_kernel_calls: engine.batch.kernel_calls,
+        batched_ticks: engine.batch.ticks,
+        mixed_ticks: engine.batch.mixed_ticks,
         batch_occupancy: engine.batch.last_occupancy,
     });
 }

@@ -5,11 +5,18 @@
 //! ```text
 //! -> {"prompt": "what is perplexity", "max_tokens": 48}
 //! <- {"type":"token","text":"t"}
-//! <- {"type":"done","text":"...","tokens_per_s_wall":...,"queue_wait_s":...,"active_sessions":...,
-//!     "kv_blocks_in_use":...,"kv_blocks_free":...,"kv_preemptions":...,"kv_resumes":...,
-//!     "prefix_hit":...,"prefix_tokens_reused":...,"prefix_evicted_blocks":...,
-//!     "expert_loads_deduped":...,"batched_kernel_calls":...,"batch_occupancy":...}
+//! <- {"type":"done","text":"...","tokens_per_s_wall":...,"queue_wait_s":...,"ttft_s":...,
+//!     "active_sessions":...,"kv_blocks_total":...,"kv_blocks_in_use":...,"kv_blocks_free":...,
+//!     "kv_preemptions":...,"kv_resumes":...,"prefix_hit":...,"prefix_tokens_reused":...,
+//!     "prefix_cache_blocks":...,"prefix_cache_tokens":...,"prefix_hits":...,"prefix_misses":...,
+//!     "prefix_inserted_blocks":...,"prefix_evicted_blocks":...,"expert_loads_deduped":...,
+//!     "batched_kernel_calls":...,"batched_ticks":...,"mixed_ticks":...,"batch_occupancy":...}
 //! ```
+//!
+//! The done event carries a field for EVERY gauge the scheduler records
+//! (see [`GAUGE_DONE_FIELDS`]) — the parity test below fails the build
+//! when a gauge is added without its done-JSON counterpart, the drift
+//! that silently dropped `kv_resumes` in PR 2.
 //!
 //! Each connection gets its own handler thread; the coordinator's
 //! scheduler interleaves up to `max_concurrent_sessions` requests, so
@@ -85,6 +92,32 @@ pub fn parse_request(line: &str) -> Result<Request> {
     Ok(req)
 }
 
+/// Every gauge the scheduler records, paired with the `done`-event JSON
+/// field that surfaces it. The parity test enumerates the recorded
+/// gauges and demands a mapping AND a serialized field for each, so a
+/// new gauge cannot ship without its done-JSON counterpart (the drift
+/// class that silently dropped `kv_resumes` in PR 2 until PR 3 caught
+/// it). Names are mostly 1:1; keep them that way for new gauges.
+pub const GAUGE_DONE_FIELDS: &[(&str, &str)] = &[
+    ("active_sessions", "active_sessions"),
+    ("kv_blocks_total", "kv_blocks_total"),
+    ("kv_blocks_free", "kv_blocks_free"),
+    ("kv_blocks_in_use", "kv_blocks_in_use"),
+    ("kv_preemptions", "kv_preemptions"),
+    ("prefix_cache_blocks", "prefix_cache_blocks"),
+    ("prefix_cache_tokens", "prefix_cache_tokens"),
+    ("prefix_hits", "prefix_hits"),
+    ("prefix_misses", "prefix_misses"),
+    ("prefix_tokens_reused", "prefix_tokens_reused"),
+    ("prefix_inserted_blocks", "prefix_inserted_blocks"),
+    ("prefix_evicted_blocks", "prefix_evicted_blocks"),
+    ("batch_occupancy", "batch_occupancy"),
+    ("batched_ticks", "batched_ticks"),
+    ("batched_kernel_calls", "batched_kernel_calls"),
+    ("expert_loads_deduped", "expert_loads_deduped"),
+    ("mixed_ticks", "mixed_ticks"),
+];
+
 pub fn event_to_json(ev: &Event) -> Json {
     match ev {
         Event::Token { text, .. } => Json::obj(vec![
@@ -99,16 +132,25 @@ pub fn event_to_json(ev: &Event) -> Json {
             tokens_per_s_wall,
             tokens_per_s_sim,
             queue_wait_s,
+            ttft_s,
             active_sessions,
+            kv_blocks_total,
             kv_blocks_in_use,
             kv_blocks_free,
             kv_preemptions,
             kv_resumes,
             prefix_hit,
             prefix_tokens_reused,
+            prefix_cache_blocks,
+            prefix_cache_tokens,
+            prefix_hits,
+            prefix_misses,
+            prefix_inserted_blocks,
             prefix_evicted_blocks,
             expert_loads_deduped,
             batched_kernel_calls,
+            batched_ticks,
+            mixed_ticks,
             batch_occupancy,
             ..
         } => Json::obj(vec![
@@ -120,16 +162,25 @@ pub fn event_to_json(ev: &Event) -> Json {
             ("tokens_per_s_wall", (*tokens_per_s_wall).into()),
             ("tokens_per_s_sim", (*tokens_per_s_sim).into()),
             ("queue_wait_s", (*queue_wait_s).into()),
+            ("ttft_s", (*ttft_s).into()),
             ("active_sessions", (*active_sessions as usize).into()),
+            ("kv_blocks_total", (*kv_blocks_total as usize).into()),
             ("kv_blocks_in_use", (*kv_blocks_in_use as usize).into()),
             ("kv_blocks_free", (*kv_blocks_free as usize).into()),
             ("kv_preemptions", (*kv_preemptions as usize).into()),
             ("kv_resumes", (*kv_resumes as usize).into()),
             ("prefix_hit", (*prefix_hit).into()),
             ("prefix_tokens_reused", (*prefix_tokens_reused as usize).into()),
+            ("prefix_cache_blocks", (*prefix_cache_blocks as usize).into()),
+            ("prefix_cache_tokens", (*prefix_cache_tokens as usize).into()),
+            ("prefix_hits", (*prefix_hits as usize).into()),
+            ("prefix_misses", (*prefix_misses as usize).into()),
+            ("prefix_inserted_blocks", (*prefix_inserted_blocks as usize).into()),
             ("prefix_evicted_blocks", (*prefix_evicted_blocks as usize).into()),
             ("expert_loads_deduped", (*expert_loads_deduped as usize).into()),
             ("batched_kernel_calls", (*batched_kernel_calls as usize).into()),
+            ("batched_ticks", (*batched_ticks as usize).into()),
+            ("mixed_ticks", (*mixed_ticks as usize).into()),
             ("batch_occupancy", (*batch_occupancy as usize).into()),
         ]),
         Event::Error { message, .. } => Json::obj(vec![
@@ -193,9 +244,8 @@ mod tests {
         assert!(parse_request("not json").is_err());
     }
 
-    #[test]
-    fn event_json_roundtrip_fields() {
-        let ev = Event::Done {
+    fn sample_done() -> Event {
+        Event::Done {
             request_id: 1,
             text: "abc".into(),
             prompt_tokens: 3,
@@ -204,24 +254,40 @@ mod tests {
             tokens_per_s_wall: 10.0,
             tokens_per_s_sim: 2.5,
             queue_wait_s: 0.25,
+            ttft_s: 0.125,
             active_sessions: 2,
+            kv_blocks_total: 16,
             kv_blocks_in_use: 7,
             kv_blocks_free: 9,
             kv_preemptions: 1,
             kv_resumes: 1,
             prefix_hit: true,
             prefix_tokens_reused: 32,
+            prefix_cache_blocks: 6,
+            prefix_cache_tokens: 96,
+            prefix_hits: 2,
+            prefix_misses: 5,
+            prefix_inserted_blocks: 8,
             prefix_evicted_blocks: 4,
             expert_loads_deduped: 12,
             batched_kernel_calls: 48,
+            batched_ticks: 20,
+            mixed_ticks: 6,
             batch_occupancy: 3,
-        };
-        let j = event_to_json(&ev);
+        }
+    }
+
+    #[test]
+    fn event_json_roundtrip_fields() {
+        let j = event_to_json(&sample_done());
         assert_eq!(j.get("type").unwrap().as_str(), Some("done"));
         assert_eq!(j.get("new_tokens").unwrap().as_usize(), Some(5));
         assert_eq!(j.get("active_sessions").unwrap().as_usize(), Some(2));
         assert!((j.get("queue_wait_s").unwrap().as_f64().unwrap() - 0.25).abs() < 1e-9);
+        // per-request time-to-first-token (the chunked-prefill metric)
+        assert!((j.get("ttft_s").unwrap().as_f64().unwrap() - 0.125).abs() < 1e-9);
         // KV pool telemetry rides along next to active_sessions
+        assert_eq!(j.get("kv_blocks_total").unwrap().as_usize(), Some(16));
         assert_eq!(j.get("kv_blocks_in_use").unwrap().as_usize(), Some(7));
         assert_eq!(j.get("kv_blocks_free").unwrap().as_usize(), Some(9));
         assert_eq!(j.get("kv_preemptions").unwrap().as_usize(), Some(1));
@@ -229,10 +295,62 @@ mod tests {
         // ...and so do the prefix-cache hit/reuse/eviction metrics
         assert_eq!(j.get("prefix_hit").unwrap().as_bool(), Some(true));
         assert_eq!(j.get("prefix_tokens_reused").unwrap().as_usize(), Some(32));
+        assert_eq!(j.get("prefix_cache_blocks").unwrap().as_usize(), Some(6));
+        assert_eq!(j.get("prefix_cache_tokens").unwrap().as_usize(), Some(96));
+        assert_eq!(j.get("prefix_hits").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("prefix_misses").unwrap().as_usize(), Some(5));
+        assert_eq!(j.get("prefix_inserted_blocks").unwrap().as_usize(), Some(8));
         assert_eq!(j.get("prefix_evicted_blocks").unwrap().as_usize(), Some(4));
-        // ...and the batched-decode dedup metrics
+        // ...and the batched/mixed-tick dedup metrics
         assert_eq!(j.get("expert_loads_deduped").unwrap().as_usize(), Some(12));
         assert_eq!(j.get("batched_kernel_calls").unwrap().as_usize(), Some(48));
+        assert_eq!(j.get("batched_ticks").unwrap().as_usize(), Some(20));
+        assert_eq!(j.get("mixed_ticks").unwrap().as_usize(), Some(6));
         assert_eq!(j.get("batch_occupancy").unwrap().as_usize(), Some(3));
+    }
+
+    /// Gauge / done-JSON parity: drive every gauge-recording path the
+    /// scheduler uses, then demand that each recorded gauge (a) has an
+    /// entry in [`GAUGE_DONE_FIELDS`] and (b) that entry's field is
+    /// actually serialized in the done event. A gauge added to a
+    /// `record_*` helper without wiring it through the done schema now
+    /// fails here instead of shipping (`kv_resumes` — a counter, the
+    /// sibling drift — went missing in PR 2 the same way; counters
+    /// surfaced in the done event are pinned by the roundtrip test
+    /// above, and this drive block must mirror the scheduler's
+    /// gauge-recording calls when one is added).
+    #[test]
+    fn every_recorded_gauge_surfaces_in_the_done_event() {
+        use crate::telemetry::Metrics;
+        let m = Metrics::new();
+        // the scheduler's full set of gauge-recording calls — extend in
+        // lockstep with scheduler_loop/batched_tick/mixed_tick
+        m.set_gauge("active_sessions", 1);
+        m.record_kv_pool(1, 1, 1, 1);
+        m.record_prefix(1, 1, 1, 1, 1, 1, 1);
+        m.record_batch(1, 1, 1, 1, 1);
+        let names = m.gauge_names();
+        assert!(!names.is_empty());
+        let j = event_to_json(&sample_done());
+        for name in names {
+            let field = GAUGE_DONE_FIELDS
+                .iter()
+                .find(|(gauge, _)| *gauge == name.as_str())
+                .unwrap_or_else(|| {
+                    panic!("gauge {name:?} has no done-event mapping in GAUGE_DONE_FIELDS")
+                })
+                .1;
+            assert!(
+                j.get(field).is_some(),
+                "done event is missing field {field:?} (mapped from gauge {name:?})"
+            );
+        }
+        // the mapping itself must not point at fields the schema lost
+        for (gauge, field) in GAUGE_DONE_FIELDS {
+            assert!(
+                j.get(field).is_some(),
+                "GAUGE_DONE_FIELDS maps gauge {gauge:?} to missing done field {field:?}"
+            );
+        }
     }
 }

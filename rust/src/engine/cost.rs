@@ -106,6 +106,20 @@ impl CostModel {
             + self.profile.gemv_time(self.expert_hbm_bytes + extra)
     }
 
+    /// Mixed-tick expert FFN: a prefill chunk's routed rows and the
+    /// decode batch's routed rows stacked into ONE kernel call. The
+    /// expert's (quantized) weights are read from HBM once for the whole
+    /// stack — the same weight read the chunk alone would have paid — so
+    /// the decode rows riding along add only their activation traffic,
+    /// and vice versa. `expert_compute_mixed_s(0, n)` is exactly the
+    /// batched decode cost and `(n, 0)` the chunk-only cost: fusing the
+    /// two is strictly cheaper than the sum of running them separately
+    /// (one weight read instead of two), which is the cost-model side of
+    /// the mixed tick's load dedup.
+    pub fn expert_compute_mixed_s(&self, chunk_rows: usize, decode_rows: usize) -> f64 {
+        self.expert_compute_batched_s(chunk_rows + decode_rows)
+    }
+
     pub fn attn_compute_s(&self) -> f64 {
         (Self::ATTN_KERNELS - 1.0) * self.profile.launch_overhead_s
             + self.profile.gemv_time(self.attn_bytes)
@@ -199,6 +213,25 @@ mod tests {
         // weights are read from HBM once for the whole batch
         assert!(cm.expert_compute_batched_s(4) < 2.0 * cm.expert_compute_s());
         assert!(cm.expert_compute_batched_s(8) < 4.0 * cm.expert_compute_s());
+    }
+
+    #[test]
+    fn mixed_tick_expert_cost_beats_split_execution() {
+        let cm = CostModel::new(
+            HardwareProfile::t4_colab(),
+            &model(),
+            SimScale::Mixtral,
+            QuantScheme::Hqq { bits: 4 },
+            QuantScheme::Hqq { bits: 2 },
+        );
+        // degenerate mixes collapse to the existing terms
+        assert_eq!(cm.expert_compute_mixed_s(0, 4), cm.expert_compute_batched_s(4));
+        assert_eq!(cm.expert_compute_mixed_s(4, 0), cm.expert_compute_batched_s(4));
+        // one fused call reads the weights once; running the chunk and
+        // the decode batch separately reads them twice
+        let fused = cm.expert_compute_mixed_s(16, 4);
+        let split = cm.expert_compute_batched_s(16) + cm.expert_compute_batched_s(4);
+        assert!(fused < split, "fused {fused} vs split {split}");
     }
 
     #[test]

@@ -84,15 +84,46 @@ pub struct BatchStats {
     pub experts_resolved: u64,
     /// Redundant per-session expert stagings avoided by union dedup:
     /// Σ routed (session, expert) pairs − Σ distinct experts resolved.
+    /// Mixed ticks add the prefill chunk's per-layer needed set to the
+    /// routed units, so the counter also covers decode rows riding
+    /// chunk-staged experts (and vice versa).
     pub loads_deduped: u64,
     /// Batch width of the most recent batched tick.
     pub last_occupancy: u64,
+    /// Mixed ticks executed ([`MoeEngine::step_mixed`] with ≥ 1 decode
+    /// row AND a prefill chunk fused into one layer-lockstep walk).
+    pub mixed_ticks: u64,
+    /// Prefill chunk positions advanced by mixed ticks.
+    pub prefill_rows: u64,
 }
 
 /// One session's slot in a batched tick's result: next-token logits, or
 /// the per-session refusal ([`Error::KvPoolExhausted`] ⇒ the scheduler
 /// preempts/retries that session; anything else fails it alone).
 pub type BatchSlot = Result<Vec<f32>>;
+
+/// One session's prefill chunk riding a mixed tick (see
+/// [`MoeEngine::step_mixed`]): the session being admitted plus the next
+/// `tokens` of its prompt (the positions `sess.pos..sess.pos + len`).
+pub struct PrefillChunk<'a> {
+    pub sess: &'a mut Session,
+    pub tokens: &'a [u32],
+}
+
+/// The chunk's slot in a mixed tick's result: logits for the chunk's
+/// positions (`[chunk_len, vocab]`), or the chunk's own refusal —
+/// [`Error::KvPoolExhausted`] means the chunk's blocks could not be
+/// committed and nothing was fed (the scheduler preempts/retries the
+/// prefilling session exactly like a KV-dry decode slot).
+pub type ChunkSlot = Result<Tensor>;
+
+/// Row provenance inside a mixed tick's stacked expert kernel: a prefill
+/// chunk position or a decode session (index into the tick's live set).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum MixedRow {
+    Chunk(usize),
+    Decode(usize),
+}
 
 /// Offline probe for Figure 2 (right): record the speculative router
 /// distribution gate_{l+a}(h_l) at every layer without affecting the
@@ -150,6 +181,12 @@ pub struct MoeEngine {
     pub stop_suffix: String,
     /// ...but only after this many tokens were generated.
     pub min_tokens: usize,
+    /// Tick planner for chunked-prefill admission (see [`crate::sched`]):
+    /// carries the `chunked_prefill` / `prefill_chunk_tokens` /
+    /// `max_batch_tokens` knobs and plans each tick's decode rows + at
+    /// most one prefill chunk. With `chunked_prefill` off the planner
+    /// never schedules a chunk and the coordinator admits synchronously.
+    pub planner: crate::sched::TickPlanner,
     /// Lifetime batched-decode counters (see [`BatchStats`]).
     pub batch: BatchStats,
 }
@@ -280,6 +317,7 @@ impl MoeEngine {
             batched_decode: serving.batched_decode,
             stop_suffix: serving.stop_suffix.clone(),
             min_tokens: serving.min_tokens,
+            planner: crate::sched::TickPlanner::from_serving(serving),
             batch: BatchStats::default(),
         })
     }
@@ -408,9 +446,19 @@ impl MoeEngine {
     /// fit the free blocks plus what prefix-cache reclaim could free?
     /// (With the cache off this is exactly `kv_pool.can_admit`.)
     pub fn kv_can_admit(&self, tokens: usize) -> bool {
+        self.kv_can_admit_reserving(tokens, 0)
+    }
+
+    /// [`Self::kv_can_admit`] minus `reserved_blocks` of capacity
+    /// already promised elsewhere. The coordinator reserves the unfed
+    /// remainder of in-flight CHUNKED prefills (their blocks commit
+    /// chunk-by-chunk, so the free list overstates what a new admission
+    /// may take — without the reserve the gate over-admits and forces
+    /// mid-prefill preemption churn the synchronous path never had).
+    pub fn kv_can_admit_reserving(&self, tokens: usize, reserved_blocks: usize) -> bool {
         let free = self.kv_pool.stats().free_blocks;
         let reclaimable = self.prefix.as_ref().map_or(0, |c| c.reclaimable_blocks());
-        self.kv_pool.blocks_for(tokens) <= free + reclaimable
+        self.kv_pool.blocks_for(tokens) + reserved_blocks <= free + reclaimable
     }
 
     /// Prefix-aware admission gate for a tokenized prompt: blocks the
@@ -424,6 +472,13 @@ impl MoeEngine {
     /// more conservative). Admission itself still does the precise
     /// all-or-nothing commit and requeues transiently.
     pub fn kv_can_admit_prompt(&self, tokens: &[u32]) -> bool {
+        self.kv_can_admit_prompt_reserving(tokens, 0)
+    }
+
+    /// [`Self::kv_can_admit_prompt`] minus `reserved_blocks` of
+    /// capacity already promised elsewhere (see
+    /// [`Self::kv_can_admit_reserving`]).
+    pub fn kv_can_admit_prompt_reserving(&self, tokens: &[u32], reserved_blocks: usize) -> bool {
         let seeded = self.prefix.as_ref().map_or(0, |c| {
             c.peek_match_blocks(tokens, tokens.len().saturating_sub(1))
         });
@@ -434,7 +489,7 @@ impl MoeEngine {
             .map_or(0, |c| c.reclaimable_blocks())
             .saturating_sub(seeded);
         let needed = self.kv_pool.blocks_for(tokens.len() + 1).saturating_sub(seeded);
-        needed <= free + reclaimable
+        needed + reserved_blocks <= free + reclaimable
     }
 
     /// Prefill with prefix reuse: seed a virgin session from the longest
@@ -450,6 +505,17 @@ impl MoeEngine {
         let reused = self.seed_from_prefix(sess, tokens)?;
         let logits = self.prefill(sess, &tokens[reused..])?;
         Ok((logits, reused))
+    }
+
+    /// Begin a CHUNKED admission: seed the virgin session from the
+    /// prefix cache (when enabled and hitting) but run no prefill —
+    /// the prompt tail enters the engine chunk-by-chunk afterwards,
+    /// via [`Self::step_mixed`] mixed ticks (or plain [`Self::prefill`]
+    /// calls on the sequential fallback), so seeding and tail-chunking
+    /// compose. Returns the reused position count; `prefill_cached`
+    /// is exactly `prefill_start` + one `prefill` of the whole tail.
+    pub fn prefill_start(&mut self, sess: &mut Session, tokens: &[u32]) -> Result<usize> {
+        self.seed_from_prefix(sess, tokens)
     }
 
     /// Seed `sess` from the prefix cache. The match is capped one short
@@ -873,6 +939,512 @@ impl MoeEngine {
             }
             let stacked = Tensor::new(stacked, vec![routed.len(), d])?;
             self.run_expert_rows(id, &stacked)?
+        };
+        self.batch.kernel_calls += calls;
+        Ok(out)
+    }
+
+    // ---------------------------------------------------------------------
+    // mixed ticks: prefill chunk fused into the batched decode lockstep
+    // ---------------------------------------------------------------------
+
+    /// One MIXED tick: advance every given decode session one token AND
+    /// feed one prefill chunk of an admission-in-progress through the
+    /// same layer-lockstep walk. Per layer, the chunk's needed experts
+    /// and the decode batch's routed union are merged into ONE dedup
+    /// ledger — one cache resolve and at most one transfer per distinct
+    /// expert per layer-tick, and one stacked kernel per resident expert
+    /// over the chunk's routed rows plus the decode rows together, so
+    /// the decode rows ride the experts the chunk was going to load
+    /// anyway (and vice versa). This is the scheduling move that removes
+    /// synchronous prefill's head-of-line blocking without paying the
+    /// chunk's expert traffic twice.
+    ///
+    /// Like [`Self::decode_batch`] this is a pure execution-order/dedup
+    /// optimization: decode logits are bit-identical to a chunk-less
+    /// tick (attention, routing and the row-parallel expert FFN depend
+    /// only on each session's own state), and the chunk's logits/KV are
+    /// bit-identical to a monolithic [`Self::prefill`] of the same
+    /// positions (prefill is already chunk-reorderable for the same
+    /// reason; the chunk's rows keep prefill's exact accumulation
+    /// order). Only tick boundaries — and the virtual clock — move.
+    ///
+    /// Returns one [`BatchSlot`] per decode session plus the
+    /// [`ChunkSlot`] when a chunk was submitted. The chunk's KV blocks
+    /// are committed incrementally (this chunk's positions only), BEFORE
+    /// any compute: a KV-dry chunk is refused with nothing fed and the
+    /// decode batch proceeds alone that tick. `chunk: None` delegates to
+    /// [`Self::decode_batch`] verbatim; an empty decode set runs the
+    /// chunk as a plain resumable prefill step. The chunk length must
+    /// not exceed the compiled prefill module width
+    /// (`ModelConfig::prefill_chunk`) — the coordinator's planner clamps
+    /// to it.
+    pub fn step_mixed(
+        &mut self,
+        sessions: &mut [&mut Session],
+        tokens: &[u32],
+        chunk: Option<PrefillChunk<'_>>,
+    ) -> Result<(Vec<BatchSlot>, Option<ChunkSlot>)> {
+        let Some(PrefillChunk { sess: csess, tokens: ctoks }) = chunk else {
+            return Ok((self.decode_batch(sessions, tokens)?, None));
+        };
+        if sessions.len() != tokens.len() {
+            return Err(Error::Engine(format!(
+                "step_mixed: {} sessions but {} tokens",
+                sessions.len(),
+                tokens.len()
+            )));
+        }
+        let max_seq = self.weights.cfg.max_seq;
+        let c = self.weights.cfg.prefill_chunk;
+        // stateless chunk shape guards — a malformed chunk is refused
+        // before anything commits, and the decode batch proceeds alone
+        let shape_refusal = if ctoks.is_empty() {
+            Some(Error::Engine("step_mixed: empty prefill chunk".into()))
+        } else if ctoks.len() > c {
+            Some(Error::Engine(format!(
+                "prefill chunk of {} tokens exceeds the compiled chunk width {c}",
+                ctoks.len()
+            )))
+        } else if csess.pos + ctoks.len() > max_seq {
+            Some(Error::Engine("prompt exceeds max_seq".into()))
+        } else {
+            None
+        };
+        if let Some(e) = shape_refusal {
+            let slots = self.decode_batch(sessions, tokens)?;
+            return Ok((slots, Some(Err(e))));
+        }
+        if sessions.is_empty() {
+            // nothing to fuse with: the chunk is a plain prefill step
+            return Ok((Vec::new(), Some(self.prefill(csess, ctoks))));
+        }
+
+        // per-decode-session guards + KV commit FIRST (same as
+        // decode_batch): under pool pressure the decode rows take their
+        // blocks before the chunk may claim any — decode rows are never
+        // starved to feed a prefill (the planner's contract)
+        let mut results: Vec<Option<BatchSlot>> =
+            (0..sessions.len()).map(|_| None).collect();
+        let mut live: Vec<usize> = Vec::with_capacity(sessions.len());
+        for i in 0..sessions.len() {
+            let sess = &mut *sessions[i];
+            if sess.pos >= max_seq {
+                results[i] = Some(Err(Error::Engine(format!(
+                    "sequence length {} exceeds max_seq {max_seq}",
+                    sess.pos
+                ))));
+                continue;
+            }
+            let next = sess.pos + 1;
+            match self.ensure_kv(sess, next) {
+                Ok(()) => live.push(i),
+                Err(e) => results[i] = Some(Err(e)),
+            }
+        }
+        // the chunk's incremental KV commit comes AFTER the decode rows
+        // took theirs; a KV-dry chunk is refused with nothing fed and
+        // the decode batch proceeds alone this tick
+        if let Err(e) = self.ensure_kv(csess, csess.pos + ctoks.len()) {
+            if live.is_empty() {
+                let slots = results
+                    .into_iter()
+                    .map(|r| r.expect("all slots filled"))
+                    .collect();
+                return Ok((slots, Some(Err(e))));
+            }
+            // the already-committed decode blocks make this re-run of
+            // the guards a no-op — decode_batch produces the same slots
+            let slots = self.decode_batch(sessions, tokens)?;
+            return Ok((slots, Some(Err(e))));
+        }
+        if live.is_empty() {
+            // every decode slot refused pre-compute; the chunk still runs
+            let slots = results
+                .into_iter()
+                .map(|r| r.expect("all slots filled"))
+                .collect();
+            return Ok((slots, Some(self.prefill(csess, ctoks))));
+        }
+
+        let sim_start = self.timeline.now();
+        let wall_start = Instant::now();
+        let n_valid = ctoks.len();
+        self.batch.mixed_ticks += 1;
+        self.batch.rows += live.len() as u64;
+        self.batch.prefill_rows += n_valid as u64;
+        self.batch.last_occupancy = live.len() as u64;
+        let mut tstats: Vec<TokenStats> = vec![TokenStats::default(); live.len()];
+        // the chunk's cache events follow prefill's convention: they move
+        // the virtual clock but are not pushed into per-token run stats
+        let mut cstats = TokenStats::default();
+
+        // decode embeds (charged per row, as decode_batch does)
+        let mut xs: Vec<Tensor> = Vec::with_capacity(live.len());
+        for &i in &live {
+            self.timeline.compute(self.cost.profile.launch_overhead_s, 0.0);
+            xs.push(self.rt.embed(tokens[i], &self.lits.embed)?);
+        }
+        // chunk embed: host-side gather padded with token 0, exactly as
+        // prefill's (uncharged there, uncharged here)
+        let d = self.weights.cfg.d_model;
+        let mut xdata = vec![0.0f32; c * d];
+        for t in 0..c {
+            let tok = if t < n_valid { ctoks[t] as usize } else { 0 };
+            xdata[t * d..(t + 1) * d].copy_from_slice(self.weights.embed.row(tok));
+        }
+        let mut cx = Tensor::new(xdata, vec![c, d])?;
+
+        for l in 0..self.weights.cfg.n_layers {
+            cx = self.mixed_layer_step(
+                sessions, &live, l, &mut xs, &mut tstats, csess, cx, n_valid, &mut cstats,
+            )?;
+        }
+
+        // decode lm heads + finalization (as decode_batch)
+        let mut logits: Vec<Vec<f32>> = Vec::with_capacity(live.len());
+        for x in &xs {
+            self.timeline.compute(self.cost.lm_head_compute_s(), 0.0);
+            logits.push(self.rt.lm_head(x, &self.lits.final_ln, &self.lits.lm_head)?.data);
+        }
+        // chunk lm head over the whole padded chunk (as prefill)
+        self.timeline.compute(self.cost.lm_head_compute_s(), 0.0);
+        let clog = self.rt.lm_head(&cx, &self.lits.final_ln, &self.lits.lm_head)?;
+        let vocab = self.weights.cfg.vocab_size;
+        let mut chunk_logits: Vec<f32> = Vec::with_capacity(n_valid * vocab);
+        for t in 0..n_valid {
+            chunk_logits.extend_from_slice(clog.row(t));
+        }
+
+        let sim_s = self.timeline.now() - sim_start;
+        let wall_s = wall_start.elapsed().as_secs_f64();
+        for ((&i, mut ts), row) in live.iter().zip(tstats).zip(logits) {
+            let sess = &mut *sessions[i];
+            sess.pos += 1;
+            sess.token_counter += 1;
+            ts.sim_s = sim_s;
+            ts.wall_s = wall_s;
+            sess.run.sim_total_scaled_s += self.cost.scale_token_time(sim_s);
+            sess.run.wall_total_s += wall_s;
+            sess.run.tokens.push(ts);
+            results[i] = Some(Ok(row));
+        }
+        // chunk finalization (as prefill: position, trace counter, the
+        // prefill share of run stats — the tick completes together, so
+        // the tick's span is the chunk's latency too)
+        csess.pos += n_valid;
+        csess.token_counter += n_valid;
+        csess.run.prefill_sim_s += sim_s;
+        csess.run.prefill_tokens += n_valid;
+        let slots = results
+            .into_iter()
+            .map(|r| r.expect("all slots filled"))
+            .collect();
+        Ok((
+            slots,
+            Some(Tensor::new(chunk_logits, vec![n_valid, vocab])),
+        ))
+    }
+
+    /// One transformer layer of a mixed tick: per-decode-session
+    /// attention + routing and the chunk's prefill attention + per-row
+    /// routing (both via the exact code paths the unfused walks use),
+    /// then ONE merged dedup ledger — the decode union plus the chunk's
+    /// needed set — resolved against the cache once per distinct expert,
+    /// and one stacked kernel per resident expert over chunk rows +
+    /// decode rows together. Accumulation preserves each path's own f32
+    /// summation order (chunk rows: ascending expert id, as
+    /// `prefill_layer`; decode rows: the session's own top-k order, as
+    /// `batch_layer_step`), which is what keeps both bit-identity
+    /// contracts intact. Placement mirrors the batched tick's two modes
+    /// (staged-and-pinned union vs load-then-use interleave); the
+    /// chunk's wide needed set usually forces the interleave, exactly
+    /// like a standalone prefill layer. Speculation stays decode-only
+    /// (prefill never speculates), fired once per layer-tick on the
+    /// batch-aggregated gate distribution.
+    #[allow(clippy::too_many_arguments)]
+    fn mixed_layer_step(
+        &mut self,
+        sessions: &mut [&mut Session],
+        live: &[usize],
+        l: usize,
+        xs: &mut [Tensor],
+        tstats: &mut [TokenStats],
+        csess: &mut Session,
+        cx: Tensor,
+        n_valid: usize,
+        cstats: &mut TokenStats,
+    ) -> Result<Tensor> {
+        let d = self.weights.cfg.d_model;
+        let e_count = self.weights.cfg.n_experts;
+        let n_live = live.len();
+
+        // 1) decode attention + routing — bit-identical to batch_layer_step
+        let mut hs: Vec<Tensor> = Vec::with_capacity(n_live);
+        let mut sels: Vec<Vec<usize>> = Vec::with_capacity(n_live);
+        let mut ws: Vec<Vec<f32>> = Vec::with_capacity(n_live);
+        for (j, &i) in live.iter().enumerate() {
+            let sess = &mut *sessions[i];
+            let (x, h, selected, sel_w) = self.attn_route(sess, l, &xs[j])?;
+            xs[j] = x;
+            hs.push(h);
+            sels.push(selected);
+            ws.push(sel_w);
+        }
+
+        // 2) chunk attention + per-row routing — bit-identical to
+        // prefill_layer's front half
+        self.timeline.compute(self.cost.attn_compute_s(), 0.0);
+        let (cx, kc, vc) = {
+            let (k_ref, v_ref) = csess.kv.layer_or(l, &self.lits.zero_kv)?;
+            self.rt.prefill_attn(&cx, &self.lits.layers[l], k_ref, v_ref, csess.pos)?
+        };
+        csess.kv.set_layer(l, kc, vc)?;
+        self.timeline.compute(self.cost.gate_compute_s(), 0.0);
+        let (gate_logits, ch) = self.rt.gate(&cx, &self.lits.layers[l])?;
+        let mut cweights = vec![0.0f32; cx.shape[0] * e_count];
+        let mut needed: Vec<usize> = Vec::new();
+        for t in 0..n_valid {
+            let mut probs = gate_logits.row(t).to_vec();
+            softmax(&mut probs);
+            let sel = top_k(&probs, self.weights.cfg.top_k);
+            let wsum: f32 = sel.iter().map(|&e| probs[e]).sum();
+            for &e in &sel {
+                cweights[t * e_count + e] = probs[e] / wsum.max(1e-12);
+                if !needed.contains(&e) {
+                    needed.push(e);
+                }
+            }
+            self.trace.record(ActivationRecord {
+                session: csess.id,
+                token_index: csess.token_counter + t,
+                layer: l,
+                probs,
+                selected: sel,
+                cached_before: self.cache.cached_of_layer(l),
+            });
+        }
+        needed.sort();
+
+        // 3) the tick's merged dedup ledger: decode (session, expert)
+        // pairs in batch order, then the chunk's needed set — each
+        // distinct expert is resolved against the cache exactly once
+        let mut union: Vec<ExpertId> = Vec::new();
+        let mut routed_units = 0u64;
+        for sel in &sels {
+            for &e in sel {
+                routed_units += 1;
+                let id = ExpertId::new(l, e);
+                if !union.contains(&id) {
+                    union.push(id);
+                }
+            }
+        }
+        for &e in &needed {
+            routed_units += 1;
+            let id = ExpertId::new(l, e);
+            if !union.contains(&id) {
+                union.push(id);
+            }
+        }
+        self.batch.experts_resolved += union.len() as u64;
+        self.batch.loads_deduped += routed_units - union.len() as u64;
+
+        // the stacked row set of one expert: the chunk's routed rows
+        // (ascending position), then the decode rows (batch order)
+        let stacked_rows = |cweights: &[f32], sels: &[Vec<usize>], e: usize| -> Vec<MixedRow> {
+            let mut rows: Vec<MixedRow> = (0..n_valid)
+                .filter(|&t| cweights[t * e_count + e] > 0.0)
+                .map(MixedRow::Chunk)
+                .collect();
+            rows.extend(
+                (0..n_live)
+                    .filter(|&j| sels[j].contains(&e))
+                    .map(MixedRow::Decode),
+            );
+            rows
+        };
+
+        // 4) placement + one stacked kernel per distinct expert —
+        // the batched tick's two modes, chunk rows riding along
+        let mut outs: Vec<(Tensor, Vec<MixedRow>)> = Vec::with_capacity(union.len());
+        if matches!(self.policy, OffloadPolicy::Naive) {
+            // whole-layer streaming once per TICK (chunk included)
+            self.stream_layer_naive(l, &mut tstats[0])?;
+            for &id in &union {
+                let rows = stacked_rows(&cweights, &sels, id.expert as usize);
+                let out = self.run_expert_mixed(id, &ch, &hs, &rows)?;
+                outs.push((out, rows));
+            }
+        } else if !matches!(self.policy, OffloadPolicy::OnDemand)
+            && self.cache.cache_k() >= union.len()
+        {
+            // the whole merged union fits the layer cache: stage it up
+            // front PINNED, speculation overlaps the expert compute
+            for &id in &union {
+                self.stage_for_mixed(id, &needed, &sels, tstats, cstats, true)?;
+            }
+            if matches!(self.policy, OffloadPolicy::Full { .. }) {
+                self.speculate_batch(l, xs, tstats)?;
+            }
+            for &id in &union {
+                let rows = stacked_rows(&cweights, &sels, id.expert as usize);
+                let out = self.run_expert_mixed(id, &ch, &hs, &rows)?;
+                outs.push((out, rows));
+            }
+        } else {
+            // union outgrows the cache (the common case — a chunk's
+            // needed set is wide): load-then-use one expert at a time,
+            // every routed row in its one kernel call, transients freed
+            // right after — the standalone prefill layer's interleave,
+            // now shared with the decode rows
+            for &id in &union {
+                self.stage_for_mixed(id, &needed, &sels, tstats, cstats, false)?;
+                let rows = stacked_rows(&cweights, &sels, id.expert as usize);
+                let out = self.run_expert_mixed(id, &ch, &hs, &rows)?;
+                outs.push((out, rows));
+                self.cache.release_transient(id);
+            }
+            if matches!(self.policy, OffloadPolicy::Full { .. }) {
+                self.speculate_batch(l, xs, tstats)?;
+            }
+        }
+        self.cache.unpin_all();
+        for e in 0..e_count {
+            self.cache.release_transient(ExpertId::new(l, e));
+        }
+
+        // 5) chunk accumulation — prefill_layer's exact f32 order:
+        // experts ascending, each adding its weighted rows
+        let mut cy = vec![0.0f32; cx.shape[0] * d];
+        for &e in &needed {
+            let u = union
+                .iter()
+                .position(|id| id.expert as usize == e)
+                .expect("needed expert is in the union");
+            let (out, rows) = &outs[u];
+            for t in 0..n_valid {
+                let w = cweights[t * e_count + e];
+                if w > 0.0 {
+                    let r = rows
+                        .iter()
+                        .position(|&row| row == MixedRow::Chunk(t))
+                        .expect("routed chunk row is stacked");
+                    let orow = out.row(r);
+                    for i in 0..d {
+                        cy[t * d + i] += w * orow[i];
+                    }
+                }
+            }
+        }
+        // 6) decode accumulation — each session in ITS selection order
+        for (j, x) in xs.iter_mut().enumerate() {
+            let mut y = vec![0.0f32; d];
+            for (&e, &w) in sels[j].iter().zip(&ws[j]) {
+                let u = union
+                    .iter()
+                    .position(|id| id.expert as usize == e)
+                    .expect("selected expert is in the union");
+                let (out, rows) = &outs[u];
+                let r = rows
+                    .iter()
+                    .position(|&row| row == MixedRow::Decode(j))
+                    .expect("session is routed to its own selection");
+                for (acc, v) in y.iter_mut().zip(out.row(r)) {
+                    *acc += w * v;
+                }
+            }
+            for (xi, yi) in x.data.iter_mut().zip(&y) {
+                *xi += yi;
+            }
+        }
+        // 7) chunk residual (padded rows stay untouched, as prefill)
+        let mut out_cx = cx;
+        for (xi, yi) in out_cx.data.iter_mut().zip(&cy) {
+            *xi += yi;
+        }
+        Ok(out_cx)
+    }
+
+    /// Stage one distinct expert for a mixed layer-tick. Ownership runs
+    /// chunk-first — the narrative of the mixed tick is decode rows
+    /// riding the experts the chunk was going to load anyway — so when
+    /// the chunk needs the expert, the cache event lands in the chunk's
+    /// (prefill-convention, clock-only) stats and every routed decode
+    /// session records a shared consume; an expert only decode rows
+    /// need is attributed like a plain batched staging.
+    fn stage_for_mixed(
+        &mut self,
+        id: ExpertId,
+        needed: &[usize],
+        sels: &[Vec<usize>],
+        tstats: &mut [TokenStats],
+        cstats: &mut TokenStats,
+        pin: bool,
+    ) -> Result<()> {
+        let e = id.expert as usize;
+        let chunk_owns = needed.contains(&e);
+        let dec_owner = if chunk_owns {
+            None
+        } else {
+            sels.iter().position(|sel| sel.contains(&e))
+        };
+        {
+            let owner: &mut TokenStats = match dec_owner {
+                Some(j) => &mut tstats[j],
+                None => cstats,
+            };
+            self.ensure_expert(id, owner)?;
+        }
+        if pin {
+            self.cache.pin(id);
+        }
+        for (j, sel) in sels.iter().enumerate() {
+            if dec_owner != Some(j) && sel.contains(&e) {
+                tstats[j].batch_shared_hits += 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// Run one resident expert over a mixed tick's stacked rows — chunk
+    /// rows drawn from the chunk's normed hidden state `ch: [C, D]`,
+    /// decode rows from the per-session `hs` — in ONE kernel call,
+    /// charging the mixed-tick compute term (weights read once for the
+    /// whole stack).
+    fn run_expert_mixed(
+        &mut self,
+        id: ExpertId,
+        ch: &Tensor,
+        hs: &[Tensor],
+        rows: &[MixedRow],
+    ) -> Result<Tensor> {
+        let d = self.weights.cfg.d_model;
+        let n_chunk = rows
+            .iter()
+            .filter(|r| matches!(r, MixedRow::Chunk(_)))
+            .count();
+        self.timeline.compute(
+            self.cost.expert_compute_mixed_s(n_chunk, rows.len() - n_chunk),
+            0.0,
+        );
+        let (out, calls) = match rows {
+            [MixedRow::Decode(j)] => (self.run_expert(id, &hs[*j])?, 1),
+            [MixedRow::Chunk(t)] => {
+                let h = Tensor::new(ch.row(*t).to_vec(), vec![1, d])?;
+                (self.run_expert(id, &h)?, 1)
+            }
+            _ => {
+                let mut stacked = Vec::with_capacity(rows.len() * d);
+                for row in rows {
+                    match *row {
+                        MixedRow::Chunk(t) => stacked.extend_from_slice(ch.row(t)),
+                        MixedRow::Decode(j) => stacked.extend_from_slice(hs[j].row(0)),
+                    }
+                }
+                let stacked = Tensor::new(stacked, vec![rows.len(), d])?;
+                self.run_expert_rows(id, &stacked)?
+            }
         };
         self.batch.kernel_calls += calls;
         Ok(out)

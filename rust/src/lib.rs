@@ -66,13 +66,27 @@
 //!   staged once per layer-tick (pinned against mid-tick eviction) and
 //!   each expert runs one kernel over its stacked routed rows —
 //!   bit-identical per-session output, strictly less expert traffic.
-//!   Queue wait, live-session counts, KV-pool pressure and batch dedup
-//!   are recorded in [`telemetry::Metrics`] (`queue_wait_s`,
-//!   `active_sessions`, `kv_blocks_*`, `kv_preemptions`,
-//!   `batch_occupancy`, `expert_loads_deduped`) and surfaced in the
-//!   server's `done` event. Width 1 reproduces the paper's batch-1
-//!   serving exactly; width ≥ 2 lets concurrent requests share hot
-//!   experts, which is where offloading wins under load.
+//! * **Tick planner** ([`sched`], opt-in via
+//!   [`config::ServingConfig::chunked_prefill`]) — admission stops
+//!   prefilling synchronously: prompts are fed in
+//!   `prefill_chunk_tokens`-sized chunks, at most one chunk per tick,
+//!   under a `max_batch_tokens` token budget. A chunk fuses into the
+//!   batched lockstep through [`engine::MoeEngine::step_mixed`]: the
+//!   chunk's per-layer expert union merges with the decode union — one
+//!   cache resolve and one stacked kernel per distinct expert per
+//!   layer-tick, with decode rows riding the experts the chunk was
+//!   going to load anyway — so a long prompt no longer stalls live
+//!   decodes for its whole prefill, and TTFT/decode-stall both improve.
+//!   Per-session token streams stay bit-identical; only tick boundaries
+//!   move.
+//!   Queue wait, time-to-first-token, live-session counts, KV-pool
+//!   pressure and batch dedup are recorded in [`telemetry::Metrics`]
+//!   (`queue_wait_s`, `ttft_s`, `active_sessions`, `kv_blocks_*`,
+//!   `kv_preemptions`, `batch_occupancy`, `expert_loads_deduped`,
+//!   `mixed_ticks`) and surfaced in the server's `done` event. Width 1
+//!   reproduces the paper's batch-1 serving exactly; width ≥ 2 lets
+//!   concurrent requests share hot experts, which is where offloading
+//!   wins under load.
 
 pub mod cache;
 pub mod clock;
@@ -88,6 +102,7 @@ pub mod npz;
 pub mod prefix;
 pub mod quant;
 pub mod runtime;
+pub mod sched;
 pub mod telemetry;
 pub mod tensor;
 pub mod util;

@@ -1,0 +1,247 @@
+//! The tick scheduler: token-budgeted planning of mixed prefill + decode
+//! ticks (Sarathi-style chunked prefill).
+//!
+//! Before this subsystem, admission prefilled a prompt *synchronously*:
+//! one long prompt stalled every live decode stream for the whole
+//! prefill — seconds in the offloaded setting, where each prefill layer
+//! streams nearly the full expert set over the PCIe link. The planner
+//! breaks that head-of-line blocking by slicing admission into
+//! `prefill_chunk_tokens`-sized chunks and scheduling at most one chunk
+//! per tick NEXT TO the live decode batch, under a `max_batch_tokens`
+//! token budget:
+//!
+//! * every decoding session contributes exactly one token row per tick —
+//!   decode rows are never budgeted out (starving a live stream to feed
+//!   a prefill would invert the latency goal);
+//! * the OLDEST admission still feeding its prompt gets the leftover
+//!   budget, clamped to its remaining prompt and the chunk knob; younger
+//!   prefilling admissions wait (FIFO across ticks, one chunk per tick);
+//! * when decode rows already meet the budget, the chunk waits a tick —
+//!   decode sessions retire within their token budgets, so the prefill
+//!   is delayed, never starved.
+//!
+//! The planner is pure policy: it owns no sessions and touches no engine
+//! state, which is what makes the scheduling decisions unit-testable
+//! without artifacts. [`crate::engine::MoeEngine::step_mixed`] executes
+//! a plan's chunk + decode rows in one fused layer-lockstep walk (one
+//! cache resolve and one stacked kernel per distinct expert per
+//! layer-tick — decode rows ride the experts the chunk was going to
+//! load anyway), and the coordinator turns slot outcomes into the same
+//! preempt/retry/finish handling as plain batched decode.
+//!
+//! With `chunked_prefill` off the planner never schedules a chunk and
+//! the coordinator's admission path is byte-identical to the synchronous
+//! scheduler.
+
+use crate::config::ServingConfig;
+
+/// One live session's schedulable work, in admission order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkItem {
+    /// A decoding session: exactly one token row per tick.
+    Decode,
+    /// An admission still feeding its prompt: `remaining` prompt
+    /// positions are not yet in the KV cache.
+    Prefill { remaining: usize },
+}
+
+/// The prefill chunk scheduled for one tick.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChunkPlan {
+    /// Index (into the planned items) of the prefilling session.
+    pub idx: usize,
+    /// Prompt positions to feed this tick (>= 1).
+    pub tokens: usize,
+}
+
+/// One tick's work assignment.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TickPlan {
+    /// Indices of the sessions decoding this tick — every
+    /// [`WorkItem::Decode`] item, always (see module docs).
+    pub decode: Vec<usize>,
+    /// At most one prefill chunk per tick.
+    pub chunk: Option<ChunkPlan>,
+}
+
+/// The tick planner: the serving knobs that govern mixed ticks, plus the
+/// pure planning function. Carried by the engine (like
+/// `max_concurrent_sessions` and `batched_decode`) so the coordinator's
+/// worker needs no side channel to the config.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TickPlanner {
+    /// Master switch: off means admission prefills synchronously and no
+    /// chunk is ever planned (byte-identical to the pre-chunking
+    /// scheduler).
+    pub chunked_prefill: bool,
+    /// Upper bound on prompt positions fed per tick.
+    pub prefill_chunk_tokens: usize,
+    /// Token budget for one tick: decode rows (one each) plus the chunk.
+    /// `None` bounds the chunk only by `prefill_chunk_tokens`.
+    pub max_batch_tokens: Option<usize>,
+}
+
+impl TickPlanner {
+    pub fn from_serving(s: &ServingConfig) -> Self {
+        TickPlanner {
+            chunked_prefill: s.chunked_prefill,
+            prefill_chunk_tokens: s.prefill_chunk_tokens,
+            max_batch_tokens: s.max_batch_tokens,
+        }
+    }
+
+    /// Assemble one tick's plan from the live set (admission order).
+    pub fn plan(&self, items: &[WorkItem]) -> TickPlan {
+        let decode: Vec<usize> = items
+            .iter()
+            .enumerate()
+            .filter(|(_, it)| matches!(it, WorkItem::Decode))
+            .map(|(i, _)| i)
+            .collect();
+        let chunk = if self.chunked_prefill {
+            self.plan_chunk(items, decode.len())
+        } else {
+            None
+        };
+        TickPlan { decode, chunk }
+    }
+
+    /// The chunk for this tick: the oldest prefilling session, fed
+    /// whatever the budget leaves after the decode rows. `None` when no
+    /// prompt is pending or the decode rows already fill the budget.
+    fn plan_chunk(&self, items: &[WorkItem], decode_rows: usize) -> Option<ChunkPlan> {
+        let (idx, remaining) = items.iter().enumerate().find_map(|(i, it)| match it {
+            WorkItem::Prefill { remaining } if *remaining > 0 => Some((i, *remaining)),
+            _ => None,
+        })?;
+        let budget = self
+            .max_batch_tokens
+            .unwrap_or(usize::MAX)
+            .saturating_sub(decode_rows);
+        let tokens = self.prefill_chunk_tokens.min(remaining).min(budget);
+        if tokens == 0 {
+            // budget spent on decode rows: the chunk waits a tick. With
+            // no decode rows the budget is whole (validation keeps it
+            // >= 1), so an all-prefill tick always makes progress.
+            return None;
+        }
+        Some(ChunkPlan { idx, tokens })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn planner(chunk: usize, budget: Option<usize>) -> TickPlanner {
+        TickPlanner {
+            chunked_prefill: true,
+            prefill_chunk_tokens: chunk,
+            max_batch_tokens: budget,
+        }
+    }
+
+    #[test]
+    fn chunked_off_never_schedules_a_chunk() {
+        let p = TickPlanner {
+            chunked_prefill: false,
+            prefill_chunk_tokens: 16,
+            max_batch_tokens: None,
+        };
+        let plan = p.plan(&[WorkItem::Decode, WorkItem::Prefill { remaining: 100 }]);
+        assert_eq!(plan.decode, vec![0]);
+        assert_eq!(plan.chunk, None, "the off switch must be inert");
+    }
+
+    #[test]
+    fn empty_live_set_plans_nothing() {
+        let plan = planner(16, None).plan(&[]);
+        assert!(plan.decode.is_empty() && plan.chunk.is_none());
+    }
+
+    #[test]
+    fn lone_prefill_gets_a_full_chunk() {
+        let plan = planner(16, None).plan(&[WorkItem::Prefill { remaining: 100 }]);
+        assert_eq!(plan.chunk, Some(ChunkPlan { idx: 0, tokens: 16 }));
+    }
+
+    #[test]
+    fn chunk_clamps_to_the_remaining_prompt() {
+        let plan = planner(16, None).plan(&[WorkItem::Prefill { remaining: 5 }]);
+        assert_eq!(plan.chunk, Some(ChunkPlan { idx: 0, tokens: 5 }));
+    }
+
+    #[test]
+    fn decode_rows_always_run_and_eat_the_budget_first() {
+        // 3 decode rows under a budget of 8 leave 5 for the chunk
+        let items = [
+            WorkItem::Decode,
+            WorkItem::Prefill { remaining: 100 },
+            WorkItem::Decode,
+            WorkItem::Decode,
+        ];
+        let plan = planner(16, Some(8)).plan(&items);
+        assert_eq!(plan.decode, vec![0, 2, 3]);
+        assert_eq!(plan.chunk, Some(ChunkPlan { idx: 1, tokens: 5 }));
+    }
+
+    #[test]
+    fn saturated_budget_defers_the_chunk_but_never_the_decodes() {
+        let items = [
+            WorkItem::Decode,
+            WorkItem::Decode,
+            WorkItem::Prefill { remaining: 100 },
+        ];
+        let plan = planner(16, Some(2)).plan(&items);
+        assert_eq!(plan.decode, vec![0, 1], "decode rows are never budgeted out");
+        assert_eq!(plan.chunk, None, "no budget left for the chunk this tick");
+        // ...and an over-subscribed tick still decodes everyone
+        let plan = planner(16, Some(1)).plan(&items);
+        assert_eq!(plan.decode, vec![0, 1]);
+        assert_eq!(plan.chunk, None);
+    }
+
+    #[test]
+    fn oldest_prefill_wins_and_younger_ones_wait() {
+        let items = [
+            WorkItem::Prefill { remaining: 3 },
+            WorkItem::Prefill { remaining: 100 },
+        ];
+        let plan = planner(16, None).plan(&items);
+        assert_eq!(plan.chunk, Some(ChunkPlan { idx: 0, tokens: 3 }));
+    }
+
+    #[test]
+    fn drained_prefill_items_are_skipped() {
+        // remaining == 0 means the session is transitioning this tick —
+        // never schedule an empty chunk for it
+        let items = [
+            WorkItem::Prefill { remaining: 0 },
+            WorkItem::Prefill { remaining: 7 },
+        ];
+        let plan = planner(16, None).plan(&items);
+        assert_eq!(plan.chunk, Some(ChunkPlan { idx: 1, tokens: 7 }));
+    }
+
+    #[test]
+    fn all_prefill_tick_always_makes_progress() {
+        // the minimum valid budget still feeds one position when nothing
+        // is decoding — a tick can never be planned empty with live work
+        let plan = planner(16, Some(1)).plan(&[WorkItem::Prefill { remaining: 100 }]);
+        assert_eq!(plan.chunk, Some(ChunkPlan { idx: 0, tokens: 1 }));
+    }
+
+    #[test]
+    fn from_serving_copies_the_knobs() {
+        let s = ServingConfig {
+            chunked_prefill: true,
+            prefill_chunk_tokens: 24,
+            max_batch_tokens: Some(48),
+            ..Default::default()
+        };
+        let p = TickPlanner::from_serving(&s);
+        assert!(p.chunked_prefill);
+        assert_eq!(p.prefill_chunk_tokens, 24);
+        assert_eq!(p.max_batch_tokens, Some(48));
+    }
+}

@@ -135,22 +135,31 @@ impl Metrics {
 
     /// Record the batched-decode gauges in one shot (`batch_occupancy` /
     /// `batched_kernel_calls` / `expert_loads_deduped` /
-    /// `batched_ticks`) — the scheduler calls this every batched tick,
-    /// mirroring [`Self::record_kv_pool`]. The counters are engine-
-    /// lifetime totals, published as gauges so re-recording is
-    /// idempotent.
+    /// `batched_ticks` / `mixed_ticks`) — the scheduler calls this every
+    /// batched or mixed tick, mirroring [`Self::record_kv_pool`]. The
+    /// counters are engine-lifetime totals, published as gauges so
+    /// re-recording is idempotent.
     pub fn record_batch(
         &self,
         occupancy: u64,
         ticks: u64,
         kernel_calls: u64,
         loads_deduped: u64,
+        mixed_ticks: u64,
     ) {
         let mut g = self.gauges.lock().unwrap();
         g.insert("batch_occupancy".to_string(), occupancy);
         g.insert("batched_ticks".to_string(), ticks);
         g.insert("batched_kernel_calls".to_string(), kernel_calls);
         g.insert("expert_loads_deduped".to_string(), loads_deduped);
+        g.insert("mixed_ticks".to_string(), mixed_ticks);
+    }
+
+    /// Every gauge name currently recorded — the done-event parity test
+    /// enumerates these to lock gauges and the server's `done` schema
+    /// together (see `coordinator::server::GAUGE_DONE_FIELDS`).
+    pub fn gauge_names(&self) -> Vec<String> {
+        self.gauges.lock().unwrap().keys().cloned().collect()
     }
 
     pub fn observe(&self, name: &str, v: f64) {
@@ -301,12 +310,25 @@ mod tests {
     #[test]
     fn batch_gauges_record_together() {
         let m = Metrics::new();
-        m.record_batch(4, 10, 120, 36);
+        m.record_batch(4, 10, 120, 36, 7);
         assert_eq!(m.gauge("batch_occupancy"), 4);
         assert_eq!(m.gauge("batched_ticks"), 10);
         assert_eq!(m.gauge("batched_kernel_calls"), 120);
         assert_eq!(m.gauge("expert_loads_deduped"), 36);
+        assert_eq!(m.gauge("mixed_ticks"), 7);
         assert!(m.render().contains("expert_loads_deduped 36"));
+    }
+
+    #[test]
+    fn gauge_names_enumerate_recorded_gauges() {
+        let m = Metrics::new();
+        assert!(m.gauge_names().is_empty());
+        m.set_gauge("active_sessions", 1);
+        m.record_batch(1, 1, 1, 1, 1);
+        let names = m.gauge_names();
+        assert!(names.iter().any(|n| n == "active_sessions"));
+        assert!(names.iter().any(|n| n == "mixed_ticks"));
+        assert_eq!(names.len(), 6);
     }
 
     #[test]

@@ -1,0 +1,414 @@
+//! Integration: chunked-prefill tick scheduling against the real engine.
+//! Requires `make artifacts` (skips cleanly otherwise); the planner's
+//! pure scheduling policy is covered by always-on unit tests in
+//! `rust/src/sched/`, the config knobs in `rust/src/config/serving.rs`.
+//!
+//! Chunked prefill is a pure execution-order optimization for the
+//! emitted streams, so the contracts are equivalences plus one strict
+//! inequality:
+//! * chunked OFF is byte-identical to the synchronous-admission
+//!   scheduler (the knobs are inert behind the switch);
+//! * chunked ON emits bit-identical per-session token streams at widths
+//!   1 and 4, on both the fused (batched) path and the sequential
+//!   fallback, with the prefix cache on, and across preempt/resume
+//!   mid-prefill — only tick boundaries move;
+//! * a mixed tick performs strictly fewer expert loads than the same
+//!   tick's prefill chunk and decode batch run separately (the merged
+//!   union dedup — the reason to fuse at all).
+
+use std::path::{Path, PathBuf};
+
+use moe_offload::config::{
+    HardwareProfile, OffloadPolicy, QuantScheme, ServingConfig, SimScale,
+};
+use moe_offload::coordinator::{collect_events, Coordinator, Event, Request};
+use moe_offload::engine::{MoeEngine, PrefillChunk, Session};
+use moe_offload::harness;
+use moe_offload::Result;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() && dir.join("weights.npz").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn serving(width: usize) -> ServingConfig {
+    ServingConfig {
+        policy: OffloadPolicy::Full { cache_k: 2, spec_n: 2 },
+        expert_quant: QuantScheme::Hqq { bits: 3 },
+        attn_quant: QuantScheme::Hqq { bits: 4 },
+        sim_scale: SimScale::Tiny,
+        max_concurrent_sessions: width,
+        ..Default::default()
+    }
+}
+
+fn make_engine(dir: &Path, s: &ServingConfig) -> Result<MoeEngine> {
+    harness::build_engine_with_serving(dir, s, HardwareProfile::rtx3060())
+}
+
+fn toks(s: &str) -> Vec<u32> {
+    s.bytes().map(|b| b as u32).collect()
+}
+
+fn bits(rows: &[Vec<f32>]) -> Vec<Vec<u32>> {
+    rows.iter().map(|r| r.iter().map(|x| x.to_bits()).collect()).collect()
+}
+
+/// Run `requests` through a coordinator built from `cfg`, collecting the
+/// final text of each (in submit order) plus a few metric readings.
+fn run_workload(
+    dir: &Path,
+    cfg: ServingConfig,
+    requests: Vec<Request>,
+) -> (Vec<String>, u64, u64, u64) {
+    let dir2 = dir.to_path_buf();
+    let coord = Coordinator::new(
+        move || harness::build_engine_with_serving(&dir2, &cfg, HardwareProfile::rtx3060()),
+        7,
+    );
+    let streams: Vec<_> = requests.into_iter().map(|r| coord.submit(r)).collect();
+    let texts: Vec<String> = streams
+        .into_iter()
+        .map(|s| {
+            collect_events(s)
+                .iter()
+                .find_map(|ev| match ev {
+                    Event::Done { text, .. } => Some(text.clone()),
+                    Event::Error { message, .. } => panic!("request failed: {message}"),
+                    _ => None,
+                })
+                .expect("request must finish")
+        })
+        .collect();
+    let failed = coord.metrics.counter("requests_failed");
+    let mixed = coord.metrics.gauge("mixed_ticks");
+    let preempted = coord.metrics.gauge("kv_preemptions");
+    (texts, failed, mixed, preempted)
+}
+
+fn mk(prompt: String, max_tokens: usize) -> Request {
+    let mut r = Request::new(prompt);
+    r.chat = false;
+    r.max_tokens = max_tokens;
+    r
+}
+
+/// A mixed workload: three chatty decoders plus one long admission that
+/// spans several prefill chunks.
+fn mixed_requests() -> Vec<Request> {
+    vec![
+        mk("what is a mixture of experts?".into(), 16),
+        mk("explain lru caching briefly..".into(), 16),
+        mk("why is my program slow today?".into(), 16),
+        mk("x".repeat(60), 8),
+    ]
+}
+
+#[test]
+fn chunked_off_is_byte_identical_and_knobs_are_inert() {
+    let Some(dir) = artifacts_dir() else { return };
+    // the synchronous path must not depend on the (inert) chunk knobs
+    let base = serving(4);
+    let weird = ServingConfig {
+        prefill_chunk_tokens: 7,
+        max_batch_tokens: Some(5),
+        ..serving(4)
+    };
+    let (t0, f0, m0, _) = run_workload(&dir, base, mixed_requests());
+    let (t1, f1, m1, _) = run_workload(&dir, weird, mixed_requests());
+    assert_eq!(f0 + f1, 0);
+    assert_eq!(m0, 0, "chunked off must never run a mixed tick");
+    assert_eq!(m1, 0);
+    assert_eq!(t0, t1, "inert knobs must not change any stream");
+}
+
+#[test]
+fn chunked_on_streams_are_bit_identical_at_width_4() {
+    let Some(dir) = artifacts_dir() else { return };
+    let off = serving(4);
+    let on = ServingConfig { chunked_prefill: true, ..serving(4) };
+    let (t_off, f_off, _, _) = run_workload(&dir, off, mixed_requests());
+    let (t_on, f_on, mixed, _) = run_workload(&dir, on, mixed_requests());
+    assert_eq!(f_off + f_on, 0);
+    assert_eq!(
+        t_off, t_on,
+        "chunked admission must not change any request's token stream"
+    );
+    assert!(
+        mixed >= 1,
+        "the long admission must have fused at least one chunk with live decodes"
+    );
+}
+
+#[test]
+fn chunked_on_streams_are_bit_identical_at_width_1() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reqs = || vec![mk("y".repeat(50), 8), mk("tell me about vram".into(), 8)];
+    let off = serving(1);
+    let on = ServingConfig { chunked_prefill: true, ..serving(1) };
+    let (t_off, f_off, _, _) = run_workload(&dir, off, reqs());
+    let (t_on, f_on, _, _) = run_workload(&dir, on, reqs());
+    assert_eq!(f_off + f_on, 0);
+    assert_eq!(t_off, t_on, "width-1 chunked prefill must be stream-identical");
+}
+
+#[test]
+fn chunked_on_sequential_fallback_is_bit_identical() {
+    let Some(dir) = artifacts_dir() else { return };
+    let off = ServingConfig { batched_decode: false, ..serving(4) };
+    let on = ServingConfig {
+        batched_decode: false,
+        chunked_prefill: true,
+        // a tight budget exercises chunk deferral under live decodes
+        max_batch_tokens: Some(8),
+        ..serving(4)
+    };
+    let (t_off, f_off, _, _) = run_workload(&dir, off, mixed_requests());
+    let (t_on, f_on, mixed, _) = run_workload(&dir, on, mixed_requests());
+    assert_eq!(f_off + f_on, 0);
+    assert_eq!(t_off, t_on, "the sequential fallback must be stream-identical");
+    assert_eq!(mixed, 0, "sequential ticks never fuse (no step_mixed)");
+}
+
+/// Prefix-cache seeding composes with tail chunking, and a session
+/// preempted MID-PREFILL resumes bit-identically: the paged-KV pool is
+/// sized so the older stream's decode growth forces a preemption while
+/// the younger admission is still feeding its prompt.
+#[test]
+fn chunked_on_with_prefix_cache_and_mid_prefill_preemption() {
+    let Some(dir) = artifacts_dir() else { return };
+    let base = ServingConfig {
+        max_concurrent_sessions: 2,
+        kv_block_tokens: 16,
+        kv_pool_tokens: Some(128),
+        prefix_cache: true,
+        // budget-only stopping makes every stream's length — and so the
+        // engineered pool pressure — deterministic
+        stop_suffix: String::new(),
+        ..serving(2)
+    };
+    let on = ServingConfig { chunked_prefill: true, ..base.clone() };
+    // A (62-token prompt, 4 blocks) transitions to decode after 4 chunks
+    // and crosses position 64 (needing a 5th block) while B's 60-token
+    // prompt is still chunk-feeding; B's own 4th block then finds the
+    // pool dry — the youngest (B, MID-PREFILL) is swapped out, resumed
+    // once A finishes. C repeats A's prompt and seeds from the prefix
+    // cache over the same pressured pool.
+    let reqs = || {
+        vec![
+            mk("a".repeat(62), 12),
+            mk("b".repeat(60), 8),
+            mk("a".repeat(62), 8),
+        ]
+    };
+    let (t_off, f_off, _, _) = run_workload(&dir, base, reqs());
+    let (t_on, f_on, _, preempted) = run_workload(&dir, on, reqs());
+    assert_eq!(f_off + f_on, 0);
+    assert_eq!(
+        t_off, t_on,
+        "prefix seeding + tail chunking + mid-prefill preemption must not \
+         change any stream"
+    );
+    assert!(
+        preempted >= 1,
+        "the workload is sized to force at least one preemption"
+    );
+}
+
+/// Engine-level bit-identity: (a) decode logits are unchanged by a
+/// prefill chunk riding the tick, and (b) the chunk's logits equal a
+/// monolithic prefill of the same prompt, chunk boundaries and all.
+#[test]
+fn step_mixed_is_bit_identical_to_unfused_execution() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = serving(4);
+    let short = toks("the quick brown!");
+    let long = toks("an lru cache evicts the coldest expert when a new one arrives!!!");
+    assert_eq!(long.len(), 64);
+    let streams: Vec<Vec<u32>> = (0..3)
+        .map(|i| (0..4).map(|t| short[(i * 5 + t) % short.len()]).collect())
+        .collect();
+
+    // reference 1: decode-only ticks, no chunk anywhere
+    let mut e1 = make_engine(&dir, &cfg).unwrap();
+    let mut d1: Vec<Session> = (0..3)
+        .map(|i| {
+            let mut s = e1.new_session().unwrap();
+            e1.prefill(&mut s, &short[..8 + i]).unwrap();
+            s
+        })
+        .collect();
+    let mut ref_logits: Vec<Vec<Vec<f32>>> = vec![Vec::new(); 3];
+    for t in 0..4 {
+        let tick: Vec<u32> = (0..3).map(|i| streams[i][t]).collect();
+        let mut refs: Vec<&mut Session> = d1.iter_mut().collect();
+        for (i, slot) in e1.decode_batch(&mut refs, &tick).unwrap().into_iter().enumerate() {
+            ref_logits[i].push(slot.unwrap());
+        }
+    }
+
+    // reference 2: the long prompt through one monolithic prefill
+    let mut e3 = make_engine(&dir, &cfg).unwrap();
+    let mut p3 = e3.new_session().unwrap();
+    let mono = e3.prefill(&mut p3, &long).unwrap();
+
+    // mixed: the same decode ticks with 16-token chunks riding along
+    let mut e2 = make_engine(&dir, &cfg).unwrap();
+    let mut d2: Vec<Session> = (0..3)
+        .map(|i| {
+            let mut s = e2.new_session().unwrap();
+            e2.prefill(&mut s, &short[..8 + i]).unwrap();
+            s
+        })
+        .collect();
+    let mut chunk_sess = e2.new_session().unwrap();
+    let mut got_logits: Vec<Vec<Vec<f32>>> = vec![Vec::new(); 3];
+    let mut chunk_rows: Vec<Vec<f32>> = Vec::new();
+    for t in 0..4 {
+        let tick: Vec<u32> = (0..3).map(|i| streams[i][t]).collect();
+        let fed = t * 16;
+        let chunk = &long[fed..fed + 16];
+        let (slots, cslot) = {
+            let mut refs: Vec<&mut Session> = d2.iter_mut().collect();
+            e2.step_mixed(
+                &mut refs,
+                &tick,
+                Some(PrefillChunk { sess: &mut chunk_sess, tokens: chunk }),
+            )
+            .unwrap()
+        };
+        for (i, slot) in slots.into_iter().enumerate() {
+            got_logits[i].push(slot.unwrap());
+        }
+        let clog = cslot.expect("chunk submitted").unwrap();
+        assert_eq!(clog.shape[0], 16);
+        for r in 0..16 {
+            chunk_rows.push(clog.row(r).to_vec());
+        }
+    }
+
+    for i in 0..3 {
+        assert_eq!(
+            bits(&ref_logits[i]),
+            bits(&got_logits[i]),
+            "decode session {i} diverged when a prefill chunk rode its ticks"
+        );
+    }
+    let mono_rows: Vec<Vec<f32>> = (0..64).map(|r| mono.row(r).to_vec()).collect();
+    assert_eq!(
+        bits(&mono_rows),
+        bits(&chunk_rows),
+        "chunked prefill logits must equal the monolithic prefill bitwise"
+    );
+    assert_eq!(chunk_sess.position(), 64);
+    assert_eq!(e2.batch.mixed_ticks, 4);
+    assert!(e2.batch.prefill_rows == 64 && e2.batch.loads_deduped > 0);
+}
+
+/// Preemption in the middle of a chunked prefill round-trips bit-exactly:
+/// swap out after some chunks, resume, finish, and match the monolithic
+/// prefill logits row for row.
+#[test]
+fn mid_prefill_preempt_resume_is_bit_exact() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = serving(2);
+    let long = toks("speculative loading hides the pcie latency behind compute..");
+
+    let mut e1 = make_engine(&dir, &cfg).unwrap();
+    let mut s1 = e1.new_session().unwrap();
+    let mono = e1.prefill(&mut s1, &long).unwrap();
+
+    let mut e2 = make_engine(&dir, &cfg).unwrap();
+    let mut s2 = e2.new_session().unwrap();
+    let mut rows: Vec<Vec<f32>> = Vec::new();
+    let first = e2.prefill(&mut s2, &long[..16]).unwrap();
+    for r in 0..16 {
+        rows.push(first.row(r).to_vec());
+    }
+    e2.preempt_session(&mut s2).unwrap();
+    e2.resume_session(&mut s2).unwrap();
+    let rest = e2.prefill(&mut s2, &long[16..]).unwrap();
+    for r in 0..long.len() - 16 {
+        rows.push(rest.row(r).to_vec());
+    }
+
+    let mono_rows: Vec<Vec<f32>> = (0..long.len()).map(|r| mono.row(r).to_vec()).collect();
+    assert_eq!(
+        bits(&mono_rows),
+        bits(&rows),
+        "a prefill interrupted by preempt/resume must stay bit-identical"
+    );
+}
+
+/// The point of fusing: one mixed tick stages strictly fewer experts
+/// than the same tick's prefill chunk and decode batch run separately.
+/// OnDemand placement makes the count exact — every demand load is a
+/// cache miss, nothing is retained between stagings.
+#[test]
+fn mixed_tick_stages_strictly_fewer_expert_loads_than_split_execution() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = ServingConfig {
+        policy: OffloadPolicy::OnDemand,
+        ..serving(4)
+    };
+    let short = toks("the quick brown!");
+    let chunk = toks("the quick brown fox jumps over t");
+    assert_eq!(chunk.len(), 32);
+    let chunk = &chunk[..16];
+    let tick: Vec<u32> = (0..3).map(|i| short[i]).collect();
+
+    let setup = |engine: &mut MoeEngine| -> (Vec<Session>, Session) {
+        let decoders: Vec<Session> = (0..3)
+            .map(|i| {
+                let mut s = engine.new_session().unwrap();
+                engine.prefill(&mut s, &short[..8 + i]).unwrap();
+                s
+            })
+            .collect();
+        let chunk_sess = engine.new_session().unwrap();
+        (decoders, chunk_sess)
+    };
+
+    // fused: one mixed tick
+    let mut ea = make_engine(&dir, &cfg).unwrap();
+    let (mut da, mut ca) = setup(&mut ea);
+    let before = ea.cache.stats.misses;
+    let (slots_a, cslot_a) = {
+        let mut refs: Vec<&mut Session> = da.iter_mut().collect();
+        ea.step_mixed(&mut refs, &tick, Some(PrefillChunk { sess: &mut ca, tokens: chunk }))
+            .unwrap()
+    };
+    let fused_loads = ea.cache.stats.misses - before;
+    let logits_a: Vec<Vec<f32>> = slots_a.into_iter().map(|s| s.unwrap()).collect();
+    cslot_a.expect("chunk submitted").unwrap();
+
+    // split: the same chunk, then the same decode batch, separately
+    let mut eb = make_engine(&dir, &cfg).unwrap();
+    let (mut db, mut cb) = setup(&mut eb);
+    let before = eb.cache.stats.misses;
+    eb.prefill(&mut cb, chunk).unwrap();
+    let slots_b = {
+        let mut refs: Vec<&mut Session> = db.iter_mut().collect();
+        eb.decode_batch(&mut refs, &tick).unwrap()
+    };
+    let split_loads = eb.cache.stats.misses - before;
+    let logits_b: Vec<Vec<f32>> = slots_b.into_iter().map(|s| s.unwrap()).collect();
+
+    assert!(
+        fused_loads < split_loads,
+        "a mixed tick must stage strictly fewer experts than the split \
+         execution ({fused_loads} vs {split_loads}) — the merged union dedup"
+    );
+    assert_eq!(
+        bits(&logits_a),
+        bits(&logits_b),
+        "fusing must not change the decode logits"
+    );
+    assert_eq!(ea.batch.mixed_ticks, 1);
+    assert!(ea.batch.loads_deduped > 0, "the overlap is what the dedup counter counts");
+}
