@@ -13,6 +13,7 @@ use moe_offload::config::{
 };
 use moe_offload::coordinator::{Coordinator, Event, Request};
 use moe_offload::harness;
+use moe_offload::quant::TierPolicy;
 use moe_offload::Error;
 
 fn main() {
@@ -444,6 +445,96 @@ fn main() {
     match std::fs::write(bench5_path, &bench5) {
         Ok(()) => println!("  wrote {bench5_path}"),
         Err(e) => eprintln!("  could not write {bench5_path}: {e}"),
+    }
+
+    // quantization tiers: link bytes per decoded token and sim
+    // throughput, uniform base scheme vs hotness-tiered precision at the
+    // SAME cache budget (full_k2_spec2, base 3-bit HQQ). The conservative
+    // point (hot at base, cold at 2 bits) can only remove link bytes —
+    // that's the asserted win; the grid point (4/3/2) additionally
+    // spends bytes on hot experts and is reported unasserted. Emits the
+    // machine-readable trajectory to ../BENCH_6.json.
+    let tier_tokens = if smoke { 48 } else { 384 };
+    println!("\nquant_tiers ({tier_tokens} decoded tokens, full_k2_spec2, base q3):");
+    // (link bytes/token, sim tokens/s, hot hits, promotions, bytes saved)
+    let run_tiers = |tiers: TierPolicy| -> (f64, f64, u64, u64, u64) {
+        let serving = ServingConfig {
+            policy: OffloadPolicy::Full { cache_k: 2, spec_n: 2 },
+            expert_quant: QuantScheme::Hqq { bits: 3 },
+            attn_quant: QuantScheme::Hqq { bits: 4 },
+            sim_scale: SimScale::Tiny,
+            expert_tiers: tiers,
+            ..Default::default()
+        };
+        let mut engine =
+            harness::build_engine_with_serving(&dir, &serving, HardwareProfile::rtx3060())
+                .unwrap();
+        let mut sess = engine.new_session().unwrap();
+        let sim0 = engine.timeline.now();
+        for t in 0..tier_tokens {
+            if sess.position() + 1 >= engine.weights.cfg.max_seq {
+                sess.reset();
+            }
+            engine.decode_step(&mut sess, tokens[t % tokens.len()]).unwrap();
+        }
+        let sim_s = engine.cost.scale_token_time(engine.timeline.now() - sim0);
+        (
+            sess.run.total_bytes() as f64 / tier_tokens as f64,
+            tier_tokens as f64 / sim_s.max(1e-12),
+            engine.tiers.hot_hits,
+            engine.tiers.promotions,
+            engine.tiers.bytes_saved(),
+        )
+    };
+    let hot3_cold2 = TierPolicy {
+        enabled: true,
+        hot: QuantScheme::Hqq { bits: 3 },
+        cold: QuantScheme::Hqq { bits: 2 },
+        hot_fraction: 0.25,
+        cold_fraction: 0.5,
+        ..TierPolicy::hot_cold()
+    };
+    let (uni_bpt, uni_tps, _, _, _) = run_tiers(TierPolicy::default());
+    let (t32_bpt, t32_tps, t32_hot, t32_promo, t32_saved) = run_tiers(hot3_cold2);
+    let (t432_bpt, t432_tps, t432_hot, t432_promo, t432_saved) =
+        run_tiers(TierPolicy::hot_cold());
+    println!("  uniform q3   : {uni_bpt:.0} link bytes/token  {uni_tps:.1} tok/s(sim)");
+    println!(
+        "  hot3/cold2   : {t32_bpt:.0} link bytes/token  {t32_tps:.1} tok/s(sim)  \
+         ({t32_hot} hot hits, {t32_promo} promotions, {t32_saved} bytes saved)"
+    );
+    println!(
+        "  hot4/warm3/cold2: {t432_bpt:.0} link bytes/token  {t432_tps:.1} tok/s(sim)  \
+         ({t432_hot} hot hits, {t432_promo} promotions, {t432_saved} bytes saved)"
+    );
+    assert!(
+        t32_bpt < uni_bpt,
+        "a cold tier below the base scheme must ship strictly fewer link \
+         bytes per token ({t32_bpt:.0} vs uniform {uni_bpt:.0})"
+    );
+    let bench6 = format!(
+        concat!(
+            "{{\"bench\":\"quant_tiers\",\"schema\":1,\"status\":\"measured\",",
+            "\"policy\":\"full_k2_spec2\",\"sim_scale\":\"tiny\",\"base_bits\":3,",
+            "\"decode_tokens\":{},\"smoke\":{},\"modes\":[",
+            "{{\"tiers\":\"uniform\",\"link_bytes_per_token\":{:.1},",
+            "\"sim_tokens_per_s\":{:.3}}},",
+            "{{\"tiers\":\"hot3_cold2\",\"hot_bits\":3,\"cold_bits\":2,",
+            "\"link_bytes_per_token\":{:.1},\"sim_tokens_per_s\":{:.3},",
+            "\"expert_hot_hits\":{},\"tier_promotions\":{},\"link_bytes_saved\":{}}},",
+            "{{\"tiers\":\"hot4_cold2\",\"hot_bits\":4,\"cold_bits\":2,",
+            "\"link_bytes_per_token\":{:.1},\"sim_tokens_per_s\":{:.3},",
+            "\"expert_hot_hits\":{},\"tier_promotions\":{},\"link_bytes_saved\":{}}}]}}\n"
+        ),
+        tier_tokens, smoke,
+        uni_bpt, uni_tps,
+        t32_bpt, t32_tps, t32_hot, t32_promo, t32_saved,
+        t432_bpt, t432_tps, t432_hot, t432_promo, t432_saved
+    );
+    let bench6_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_6.json");
+    match std::fs::write(bench6_path, &bench6) {
+        Ok(()) => println!("  wrote {bench6_path}"),
+        Err(e) => eprintln!("  could not write {bench6_path}: {e}"),
     }
 
     // host wall-time breakdown per module (perf-pass diagnostics)

@@ -3,6 +3,12 @@
 //! The paper keeps the k least-recently-used experts of every MoE layer on
 //! the GPU. Capacities are tiny (k ≤ 8 of E = 8 experts), so a VecDeque
 //! scan beats hash-map machinery; operations are O(k).
+//!
+//! Beyond residency, the set keeps PERSISTENT per-item route/hit counters
+//! ([`LruSet::counters`]) that survive eviction — the tier policy's
+//! hotness signal. Only [`LruSet::touch`] (a routed use) counts;
+//! [`LruSet::insert`] (speculative promotion) moves items without
+//! inflating the route statistics.
 
 use std::collections::VecDeque;
 
@@ -11,11 +17,14 @@ pub struct LruSet<T: PartialEq + Copy> {
     cap: usize,
     /// Most-recently-used at the front.
     items: VecDeque<T>,
+    /// Lifetime (item, hits, routed uses) — assoc list, item counts are
+    /// tiny (E = 8 experts per layer). Never pruned on eviction.
+    counts: Vec<(T, u64, u64)>,
 }
 
 impl<T: PartialEq + Copy> LruSet<T> {
     pub fn new(cap: usize) -> Self {
-        LruSet { cap, items: VecDeque::with_capacity(cap) }
+        LruSet { cap, items: VecDeque::with_capacity(cap), counts: Vec::new() }
     }
 
     pub fn capacity(&self) -> usize {
@@ -36,7 +45,27 @@ impl<T: PartialEq + Copy> LruSet<T> {
 
     /// Mark `x` as used: promote to MRU if present (returns true = hit);
     /// otherwise insert, returning the evicted LRU item via `evicted`.
+    /// Counts one routed use for `x` (plus a hit when resident).
     pub fn touch(&mut self, x: T) -> (bool, Option<T>) {
+        let (hit, evicted) = self.touch_inner(x);
+        self.count_use(x, hit);
+        (hit, evicted)
+    }
+
+    /// Count a routed use that bypasses [`Self::touch`] — the manager's
+    /// miss path (the load lands via `insert`) and spec-promotion path
+    /// both route the expert without an LRU touch.
+    pub fn count_use(&mut self, x: T, hit: bool) {
+        match self.counts.iter_mut().find(|(y, _, _)| *y == x) {
+            Some((_, hits, uses)) => {
+                *hits += hit as u64;
+                *uses += 1;
+            }
+            None => self.counts.push((x, hit as u64, 1)),
+        }
+    }
+
+    fn touch_inner(&mut self, x: T) -> (bool, Option<T>) {
         if let Some(pos) = self.items.iter().position(|y| *y == x) {
             let item = self.items.remove(pos).unwrap();
             self.items.push_front(item);
@@ -55,10 +84,17 @@ impl<T: PartialEq + Copy> LruSet<T> {
     }
 
     /// Insert without counting as a hit/miss (promotion of a speculative
-    /// load into the cache). Returns the evicted LRU item, if any.
+    /// load into the cache). Returns the evicted LRU item, if any. Does
+    /// NOT touch the route counters — speculation is not routing.
     pub fn insert(&mut self, x: T) -> Option<T> {
-        let (_, ev) = self.touch(x);
+        let (_, ev) = self.touch_inner(x);
         ev
+    }
+
+    /// Lifetime (item, hits, routed uses) triples, eviction-proof —
+    /// the raw hotness signal the tier policy re-ranks on.
+    pub fn counters(&self) -> impl Iterator<Item = (T, u64, u64)> + '_ {
+        self.counts.iter().copied()
     }
 
     /// Remove a specific item (e.g. the engine invalidating an entry).
@@ -129,6 +165,39 @@ mod tests {
     }
 
     #[test]
+    fn counters_track_routed_uses_and_survive_eviction() {
+        let mut c = LruSet::new(1);
+        c.touch(1); // miss, use
+        c.touch(1); // hit, use
+        c.touch(2); // miss, evicts 1
+        c.touch(1); // miss again — counters must have survived eviction
+        let counts: Vec<_> = c.counters().collect();
+        assert!(counts.contains(&(1, 1, 3)), "{counts:?}");
+        assert!(counts.contains(&(2, 0, 1)), "{counts:?}");
+    }
+
+    #[test]
+    fn speculative_insert_does_not_count_as_routing() {
+        let mut c = LruSet::new(2);
+        c.insert(5);
+        c.insert(5);
+        assert!(c.contains(&5));
+        assert_eq!(c.counters().count(), 0, "insert must not create counters");
+        c.touch(5);
+        assert_eq!(c.counters().collect::<Vec<_>>(), vec![(5, 1, 1)]);
+    }
+
+    #[test]
+    fn zero_capacity_still_counts_routed_uses() {
+        // k=0 caches nothing, but routing still happened — the tier
+        // policy needs the signal regardless of cache capacity
+        let mut c = LruSet::new(0);
+        c.touch(3);
+        c.touch(3);
+        assert_eq!(c.counters().collect::<Vec<_>>(), vec![(3, 0, 2)]);
+    }
+
+    #[test]
     fn prop_lru_invariants() {
         // 1) size never exceeds cap; 2) no duplicates; 3) a touch of x
         // makes x MRU; 4) evicted item was the LRU.
@@ -156,6 +225,11 @@ mod tests {
                         ensure(before.last() == Some(&e), "evicted not LRU")?;
                     }
                 }
+                // counter invariants: every touch counted exactly one
+                // use, and hits never exceed uses
+                let total_uses: u64 = c.counters().map(|(_, _, u)| u).sum();
+                ensure(total_uses == ops.len() as u64, "uses != touches")?;
+                ensure(c.counters().all(|(_, h, u)| h <= u), "hits > uses")?;
                 Ok(())
             },
         );

@@ -24,7 +24,7 @@
 //! reach a staged-but-unconsumed expert, the batch still computes
 //! correctly instead of failing or silently re-staging.
 
-use std::collections::{HashSet, VecDeque};
+use std::collections::{BTreeMap, HashSet, VecDeque};
 
 use crate::cache::lru::LruSet;
 use crate::cache::speculative::SpeculativeStats;
@@ -81,6 +81,10 @@ pub struct CacheManager {
     /// Device evictions deferred because the victim was pinned; settled
     /// by [`Self::unpin_all`].
     deferred_evict: Vec<ExpertId>,
+    /// Bit-width each RESIDENT expert was staged at (16 = fp). The tier
+    /// machinery compares this against the expert's current tier to
+    /// catch stale-precision copies after a promotion/demotion.
+    resident_bits: BTreeMap<ExpertId, u8>,
     pub device: DeviceMemory,
     pub stats: CacheStats,
 }
@@ -93,6 +97,7 @@ impl CacheManager {
             spec_cap,
             pinned: HashSet::new(),
             deferred_evict: Vec::new(),
+            resident_bits: BTreeMap::new(),
             device,
             stats: CacheStats { per_layer: vec![(0, 0); n_layers], ..Default::default() },
         }
@@ -129,6 +134,7 @@ impl CacheManager {
                 // promote: leave device residency, move bookkeeping into
                 // the layer cache (paper: replaces that layer's LRU entry)
                 self.spec_resident.retain(|x| *x != id);
+                self.layers[li].count_use(id.expert, true);
                 self.insert_into_layer(id);
                 self.stats.spec.useful += 1;
                 // a spec hit avoided a miss; count as hit for hit-ratio of
@@ -138,6 +144,7 @@ impl CacheManager {
                 CacheEvent::SpecHit(id)
             }
             Lookup::Absent => {
+                self.layers[li].count_use(id.expert, false);
                 self.stats.misses += 1;
                 self.stats.spec.missed += 1;
                 CacheEvent::Miss(id)
@@ -148,7 +155,9 @@ impl CacheManager {
     /// Install a demand-loaded expert (after the transfer completed).
     pub fn insert_loaded(&mut self, id: ExpertId, e: DeviceExpert) -> Result<()> {
         self.ensure_headroom()?;
+        let bits = e.quant_bits();
         self.device.insert(id, e)?;
+        self.resident_bits.insert(id, bits);
         self.insert_into_layer(id);
         Ok(())
     }
@@ -167,7 +176,9 @@ impl CacheManager {
             }
         }
         self.ensure_headroom()?;
+        let bits = e.quant_bits();
         self.device.insert(id, e)?;
+        self.resident_bits.insert(id, bits);
         self.spec_resident.push_back(id);
         self.stats.spec.issued += 1;
         Ok(())
@@ -234,6 +245,7 @@ impl CacheManager {
         for id in deferred {
             if self.lookup(id) == Lookup::Absent {
                 self.device.evict(id);
+                self.resident_bits.remove(&id);
             }
         }
     }
@@ -248,7 +260,50 @@ impl CacheManager {
             self.deferred_evict.push(id);
         } else {
             self.device.evict(id);
+            self.resident_bits.remove(&id);
         }
+    }
+
+    // ---------------------------------------------------------------------
+    // per-expert precision tiers
+    // ---------------------------------------------------------------------
+
+    /// Bit-width `id`'s resident device copy was staged at, if resident.
+    /// The engine compares this to the expert's CURRENT tier bits: a
+    /// mismatch means a stale-precision copy that must be re-staged.
+    pub fn resident_bits_of(&self, id: ExpertId) -> Option<u8> {
+        if self.device.contains(id) {
+            self.resident_bits.get(&id).copied()
+        } else {
+            None
+        }
+    }
+
+    /// Force-drop `id` everywhere: layer LRU, speculative buffers, device
+    /// copy, staged-bits record. Used when a tier change invalidates the
+    /// resident precision. Callers must not hold tick pins on `id` (the
+    /// engine re-tiers only at tick boundaries, after `unpin_all`).
+    pub fn drop_expert(&mut self, id: ExpertId) {
+        self.layers[id.layer as usize].remove(&id.expert);
+        self.spec_resident.retain(|x| *x != id);
+        if self.device.evict(id).is_some() {
+            self.stats.evictions += 1;
+        }
+        self.resident_bits.remove(&id);
+    }
+
+    /// Lifetime per-expert (hits, routed uses) aggregated from every
+    /// layer's LRU counters — the tier policy's online hotness signal.
+    /// Eviction-proof: counters persist after the expert leaves the
+    /// cache, so rarely-routed experts keep their (low) scores.
+    pub fn expert_counters(&self) -> Vec<(ExpertId, u64, u64)> {
+        let mut out = Vec::new();
+        for (li, layer) in self.layers.iter().enumerate() {
+            for (expert, hits, uses) in layer.counters() {
+                out.push((ExpertId { layer: li as u16, expert }, hits, uses));
+            }
+        }
+        out
     }
 
     /// Cached experts of a layer, MRU first (Fig 1 overlay).
@@ -433,6 +488,48 @@ mod tests {
         assert!(m.device.contains(id(0, 2)), "pinned transient survives release");
         m.unpin_all();
         assert!(!m.device.contains(id(0, 2)), "transient freed once unpinned");
+    }
+
+    #[test]
+    fn resident_bits_follow_residency() {
+        let mut m = mgr(1, 4, 16);
+        assert_eq!(m.resident_bits_of(id(0, 1)), None);
+        m.insert_loaded(id(0, 1), dummy()).unwrap();
+        assert_eq!(m.resident_bits_of(id(0, 1)), Some(16));
+        m.insert_loaded(id(0, 2), dummy()).unwrap(); // LRU-evicts (0,1)
+        assert_eq!(m.resident_bits_of(id(0, 1)), None, "evicted copy has no bits");
+        assert_eq!(m.resident_bits_of(id(0, 2)), Some(16));
+        // spec path records too
+        m.insert_speculative(id(0, 3), dummy()).unwrap();
+        assert_eq!(m.resident_bits_of(id(0, 3)), Some(16));
+    }
+
+    #[test]
+    fn drop_expert_clears_every_record() {
+        let mut m = mgr(2, 4, 16);
+        m.insert_loaded(id(0, 1), dummy()).unwrap();
+        m.insert_speculative(id(0, 2), dummy()).unwrap();
+        m.drop_expert(id(0, 1));
+        m.drop_expert(id(0, 2));
+        for e in [1, 2] {
+            assert_eq!(m.lookup(id(0, e)), Lookup::Absent);
+            assert!(!m.device.contains(id(0, e)));
+            assert_eq!(m.resident_bits_of(id(0, e)), None);
+        }
+        // dropping settles immediately; a later demand use is a clean miss
+        assert_eq!(m.on_demand_use(id(0, 1)), CacheEvent::Miss(id(0, 1)));
+    }
+
+    #[test]
+    fn expert_counters_aggregate_across_layers() {
+        let mut m = mgr(1, 4, 16);
+        m.on_demand_use(id(0, 1)); // miss -> routed use
+        m.insert_loaded(id(0, 1), dummy()).unwrap();
+        m.on_demand_use(id(0, 1)); // hit
+        m.on_demand_use(id(1, 3)); // miss in the other layer
+        let counts = m.expert_counters();
+        assert!(counts.contains(&(id(0, 1), 1, 2)), "{counts:?}");
+        assert!(counts.contains(&(id(1, 3), 0, 1)), "{counts:?}");
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Serving / offloading policy configuration.
 
 use crate::error::{Error, Result};
+use crate::quant::tier::TierPolicy;
 
 /// Weight quantization scheme (per weight class).
 ///
@@ -208,6 +209,12 @@ pub struct ServingConfig {
     /// the live decodes. `None` bounds the chunk only by
     /// `prefill_chunk_tokens`. Inert while `chunked_prefill` is off.
     pub max_batch_tokens: Option<usize>,
+    /// Per-expert precision tiers (see [`crate::quant::tier`]): hot
+    /// experts keep more bits, cold experts ship fewer bytes per miss,
+    /// warm experts stay at `expert_quant`. Disabled by default — off is
+    /// byte-identical to the uniform deployment (every expert Warm at
+    /// the base scheme, same packed bytes, same transfer pricing).
+    pub expert_tiers: TierPolicy,
 }
 
 impl Default for ServingConfig {
@@ -236,6 +243,7 @@ impl Default for ServingConfig {
             // a fused mixed tick feeds exactly one module call per layer
             prefill_chunk_tokens: 16,
             max_batch_tokens: None,
+            expert_tiers: TierPolicy::default(),
         }
     }
 }
@@ -340,6 +348,9 @@ impl ServingConfig {
                 }
             }
         }
+        // tier knobs follow the same inertness rule: TierPolicy::validate
+        // is a no-op while the policy is disabled
+        self.expert_tiers.validate()?;
         Ok(())
     }
 }
@@ -550,6 +561,40 @@ mod tests {
         assert!(
             inert.validate().is_ok(),
             "inert chunked-prefill knobs must not block a chunked-off deployment"
+        );
+    }
+
+    #[test]
+    fn tier_knob_defaults_and_validation() {
+        // opt-in, uniform by default
+        let d = ServingConfig::default();
+        assert!(!d.expert_tiers.enabled, "tiers are opt-in");
+
+        let bad = ServingConfig {
+            expert_tiers: TierPolicy { hot_fraction: 2.0, ..TierPolicy::hot_cold() },
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
+        let ok = ServingConfig { expert_tiers: TierPolicy::hot_cold(), ..Default::default() };
+        assert!(ok.validate().is_ok());
+    }
+
+    #[test]
+    fn tier_knobs_are_inert_when_off() {
+        // invalid values behind the off switch must not reject the
+        // config (same rule the chunked-prefill knobs follow)
+        let inert = ServingConfig {
+            expert_tiers: TierPolicy {
+                enabled: false,
+                hot_fraction: 9.0,
+                adapt_interval: 0,
+                ..TierPolicy::default()
+            },
+            ..Default::default()
+        };
+        assert!(
+            inert.validate().is_ok(),
+            "inert tier knobs must not block a tiers-off deployment"
         );
     }
 

@@ -158,6 +158,15 @@ pub enum Event {
         /// Batch width of the most recent batched tick when the request
         /// finished (0 = scheduler has been running sequentially).
         batch_occupancy: u64,
+        /// Total cache hits on Hot-tier experts since engine start (0
+        /// with tiered quantization off).
+        expert_hot_hits: u64,
+        /// Total adaptive tier promotions (re-ranks that raised an
+        /// expert's precision) since engine start.
+        tier_promotions: u64,
+        /// Link bytes saved versus staging every transfer at the uniform
+        /// base scheme, since engine start.
+        link_bytes_saved: u64,
     },
     Error { request_id: u64, message: String },
 }
@@ -561,6 +570,11 @@ fn scheduler_loop(
             kv.free_blocks as u64,
             kv.in_use_blocks as u64,
             kv.preemptions,
+        );
+        m.record_tiers(
+            engine.tiers.hot_hits,
+            engine.tiers.promotions,
+            engine.tiers.bytes_saved(),
         );
         if let Some(cache) = engine.prefix.as_ref() {
             let s = cache.stats();
@@ -1387,6 +1401,9 @@ fn finish(m: &Metrics, engine: &mut MoeEngine, live: LiveSession, active_session
         batched_ticks: engine.batch.ticks,
         mixed_ticks: engine.batch.mixed_ticks,
         batch_occupancy: engine.batch.last_occupancy,
+        expert_hot_hits: engine.tiers.hot_hits,
+        tier_promotions: engine.tiers.promotions,
+        link_bytes_saved: engine.tiers.bytes_saved(),
     });
 }
 

@@ -10,7 +10,8 @@
 //!     "kv_preemptions":...,"kv_resumes":...,"prefix_hit":...,"prefix_tokens_reused":...,
 //!     "prefix_cache_blocks":...,"prefix_cache_tokens":...,"prefix_hits":...,"prefix_misses":...,
 //!     "prefix_inserted_blocks":...,"prefix_evicted_blocks":...,"expert_loads_deduped":...,
-//!     "batched_kernel_calls":...,"batched_ticks":...,"mixed_ticks":...,"batch_occupancy":...}
+//!     "batched_kernel_calls":...,"batched_ticks":...,"mixed_ticks":...,"batch_occupancy":...,
+//!     "expert_hot_hits":...,"tier_promotions":...,"link_bytes_saved":...}
 //! ```
 //!
 //! The done event carries a field for EVERY gauge the scheduler records
@@ -116,6 +117,9 @@ pub const GAUGE_DONE_FIELDS: &[(&str, &str)] = &[
     ("batched_kernel_calls", "batched_kernel_calls"),
     ("expert_loads_deduped", "expert_loads_deduped"),
     ("mixed_ticks", "mixed_ticks"),
+    ("expert_hot_hits", "expert_hot_hits"),
+    ("tier_promotions", "tier_promotions"),
+    ("link_bytes_saved", "link_bytes_saved"),
 ];
 
 pub fn event_to_json(ev: &Event) -> Json {
@@ -152,6 +156,9 @@ pub fn event_to_json(ev: &Event) -> Json {
             batched_ticks,
             mixed_ticks,
             batch_occupancy,
+            expert_hot_hits,
+            tier_promotions,
+            link_bytes_saved,
             ..
         } => Json::obj(vec![
             ("type", "done".into()),
@@ -182,6 +189,9 @@ pub fn event_to_json(ev: &Event) -> Json {
             ("batched_ticks", (*batched_ticks as usize).into()),
             ("mixed_ticks", (*mixed_ticks as usize).into()),
             ("batch_occupancy", (*batch_occupancy as usize).into()),
+            ("expert_hot_hits", (*expert_hot_hits as usize).into()),
+            ("tier_promotions", (*tier_promotions as usize).into()),
+            ("link_bytes_saved", (*link_bytes_saved as usize).into()),
         ]),
         Event::Error { message, .. } => Json::obj(vec![
             ("type", "error".into()),
@@ -274,6 +284,9 @@ mod tests {
             batched_ticks: 20,
             mixed_ticks: 6,
             batch_occupancy: 3,
+            expert_hot_hits: 14,
+            tier_promotions: 2,
+            link_bytes_saved: 4096,
         }
     }
 
@@ -307,6 +320,10 @@ mod tests {
         assert_eq!(j.get("batched_ticks").unwrap().as_usize(), Some(20));
         assert_eq!(j.get("mixed_ticks").unwrap().as_usize(), Some(6));
         assert_eq!(j.get("batch_occupancy").unwrap().as_usize(), Some(3));
+        // ...and the quantization-tier savings metrics
+        assert_eq!(j.get("expert_hot_hits").unwrap().as_usize(), Some(14));
+        assert_eq!(j.get("tier_promotions").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("link_bytes_saved").unwrap().as_usize(), Some(4096));
     }
 
     /// Gauge / done-JSON parity: drive every gauge-recording path the
@@ -329,6 +346,7 @@ mod tests {
         m.record_kv_pool(1, 1, 1, 1);
         m.record_prefix(1, 1, 1, 1, 1, 1, 1);
         m.record_batch(1, 1, 1, 1, 1);
+        m.record_tiers(1, 1, 1);
         let names = m.gauge_names();
         assert!(!names.is_empty());
         let j = event_to_json(&sample_done());

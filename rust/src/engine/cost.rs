@@ -33,6 +33,10 @@ pub struct CostModel {
     /// Ratio of accounting-model layers to executed (tiny) layers: the
     /// executed per-layer schedule repeats, so reported times scale by it.
     pub layer_ratio: f64,
+    // accounting-scale expert geometry, kept so per-tier schemes price
+    // consistently with `expert_wire_bytes`
+    acc_expert_params: usize,
+    acc_group_size: usize,
 }
 
 impl CostModel {
@@ -65,7 +69,23 @@ impl CostModel {
             gate_bytes: (acc_cfg.d_model * acc_cfg.n_experts * 2) as u64,
             lm_head_bytes: (acc_cfg.d_model * acc_cfg.vocab_size * 2) as u64,
             layer_ratio: acc_cfg.n_layers as f64 / exec_cfg.n_layers as f64,
+            acc_expert_params: expert_params,
+            acc_group_size: acc_cfg.group_size,
         }
+    }
+
+    /// Wire bytes one expert would occupy packed at `scheme`, at the
+    /// accounting scale — the per-tier pricing hook.
+    /// `wire_bytes_of(expert_quant) == expert_wire_bytes`.
+    pub fn wire_bytes_of(&self, scheme: QuantScheme) -> u64 {
+        scheme.bytes_for(self.acc_expert_params, scheme.group_size(self.acc_group_size))
+    }
+
+    /// Host→device time for an arbitrary transfer size. Tiered staging
+    /// prices each expert at its ACTUAL tier bytes;
+    /// `transfer_s_for(expert_wire_bytes) == expert_transfer_s()`.
+    pub fn transfer_s_for(&self, bytes: u64) -> f64 {
+        self.profile.h2d_time(bytes)
     }
 
     // kernel dispatches per module in the reference implementation
@@ -232,6 +252,26 @@ mod tests {
         let fused = cm.expert_compute_mixed_s(16, 4);
         let split = cm.expert_compute_batched_s(16) + cm.expert_compute_batched_s(4);
         assert!(fused < split, "fused {fused} vs split {split}");
+    }
+
+    #[test]
+    fn tier_pricing_agrees_with_uniform_accounting() {
+        let cm = CostModel::new(
+            HardwareProfile::t4_colab(),
+            &model(),
+            SimScale::Mixtral,
+            QuantScheme::Hqq { bits: 4 },
+            QuantScheme::Hqq { bits: 3 },
+        );
+        // the base scheme re-priced through the tier hook is exactly the
+        // uniform wire size — uniform tiers charge uniform bytes
+        assert_eq!(cm.wire_bytes_of(QuantScheme::Hqq { bits: 3 }), cm.expert_wire_bytes);
+        assert_eq!(cm.transfer_s_for(cm.expert_wire_bytes), cm.expert_transfer_s());
+        // tier bytes order by bits
+        let b2 = cm.wire_bytes_of(QuantScheme::Hqq { bits: 2 });
+        let b4 = cm.wire_bytes_of(QuantScheme::Hqq { bits: 4 });
+        assert!(b2 < cm.expert_wire_bytes && cm.expert_wire_bytes < b4);
+        assert!(cm.transfer_s_for(b2) < cm.transfer_s_for(b4));
     }
 
     #[test]

@@ -51,6 +51,7 @@ use crate::memory::device::DeviceMemory;
 use crate::memory::host::ExpertId;
 use crate::model::{ModelWeights, Sampler};
 use crate::prefix::PrefixCache;
+use crate::quant::tier::{assign_tiers, Tier, TierPolicy};
 use crate::runtime::{ExpertLits, Runtime, StaticLits};
 use crate::tensor::{softmax, top_k, Tensor};
 use cost::CostModel;
@@ -95,6 +96,35 @@ pub struct BatchStats {
     pub mixed_ticks: u64,
     /// Prefill chunk positions advanced by mixed ticks.
     pub prefill_rows: u64,
+}
+
+/// Lifetime counters for the adaptive per-expert quantization tiers
+/// (see [`crate::quant::tier`]) — the coordinator surfaces these as the
+/// `expert_hot_hits` / `tier_promotions` / `link_bytes_saved` gauges and
+/// done-JSON fields. All zero for uniform (tiers-off) deployments.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TierStats {
+    /// Cache hits on experts holding the Hot tier at hit time — the
+    /// "hot experts are usually resident anyway" claim, measured.
+    pub hot_hits: u64,
+    /// Adaptive re-ranks that RAISED an expert's tier (toward more
+    /// bits). Static seeding at construction is not counted.
+    pub promotions: u64,
+    /// Link bytes the executed stagings would have cost at the uniform
+    /// base scheme.
+    pub uniform_bytes: u64,
+    /// Link bytes actually charged (each staging priced at the staged
+    /// expert's tier scheme).
+    pub actual_bytes: u64,
+}
+
+impl TierStats {
+    /// Net link bytes the tier policy saved vs the uniform deployment.
+    /// Saturating: a hot-heavy miss mix that *costs* bytes reads 0 here
+    /// (the signed story is visible in the two raw byte counters).
+    pub fn bytes_saved(&self) -> u64 {
+        self.uniform_bytes.saturating_sub(self.actual_bytes)
+    }
 }
 
 /// One session's slot in a batched tick's result: next-token logits, or
@@ -189,6 +219,19 @@ pub struct MoeEngine {
     pub planner: crate::sched::TickPlanner,
     /// Lifetime batched-decode counters (see [`BatchStats`]).
     pub batch: BatchStats,
+    /// Lifetime adaptive-tier counters (see [`TierStats`]).
+    pub tiers: TierStats,
+    /// The expert pool's tier policy, mirrored at construction (`None`
+    /// = uniform pool / disabled policy — every tier path in the engine
+    /// short-circuits to the pre-tier constants).
+    tier_policy: Option<TierPolicy>,
+    /// Device slot size per resident expert: the LARGEST tier variant's
+    /// wire bytes, so VRAM capacity accounting stays safe whatever mix
+    /// of tiers is resident. Equals `cost.expert_wire_bytes` for
+    /// uniform pools.
+    expert_slot_bytes: u64,
+    /// Routed-use total as of the last tier adaptation pass.
+    tier_adapted_at_uses: u64,
 }
 
 impl MoeEngine {
@@ -246,13 +289,25 @@ impl MoeEngine {
         let kv_pool_bytes = n_blocks as u64 * block_bytes;
         let shared = cost.lm_head_bytes * 2
             + (cost.attn_bytes + cost.gate_bytes) * ((cfg.n_layers as f64 * cost.layer_ratio) as u64);
-        let staging = serving.staging_buffers as u64 * cost.expert_wire_bytes;
+        // tiered pools stage experts of up to three byte sizes; one
+        // device/staging slot must fit the LARGEST so residency
+        // accounting can stay per-slot uniform (uniform pools: exactly
+        // the base wire bytes, unchanged)
+        let tier_policy = weights.experts.tier_policy().copied();
+        let expert_slot_bytes = match tier_policy {
+            Some(p) => cost
+                .expert_wire_bytes
+                .max(cost.wire_bytes_of(p.hot))
+                .max(cost.wire_bytes_of(p.cold)),
+            None => cost.expert_wire_bytes,
+        };
+        let staging = serving.staging_buffers as u64 * expert_slot_bytes;
         let reserved = shared + staging;
         // a KV pool that outgrows the modeled VRAM must fail loudly —
         // clamping the device up (the width-1 tiny-testbed fallback
         // below) would simulate a GPU that doesn't exist
         if (serving.max_concurrent_sessions > 1 || serving.kv_pool_tokens.is_some())
-            && reserved + kv_pool_bytes + cost.expert_wire_bytes > cost.profile.vram_bytes
+            && reserved + kv_pool_bytes + expert_slot_bytes > cost.profile.vram_bytes
         {
             return Err(Error::Config(format!(
                 "KV pool of {pool_tokens} tokens ({} blocks) reserves {} MiB \
@@ -267,10 +322,10 @@ impl MoeEngine {
         let device = DeviceMemory::with_kv_pool(
             cost.profile
                 .vram_bytes
-                .max(reserved + kv_pool_bytes + cost.expert_wire_bytes),
+                .max(reserved + kv_pool_bytes + expert_slot_bytes),
             reserved,
             kv_pool_bytes,
-            cost.expert_wire_bytes,
+            expert_slot_bytes,
         );
         let kv_pool = Arc::new(KvPool::carve(
             kv_pool_bytes,
@@ -295,6 +350,26 @@ impl MoeEngine {
         );
         let copy = CopyEngine::new(Arc::clone(&weights.experts), serving.staging_buffers, 2);
         let lits = StaticLits::new(&weights)?;
+        // static tier seeding from gate statistics: layer l's router
+        // column ‖w_gate[:, e]‖² is a pre-run proxy for how much mass
+        // the gate sends expert e (the online adapter then refines the
+        // ranking from real route counts — see maybe_adapt_tiers)
+        if let Some(p) = tier_policy {
+            for (l, lw) in weights.layers.iter().enumerate() {
+                let mut scores = vec![0.0f64; cfg.n_experts];
+                for r in 0..cfg.d_model {
+                    for (s, w) in scores.iter_mut().zip(lw.w_gate.row(r)) {
+                        *s += (*w as f64) * (*w as f64);
+                    }
+                }
+                for (e, t) in assign_tiers(&scores, p.hot_fraction, p.cold_fraction)
+                    .into_iter()
+                    .enumerate()
+                {
+                    weights.experts.set_tier(ExpertId::new(l, e), t);
+                }
+            }
+        }
         Ok(MoeEngine {
             rt,
             weights,
@@ -319,6 +394,10 @@ impl MoeEngine {
             min_tokens: serving.min_tokens,
             planner: crate::sched::TickPlanner::from_serving(serving),
             batch: BatchStats::default(),
+            tiers: TierStats::default(),
+            tier_policy,
+            expert_slot_bytes,
+            tier_adapted_at_uses: 0,
         })
     }
 
@@ -342,7 +421,7 @@ impl MoeEngine {
         // non-expert bytes = reserved + the KV pool carve; split the
         // carve back out so the rebuilt device keeps it pinned
         let non_expert = self.cache.device.used_bytes()
-            - self.cache.device.resident_count() as u64 * self.cost.expert_wire_bytes;
+            - self.cache.device.resident_count() as u64 * self.expert_slot_bytes;
         let kv_pool_bytes = self.cache.device.kv_pool_bytes();
         let reserved = non_expert - kv_pool_bytes;
         self.cache = CacheManager::new(
@@ -353,10 +432,10 @@ impl MoeEngine {
                 self.cost
                     .profile
                     .vram_bytes
-                    .max(non_expert + self.cost.expert_wire_bytes),
+                    .max(non_expert + self.expert_slot_bytes),
                 reserved,
                 kv_pool_bytes,
-                self.cost.expert_wire_bytes,
+                self.expert_slot_bytes,
             ),
         );
         self.expert_lits.clear();
@@ -579,6 +658,8 @@ impl MoeEngine {
 
     /// Decode one token for `sess`: returns next-token logits.
     pub fn decode_step(&mut self, sess: &mut Session, token: u32) -> Result<Vec<f32>> {
+        // tick boundary: no pins held, nothing staged mid-layer
+        self.maybe_adapt_tiers();
         if sess.pos >= self.weights.cfg.max_seq {
             return Err(Error::Engine(format!(
                 "sequence length {} exceeds max_seq {}",
@@ -655,6 +736,8 @@ impl MoeEngine {
         sessions: &mut [&mut Session],
         tokens: &[u32],
     ) -> Result<Vec<BatchSlot>> {
+        // tick boundary: no pins held, nothing staged mid-layer
+        self.maybe_adapt_tiers();
         if sessions.len() != tokens.len() {
             return Err(Error::Engine(format!(
                 "decode_batch: {} sessions but {} tokens",
@@ -985,6 +1068,9 @@ impl MoeEngine {
         tokens: &[u32],
         chunk: Option<PrefillChunk<'_>>,
     ) -> Result<(Vec<BatchSlot>, Option<ChunkSlot>)> {
+        // tick boundary: no pins held, nothing staged mid-layer (the
+        // chunk-less delegate re-checks harmlessly — threshold-gated)
+        self.maybe_adapt_tiers();
         let Some(PrefillChunk { sess: csess, tokens: ctoks }) = chunk else {
             return Ok((self.decode_batch(sessions, tokens)?, None));
         };
@@ -1590,19 +1676,96 @@ impl MoeEngine {
     fn stream_layer_naive(&mut self, l: usize, tstats: &mut TokenStats) -> Result<()> {
         for e in 0..self.weights.cfg.n_experts {
             let id = ExpertId::new(l, e);
-            let span = self
-                .timeline
-                .transfer(self.cost.expert_transfer_s(), self.timeline.now());
+            let (t_s, t_bytes) = self.expert_stage_cost(id);
+            let span = self.timeline.transfer(t_s, self.timeline.now());
             let before = self.timeline.now();
             self.timeline.wait_until(span.end);
             tstats.stall_s += self.timeline.now() - before;
-            tstats.bytes_transferred += self.cost.expert_wire_bytes;
+            tstats.bytes_transferred += t_bytes;
             let ticket = self.copy.submit(id);
             let (_, de) = self.copy.wait(ticket)?;
             self.cache.insert_loaded(id, de)?;
             tstats.misses += 1;
         }
         Ok(())
+    }
+
+    /// Link price of staging `id` RIGHT NOW: (seconds, bytes) at the
+    /// expert's current tier. Uniform pools short-circuit to the
+    /// pre-tier constants. Also accrues the tier byte accounting — call
+    /// exactly once per transfer actually issued.
+    fn expert_stage_cost(&mut self, id: ExpertId) -> (f64, u64) {
+        let (t_s, t_bytes) = match self.tier_policy {
+            None => (self.cost.expert_transfer_s(), self.cost.expert_wire_bytes),
+            Some(_) => {
+                let scheme = self
+                    .weights
+                    .experts
+                    .scheme_of_tier(self.weights.experts.tier_of(id));
+                let bytes = self.cost.wire_bytes_of(scheme);
+                (self.cost.transfer_s_for(bytes), bytes)
+            }
+        };
+        self.tiers.uniform_bytes += self.cost.expert_wire_bytes;
+        self.tiers.actual_bytes += t_bytes;
+        (t_s, t_bytes)
+    }
+
+    /// Online tier adaptation (see [`crate::quant::tier`]): every
+    /// `adapt_interval` routed expert-uses, re-rank each layer's experts
+    /// by their lifetime route counts and re-assign hot/cold tiers. A
+    /// re-tiered expert whose resident copy holds a now-stale precision
+    /// loses it immediately, so its next use re-stages at the new tier
+    /// ([`Self::ensure_expert`]'s self-heal backstops in-flight
+    /// speculative arrivals). Called at tick boundaries only — no pins
+    /// are held there. No-op for uniform pools and `adaptive: false`.
+    fn maybe_adapt_tiers(&mut self) {
+        let Some(p) = self.tier_policy else { return };
+        if !p.adaptive {
+            return;
+        }
+        let counters = self.cache.expert_counters();
+        let total: u64 = counters.iter().map(|(_, _, uses)| uses).sum();
+        if total < self.tier_adapted_at_uses + p.adapt_interval {
+            return;
+        }
+        self.tier_adapted_at_uses = total;
+        let e_count = self.weights.cfg.n_experts;
+        for l in 0..self.weights.cfg.n_layers {
+            let mut scores = vec![0.0f64; e_count];
+            for (id, _, uses) in &counters {
+                if id.layer as usize == l {
+                    scores[id.expert as usize] = *uses as f64;
+                }
+            }
+            for (e, t) in assign_tiers(&scores, p.hot_fraction, p.cold_fraction)
+                .into_iter()
+                .enumerate()
+            {
+                let id = ExpertId::new(l, e);
+                let prev = self.weights.experts.set_tier(id, t);
+                if t == prev {
+                    continue;
+                }
+                if t > prev {
+                    self.tiers.promotions += 1;
+                }
+                // drop a resident copy only when its staged PRECISION
+                // went stale — tier moves between same-scheme tiers
+                // (e.g. hot scheme == base) change nothing on device,
+                // and evicting would perturb behavior a uniform-scheme
+                // policy must keep byte-identical to tiers-off
+                let want = self.weights.experts.scheme_of_tier(t).bits() as u8;
+                if self
+                    .cache
+                    .resident_bits_of(id)
+                    .is_some_and(|have| have != want)
+                {
+                    self.cache.drop_expert(id);
+                    self.expert_lits.remove(&id);
+                }
+            }
+        }
     }
 
     /// Make `id` resident, classifying hit / spec-hit / miss and advancing
@@ -1617,21 +1780,44 @@ impl MoeEngine {
             let (_, de) = self.copy.wait(inf.ticket)?;
             self.cache.insert_speculative(id, de)?;
         }
+        // tier self-heal: a copy staged BEFORE a re-tier (including the
+        // speculative arrival claimed just above) is resident at a stale
+        // precision — drop it so the use below re-stages at the
+        // expert's current tier
+        if self.tier_policy.is_some() {
+            let want = self
+                .weights
+                .experts
+                .scheme_of_tier(self.weights.experts.tier_of(id))
+                .bits() as u8;
+            if self
+                .cache
+                .resident_bits_of(id)
+                .is_some_and(|have| have != want)
+            {
+                self.cache.drop_expert(id);
+                self.expert_lits.remove(&id);
+            }
+        }
         match self.cache.on_demand_use(id) {
             CacheEvent::Hit(_) => {
                 tstats.cache_hits += 1;
+                if self.tier_policy.is_some()
+                    && self.weights.experts.tier_of(id) == Tier::Hot
+                {
+                    self.tiers.hot_hits += 1;
+                }
             }
             CacheEvent::SpecHit(_) => {
                 tstats.spec_hits += 1;
             }
             CacheEvent::Miss(_) => {
-                let span = self
-                    .timeline
-                    .transfer(self.cost.expert_transfer_s(), self.timeline.now());
+                let (t_s, t_bytes) = self.expert_stage_cost(id);
+                let span = self.timeline.transfer(t_s, self.timeline.now());
                 let before = self.timeline.now();
                 self.timeline.wait_until(span.end);
                 tstats.stall_s += self.timeline.now() - before;
-                tstats.bytes_transferred += self.cost.expert_wire_bytes;
+                tstats.bytes_transferred += t_bytes;
                 tstats.misses += 1;
                 let ticket = self.copy.submit(id);
                 let (_, de) = self.copy.wait(ticket)?;
@@ -1718,10 +1904,9 @@ impl MoeEngine {
                     }
                 }
             }
-            let span = self
-                .timeline
-                .transfer(self.cost.expert_transfer_s(), self.timeline.now());
-            tstats.bytes_transferred += self.cost.expert_wire_bytes;
+            let (t_s, t_bytes) = self.expert_stage_cost(id);
+            let span = self.timeline.transfer(t_s, self.timeline.now());
+            tstats.bytes_transferred += t_bytes;
             let ticket = self.copy.submit(id);
             self.in_flight.insert(id, InFlight { ticket, ready_at: span.end });
             self.spec_queue.push_back(id);

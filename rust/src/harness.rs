@@ -60,11 +60,12 @@ pub fn build_engine_with_serving(
     profile: HardwareProfile,
 ) -> Result<MoeEngine> {
     let manifest = Manifest::load(dir)?;
-    let weights = ModelWeights::load(
+    let weights = ModelWeights::load_tiered(
         &manifest.config,
         &dir.join("weights.npz"),
         serving.attn_quant,
         serving.expert_quant,
+        &serving.expert_tiers,
     )?;
     MoeEngine::new(&manifest, weights, serving, profile)
 }

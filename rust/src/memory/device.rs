@@ -78,6 +78,16 @@ impl DeviceExpert {
     pub fn is_quant(&self) -> bool {
         matches!(self, DeviceExpert::Quant { .. })
     }
+
+    /// Bit-width this copy was staged at (16 for fp). The cache manager
+    /// records it per resident expert so a tier change can detect — and
+    /// re-stage — a stale-precision copy.
+    pub fn quant_bits(&self) -> u8 {
+        match self {
+            DeviceExpert::Fp { .. } => 16,
+            DeviceExpert::Quant { bits, .. } => *bits,
+        }
+    }
 }
 
 /// VRAM budget accounting + resident expert store.

@@ -5,12 +5,22 @@
 //! For quantized experts the buffer holds bit-packed codes followed by
 //! scale/zero metadata for each of the three FFN matrices; for fp16
 //! experts it holds raw f32 (accounted at 2 bytes/param on the link).
+//!
+//! With a [`TierPolicy`] enabled (see [`crate::quant::tier`]) the pool
+//! additionally keeps one packed copy per DISTINCT tier scheme and a
+//! mutable per-expert tier assignment: [`HostExpertPool::get`] serves
+//! the copy matching the expert's CURRENT tier, so the copy engine's
+//! staging threads transparently ship tier-correct bytes, and
+//! [`HostExpertPool::set_tier`] re-tiers an expert online (the engine
+//! invalidates any resident copy staged at the old precision).
 
 use std::collections::BTreeMap;
+use std::sync::RwLock;
 
 use crate::config::{ModelConfig, QuantScheme};
 use crate::error::{Error, Result};
 use crate::quant::hqq::{self, HqqConfig, QuantizedMatrix};
+use crate::quant::tier::{Tier, TierPolicy};
 use crate::tensor::Tensor;
 
 /// (layer, expert) identifier used across cache / memory / engine.
@@ -74,15 +84,56 @@ impl HostExpert {
     }
 }
 
+/// Pack one expert's raw f32 matrices at `scheme`.
+fn pack_expert(
+    cfg: &ModelConfig,
+    scheme: QuantScheme,
+    w1: &Tensor,
+    w3: &Tensor,
+    w2: &Tensor,
+) -> Result<HostExpert> {
+    match scheme {
+        QuantScheme::Fp16 => Ok(HostExpert::Fp { w1: w1.clone(), w3: w3.clone(), w2: w2.clone() }),
+        QuantScheme::Hqq { bits } => {
+            let g = scheme.group_size(cfg.group_size);
+            let hcfg = HqqConfig::new(bits, g);
+            Ok(HostExpert::Quant {
+                w1: hqq::quantize(w1, &hcfg)?,
+                w3: hqq::quantize(w3, &hcfg)?,
+                w2: hqq::quantize(w2, &hcfg)?,
+            })
+        }
+    }
+}
+
+/// Per-tier packed copies plus the mutable current-tier assignment.
+/// The packed maps are immutable after build; only `current` mutates
+/// (behind a lock — the copy engine's staging threads share the pool).
+struct TierStore {
+    policy: TierPolicy,
+    /// Hot-scheme copies; `None` when the hot scheme equals the base
+    /// scheme (the base map is shared instead of duplicated).
+    hot: Option<BTreeMap<ExpertId, HostExpert>>,
+    /// Cold-scheme copies; `None` when the cold scheme equals the base.
+    cold: Option<BTreeMap<ExpertId, HostExpert>>,
+    /// Current tier per expert (unlisted = Warm).
+    current: RwLock<BTreeMap<ExpertId, Tier>>,
+}
+
 /// All experts of the model, host-resident, keyed by (layer, expert).
 pub struct HostExpertPool {
+    /// The base (Warm-tier) scheme — the deployment's `expert_quant`.
     pub scheme: QuantScheme,
+    /// Base-scheme packed copies (every expert's Warm variant).
     pub experts: BTreeMap<ExpertId, HostExpert>,
     cfg: ModelConfig,
+    /// Per-tier variants; `None` = uniform pool (tiers disabled).
+    tiers: Option<TierStore>,
 }
 
 impl HostExpertPool {
-    /// Build the pool from raw f32 expert weights, quantizing per `scheme`.
+    /// Build a uniform pool from raw f32 expert weights, quantizing per
+    /// `scheme`.
     ///
     /// `get_weights(layer, expert)` returns (w1 [D,FF], w3 [D,FF], w2 [FF,D]).
     pub fn build(
@@ -94,31 +145,120 @@ impl HostExpertPool {
         for layer in 0..cfg.n_layers {
             for expert in 0..cfg.n_experts {
                 let (w1, w3, w2) = get_weights(layer, expert)?;
-                let he = match scheme {
-                    QuantScheme::Fp16 => HostExpert::Fp { w1, w3, w2 },
-                    QuantScheme::Hqq { bits } => {
-                        let g = scheme.group_size(cfg.group_size);
-                        let hcfg = HqqConfig::new(bits, g);
-                        HostExpert::Quant {
-                            w1: hqq::quantize(&w1, &hcfg)?,
-                            w3: hqq::quantize(&w3, &hcfg)?,
-                            w2: hqq::quantize(&w2, &hcfg)?,
-                        }
-                    }
-                };
-                experts.insert(ExpertId::new(layer, expert), he);
+                experts.insert(ExpertId::new(layer, expert), pack_expert(cfg, scheme, &w1, &w3, &w2)?);
             }
         }
-        Ok(HostExpertPool { scheme, experts, cfg: cfg.clone() })
+        Ok(HostExpertPool { scheme, experts, cfg: cfg.clone(), tiers: None })
     }
 
+    /// Build a TIERED pool: base-scheme copies for every expert plus one
+    /// extra packed copy per distinct hot/cold scheme. Every expert
+    /// starts Warm — the engine seeds the initial assignment from gate
+    /// statistics right after construction. With `policy.enabled` false
+    /// this is exactly [`Self::build`] (no extra copies, no lock on the
+    /// serving path).
+    pub fn build_tiered(
+        cfg: &ModelConfig,
+        scheme: QuantScheme,
+        policy: &TierPolicy,
+        mut get_weights: impl FnMut(usize, usize) -> Result<(Tensor, Tensor, Tensor)>,
+    ) -> Result<Self> {
+        if !policy.enabled {
+            return Self::build(cfg, scheme, get_weights);
+        }
+        let mut experts = BTreeMap::new();
+        let mut hot = (policy.hot != scheme).then(BTreeMap::new);
+        let mut cold = (policy.cold != scheme).then(BTreeMap::new);
+        for layer in 0..cfg.n_layers {
+            for expert in 0..cfg.n_experts {
+                let (w1, w3, w2) = get_weights(layer, expert)?;
+                let id = ExpertId::new(layer, expert);
+                experts.insert(id, pack_expert(cfg, scheme, &w1, &w3, &w2)?);
+                if let Some(m) = hot.as_mut() {
+                    m.insert(id, pack_expert(cfg, policy.hot, &w1, &w3, &w2)?);
+                }
+                if let Some(m) = cold.as_mut() {
+                    m.insert(id, pack_expert(cfg, policy.cold, &w1, &w3, &w2)?);
+                }
+            }
+        }
+        Ok(HostExpertPool {
+            scheme,
+            experts,
+            cfg: cfg.clone(),
+            tiers: Some(TierStore {
+                policy: *policy,
+                hot,
+                cold,
+                current: RwLock::new(BTreeMap::new()),
+            }),
+        })
+    }
+
+    /// Whether this pool carries per-tier variants.
+    pub fn tiered(&self) -> bool {
+        self.tiers.is_some()
+    }
+
+    /// The policy this pool's tier variants were packed under (`None` =
+    /// uniform pool). The authoritative source for the engine's tier
+    /// behavior — guaranteed consistent with the packed copies, unlike
+    /// the serving config the weights may not have been built from.
+    pub fn tier_policy(&self) -> Option<&TierPolicy> {
+        self.tiers.as_ref().map(|t| &t.policy)
+    }
+
+    /// The expert's current tier (Warm for uniform pools).
+    pub fn tier_of(&self, id: ExpertId) -> Tier {
+        self.tiers
+            .as_ref()
+            .and_then(|t| t.current.read().unwrap().get(&id).copied())
+            .unwrap_or(Tier::Warm)
+    }
+
+    /// Re-tier an expert; returns the previous tier. A no-op (always
+    /// Warm) on uniform pools. The caller — the engine — must invalidate
+    /// any device copy staged at the old tier's precision.
+    pub fn set_tier(&self, id: ExpertId, tier: Tier) -> Tier {
+        let Some(store) = self.tiers.as_ref() else { return Tier::Warm };
+        let mut cur = store.current.write().unwrap();
+        if tier == Tier::Warm {
+            cur.remove(&id).unwrap_or(Tier::Warm)
+        } else {
+            cur.insert(id, tier).unwrap_or(Tier::Warm)
+        }
+    }
+
+    /// The scheme an expert at `tier` is packed with in THIS pool.
+    pub fn scheme_of_tier(&self, tier: Tier) -> QuantScheme {
+        match self.tiers.as_ref() {
+            Some(t) => t.policy.scheme_for(tier, self.scheme),
+            None => self.scheme,
+        }
+    }
+
+    /// The packed copy matching the expert's CURRENT tier — what the
+    /// copy engine ships. Uniform pools skip the tier lookup entirely.
     pub fn get(&self, id: ExpertId) -> Result<&HostExpert> {
-        self.experts
-            .get(&id)
+        let map = match self.tiers.as_ref() {
+            None => &self.experts,
+            Some(store) => match self.tier_of(id) {
+                Tier::Warm => &self.experts,
+                Tier::Hot => store.hot.as_ref().unwrap_or(&self.experts),
+                Tier::Cold => store.cold.as_ref().unwrap_or(&self.experts),
+            },
+        };
+        map.get(&id)
             .ok_or_else(|| Error::Engine(format!("no host expert {id}")))
     }
 
-    /// Transfer size of one (representative) expert.
+    /// Link bytes for one expert at its CURRENT tier.
+    pub fn transfer_bytes_of(&self, id: ExpertId) -> Result<u64> {
+        let scheme = self.scheme_of_tier(self.tier_of(id));
+        Ok(self.get(id)?.transfer_bytes(scheme))
+    }
+
+    /// Transfer size of one (representative) expert at the base scheme.
     pub fn expert_transfer_bytes(&self) -> u64 {
         self.experts
             .values()
@@ -127,7 +267,8 @@ impl HostExpertPool {
             .unwrap_or(0)
     }
 
-    /// Total host bytes across all experts.
+    /// Total host bytes across all experts (base copies only — tier
+    /// variants are duplicate capacity in host RAM, not model size).
     pub fn total_bytes(&self) -> u64 {
         self.experts
             .values()
@@ -198,5 +339,66 @@ mod tests {
         let scheme = QuantScheme::Hqq { bits: 3 };
         let expected = 3 * scheme.bytes_for(2048, 16);
         assert_eq!(per, expected);
+    }
+
+    fn build_tiered_pool(policy: &TierPolicy) -> HostExpertPool {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(1);
+        HostExpertPool::build_tiered(&cfg, QuantScheme::Hqq { bits: 3 }, policy, |_, _| {
+            Ok((
+                rand_t(&mut rng, vec![32, 64]),
+                rand_t(&mut rng, vec![32, 64]),
+                rand_t(&mut rng, vec![64, 32]),
+            ))
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn disabled_policy_builds_a_uniform_pool() {
+        let pool = build_tiered_pool(&TierPolicy::default());
+        assert!(!pool.tiered());
+        let id = ExpertId::new(0, 0);
+        // set_tier is a no-op and get() serves base bytes
+        assert_eq!(pool.set_tier(id, Tier::Hot), Tier::Warm);
+        assert_eq!(pool.tier_of(id), Tier::Warm);
+        assert_eq!(pool.transfer_bytes_of(id).unwrap(), pool.expert_transfer_bytes());
+    }
+
+    #[test]
+    fn tiered_pool_serves_tier_matching_bytes() {
+        let pool = build_tiered_pool(&TierPolicy::hot_cold());
+        assert!(pool.tiered());
+        let id = ExpertId::new(0, 1);
+        let warm = pool.transfer_bytes_of(id).unwrap();
+        assert_eq!(warm, pool.expert_transfer_bytes());
+
+        assert_eq!(pool.set_tier(id, Tier::Hot), Tier::Warm);
+        assert_eq!(pool.tier_of(id), Tier::Hot);
+        let hot = pool.transfer_bytes_of(id).unwrap();
+        let hot_scheme = pool.scheme_of_tier(Tier::Hot);
+        assert_eq!(hot, pool.get(id).unwrap().transfer_bytes(hot_scheme));
+        assert!(hot > warm, "4-bit hot copy must outweigh the 3-bit base: {hot} vs {warm}");
+
+        assert_eq!(pool.set_tier(id, Tier::Cold), Tier::Hot);
+        let cold = pool.transfer_bytes_of(id).unwrap();
+        assert!(cold < warm, "2-bit cold copy must undercut the 3-bit base: {cold} vs {warm}");
+
+        // only the re-tiered expert changed; its sibling still serves warm
+        assert_eq!(pool.transfer_bytes_of(ExpertId::new(0, 0)).unwrap(), warm);
+    }
+
+    #[test]
+    fn tier_scheme_matching_base_shares_the_base_copies() {
+        // hot == base scheme -> no duplicate hot map; get() must still work
+        let policy = TierPolicy {
+            hot: QuantScheme::Hqq { bits: 3 },
+            ..TierPolicy::hot_cold()
+        };
+        let pool = build_tiered_pool(&policy);
+        let id = ExpertId::new(1, 0);
+        let warm = pool.transfer_bytes_of(id).unwrap();
+        pool.set_tier(id, Tier::Hot);
+        assert_eq!(pool.transfer_bytes_of(id).unwrap(), warm);
     }
 }

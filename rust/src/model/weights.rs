@@ -17,6 +17,7 @@ use crate::error::{Error, Result};
 use crate::memory::host::HostExpertPool;
 use crate::npz::{self, Array};
 use crate::quant::hqq::{self, HqqConfig};
+use crate::quant::tier::TierPolicy;
 use crate::tensor::Tensor;
 
 /// Per-layer non-expert weights (device-resident, f32 after dequant).
@@ -50,8 +51,22 @@ impl ModelWeights {
         attn_quant: QuantScheme,
         expert_quant: QuantScheme,
     ) -> Result<Self> {
+        Self::load_tiered(cfg, path, attn_quant, expert_quant, &TierPolicy::default())
+    }
+
+    /// [`Self::load`] plus a per-expert tier policy: with `tiers.enabled`
+    /// the expert pool carries one packed copy per distinct tier scheme
+    /// (see [`HostExpertPool::build_tiered`]); disabled is byte-identical
+    /// to the uniform load.
+    pub fn load_tiered(
+        cfg: &ModelConfig,
+        path: &Path,
+        attn_quant: QuantScheme,
+        expert_quant: QuantScheme,
+        tiers: &TierPolicy,
+    ) -> Result<Self> {
         let arrays = npz::load_npz(path)?;
-        Self::from_arrays(cfg, &arrays, attn_quant, expert_quant)
+        Self::from_arrays_tiered(cfg, &arrays, attn_quant, expert_quant, tiers)
     }
 
     pub fn from_arrays(
@@ -59,6 +74,16 @@ impl ModelWeights {
         arrays: &BTreeMap<String, Array>,
         attn_quant: QuantScheme,
         expert_quant: QuantScheme,
+    ) -> Result<Self> {
+        Self::from_arrays_tiered(cfg, arrays, attn_quant, expert_quant, &TierPolicy::default())
+    }
+
+    pub fn from_arrays_tiered(
+        cfg: &ModelConfig,
+        arrays: &BTreeMap<String, Array>,
+        attn_quant: QuantScheme,
+        expert_quant: QuantScheme,
+        tiers: &TierPolicy,
     ) -> Result<Self> {
         let get = |name: &str| -> Result<Tensor> {
             arrays
@@ -84,8 +109,9 @@ impl ModelWeights {
             });
         }
 
-        // expert pool: quantized wire-format host copies
-        let experts = HostExpertPool::build(cfg, expert_quant, |layer, expert| {
+        // expert pool: quantized wire-format host copies (per-tier
+        // variants included when the policy is on)
+        let experts = HostExpertPool::build_tiered(cfg, expert_quant, tiers, |layer, expert| {
             let w1 = get(&format!("layers.{layer}.w1"))?;
             let w3 = get(&format!("layers.{layer}.w3"))?;
             let w2 = get(&format!("layers.{layer}.w2"))?;
@@ -272,6 +298,27 @@ mod tests {
         let diff = fp.layers[0].wq.max_abs_diff(&q2.layers[0].wq);
         assert!(diff > 0.0, "2-bit quant must perturb weights");
         assert!(diff < 0.2, "but not destroy them (diff={diff})");
+    }
+
+    #[test]
+    fn tiered_load_builds_tiered_pool() {
+        let cfg = tiny();
+        let arrays = synth_arrays(&cfg, 4);
+        let eq = QuantScheme::Hqq { bits: 3 };
+        let uni = ModelWeights::from_arrays(&cfg, &arrays, QuantScheme::Fp16, eq).unwrap();
+        assert!(!uni.experts.tiered());
+        let tiered = ModelWeights::from_arrays_tiered(
+            &cfg,
+            &arrays,
+            QuantScheme::Fp16,
+            eq,
+            &TierPolicy::hot_cold(),
+        )
+        .unwrap();
+        assert!(tiered.experts.tiered());
+        // Table 1 size accounting counts base copies only — the extra
+        // tier variants are host-RAM duplicates, not model size
+        assert_eq!(uni.total_bytes(), tiered.total_bytes());
     }
 
     #[test]

@@ -1,12 +1,34 @@
-//! Quantization substrate: bit-packing codecs and the HQQ group quantizer.
+//! Quantization substrate: bit-packing codecs, the HQQ group quantizer,
+//! and the per-expert precision tier policy.
 //!
 //! The paper compresses Mixtral's experts with HQQ (Badri & Shaji 2023) at
 //! 2–4 bits and streams the *compressed* bytes over PCIe. We mirror that:
 //! `hqq` produces (codes, scale, zero) per group, `bitpack` packs codes to
 //! their logical width for host storage / link accounting, and
 //! `QuantizedMatrix` bundles it all with exact byte accounting.
+//!
+//! ## Tier → bits → bytes-over-link
+//!
+//! `tier` makes precision a PER-EXPERT property instead of a global one.
+//! Each expert carries a [`tier::Tier`] (hot / warm / cold, ranked by
+//! routing hotness); the [`tier::TierPolicy`] maps tiers to
+//! [`crate::config::QuantScheme`]s (default hot → 4-bit, warm → the
+//! deployment's base `expert_quant`, cold → 2-bit). The scheme's bits
+//! decide the packed-code width and group size, and therefore the exact
+//! bytes that cross the host→device link when THAT expert misses:
+//! `QuantScheme::bytes_for(n, g) = ceil(n·bits/8) + ceil(n/g)·2` per
+//! matrix (u8 scale + u8 zero per group). The host pool stores one
+//! packed copy per DISTINCT tier scheme, the cost model prices each
+//! transfer at the expert's current tier bytes, and the cache manager
+//! tracks the bit-width each resident copy was staged at so a tier
+//! change forces a re-stage — never a stale-precision kernel call.
+//! Rarely-routed (cold) experts thus ship fewer bytes on the misses
+//! they do cause, while hot experts — mostly cache-resident — keep more
+//! precision where quality matters most.
 
 pub mod bitpack;
 pub mod hqq;
+pub mod tier;
 
 pub use hqq::{HqqConfig, QuantizedMatrix};
+pub use tier::{assign_tiers, Tier, TierPolicy};

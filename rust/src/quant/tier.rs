@@ -1,0 +1,299 @@
+//! Per-expert precision tiers: hotness-aware quantization.
+//!
+//! The link — not FLOPs — bounds offloaded MoE decoding, and routing is
+//! heavily skewed: a few experts per layer serve most tokens. Uniform
+//! quantization therefore overspends link bytes on experts that are
+//! almost never shipped, and underspends on the ones shipped constantly.
+//! A [`TierPolicy`] splits each layer's experts into three tiers by
+//! routing hotness:
+//!
+//! * **Hot** — frequently routed; kept at HIGHER precision (more bits,
+//!   more bytes) because they are usually cache-resident anyway, so
+//!   their extra bytes rarely cross the link while their quality affects
+//!   most tokens.
+//! * **Warm** — the middle; stays at the deployment's base
+//!   `expert_quant` scheme.
+//! * **Cold** — rarely routed; quantized HARDER (fewer bits), so the
+//!   misses they do cause ship fewer bytes.
+//!
+//! Tier assignment is seeded statically from gate statistics (the router
+//! weight matrix tells which experts the gate prefers before a single
+//! token runs) and optionally re-ranked online from the per-expert route
+//! counters the LRU cache exports ([`crate::cache::lru::LruSet`]
+//! hit/use counts, aggregated by [`crate::cache::manager::CacheManager`]).
+//!
+//! The policy is opt-out by construction: `enabled = false` (the
+//! default) makes every expert Warm at the base scheme — byte-identical
+//! to the uniform deployment.
+
+use crate::config::QuantScheme;
+use crate::error::{Error, Result};
+
+/// An expert's precision tier. Ordered `Cold < Warm < Hot` so "promotion"
+/// (toward more bits) and "demotion" compare naturally.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Tier {
+    Cold,
+    Warm,
+    Hot,
+}
+
+impl Tier {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Tier::Cold => "cold",
+            Tier::Warm => "warm",
+            Tier::Hot => "hot",
+        }
+    }
+}
+
+/// The hot/warm/cold precision policy, carried by
+/// [`crate::config::ServingConfig::expert_tiers`].
+///
+/// Warm experts always use the deployment's base `expert_quant` scheme;
+/// only the hot and cold schemes are configured here. Fractions are of
+/// each LAYER's expert count (tiers are per-layer — hotness ranks
+/// experts against their own layer's siblings, matching how routing
+/// skew manifests).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TierPolicy {
+    /// Master switch. Off (default) = every expert Warm at the base
+    /// scheme, byte-identical to the uniform deployment.
+    pub enabled: bool,
+    /// Scheme for the hot tier (default 4-bit HQQ).
+    pub hot: QuantScheme,
+    /// Scheme for the cold tier (default 2-bit HQQ).
+    pub cold: QuantScheme,
+    /// Fraction of each layer's experts assigned Hot (floor'd).
+    pub hot_fraction: f64,
+    /// Fraction of each layer's experts assigned Cold (floor'd, clamped
+    /// so hot + cold never exceeds the layer).
+    pub cold_fraction: f64,
+    /// Re-rank tiers online from the cache's per-expert route counters
+    /// every `adapt_interval` routed expert-uses (tick-boundary safe: a
+    /// re-staged expert always lands at its CURRENT tier's precision).
+    pub adaptive: bool,
+    /// Routed uses between adaptation passes.
+    pub adapt_interval: u64,
+}
+
+impl Default for TierPolicy {
+    fn default() -> Self {
+        TierPolicy {
+            enabled: false,
+            hot: QuantScheme::Hqq { bits: 4 },
+            cold: QuantScheme::Hqq { bits: 2 },
+            hot_fraction: 0.25,
+            cold_fraction: 0.25,
+            adaptive: true,
+            adapt_interval: 256,
+        }
+    }
+}
+
+impl TierPolicy {
+    /// A ready-to-use hot/warm/cold policy (the bench/eval sweep point):
+    /// 4-bit hot, 2-bit cold, a quarter of each layer in each.
+    pub fn hot_cold() -> Self {
+        TierPolicy { enabled: true, ..Default::default() }
+    }
+
+    /// The scheme an expert at `tier` is packed with, given the
+    /// deployment's base (warm) scheme. With the policy disabled every
+    /// tier resolves to the base scheme.
+    pub fn scheme_for(&self, tier: Tier, base: QuantScheme) -> QuantScheme {
+        if !self.enabled {
+            return base;
+        }
+        match tier {
+            Tier::Hot => self.hot,
+            Tier::Warm => base,
+            Tier::Cold => self.cold,
+        }
+    }
+
+    /// Structural validation — called from `ServingConfig::validate`
+    /// ONLY when enabled (inert knobs must not reject a config).
+    pub fn validate(&self) -> Result<()> {
+        if !self.enabled {
+            return Ok(());
+        }
+        for (name, f) in [("hot_fraction", self.hot_fraction), ("cold_fraction", self.cold_fraction)]
+        {
+            if !f.is_finite() || !(0.0..=1.0).contains(&f) {
+                return Err(Error::Config(format!(
+                    "{name} {f} must be a fraction in [0, 1]"
+                )));
+            }
+        }
+        if self.hot_fraction + self.cold_fraction > 1.0 {
+            return Err(Error::Config(format!(
+                "hot_fraction {} + cold_fraction {} exceeds 1.0 — the tiers \
+                 would overlap",
+                self.hot_fraction, self.cold_fraction
+            )));
+        }
+        if self.adaptive && self.adapt_interval == 0 {
+            return Err(Error::Config(
+                "adapt_interval must be >= 1 with adaptive tiers on".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Rank one layer's experts by hotness `scores` and assign tiers: the
+/// top `floor(hot_fraction * E)` become Hot, the bottom
+/// `floor(cold_fraction * E)` become Cold (clamped so the two never
+/// overlap), everything between stays Warm.
+///
+/// Deterministic: ties break toward the LOWER expert index (stable rank
+/// by descending score, ascending index), so equal gate statistics
+/// always produce the same assignment.
+pub fn assign_tiers(scores: &[f64], hot_fraction: f64, cold_fraction: f64) -> Vec<Tier> {
+    let e = scores.len();
+    let mut order: Vec<usize> = (0..e).collect();
+    order.sort_by(|&a, &b| {
+        scores[b]
+            .partial_cmp(&scores[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let hot_n = ((hot_fraction.clamp(0.0, 1.0) * e as f64).floor() as usize).min(e);
+    let cold_n = ((cold_fraction.clamp(0.0, 1.0) * e as f64).floor() as usize).min(e - hot_n);
+    let mut tiers = vec![Tier::Warm; e];
+    for &i in order.iter().take(hot_n) {
+        tiers[i] = Tier::Hot;
+    }
+    for &i in order.iter().rev().take(cold_n) {
+        tiers[i] = Tier::Cold;
+    }
+    tiers
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, ensure};
+
+    #[test]
+    fn disabled_policy_resolves_every_tier_to_base() {
+        let p = TierPolicy::default();
+        assert!(!p.enabled);
+        let base = QuantScheme::Hqq { bits: 3 };
+        for t in [Tier::Hot, Tier::Warm, Tier::Cold] {
+            assert_eq!(p.scheme_for(t, base), base);
+        }
+    }
+
+    #[test]
+    fn enabled_policy_maps_tiers_to_schemes() {
+        let p = TierPolicy::hot_cold();
+        let base = QuantScheme::Hqq { bits: 3 };
+        assert_eq!(p.scheme_for(Tier::Hot, base), QuantScheme::Hqq { bits: 4 });
+        assert_eq!(p.scheme_for(Tier::Warm, base), base);
+        assert_eq!(p.scheme_for(Tier::Cold, base), QuantScheme::Hqq { bits: 2 });
+    }
+
+    #[test]
+    fn assignment_follows_scores() {
+        // 8 experts, quarter hot / quarter cold: top-2 hot, bottom-2 cold
+        let scores = [0.5, 3.0, 0.1, 2.0, 1.0, 0.9, 0.2, 0.4];
+        let tiers = assign_tiers(&scores, 0.25, 0.25);
+        assert_eq!(tiers[1], Tier::Hot);
+        assert_eq!(tiers[3], Tier::Hot);
+        assert_eq!(tiers[2], Tier::Cold);
+        assert_eq!(tiers[6], Tier::Cold);
+        assert_eq!(tiers.iter().filter(|t| **t == Tier::Warm).count(), 4);
+    }
+
+    #[test]
+    fn zero_fractions_are_all_warm() {
+        let tiers = assign_tiers(&[1.0, 2.0, 3.0, 4.0], 0.0, 0.0);
+        assert!(tiers.iter().all(|t| *t == Tier::Warm));
+    }
+
+    #[test]
+    fn ties_break_deterministically_toward_lower_index() {
+        let tiers = assign_tiers(&[1.0, 1.0, 1.0, 1.0], 0.25, 0.25);
+        assert_eq!(tiers[0], Tier::Hot, "lowest index wins the hot slot on ties");
+        assert_eq!(tiers[3], Tier::Cold, "highest index loses to the cold slot on ties");
+    }
+
+    #[test]
+    fn prop_assignment_invariants() {
+        // 1) tier counts match the floor'd fractions (clamped to E);
+        // 2) every Hot expert scores >= every Warm expert, every Warm
+        //    >= every Cold (up to rank ties);
+        // 3) the assignment is deterministic.
+        check(
+            "tier-assignment-invariants",
+            200,
+            |r| {
+                let e = 1 + r.below(16);
+                let scores: Vec<f64> = (0..e).map(|_| r.below(8) as f64).collect();
+                let hf = r.below(5) as f64 / 4.0;
+                let cf = r.below(5) as f64 / 4.0;
+                (scores, hf, cf)
+            },
+            |(scores, hf, cf)| {
+                let e = scores.len();
+                let tiers = assign_tiers(scores, *hf, *cf);
+                ensure(tiers.len() == e, "one tier per expert")?;
+                let hot_n = ((hf * e as f64).floor() as usize).min(e);
+                let cold_n = ((cf * e as f64).floor() as usize).min(e - hot_n);
+                let hots = tiers.iter().filter(|t| **t == Tier::Hot).count();
+                let colds = tiers.iter().filter(|t| **t == Tier::Cold).count();
+                ensure(hots == hot_n, "hot count")?;
+                ensure(colds == cold_n, "cold count")?;
+                let min_hot = tiers
+                    .iter()
+                    .zip(scores)
+                    .filter(|(t, _)| **t == Tier::Hot)
+                    .map(|(_, s)| *s)
+                    .fold(f64::INFINITY, f64::min);
+                let max_cold = tiers
+                    .iter()
+                    .zip(scores)
+                    .filter(|(t, _)| **t == Tier::Cold)
+                    .map(|(_, s)| *s)
+                    .fold(f64::NEG_INFINITY, f64::max);
+                for (t, s) in tiers.iter().zip(scores) {
+                    match t {
+                        Tier::Warm => {
+                            ensure(*s <= min_hot, "warm scored above a hot expert")?;
+                            ensure(*s >= max_cold, "warm scored below a cold expert")?;
+                        }
+                        Tier::Hot => ensure(*s >= max_cold, "hot below a cold")?,
+                        Tier::Cold => ensure(*s <= min_hot, "cold above a hot")?,
+                    }
+                }
+                ensure(
+                    assign_tiers(scores, *hf, *cf) == tiers,
+                    "assignment not deterministic",
+                )?;
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn policy_validation() {
+        assert!(TierPolicy::default().validate().is_ok());
+        assert!(TierPolicy::hot_cold().validate().is_ok());
+        let bad_frac = TierPolicy { hot_fraction: 1.5, ..TierPolicy::hot_cold() };
+        assert!(bad_frac.validate().is_err());
+        let nan_frac = TierPolicy { cold_fraction: f64::NAN, ..TierPolicy::hot_cold() };
+        assert!(nan_frac.validate().is_err());
+        let overlap =
+            TierPolicy { hot_fraction: 0.6, cold_fraction: 0.6, ..TierPolicy::hot_cold() };
+        assert!(overlap.validate().is_err());
+        let zero_interval =
+            TierPolicy { adaptive: true, adapt_interval: 0, ..TierPolicy::hot_cold() };
+        assert!(zero_interval.validate().is_err());
+        // inert-when-off: invalid knobs behind the off switch don't reject
+        let inert = TierPolicy { enabled: false, hot_fraction: 9.0, ..TierPolicy::default() };
+        assert!(inert.validate().is_ok());
+    }
+}

@@ -155,6 +155,18 @@ impl Metrics {
         g.insert("mixed_ticks".to_string(), mixed_ticks);
     }
 
+    /// Record the adaptive-tier gauges in one shot (`expert_hot_hits` /
+    /// `tier_promotions` / `link_bytes_saved`) — the scheduler calls
+    /// this every tick from the engine's lifetime [`TierStats`]
+    /// (`crate::engine::TierStats`), mirroring [`Self::record_batch`].
+    /// All zero for uniform (tiers-off) deployments.
+    pub fn record_tiers(&self, hot_hits: u64, promotions: u64, bytes_saved: u64) {
+        let mut g = self.gauges.lock().unwrap();
+        g.insert("expert_hot_hits".to_string(), hot_hits);
+        g.insert("tier_promotions".to_string(), promotions);
+        g.insert("link_bytes_saved".to_string(), bytes_saved);
+    }
+
     /// Every gauge name currently recorded — the done-event parity test
     /// enumerates these to lock gauges and the server's `done` schema
     /// together (see `coordinator::server::GAUGE_DONE_FIELDS`).
@@ -317,6 +329,16 @@ mod tests {
         assert_eq!(m.gauge("expert_loads_deduped"), 36);
         assert_eq!(m.gauge("mixed_ticks"), 7);
         assert!(m.render().contains("expert_loads_deduped 36"));
+    }
+
+    #[test]
+    fn tier_gauges_record_together() {
+        let m = Metrics::new();
+        m.record_tiers(42, 3, 9000);
+        assert_eq!(m.gauge("expert_hot_hits"), 42);
+        assert_eq!(m.gauge("tier_promotions"), 3);
+        assert_eq!(m.gauge("link_bytes_saved"), 9000);
+        assert!(m.render().contains("link_bytes_saved 9000"));
     }
 
     #[test]
