@@ -1,0 +1,88 @@
+//! Span-trace export: drive a workload that exercises every [`SpanKind`]
+//! — prefill, decode, speculative prefetch, adaptive re-tier reloads, a
+//! KV preempt/resume round-trip, and a prefix-cache seeded admission —
+//! then dump the span ring as Chrome trace-event JSON and print the
+//! per-kind time breakdown.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example trace_export
+//! # writes trace.json — load it at https://ui.perfetto.dev
+//! TRACE_OUT=/tmp/moe_trace.json cargo run --release --example trace_export
+//! ```
+//!
+//! The exported JSON uses one Perfetto process per resource stream
+//! (GPU, PCIe link) and one thread per session, so the lane layout
+//! directly shows which session's work each reservation served and how
+//! much link time the compute front actually hid.
+
+use moe_offload::config::{HardwareProfile, OffloadPolicy, QuantScheme, ServingConfig, SimScale};
+use moe_offload::harness;
+use moe_offload::model::{ByteTokenizer, Sampler};
+use moe_offload::quant::TierPolicy;
+use moe_offload::trace::SpanKind;
+
+fn main() -> anyhow::Result<()> {
+    let dir = harness::artifacts_dir()?;
+
+    let serving = ServingConfig {
+        policy: OffloadPolicy::Full { cache_k: 2, spec_n: 2 },
+        attn_quant: QuantScheme::Hqq { bits: 4 },
+        expert_quant: QuantScheme::Hqq { bits: 3 },
+        sim_scale: SimScale::Tiny,
+        prefix_cache: true,
+        // a tiny re-rank interval so the short run trips adaptive
+        // re-tiering and the trace shows tier_reload transfers
+        expert_tiers: TierPolicy { adapt_interval: 8, ..TierPolicy::hot_cold() },
+        trace: true,
+        ..Default::default()
+    };
+    let mut engine =
+        harness::build_engine_with_serving(&dir, &serving, HardwareProfile::rtx3060())?;
+    let tokenizer = ByteTokenizer::new();
+    let prompt = tokenizer.chat_turn("what is a mixture of experts model");
+    let mut sampler = Sampler::proportional(7);
+
+    // 1) a full request: prefill (attention / gate / expert_compute /
+    //    lm_head + demand_load) then decode (adds embed, spec_prefetch,
+    //    and — once the adapt interval trips — tier_reload)
+    let mut first = engine.new_session()?;
+    let reply = engine.generate(&mut first, &prompt, 32, &mut sampler)?;
+
+    // 2) preempt + resume: the KV pages swap to host and back (kv_resume)
+    engine.preempt_session(&mut first)?;
+    engine.resume_session(&mut first)?;
+    let last = *reply.last().expect("generate returned tokens");
+    engine.decode_step(&mut first, last)?;
+
+    // 3) cache the finished stream, then admit a second session on the
+    //    same prompt: its prefill seeds from the cache (prefix_seed)
+    engine.prefix_insert(&first, &prompt)?;
+    let mut second = engine.new_session()?;
+    let (_logits, reused) = engine.prefill_cached(&mut second, &prompt)?;
+    engine.decode_step(&mut second, last)?;
+
+    println!("{}", engine.tracer.breakdown_table().render());
+
+    let totals = engine.tracer.kind_totals();
+    let missing: Vec<&str> = totals
+        .iter()
+        .filter(|(_, busy)| *busy <= 0.0)
+        .map(|(k, _)| k.label())
+        .collect();
+    if !missing.is_empty() {
+        anyhow::bail!("span kinds missing from the trace: {}", missing.join(", "));
+    }
+    // sanity: the seeded admission actually reused cached positions —
+    // otherwise the prefix_seed lane above is measuring nothing
+    anyhow::ensure!(reused > 0, "prefix cache did not seed the second session");
+    anyhow::ensure!(totals.len() == SpanKind::ALL.len());
+
+    let out = std::env::var("TRACE_OUT").unwrap_or_else(|_| "trace.json".to_string());
+    std::fs::write(&out, engine.tracer.chrome_trace().to_string())?;
+    println!(
+        "wrote {} spans ({} dropped) to {out} — load it at https://ui.perfetto.dev",
+        engine.tracer.len(),
+        engine.tracer.dropped(),
+    );
+    Ok(())
+}

@@ -537,6 +537,73 @@ fn main() {
         Err(e) => eprintln!("  could not write {bench6_path}: {e}"),
     }
 
+    // span tracing: overhead of the tracer on the hot decode path and
+    // proof that tracing is observation-only — identical logits bits and
+    // an identical virtual timeline with the tracer on vs off. Emits the
+    // machine-readable trajectory to ../BENCH_7.json.
+    let trace_tokens = if smoke { 48 } else { 256 };
+    println!("\ntrace_overhead ({trace_tokens} decoded tokens, full_k2_spec2):");
+    // (wall seconds, logits bit-stream, final virtual now, spans recorded)
+    let run_traced = |trace: bool| -> (f64, Vec<u32>, f64, usize) {
+        let serving = ServingConfig {
+            policy: OffloadPolicy::Full { cache_k: 2, spec_n: 2 },
+            expert_quant: QuantScheme::Hqq { bits: 3 },
+            attn_quant: QuantScheme::Hqq { bits: 4 },
+            sim_scale: SimScale::Tiny,
+            trace,
+            ..Default::default()
+        };
+        let mut engine =
+            harness::build_engine_with_serving(&dir, &serving, HardwareProfile::rtx3060())
+                .unwrap();
+        let mut sess = engine.new_session().unwrap();
+        let mut bits: Vec<u32> = Vec::new();
+        let t0 = std::time::Instant::now();
+        for t in 0..trace_tokens {
+            if sess.position() + 1 >= engine.weights.cfg.max_seq {
+                sess.reset();
+            }
+            let logits = engine.decode_step(&mut sess, tokens[t % tokens.len()]).unwrap();
+            bits.extend(logits.iter().map(|v| v.to_bits()));
+        }
+        (
+            t0.elapsed().as_secs_f64(),
+            bits,
+            engine.timeline.now(),
+            engine.tracer.len(),
+        )
+    };
+    let (off_wall, off_bits, off_now, off_spans) = run_traced(false);
+    let (on_wall, on_bits, on_now, on_spans) = run_traced(true);
+    assert_eq!(off_spans, 0, "tracing off must record no spans");
+    assert!(on_spans > 0, "tracing on must record spans");
+    assert_eq!(off_bits, on_bits, "tracing must not change a single logit bit");
+    assert_eq!(
+        off_now.to_bits(),
+        on_now.to_bits(),
+        "tracing must not move the virtual timeline"
+    );
+    let overhead_pct = (on_wall / off_wall.max(1e-12) - 1.0) * 100.0;
+    println!(
+        "  trace off: {off_wall:.4}s   trace on: {on_wall:.4}s  \
+         ({overhead_pct:+.2}% wall, {on_spans} spans recorded, byte-identical output)"
+    );
+    let bench7 = format!(
+        concat!(
+            "{{\"bench\":\"trace_overhead\",\"schema\":1,\"status\":\"measured\",",
+            "\"policy\":\"full_k2_spec2\",\"sim_scale\":\"tiny\",\"decode_tokens\":{},",
+            "\"smoke\":{},\"byte_identical\":true,\"wall_overhead_pct\":{:.3},",
+            "\"modes\":[{{\"trace\":false,\"wall_s\":{:.6},\"spans\":{}}},",
+            "{{\"trace\":true,\"wall_s\":{:.6},\"spans\":{}}}]}}\n"
+        ),
+        trace_tokens, smoke, overhead_pct, off_wall, off_spans, on_wall, on_spans
+    );
+    let bench7_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_7.json");
+    match std::fs::write(bench7_path, &bench7) {
+        Ok(()) => println!("  wrote {bench7_path}"),
+        Err(e) => eprintln!("  could not write {bench7_path}: {e}"),
+    }
+
     // host wall-time breakdown per module (perf-pass diagnostics)
     println!("\nper-module host wall time (from the prefill engine):");
     let mut entries: Vec<_> = engine.rt.stats.iter().collect();

@@ -210,6 +210,79 @@ mod tests {
     }
 
     #[test]
+    fn link_utilization_ratio_and_edge_cases() {
+        let mut t = Timeline::new();
+        assert_eq!(t.link_utilization(), 0.0, "no time elapsed yet");
+        t.compute(4.0, 0.0);
+        assert_eq!(t.link_utilization(), 0.0, "no transfers yet");
+        t.transfer(1.0, 0.0);
+        // 1s of link busy across 4s of decode front
+        assert!((t.link_utilization() - 0.25).abs() < 1e-12);
+        // a transfer tail past `now` still clamps to 1.0
+        t.transfer(100.0, 0.0);
+        assert_eq!(t.link_utilization(), 1.0);
+    }
+
+    #[test]
+    fn reserve_orders_spans_per_resource_only() {
+        let mut t = Timeline::new();
+        let g1 = t.reserve(Resource::Gpu, 2.0, 0.0);
+        let l1 = t.reserve(Resource::Link, 3.0, 0.0);
+        let g2 = t.reserve(Resource::Gpu, 1.0, 0.0);
+        // same-resource reservations serialize...
+        assert_eq!(g1.end, 2.0);
+        assert_eq!(g2.start, 2.0);
+        // ...but the two resources never queue behind each other
+        assert_eq!(l1.start, 0.0);
+        assert_eq!(l1.end, 3.0);
+        // reserve never moves the decode front
+        assert_eq!(t.now(), 0.0);
+    }
+
+    #[test]
+    fn reserve_not_before_leaves_idle_gap() {
+        let mut t = Timeline::new();
+        let a = t.reserve(Resource::Link, 1.0, 5.0);
+        assert_eq!(a.start, 5.0);
+        // the gap is dead time: the next unconstrained reservation starts
+        // at the resource's free edge, not back in the gap
+        let b = t.reserve(Resource::Link, 1.0, 0.0);
+        assert_eq!(b.start, 6.0);
+        // busy accounting counts durations, not elapsed span
+        assert!((t.link_busy - 2.0).abs() < 1e-12);
+        assert_eq!(t.transfers, 2);
+    }
+
+    #[test]
+    fn dependent_chain_through_not_before() {
+        // transfer -> dependent transfer -> dependent compute, linked
+        // purely through span ends
+        let mut t = Timeline::new();
+        let a = t.transfer(2.0, 0.0);
+        let b = t.transfer(1.0, a.end + 1.0); // waits past a deliberately
+        assert_eq!(b.start, 3.0);
+        let c = t.compute(1.0, b.end);
+        assert_eq!(c.start, 4.0);
+        assert_eq!(t.now(), 5.0);
+    }
+
+    #[test]
+    fn overlap_accounting_compute_hides_transfer() {
+        // the §3.2 shape: a transfer issued under a longer compute span
+        // is fully hidden — the decode front never stalls, but link_busy
+        // still records the transfer's duration
+        let mut t = Timeline::new();
+        let c = t.compute(5.0, 0.0);
+        let x = t.transfer(2.0, 0.0);
+        assert!(x.end <= c.end, "transfer hidden under compute");
+        t.wait_until(x.end); // no-op: decode front is already past it
+        assert_eq!(t.now(), 5.0);
+        assert!((t.gpu_busy - 5.0).abs() < 1e-12);
+        assert!((t.link_busy - 2.0).abs() < 1e-12);
+        assert!((t.link_utilization() - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
     fn busy_accounting_sums_durations() {
         let mut t = Timeline::new();
         t.compute(1.5, 0.0);

@@ -215,6 +215,17 @@ pub struct ServingConfig {
     /// byte-identical to the uniform deployment (every expert Warm at
     /// the base scheme, same packed bytes, same transfer pricing).
     pub expert_tiers: TierPolicy,
+    /// Span tracing (see [`crate::trace`]): tag every timeline
+    /// reservation with a typed kind + session/layer/tick ids into a
+    /// bounded ring buffer, surface per-request time breakdowns in the
+    /// coordinator's `done` event and `Metrics` histograms, and enable
+    /// Chrome trace-event export. Off by default — tracing never changes
+    /// timing or tokens, so off is byte-identical AND on is
+    /// token/timing-identical; only observability differs.
+    pub trace: bool,
+    /// Ring capacity in spans while `trace` is on; the oldest spans are
+    /// dropped (and counted) once full. Inert while `trace` is off.
+    pub trace_span_capacity: usize,
 }
 
 impl Default for ServingConfig {
@@ -244,6 +255,9 @@ impl Default for ServingConfig {
             prefill_chunk_tokens: 16,
             max_batch_tokens: None,
             expert_tiers: TierPolicy::default(),
+            trace: false,
+            // ~64 spans/token at tiny geometry -> roughly a 1k-token window
+            trace_span_capacity: 65536,
         }
     }
 }
@@ -351,6 +365,24 @@ impl ServingConfig {
         // tier knobs follow the same inertness rule: TierPolicy::validate
         // is a no-op while the policy is disabled
         self.expert_tiers.validate()?;
+        // trace knobs are inert while tracing is off
+        if self.trace {
+            if self.trace_span_capacity == 0 {
+                return Err(Error::Config(
+                    "trace_span_capacity must be >= 1 with trace on — a \
+                     zero-span ring could never hold a span"
+                        .into(),
+                ));
+            }
+            if self.trace_span_capacity > 1 << 24 {
+                return Err(Error::Config(format!(
+                    "trace_span_capacity {} is unreasonably large (each span \
+                     is ~64 bytes resident; limit {})",
+                    self.trace_span_capacity,
+                    1 << 24
+                )));
+            }
+        }
         Ok(())
     }
 }
@@ -595,6 +627,43 @@ mod tests {
         assert!(
             inert.validate().is_ok(),
             "inert tier knobs must not block a tiers-off deployment"
+        );
+    }
+
+    #[test]
+    fn trace_knob_defaults_and_validation() {
+        let d = ServingConfig::default();
+        assert!(!d.trace, "tracing is opt-in");
+        assert!(d.trace_span_capacity > 0);
+
+        let zero_ring = ServingConfig {
+            trace: true,
+            trace_span_capacity: 0,
+            ..Default::default()
+        };
+        assert!(zero_ring.validate().is_err());
+        let huge_ring = ServingConfig {
+            trace: true,
+            trace_span_capacity: (1 << 24) + 1,
+            ..Default::default()
+        };
+        assert!(huge_ring.validate().is_err());
+        let ok = ServingConfig { trace: true, ..Default::default() };
+        assert!(ok.validate().is_ok());
+    }
+
+    #[test]
+    fn trace_knobs_are_inert_when_off() {
+        // invalid values behind the off switch must not reject the
+        // config (same rule every opt-in knob family follows)
+        let inert = ServingConfig {
+            trace: false,
+            trace_span_capacity: 0,
+            ..Default::default()
+        };
+        assert!(
+            inert.validate().is_ok(),
+            "inert trace knobs must not block a trace-off deployment"
         );
     }
 

@@ -73,7 +73,7 @@ use std::time::{Duration, Instant};
 use crate::engine::{MoeEngine, Session};
 use crate::error::{Error, Result};
 use crate::model::{ByteTokenizer, Sampler};
-use crate::telemetry::Metrics;
+use crate::telemetry::{Histogram, Metrics};
 
 #[derive(Debug, Clone)]
 pub struct Request {
@@ -97,6 +97,35 @@ impl Request {
             chat: true,
         }
     }
+}
+
+/// Per-request virtual-time breakdown, derived from the engine's
+/// per-token accounting when span tracing is on. The four virtual
+/// components obey an exact identity: `prefill_compute_s +
+/// decode_compute_s + stall_s == prefill virtual time + Σ decode
+/// virtual time` — the decode front only ever advances through compute
+/// reservations and transfer waits. `transfer_s` counts full transfer
+/// durations whether hidden or not, so `transfer_hidden_s = transfer_s
+/// - stall_s` is the link time speculative loading kept off the
+/// critical path.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Breakdown {
+    /// Wall seconds waiting in the queue before admission.
+    pub queue_s: f64,
+    /// Virtual seconds of prefill the GPU actually computed.
+    pub prefill_compute_s: f64,
+    /// Virtual seconds of decode the GPU actually computed.
+    pub decode_compute_s: f64,
+    /// Virtual link seconds of expert transfers issued for this request
+    /// (demand loads, tier reloads, and the speculative prefetches it
+    /// triggered), hidden or not.
+    pub transfer_s: f64,
+    /// The share of `transfer_s` that overlapped compute (never stalled
+    /// the decode front).
+    pub transfer_hidden_s: f64,
+    /// Virtual seconds the request's prefill/decode fronts stalled
+    /// waiting on transfers.
+    pub stall_s: f64,
 }
 
 #[derive(Debug, Clone)]
@@ -167,6 +196,10 @@ pub enum Event {
         /// Link bytes saved versus staging every transfer at the uniform
         /// base scheme, since engine start.
         link_bytes_saved: u64,
+        /// Per-request time breakdown — `Some` only when span tracing is
+        /// on (`ServingConfig::trace`), so tracing-off serving output
+        /// stays byte-identical.
+        breakdown: Option<Breakdown>,
     },
     Error { request_id: u64, message: String },
 }
@@ -1372,6 +1405,33 @@ fn finish(m: &Metrics, engine: &mut MoeEngine, live: LiveSession, active_session
     m.inc("expert_cache_hits", hits);
     m.inc("expert_cache_misses", misses);
     m.observe("request_latency_s", wall);
+    // time-breakdown attribution rides the trace knob: off, the done
+    // event (and its JSON) is byte-identical to a tracing-less build
+    let breakdown = if engine.tracer.is_enabled() {
+        let run = &live.sess.run;
+        let decode_sim: f64 = run.tokens.iter().map(|t| t.sim_s).sum();
+        let decode_stall: f64 = run.tokens.iter().map(|t| t.stall_s).sum();
+        let decode_transfer: f64 = run.tokens.iter().map(|t| t.transfer_s).sum();
+        let stall_s = run.prefill_stall_s + decode_stall;
+        let transfer_s = run.prefill_transfer_s + decode_transfer;
+        let b = Breakdown {
+            queue_s: live.queue_wait_s,
+            prefill_compute_s: (run.prefill_sim_s - run.prefill_stall_s).max(0.0),
+            decode_compute_s: (decode_sim - decode_stall).max(0.0),
+            transfer_s,
+            transfer_hidden_s: (transfer_s - stall_s).max(0.0),
+            stall_s,
+        };
+        m.observe_with("req_queue_s", b.queue_s, Histogram::sim_time);
+        m.observe_with("req_prefill_compute_s", b.prefill_compute_s, Histogram::sim_time);
+        m.observe_with("req_decode_compute_s", b.decode_compute_s, Histogram::sim_time);
+        m.observe_with("req_transfer_s", b.transfer_s, Histogram::sim_time);
+        m.observe_with("req_transfer_hidden_s", b.transfer_hidden_s, Histogram::sim_time);
+        m.observe_with("req_stall_s", b.stall_s, Histogram::sim_time);
+        Some(b)
+    } else {
+        None
+    };
     let _ = live.tx.send(Event::Done {
         request_id: live.id,
         text: live.text,
@@ -1404,6 +1464,7 @@ fn finish(m: &Metrics, engine: &mut MoeEngine, live: LiveSession, active_session
         expert_hot_hits: engine.tiers.hot_hits,
         tier_promotions: engine.tiers.promotions,
         link_bytes_saved: engine.tiers.bytes_saved(),
+        breakdown,
     });
 }
 

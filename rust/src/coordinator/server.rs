@@ -17,7 +17,18 @@
 //! The done event carries a field for EVERY gauge the scheduler records
 //! (see [`GAUGE_DONE_FIELDS`]) — the parity test below fails the build
 //! when a gauge is added without its done-JSON counterpart, the drift
-//! that silently dropped `kv_resumes` in PR 2.
+//! that silently dropped `kv_resumes` in PR 2. With span tracing on
+//! (`ServingConfig::trace`) the done event additionally carries the
+//! per-request time breakdown (`queue_s`, `prefill_compute_s`,
+//! `decode_compute_s`, `transfer_s`, `transfer_hidden_s`, `stall_s`),
+//! locked to the `req_*` breakdown histograms by the same discipline
+//! ([`BREAKDOWN_DONE_FIELDS`]); tracing off, those fields are absent
+//! and the output is byte-identical to a tracing-less build.
+//!
+//! Besides request objects, a line consisting of the bare word
+//! `metrics` returns the coordinator's full metrics registry as
+//! `{"type":"metrics","metrics":"<rendered text>"}` — a scrapeable
+//! surface (counters, gauges, histogram mean/p50/p99/count per line).
 //!
 //! Each connection gets its own handler thread; the coordinator's
 //! scheduler interleaves up to `max_concurrent_sessions` requests, so
@@ -30,6 +41,7 @@ use std::sync::Arc;
 
 use crate::coordinator::{Coordinator, Event, Request};
 use crate::error::{Error, Result};
+use crate::telemetry::Metrics;
 use crate::util::json::Json;
 
 pub struct Server {
@@ -122,6 +134,22 @@ pub const GAUGE_DONE_FIELDS: &[(&str, &str)] = &[
     ("link_bytes_saved", "link_bytes_saved"),
 ];
 
+/// Every per-request breakdown histogram the scheduler observes (span
+/// tracing on), paired with the `done`-event JSON field that surfaces
+/// the same request's value. Same parity discipline as
+/// [`GAUGE_DONE_FIELDS`]: the test below drives the histogram-recording
+/// path and demands a mapping AND a serialized field for each, so a new
+/// breakdown component cannot ship scrapeable but invisible per-request
+/// (or vice versa).
+pub const BREAKDOWN_DONE_FIELDS: &[(&str, &str)] = &[
+    ("req_queue_s", "queue_s"),
+    ("req_prefill_compute_s", "prefill_compute_s"),
+    ("req_decode_compute_s", "decode_compute_s"),
+    ("req_transfer_s", "transfer_s"),
+    ("req_transfer_hidden_s", "transfer_hidden_s"),
+    ("req_stall_s", "stall_s"),
+];
+
 pub fn event_to_json(ev: &Event) -> Json {
     match ev {
         Event::Token { text, .. } => Json::obj(vec![
@@ -159,45 +187,70 @@ pub fn event_to_json(ev: &Event) -> Json {
             expert_hot_hits,
             tier_promotions,
             link_bytes_saved,
+            breakdown,
             ..
-        } => Json::obj(vec![
-            ("type", "done".into()),
-            ("text", Json::str(text.clone())),
-            ("prompt_tokens", (*prompt_tokens).into()),
-            ("new_tokens", (*new_tokens).into()),
-            ("wall_s", (*wall_s).into()),
-            ("tokens_per_s_wall", (*tokens_per_s_wall).into()),
-            ("tokens_per_s_sim", (*tokens_per_s_sim).into()),
-            ("queue_wait_s", (*queue_wait_s).into()),
-            ("ttft_s", (*ttft_s).into()),
-            ("active_sessions", (*active_sessions as usize).into()),
-            ("kv_blocks_total", (*kv_blocks_total as usize).into()),
-            ("kv_blocks_in_use", (*kv_blocks_in_use as usize).into()),
-            ("kv_blocks_free", (*kv_blocks_free as usize).into()),
-            ("kv_preemptions", (*kv_preemptions as usize).into()),
-            ("kv_resumes", (*kv_resumes as usize).into()),
-            ("prefix_hit", (*prefix_hit).into()),
-            ("prefix_tokens_reused", (*prefix_tokens_reused as usize).into()),
-            ("prefix_cache_blocks", (*prefix_cache_blocks as usize).into()),
-            ("prefix_cache_tokens", (*prefix_cache_tokens as usize).into()),
-            ("prefix_hits", (*prefix_hits as usize).into()),
-            ("prefix_misses", (*prefix_misses as usize).into()),
-            ("prefix_inserted_blocks", (*prefix_inserted_blocks as usize).into()),
-            ("prefix_evicted_blocks", (*prefix_evicted_blocks as usize).into()),
-            ("expert_loads_deduped", (*expert_loads_deduped as usize).into()),
-            ("batched_kernel_calls", (*batched_kernel_calls as usize).into()),
-            ("batched_ticks", (*batched_ticks as usize).into()),
-            ("mixed_ticks", (*mixed_ticks as usize).into()),
-            ("batch_occupancy", (*batch_occupancy as usize).into()),
-            ("expert_hot_hits", (*expert_hot_hits as usize).into()),
-            ("tier_promotions", (*tier_promotions as usize).into()),
-            ("link_bytes_saved", (*link_bytes_saved as usize).into()),
-        ]),
+        } => {
+            let mut fields = vec![
+                ("type", "done".into()),
+                ("text", Json::str(text.clone())),
+                ("prompt_tokens", (*prompt_tokens).into()),
+                ("new_tokens", (*new_tokens).into()),
+                ("wall_s", (*wall_s).into()),
+                ("tokens_per_s_wall", (*tokens_per_s_wall).into()),
+                ("tokens_per_s_sim", (*tokens_per_s_sim).into()),
+                ("queue_wait_s", (*queue_wait_s).into()),
+                ("ttft_s", (*ttft_s).into()),
+                ("active_sessions", (*active_sessions as usize).into()),
+                ("kv_blocks_total", (*kv_blocks_total as usize).into()),
+                ("kv_blocks_in_use", (*kv_blocks_in_use as usize).into()),
+                ("kv_blocks_free", (*kv_blocks_free as usize).into()),
+                ("kv_preemptions", (*kv_preemptions as usize).into()),
+                ("kv_resumes", (*kv_resumes as usize).into()),
+                ("prefix_hit", (*prefix_hit).into()),
+                ("prefix_tokens_reused", (*prefix_tokens_reused as usize).into()),
+                ("prefix_cache_blocks", (*prefix_cache_blocks as usize).into()),
+                ("prefix_cache_tokens", (*prefix_cache_tokens as usize).into()),
+                ("prefix_hits", (*prefix_hits as usize).into()),
+                ("prefix_misses", (*prefix_misses as usize).into()),
+                ("prefix_inserted_blocks", (*prefix_inserted_blocks as usize).into()),
+                ("prefix_evicted_blocks", (*prefix_evicted_blocks as usize).into()),
+                ("expert_loads_deduped", (*expert_loads_deduped as usize).into()),
+                ("batched_kernel_calls", (*batched_kernel_calls as usize).into()),
+                ("batched_ticks", (*batched_ticks as usize).into()),
+                ("mixed_ticks", (*mixed_ticks as usize).into()),
+                ("batch_occupancy", (*batch_occupancy as usize).into()),
+                ("expert_hot_hits", (*expert_hot_hits as usize).into()),
+                ("tier_promotions", (*tier_promotions as usize).into()),
+                ("link_bytes_saved", (*link_bytes_saved as usize).into()),
+            ];
+            // breakdown fields ride the trace knob: absent (not zeroed)
+            // when tracing is off, keeping the off-path byte-identical
+            if let Some(b) = breakdown {
+                fields.push(("queue_s", b.queue_s.into()));
+                fields.push(("prefill_compute_s", b.prefill_compute_s.into()));
+                fields.push(("decode_compute_s", b.decode_compute_s.into()));
+                fields.push(("transfer_s", b.transfer_s.into()));
+                fields.push(("transfer_hidden_s", b.transfer_hidden_s.into()));
+                fields.push(("stall_s", b.stall_s.into()));
+            }
+            Json::obj(fields)
+        }
         Event::Error { message, .. } => Json::obj(vec![
             ("type", "error".into()),
             ("message", Json::str(message.clone())),
         ]),
     }
+}
+
+/// The `metrics` command's response: the coordinator's full registry
+/// rendered as scrape text (one `name value` line per counter/gauge,
+/// `_mean/_p50/_p99/_count` lines per histogram), wrapped in a JSON
+/// envelope for the line protocol.
+pub fn metrics_json(m: &Metrics) -> Json {
+    Json::obj(vec![
+        ("type", "metrics".into()),
+        ("metrics", Json::str(m.render())),
+    ])
 }
 
 fn handle_conn(stream: TcpStream, coord: &Coordinator) -> Result<()> {
@@ -206,6 +259,11 @@ fn handle_conn(stream: TcpStream, coord: &Coordinator) -> Result<()> {
     for line in reader.lines() {
         let line = line?;
         if line.trim().is_empty() {
+            continue;
+        }
+        if line.trim() == "metrics" {
+            writeln!(writer, "{}", metrics_json(&coord.metrics))?;
+            writer.flush()?;
             continue;
         }
         match parse_request(&line) {
@@ -287,6 +345,18 @@ mod tests {
             expert_hot_hits: 14,
             tier_promotions: 2,
             link_bytes_saved: 4096,
+            breakdown: None,
+        }
+    }
+
+    fn sample_breakdown() -> crate::coordinator::Breakdown {
+        crate::coordinator::Breakdown {
+            queue_s: 0.25,
+            prefill_compute_s: 0.5,
+            decode_compute_s: 1.5,
+            transfer_s: 0.75,
+            transfer_hidden_s: 0.5,
+            stall_s: 0.25,
         }
     }
 
@@ -370,5 +440,86 @@ mod tests {
                 "GAUGE_DONE_FIELDS maps gauge {gauge:?} to missing done field {field:?}"
             );
         }
+    }
+
+    #[test]
+    fn breakdown_fields_absent_without_tracing() {
+        // trace off ⇒ breakdown is None ⇒ the fields are ABSENT (not
+        // zeroed) — the byte-identity contract for tracing-off serving
+        let j = event_to_json(&sample_done());
+        for (_, field) in BREAKDOWN_DONE_FIELDS {
+            assert!(
+                j.get(field).is_none(),
+                "done event must not carry {field:?} with tracing off"
+            );
+        }
+    }
+
+    /// Breakdown-histogram / done-JSON parity, mirroring the gauge test:
+    /// drive the scheduler's breakdown observation path (the six
+    /// `req_*` sim-time histograms `finish()` records with tracing on),
+    /// then demand each recorded histogram has a mapping AND that its
+    /// field is serialized in a traced done event. A new breakdown
+    /// component can't ship scrapeable but invisible per-request, or
+    /// vice versa.
+    #[test]
+    fn every_breakdown_histogram_surfaces_in_the_traced_done_event() {
+        use crate::telemetry::Histogram;
+        let m = Metrics::new();
+        // mirror finish()'s observe_with calls — extend in lockstep
+        m.observe_with("req_queue_s", 0.1, Histogram::sim_time);
+        m.observe_with("req_prefill_compute_s", 0.1, Histogram::sim_time);
+        m.observe_with("req_decode_compute_s", 0.1, Histogram::sim_time);
+        m.observe_with("req_transfer_s", 0.1, Histogram::sim_time);
+        m.observe_with("req_transfer_hidden_s", 0.1, Histogram::sim_time);
+        m.observe_with("req_stall_s", 0.1, Histogram::sim_time);
+        let mut done = sample_done();
+        if let Event::Done { breakdown, .. } = &mut done {
+            *breakdown = Some(sample_breakdown());
+        }
+        let j = event_to_json(&done);
+        for name in m.histogram_names() {
+            if !name.starts_with("req_") {
+                continue; // other histograms (latency etc.) are not per-request
+            }
+            let field = BREAKDOWN_DONE_FIELDS
+                .iter()
+                .find(|(hist, _)| *hist == name.as_str())
+                .unwrap_or_else(|| {
+                    panic!("histogram {name:?} has no done-event mapping in BREAKDOWN_DONE_FIELDS")
+                })
+                .1;
+            assert!(
+                j.get(field).is_some(),
+                "traced done event is missing field {field:?} (mapped from {name:?})"
+            );
+        }
+        // the mapping itself must not point at fields the schema lost
+        for (hist, field) in BREAKDOWN_DONE_FIELDS {
+            assert!(
+                j.get(field).is_some(),
+                "BREAKDOWN_DONE_FIELDS maps {hist:?} to missing done field {field:?}"
+            );
+        }
+        // spot-check values flow through
+        assert!((j.get("stall_s").unwrap().as_f64().unwrap() - 0.25).abs() < 1e-12);
+        assert!((j.get("transfer_hidden_s").unwrap().as_f64().unwrap() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn metrics_command_renders_registry() {
+        let m = Metrics::new();
+        m.inc("requests_ok", 3);
+        m.set_gauge("active_sessions", 2);
+        m.observe("request_latency_s", 0.5);
+        let j = metrics_json(&m);
+        assert_eq!(j.get("type").unwrap().as_str(), Some("metrics"));
+        let text = j.get("metrics").unwrap().as_str().unwrap();
+        assert!(text.contains("requests_ok 3"));
+        assert!(text.contains("active_sessions 2"));
+        assert!(text.contains("request_latency_s_count 1"));
+        // the envelope itself must survive the line protocol
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("type").unwrap().as_str(), Some("metrics"));
     }
 }

@@ -36,7 +36,7 @@ pub mod session;
 pub mod stats;
 pub mod trace;
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
@@ -54,6 +54,7 @@ use crate::prefix::PrefixCache;
 use crate::quant::tier::{assign_tiers, Tier, TierPolicy};
 use crate::runtime::{ExpertLits, Runtime, StaticLits};
 use crate::tensor::{softmax, top_k, Tensor};
+use crate::trace::{SpanKind, Tracer};
 use cost::CostModel;
 pub use session::Session;
 use stats::TokenStats;
@@ -232,6 +233,23 @@ pub struct MoeEngine {
     expert_slot_bytes: u64,
     /// Routed-use total as of the last tier adaptation pass.
     tier_adapted_at_uses: u64,
+    /// Span tracer (see [`crate::trace`]) — a bounded ring of typed,
+    /// attributed timeline reservations. Disabled (a no-op) unless
+    /// `ServingConfig::trace` opted the deployment in; tracing never
+    /// changes timing or tokens, only what is observable.
+    pub tracer: Tracer,
+    /// Engine-lifetime tick counter for span attribution: one tick per
+    /// `decode_step` / batched / mixed tick / prefill call.
+    tick: u64,
+    /// Session id spans are currently attributed to. Per-session code
+    /// paths set it from the session they hold; shared batch work is
+    /// attributed to its stats owner (the first routed participant,
+    /// matching the TokenStats convention).
+    span_sess: u64,
+    /// Experts whose resident copy was dropped by an adaptive re-tier:
+    /// their next demand staging is a [`SpanKind::TierReload`], not a
+    /// plain demand-load. Entries clear on the next staging or hit.
+    tier_reload_pending: HashSet<ExpertId>,
 }
 
 impl MoeEngine {
@@ -398,7 +416,20 @@ impl MoeEngine {
             tier_policy,
             expert_slot_bytes,
             tier_adapted_at_uses: 0,
+            tracer: if serving.trace {
+                Tracer::enabled(serving.trace_span_capacity)
+            } else {
+                Tracer::disabled()
+            },
+            tick: 0,
+            span_sess: 0,
+            tier_reload_pending: HashSet::new(),
         })
+    }
+
+    /// The scheduler tick most recently begun (span attribution).
+    pub fn current_tick(&self) -> u64 {
+        self.tick
     }
 
     /// Open a fresh session (virgin paged KV — zero blocks committed —
@@ -464,6 +495,8 @@ impl MoeEngine {
             let span = self
                 .timeline
                 .transfer(self.cost.kv_swap_s(bytes), self.timeline.now());
+            self.tracer
+                .record(SpanKind::KvResume, span, sess.id, None, self.tick);
             self.timeline.wait_until(span.end);
         }
         self.kv_pool.note_preemption();
@@ -491,6 +524,8 @@ impl MoeEngine {
             let span = self
                 .timeline
                 .transfer(self.cost.kv_swap_s(bytes), self.timeline.now());
+            self.tracer
+                .record(SpanKind::KvResume, span, sess.id, None, self.tick);
             self.timeline.wait_until(span.end);
         }
         Ok(())
@@ -617,6 +652,8 @@ impl MoeEngine {
             let span = self
                 .timeline
                 .transfer(self.cost.kv_swap_s(bytes), self.timeline.now());
+            self.tracer
+                .record(SpanKind::PrefixSeed, span, sess.id, None, self.tick);
             self.timeline.wait_until(span.end);
         }
         Ok(matched)
@@ -672,12 +709,15 @@ impl MoeEngine {
         // pool this fails BEFORE any compute or state change, so the
         // scheduler can preempt a session and retry the step cleanly.
         self.ensure_kv(sess, sess.pos + 1)?;
+        self.tick += 1;
+        self.span_sess = sess.id;
         let sim_start = self.timeline.now();
         let wall_start = Instant::now();
         let mut tstats = TokenStats::default();
 
         // embed (device-resident; gather cost ~ launch overhead)
-        self.timeline.compute(self.cost.profile.launch_overhead_s, 0.0);
+        let span = self.timeline.compute(self.cost.profile.launch_overhead_s, 0.0);
+        self.tracer.record(SpanKind::Embed, span, sess.id, None, self.tick);
         let mut x = self.rt.embed(token, &self.lits.embed)?;
 
         for l in 0..self.weights.cfg.n_layers {
@@ -685,7 +725,8 @@ impl MoeEngine {
         }
 
         // lm head
-        self.timeline.compute(self.cost.lm_head_compute_s(), 0.0);
+        let span = self.timeline.compute(self.cost.lm_head_compute_s(), 0.0);
+        self.tracer.record(SpanKind::LmHead, span, sess.id, None, self.tick);
         let logits = self.rt.lm_head(&x, &self.lits.final_ln, &self.lits.lm_head)?;
 
         sess.pos += 1;
@@ -776,6 +817,7 @@ impl MoeEngine {
             return Ok(results.into_iter().map(|r| r.expect("all slots filled")).collect());
         }
 
+        self.tick += 1;
         let sim_start = self.timeline.now();
         let wall_start = Instant::now();
         self.batch.ticks += 1;
@@ -786,7 +828,9 @@ impl MoeEngine {
         // embed every live session's token
         let mut xs: Vec<Tensor> = Vec::with_capacity(live.len());
         for &i in &live {
-            self.timeline.compute(self.cost.profile.launch_overhead_s, 0.0);
+            let sid = sessions[i].id;
+            let span = self.timeline.compute(self.cost.profile.launch_overhead_s, 0.0);
+            self.tracer.record(SpanKind::Embed, span, sid, None, self.tick);
             xs.push(self.rt.embed(tokens[i], &self.lits.embed)?);
         }
 
@@ -798,8 +842,10 @@ impl MoeEngine {
         // completed together, so the tick's span is each token's latency
         // (see TokenStats::sim_s).
         let mut logits: Vec<Vec<f32>> = Vec::with_capacity(live.len());
-        for x in &xs {
-            self.timeline.compute(self.cost.lm_head_compute_s(), 0.0);
+        for (j, x) in xs.iter().enumerate() {
+            let sid = sessions[live[j]].id;
+            let span = self.timeline.compute(self.cost.lm_head_compute_s(), 0.0);
+            self.tracer.record(SpanKind::LmHead, span, sid, None, self.tick);
             logits.push(self.rt.lm_head(x, &self.lits.final_ln, &self.lits.lm_head)?.data);
         }
         let sim_s = self.timeline.now() - sim_start;
@@ -846,6 +892,8 @@ impl MoeEngine {
         let d = self.weights.cfg.d_model;
         let e_count = self.weights.cfg.n_experts;
         let n_live = live.len();
+        // live-order session ids for span attribution of shared work
+        let sids: Vec<u64> = live.iter().map(|&i| sessions[i].id).collect();
 
         // 1) attention + router per session — T = 1 kernels on the
         // session's own KV and residual, bit-identical to layer_step
@@ -860,6 +908,10 @@ impl MoeEngine {
             sels.push(selected);
             ws.push(sel_w);
         }
+        // shared tick work (naive streams, stacked kernels, batch
+        // speculation) is attributed to the first participant, matching
+        // the TokenStats convention; stage_for_batch refines per staging
+        self.span_sess = sids[0];
 
         // 2) the union of routed experts, in first-appearance (batch)
         // order — the tick's dedup ledger
@@ -893,6 +945,7 @@ impl MoeEngine {
             self.stream_layer_naive(l, &mut tstats[0])?;
             for &id in &union {
                 let routed = routed_of(&sels, id.expert as usize);
+                self.span_sess = sids[routed[0]];
                 let out = self.run_expert_stacked(id, &hs, &routed)?;
                 outs.push((out, routed));
             }
@@ -904,13 +957,15 @@ impl MoeEngine {
             // before a batch neighbor has consumed it — and let
             // speculation overlap the expert compute (paper §3.3)
             for &id in &union {
-                self.stage_for_batch(id, &sels, tstats, true)?;
+                self.stage_for_batch(id, &sels, &sids, tstats, true)?;
             }
             if matches!(self.policy, OffloadPolicy::Full { .. }) {
+                self.span_sess = sids[0];
                 self.speculate_batch(l, xs, tstats)?;
             }
             for &id in &union {
                 let routed = routed_of(&sels, id.expert as usize);
+                self.span_sess = sids[routed[0]];
                 let out = self.run_expert_stacked(id, &hs, &routed)?;
                 outs.push((out, routed));
             }
@@ -925,13 +980,15 @@ impl MoeEngine {
             // transient at a time vs. sequential's top_k). Speculation
             // fires post-compute, as sequential does in this mode.
             for &id in &union {
-                self.stage_for_batch(id, &sels, tstats, false)?;
+                self.stage_for_batch(id, &sels, &sids, tstats, false)?;
                 let routed = routed_of(&sels, id.expert as usize);
+                self.span_sess = sids[routed[0]];
                 let out = self.run_expert_stacked(id, &hs, &routed)?;
                 outs.push((out, routed));
                 self.cache.release_transient(id);
             }
             if matches!(self.policy, OffloadPolicy::Full { .. }) {
+                self.span_sess = sids[0];
                 self.speculate_batch(l, xs, tstats)?;
             }
         }
@@ -981,6 +1038,7 @@ impl MoeEngine {
         &mut self,
         id: ExpertId,
         sels: &[Vec<usize>],
+        sids: &[u64],
         tstats: &mut [TokenStats],
         pin: bool,
     ) -> Result<()> {
@@ -989,6 +1047,7 @@ impl MoeEngine {
             .iter()
             .position(|sel| sel.contains(&e))
             .expect("union member is routed by some session");
+        self.span_sess = sids[owner];
         self.ensure_expert(id, &mut tstats[owner])?;
         if pin {
             self.cache.pin(id);
@@ -1011,8 +1070,16 @@ impl MoeEngine {
         routed: &[usize],
     ) -> Result<Tensor> {
         let d = self.weights.cfg.d_model;
-        self.timeline
+        let span = self
+            .timeline
             .compute(self.cost.expert_compute_batched_s(routed.len()), 0.0);
+        self.tracer.record(
+            SpanKind::ExpertCompute,
+            span,
+            self.span_sess,
+            Some(id.layer as usize),
+            self.tick,
+        );
         let (out, calls) = if routed.len() == 1 {
             (self.run_expert(id, &hs[routed[0]])?, 1)
         } else {
@@ -1153,6 +1220,7 @@ impl MoeEngine {
             return Ok((slots, Some(self.prefill(csess, ctoks))));
         }
 
+        self.tick += 1;
         let sim_start = self.timeline.now();
         let wall_start = Instant::now();
         let n_valid = ctoks.len();
@@ -1168,7 +1236,9 @@ impl MoeEngine {
         // decode embeds (charged per row, as decode_batch does)
         let mut xs: Vec<Tensor> = Vec::with_capacity(live.len());
         for &i in &live {
-            self.timeline.compute(self.cost.profile.launch_overhead_s, 0.0);
+            let sid = sessions[i].id;
+            let span = self.timeline.compute(self.cost.profile.launch_overhead_s, 0.0);
+            self.tracer.record(SpanKind::Embed, span, sid, None, self.tick);
             xs.push(self.rt.embed(tokens[i], &self.lits.embed)?);
         }
         // chunk embed: host-side gather padded with token 0, exactly as
@@ -1189,12 +1259,16 @@ impl MoeEngine {
 
         // decode lm heads + finalization (as decode_batch)
         let mut logits: Vec<Vec<f32>> = Vec::with_capacity(live.len());
-        for x in &xs {
-            self.timeline.compute(self.cost.lm_head_compute_s(), 0.0);
+        for (j, x) in xs.iter().enumerate() {
+            let sid = sessions[live[j]].id;
+            let span = self.timeline.compute(self.cost.lm_head_compute_s(), 0.0);
+            self.tracer.record(SpanKind::LmHead, span, sid, None, self.tick);
             logits.push(self.rt.lm_head(x, &self.lits.final_ln, &self.lits.lm_head)?.data);
         }
         // chunk lm head over the whole padded chunk (as prefill)
-        self.timeline.compute(self.cost.lm_head_compute_s(), 0.0);
+        let span = self.timeline.compute(self.cost.lm_head_compute_s(), 0.0);
+        self.tracer
+            .record(SpanKind::LmHead, span, csess.id, None, self.tick);
         let clog = self.rt.lm_head(&cx, &self.lits.final_ln, &self.lits.lm_head)?;
         let vocab = self.weights.cfg.vocab_size;
         let mut chunk_logits: Vec<f32> = Vec::with_capacity(n_valid * vocab);
@@ -1222,6 +1296,11 @@ impl MoeEngine {
         csess.token_counter += n_valid;
         csess.run.prefill_sim_s += sim_s;
         csess.run.prefill_tokens += n_valid;
+        // the chunk's cache events moved the clock without entering
+        // per-token stats; their stall/transfer share still belongs to
+        // the admission's prefill breakdown
+        csess.run.prefill_stall_s += cstats.stall_s;
+        csess.run.prefill_transfer_s += cstats.transfer_s;
         let slots = results
             .into_iter()
             .map(|r| r.expect("all slots filled"))
@@ -1264,6 +1343,8 @@ impl MoeEngine {
         let d = self.weights.cfg.d_model;
         let e_count = self.weights.cfg.n_experts;
         let n_live = live.len();
+        // live-order session ids for span attribution of shared work
+        let sids: Vec<u64> = live.iter().map(|&i| sessions[i].id).collect();
 
         // 1) decode attention + routing — bit-identical to batch_layer_step
         let mut hs: Vec<Tensor> = Vec::with_capacity(n_live);
@@ -1280,13 +1361,17 @@ impl MoeEngine {
 
         // 2) chunk attention + per-row routing — bit-identical to
         // prefill_layer's front half
-        self.timeline.compute(self.cost.attn_compute_s(), 0.0);
+        let span = self.timeline.compute(self.cost.attn_compute_s(), 0.0);
+        self.tracer
+            .record(SpanKind::Attention, span, csess.id, Some(l), self.tick);
         let (cx, kc, vc) = {
             let (k_ref, v_ref) = csess.kv.layer_or(l, &self.lits.zero_kv)?;
             self.rt.prefill_attn(&cx, &self.lits.layers[l], k_ref, v_ref, csess.pos)?
         };
         csess.kv.set_layer(l, kc, vc)?;
-        self.timeline.compute(self.cost.gate_compute_s(), 0.0);
+        let span = self.timeline.compute(self.cost.gate_compute_s(), 0.0);
+        self.tracer
+            .record(SpanKind::Gate, span, csess.id, Some(l), self.tick);
         let (gate_logits, ch) = self.rt.gate(&cx, &self.lits.layers[l])?;
         let mut cweights = vec![0.0f32; cx.shape[0] * e_count];
         let mut needed: Vec<usize> = Vec::new();
@@ -1353,12 +1438,21 @@ impl MoeEngine {
 
         // 4) placement + one stacked kernel per distinct expert —
         // the batched tick's two modes, chunk rows riding along
+        // span attribution for a shared mixed kernel: the first stacked
+        // row's owner (chunk rows lead, so a chunk-routed expert's
+        // kernel lands on the admission's track)
+        let kernel_owner = |rows: &[MixedRow], sids: &[u64], csid: u64| match rows.first() {
+            Some(MixedRow::Chunk(_)) | None => csid,
+            Some(MixedRow::Decode(j)) => sids[*j],
+        };
         let mut outs: Vec<(Tensor, Vec<MixedRow>)> = Vec::with_capacity(union.len());
         if matches!(self.policy, OffloadPolicy::Naive) {
             // whole-layer streaming once per TICK (chunk included)
+            self.span_sess = sids[0];
             self.stream_layer_naive(l, &mut tstats[0])?;
             for &id in &union {
                 let rows = stacked_rows(&cweights, &sels, id.expert as usize);
+                self.span_sess = kernel_owner(&rows, &sids, csess.id);
                 let out = self.run_expert_mixed(id, &ch, &hs, &rows)?;
                 outs.push((out, rows));
             }
@@ -1368,13 +1462,15 @@ impl MoeEngine {
             // the whole merged union fits the layer cache: stage it up
             // front PINNED, speculation overlaps the expert compute
             for &id in &union {
-                self.stage_for_mixed(id, &needed, &sels, tstats, cstats, true)?;
+                self.stage_for_mixed(id, &needed, &sels, &sids, csess.id, tstats, cstats, true)?;
             }
             if matches!(self.policy, OffloadPolicy::Full { .. }) {
+                self.span_sess = sids[0];
                 self.speculate_batch(l, xs, tstats)?;
             }
             for &id in &union {
                 let rows = stacked_rows(&cweights, &sels, id.expert as usize);
+                self.span_sess = kernel_owner(&rows, &sids, csess.id);
                 let out = self.run_expert_mixed(id, &ch, &hs, &rows)?;
                 outs.push((out, rows));
             }
@@ -1385,13 +1481,15 @@ impl MoeEngine {
             // right after — the standalone prefill layer's interleave,
             // now shared with the decode rows
             for &id in &union {
-                self.stage_for_mixed(id, &needed, &sels, tstats, cstats, false)?;
+                self.stage_for_mixed(id, &needed, &sels, &sids, csess.id, tstats, cstats, false)?;
                 let rows = stacked_rows(&cweights, &sels, id.expert as usize);
+                self.span_sess = kernel_owner(&rows, &sids, csess.id);
                 let out = self.run_expert_mixed(id, &ch, &hs, &rows)?;
                 outs.push((out, rows));
                 self.cache.release_transient(id);
             }
             if matches!(self.policy, OffloadPolicy::Full { .. }) {
+                self.span_sess = sids[0];
                 self.speculate_batch(l, xs, tstats)?;
             }
         }
@@ -1459,11 +1557,14 @@ impl MoeEngine {
     /// (prefill-convention, clock-only) stats and every routed decode
     /// session records a shared consume; an expert only decode rows
     /// need is attributed like a plain batched staging.
+    #[allow(clippy::too_many_arguments)]
     fn stage_for_mixed(
         &mut self,
         id: ExpertId,
         needed: &[usize],
         sels: &[Vec<usize>],
+        sids: &[u64],
+        csid: u64,
         tstats: &mut [TokenStats],
         cstats: &mut TokenStats,
         pin: bool,
@@ -1476,6 +1577,10 @@ impl MoeEngine {
             sels.iter().position(|sel| sel.contains(&e))
         };
         {
+            self.span_sess = match dec_owner {
+                Some(j) => sids[j],
+                None => csid,
+            };
             let owner: &mut TokenStats = match dec_owner {
                 Some(j) => &mut tstats[j],
                 None => cstats,
@@ -1510,9 +1615,16 @@ impl MoeEngine {
             .iter()
             .filter(|r| matches!(r, MixedRow::Chunk(_)))
             .count();
-        self.timeline.compute(
+        let span = self.timeline.compute(
             self.cost.expert_compute_mixed_s(n_chunk, rows.len() - n_chunk),
             0.0,
+        );
+        self.tracer.record(
+            SpanKind::ExpertCompute,
+            span,
+            self.span_sess,
+            Some(id.layer as usize),
+            self.tick,
         );
         let (out, calls) = match rows {
             [MixedRow::Decode(j)] => (self.run_expert(id, &hs[*j])?, 1),
@@ -1555,7 +1667,10 @@ impl MoeEngine {
         l: usize,
         x: &Tensor,
     ) -> Result<(Tensor, Tensor, Vec<usize>, Vec<f32>)> {
-        self.timeline.compute(self.cost.attn_compute_s(), 0.0);
+        self.span_sess = sess.id;
+        let span = self.timeline.compute(self.cost.attn_compute_s(), 0.0);
+        self.tracer
+            .record(SpanKind::Attention, span, sess.id, Some(l), self.tick);
         let (x, kc, vc) = {
             let (k_ref, v_ref) = sess.kv.layer_or(l, &self.lits.zero_kv)?;
             self.rt.attn(x, &self.lits.layers[l], k_ref, v_ref, sess.pos)?
@@ -1563,7 +1678,9 @@ impl MoeEngine {
         sess.kv.set_layer(l, kc, vc)?;
 
         // router
-        self.timeline.compute(self.cost.gate_compute_s(), 0.0);
+        let span = self.timeline.compute(self.cost.gate_compute_s(), 0.0);
+        self.tracer
+            .record(SpanKind::Gate, span, sess.id, Some(l), self.tick);
         let (gate_logits, h) = self.rt.gate(&x, &self.lits.layers[l])?;
         let mut probs = gate_logits.row(0).to_vec();
         softmax(&mut probs);
@@ -1648,7 +1765,9 @@ impl MoeEngine {
             if interleaved {
                 self.ensure_expert(id, tstats)?;
             }
-            self.timeline.compute(self.cost.expert_compute_s(), 0.0);
+            let span = self.timeline.compute(self.cost.expert_compute_s(), 0.0);
+            self.tracer
+                .record(SpanKind::ExpertCompute, span, sess.id, Some(l), self.tick);
             let out = self.run_expert(id, &h)?;
             for (acc, v) in y.iter_mut().zip(&out.data) {
                 *acc += w * v;
@@ -1678,9 +1797,12 @@ impl MoeEngine {
             let id = ExpertId::new(l, e);
             let (t_s, t_bytes) = self.expert_stage_cost(id);
             let span = self.timeline.transfer(t_s, self.timeline.now());
+            self.tracer
+                .record(SpanKind::DemandLoad, span, self.span_sess, Some(l), self.tick);
             let before = self.timeline.now();
             self.timeline.wait_until(span.end);
             tstats.stall_s += self.timeline.now() - before;
+            tstats.transfer_s += t_s;
             tstats.bytes_transferred += t_bytes;
             let ticket = self.copy.submit(id);
             let (_, de) = self.copy.wait(ticket)?;
@@ -1763,6 +1885,9 @@ impl MoeEngine {
                 {
                     self.cache.drop_expert(id);
                     self.expert_lits.remove(&id);
+                    // the next miss on this expert is a re-tier reload,
+                    // not a routing-driven demand load — tag it so
+                    self.tier_reload_pending.insert(id);
                 }
             }
         }
@@ -1797,10 +1922,12 @@ impl MoeEngine {
             {
                 self.cache.drop_expert(id);
                 self.expert_lits.remove(&id);
+                self.tier_reload_pending.insert(id);
             }
         }
         match self.cache.on_demand_use(id) {
             CacheEvent::Hit(_) => {
+                self.tier_reload_pending.remove(&id);
                 tstats.cache_hits += 1;
                 if self.tier_policy.is_some()
                     && self.weights.experts.tier_of(id) == Tier::Hot
@@ -1809,14 +1936,24 @@ impl MoeEngine {
                 }
             }
             CacheEvent::SpecHit(_) => {
+                self.tier_reload_pending.remove(&id);
                 tstats.spec_hits += 1;
             }
             CacheEvent::Miss(_) => {
+                let reload = self.tier_reload_pending.remove(&id);
                 let (t_s, t_bytes) = self.expert_stage_cost(id);
                 let span = self.timeline.transfer(t_s, self.timeline.now());
+                self.tracer.record(
+                    if reload { SpanKind::TierReload } else { SpanKind::DemandLoad },
+                    span,
+                    self.span_sess,
+                    Some(id.layer as usize),
+                    self.tick,
+                );
                 let before = self.timeline.now();
                 self.timeline.wait_until(span.end);
                 tstats.stall_s += self.timeline.now() - before;
+                tstats.transfer_s += t_s;
                 tstats.bytes_transferred += t_bytes;
                 tstats.misses += 1;
                 let ticket = self.copy.submit(id);
@@ -1869,7 +2006,9 @@ impl MoeEngine {
             return Ok(());
         }
         // the extra gate evaluation costs GPU time
-        self.timeline.compute(self.cost.gate_compute_s(), 0.0);
+        let span = self.timeline.compute(self.cost.gate_compute_s(), 0.0);
+        self.tracer
+            .record(SpanKind::Gate, span, self.span_sess, Some(l + 1), self.tick);
         let (spec_logits, _) = self.rt.gate(x, &self.lits.layers[l + 1])?;
         let mut probs = spec_logits.row(0).to_vec();
         softmax(&mut probs);
@@ -1906,6 +2045,16 @@ impl MoeEngine {
             }
             let (t_s, t_bytes) = self.expert_stage_cost(id);
             let span = self.timeline.transfer(t_s, self.timeline.now());
+            // a speculative issue supersedes any pending re-tier reload
+            self.tier_reload_pending.remove(&id);
+            self.tracer.record(
+                SpanKind::SpecPrefetch,
+                span,
+                self.span_sess,
+                Some(layer),
+                self.tick,
+            );
+            tstats.transfer_s += t_s;
             tstats.bytes_transferred += t_bytes;
             let ticket = self.copy.submit(id);
             self.in_flight.insert(id, InFlight { ticket, ready_at: span.end });
@@ -1936,7 +2085,9 @@ impl MoeEngine {
         let e_count = self.weights.cfg.n_experts;
         let mut agg = vec![0.0f32; e_count];
         for x in xs {
-            self.timeline.compute(self.cost.gate_compute_s(), 0.0);
+            let span = self.timeline.compute(self.cost.gate_compute_s(), 0.0);
+            self.tracer
+                .record(SpanKind::Gate, span, self.span_sess, Some(l + 1), self.tick);
             let (spec_logits, _) = self.rt.gate(x, &self.lits.layers[l + 1])?;
             let mut probs = spec_logits.row(0).to_vec();
             softmax(&mut probs);
@@ -1967,6 +2118,8 @@ impl MoeEngine {
         // are evicted first): a refused admission holds no blocks and the
         // request can be requeued untouched
         self.ensure_kv(sess, sess.pos + tokens.len())?;
+        self.tick += 1;
+        self.span_sess = sess.id;
         let sim_start = self.timeline.now();
         let c = self.weights.cfg.prefill_chunk;
         let d = self.weights.cfg.d_model;
@@ -1987,7 +2140,9 @@ impl MoeEngine {
                 x = self.prefill_layer(sess, l, x, n_valid)?;
             }
 
-            self.timeline.compute(self.cost.lm_head_compute_s(), 0.0);
+            let span = self.timeline.compute(self.cost.lm_head_compute_s(), 0.0);
+            self.tracer
+                .record(SpanKind::LmHead, span, sess.id, None, self.tick);
             let logits = self.rt.lm_head(&x, &self.lits.final_ln, &self.lits.lm_head)?;
             for t in 0..n_valid {
                 all_logits.extend_from_slice(logits.row(t));
@@ -2010,14 +2165,18 @@ impl MoeEngine {
         let c = x.shape[0];
         let d = self.weights.cfg.d_model;
 
-        self.timeline.compute(self.cost.attn_compute_s(), 0.0);
+        let span = self.timeline.compute(self.cost.attn_compute_s(), 0.0);
+        self.tracer
+            .record(SpanKind::Attention, span, sess.id, Some(l), self.tick);
         let (x, kc, vc) = {
             let (k_ref, v_ref) = sess.kv.layer_or(l, &self.lits.zero_kv)?;
             self.rt.prefill_attn(&x, &self.lits.layers[l], k_ref, v_ref, sess.pos)?
         };
         sess.kv.set_layer(l, kc, vc)?;
 
-        self.timeline.compute(self.cost.gate_compute_s(), 0.0);
+        let span = self.timeline.compute(self.cost.gate_compute_s(), 0.0);
+        self.tracer
+            .record(SpanKind::Gate, span, sess.id, Some(l), self.tick);
         let (gate_logits, h) = self.rt.gate(&x, &self.lits.layers[l])?;
 
         // per-token routing; prefill loads each needed expert once
@@ -2053,7 +2212,9 @@ impl MoeEngine {
         for &e in &needed {
             let id = ExpertId::new(l, e);
             self.ensure_expert(id, &mut tstats)?;
-            self.timeline.compute(self.cost.expert_compute_s(), 0.0);
+            let span = self.timeline.compute(self.cost.expert_compute_s(), 0.0);
+            self.tracer
+                .record(SpanKind::ExpertCompute, span, sess.id, Some(l), self.tick);
             let out = self.run_expert(id, &h)?;
             for t in 0..n_valid {
                 let w = weights[t * e_count + e];
@@ -2065,6 +2226,10 @@ impl MoeEngine {
             }
             self.cache.release_transient(id);
         }
+        // roll the layer's expert staging costs into the request-level
+        // prefill breakdown (the local tstats is otherwise discarded)
+        sess.run.prefill_stall_s += tstats.stall_s;
+        sess.run.prefill_transfer_s += tstats.transfer_s;
 
         let mut out = x;
         for (xi, yi) in out.data.iter_mut().zip(&y) {

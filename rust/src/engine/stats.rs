@@ -26,6 +26,12 @@ pub struct TokenStats {
     pub bytes_transferred: u64,
     /// Virtual seconds the decode front spent stalled on transfers.
     pub stall_s: f64,
+    /// Virtual LINK seconds of expert transfers issued on this token's
+    /// behalf (demand loads, re-tier reloads, and speculative prefetches
+    /// it triggered). Unlike `stall_s` this counts the transfer's full
+    /// duration whether or not compute hid it — `transfer_s - stall_s`
+    /// is the overlap speculative loading won.
+    pub transfer_s: f64,
 }
 
 #[derive(Debug, Clone, Default)]
@@ -38,6 +44,12 @@ pub struct RunStats {
     pub prefill_tokens: usize,
     /// Prefill positions skipped by seeding from the prefix cache.
     pub prefix_reused_tokens: usize,
+    /// Virtual seconds the prefill front spent stalled on expert
+    /// transfers (the stalled share of `prefill_sim_s`).
+    pub prefill_stall_s: f64,
+    /// Virtual link seconds of expert transfers issued during prefill
+    /// (full durations, hidden or not — see [`TokenStats::transfer_s`]).
+    pub prefill_transfer_s: f64,
 }
 
 impl RunStats {

@@ -87,6 +87,19 @@
 //!   reproduces the paper's batch-1 serving exactly; width ≥ 2 lets
 //!   concurrent requests share hot experts, which is where offloading
 //!   wins under load.
+//! * **Span tracing** ([`trace`], opt-in via
+//!   [`config::ServingConfig::trace`]) — every timeline reservation the
+//!   engine makes is tagged with a typed [`trace::SpanKind`] (attention /
+//!   gate / expert-compute / LM-head compute; expert transfers attributed
+//!   as demand-load vs speculative-prefetch vs KV-resume vs prefix-seed
+//!   vs tier-reload) plus session, layer and tick ids, into a bounded
+//!   ring buffer exportable as Chrome trace-event JSON (Perfetto-
+//!   loadable). The coordinator aggregates per-request time breakdowns
+//!   (`queue_s`, `prefill_compute_s`, `decode_compute_s`, `transfer_s`,
+//!   `transfer_hidden_s`, `stall_s`) into the `done` event and
+//!   [`telemetry::Metrics`] histograms, and the TCP server answers a
+//!   `metrics` line with the rendered registry. Off by default —
+//!   tracing-off output is byte-identical.
 
 pub mod cache;
 pub mod clock;
@@ -105,6 +118,7 @@ pub mod runtime;
 pub mod sched;
 pub mod telemetry;
 pub mod tensor;
+pub mod trace;
 pub mod util;
 pub mod coordinator;
 

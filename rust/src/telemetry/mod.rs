@@ -15,11 +15,27 @@ pub struct Histogram {
 }
 
 impl Histogram {
-    pub fn latency() -> Self {
-        // 100us .. 100s, log-spaced
-        let bounds: Vec<f64> = (0..13).map(|i| 1e-4 * 3.0f64.powi(i)).collect();
+    /// A histogram with caller-chosen bucket boundaries (ascending,
+    /// seconds). There is always one overflow bucket past the last bound.
+    pub fn with_bounds(bounds: Vec<f64>) -> Self {
+        debug_assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bounds must ascend");
         let len = bounds.len() + 1;
         Histogram { bounds, counts: vec![0; len], sum: 0.0, n: 0, max: 0.0 }
+    }
+
+    pub fn latency() -> Self {
+        // 100us .. 100s, log-spaced
+        Self::with_bounds((0..13).map(|i| 1e-4 * 3.0f64.powi(i)).collect())
+    }
+
+    /// Bounds for virtual-timeline durations. The tiny testbed's per-token
+    /// sim times sit well under the 100µs floor of [`Self::latency`] —
+    /// every observation would collapse into bucket 0 and quantiles would
+    /// all read 100µs. This range (10ns .. ~3.8s, log-spaced) resolves
+    /// sub-microsecond compute spans and second-scale Mixtral-geometry
+    /// transfers alike.
+    pub fn sim_time() -> Self {
+        Self::with_bounds((0..20).map(|i| 1e-8 * 3.0f64.powi(i)).collect())
     }
 
     pub fn observe(&mut self, v: f64) {
@@ -174,12 +190,34 @@ impl Metrics {
         self.gauges.lock().unwrap().keys().cloned().collect()
     }
 
+    /// Every histogram name currently recorded — the breakdown parity
+    /// test enumerates these to lock the per-request breakdown
+    /// histograms and the server's `done` schema together (see
+    /// `coordinator::server::BREAKDOWN_DONE_FIELDS`).
+    pub fn histogram_names(&self) -> Vec<String> {
+        self.histograms.lock().unwrap().keys().cloned().collect()
+    }
+
     pub fn observe(&self, name: &str, v: f64) {
         self.histograms
             .lock()
             .unwrap()
             .entry(name.to_string())
             .or_insert_with(Histogram::latency)
+            .observe(v);
+    }
+
+    /// Observe into a histogram created (on first use) by `make` instead
+    /// of the default [`Histogram::latency`] bounds — e.g.
+    /// `Histogram::sim_time` for virtual-timeline durations. The factory
+    /// only decides the bounds of a *new* histogram; an existing one
+    /// keeps its buckets.
+    pub fn observe_with(&self, name: &str, v: f64, make: fn() -> Histogram) {
+        self.histograms
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(make)
             .observe(v);
     }
 
@@ -190,6 +228,26 @@ impl Metrics {
             .get(name)
             .map(|h| h.mean())
             .unwrap_or(0.0)
+    }
+
+    /// Approximate quantile of a named histogram (0.0 if absent) — the
+    /// scrape-side counterpart of [`Histogram::quantile`].
+    pub fn histogram_quantile(&self, name: &str, q: f64) -> f64 {
+        self.histograms
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|h| h.quantile(q))
+            .unwrap_or(0.0)
+    }
+
+    pub fn histogram_count(&self, name: &str) -> u64 {
+        self.histograms
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|h| h.count())
+            .unwrap_or(0)
     }
 
     pub fn render(&self) -> String {
@@ -272,6 +330,54 @@ mod tests {
         assert!(h.quantile(0.5) <= h.quantile(0.99));
         assert!(h.mean() > 0.0);
         assert_eq!(h.count(), 1000);
+    }
+
+    #[test]
+    fn custom_bounds_resolve_sub_100us_times() {
+        // the latency() bounds start at 100µs: every smaller observation
+        // lands in bucket 0 and quantiles flatten to the first bound
+        let mut coarse = Histogram::latency();
+        let mut fine = Histogram::sim_time();
+        for i in 1..=100 {
+            let v = i as f64 * 1e-7; // 0.1µs .. 10µs
+            coarse.observe(v);
+            fine.observe(v);
+        }
+        assert_eq!(coarse.quantile(0.5), coarse.quantile(0.99), "all in bucket 0");
+        assert!(
+            fine.quantile(0.99) > fine.quantile(0.5),
+            "sim bounds must separate the tail: p50={} p99={}",
+            fine.quantile(0.5),
+            fine.quantile(0.99)
+        );
+        assert!(fine.quantile(0.5) < 1e-4);
+    }
+
+    #[test]
+    fn metrics_histogram_quantile() {
+        let m = Metrics::new();
+        assert_eq!(m.histogram_quantile("missing", 0.5), 0.0);
+        for i in 1..=1000 {
+            m.observe("lat", i as f64 * 1e-3);
+        }
+        let p50 = m.histogram_quantile("lat", 0.5);
+        let p99 = m.histogram_quantile("lat", 0.99);
+        assert!(p50 > 0.0 && p50 <= p99, "p50={p50} p99={p99}");
+        assert!(m.histogram_quantile("lat", 1.0) >= p99);
+        assert_eq!(m.histogram_count("lat"), 1000);
+        assert_eq!(m.histogram_count("missing"), 0);
+    }
+
+    #[test]
+    fn observe_with_uses_factory_bounds_once() {
+        let m = Metrics::new();
+        m.observe_with("sim", 5e-7, Histogram::sim_time);
+        m.observe_with("sim", 2e-6, Histogram::sim_time);
+        // fine bounds resolve the two observations into different buckets
+        assert!(m.histogram_quantile("sim", 0.25) < m.histogram_quantile("sim", 0.99));
+        // an existing histogram keeps its buckets even via plain observe
+        m.observe("sim", 3e-6);
+        assert_eq!(m.histogram_count("sim"), 3);
     }
 
     #[test]

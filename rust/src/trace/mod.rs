@@ -1,0 +1,409 @@
+//! Virtual-timeline span tracing: typed, attributed observability over
+//! [`crate::clock::Timeline`] reservations.
+//!
+//! The timeline knows *when* each resource was busy; this module records
+//! *why*. Every compute/transfer charge the engine makes can be tagged
+//! with a [`SpanKind`] (what the time bought), the owning session, the
+//! MoE layer, and the scheduler tick, and pushed into a bounded ring
+//! buffer ([`Tracer`]). Two consumers exist:
+//!
+//! - [`Tracer::chrome_trace`] exports the ring as Chrome trace-event
+//!   JSON (the `{"traceEvents": [...]}` schema): one *pid* per virtual
+//!   resource stream (GPU compute, PCIe link), one *tid* per session, so
+//!   the file loads directly in Perfetto / `chrome://tracing` and shows
+//!   transfers overlapping compute exactly as the discrete-event model
+//!   scheduled them.
+//! - [`Tracer::kind_totals`] / [`Tracer::breakdown_table`] aggregate
+//!   busy seconds per kind for `table2_throughput`-style terminal
+//!   reports.
+//!
+//! Tracing is opt-in via `ServingConfig::trace`. A disabled tracer
+//! ([`Tracer::disabled`]) never allocates and every `record` call is a
+//! branch on a bool — the engine's timing and output are byte-identical
+//! with tracing on or off; only observability differs.
+
+use std::collections::BTreeMap;
+use std::collections::VecDeque;
+
+use crate::clock::{Resource, Span};
+use crate::telemetry::Table;
+use crate::util::json::Json;
+
+/// What a timeline reservation bought. Compute kinds run on the GPU
+/// stream; transfer kinds occupy the PCIe link. Expert transfers are
+/// attributed by *cause*: a demand load blocks the decode front, a
+/// speculative prefetch rides under the previous layers' compute
+/// (paper §3.2), a KV resume re-stages swapped-out state, a prefix seed
+/// copies cached prompt KV, and a tier reload re-fetches an expert whose
+/// resident copy was dropped by an adaptive re-tier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SpanKind {
+    /// Token embedding + per-step launch overhead (GPU).
+    Embed,
+    /// Attention block compute for one layer (GPU).
+    Attention,
+    /// Router/gate compute, including speculative re-gating (GPU).
+    Gate,
+    /// Expert FFN compute — single, stacked, or mixed kernels (GPU).
+    ExpertCompute,
+    /// LM head projection (GPU).
+    LmHead,
+    /// Expert fetched because the current layer needs it *now* (link).
+    DemandLoad,
+    /// Expert prefetched from a speculative routing guess (link).
+    SpecPrefetch,
+    /// KV pages swapped to/from host for preemption/resume (link).
+    KvResume,
+    /// Cached prefix KV copied into a fresh session (link).
+    PrefixSeed,
+    /// Expert re-fetched after an adaptive re-tier dropped it (link).
+    TierReload,
+}
+
+impl SpanKind {
+    /// Every kind, compute first — iteration order for reports and the
+    /// CI completeness check.
+    pub const ALL: [SpanKind; 10] = [
+        SpanKind::Embed,
+        SpanKind::Attention,
+        SpanKind::Gate,
+        SpanKind::ExpertCompute,
+        SpanKind::LmHead,
+        SpanKind::DemandLoad,
+        SpanKind::SpecPrefetch,
+        SpanKind::KvResume,
+        SpanKind::PrefixSeed,
+        SpanKind::TierReload,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            SpanKind::Embed => "embed",
+            SpanKind::Attention => "attention",
+            SpanKind::Gate => "gate",
+            SpanKind::ExpertCompute => "expert_compute",
+            SpanKind::LmHead => "lm_head",
+            SpanKind::DemandLoad => "demand_load",
+            SpanKind::SpecPrefetch => "spec_prefetch",
+            SpanKind::KvResume => "kv_resume",
+            SpanKind::PrefixSeed => "prefix_seed",
+            SpanKind::TierReload => "tier_reload",
+        }
+    }
+
+    /// Which virtual resource stream this kind occupies.
+    pub fn resource(&self) -> Resource {
+        match self {
+            SpanKind::Embed
+            | SpanKind::Attention
+            | SpanKind::Gate
+            | SpanKind::ExpertCompute
+            | SpanKind::LmHead => Resource::Gpu,
+            SpanKind::DemandLoad
+            | SpanKind::SpecPrefetch
+            | SpanKind::KvResume
+            | SpanKind::PrefixSeed
+            | SpanKind::TierReload => Resource::Link,
+        }
+    }
+
+    pub fn is_transfer(&self) -> bool {
+        self.resource() == Resource::Link
+    }
+}
+
+/// One attributed timeline reservation. Times are virtual seconds.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceSpan {
+    pub kind: SpanKind,
+    pub start_s: f64,
+    pub end_s: f64,
+    /// Owning session id (0 for engine-internal work with no session,
+    /// e.g. teacher-forced harness runs before a session exists).
+    pub session: u64,
+    /// MoE layer index, when the work belongs to one layer.
+    pub layer: Option<usize>,
+    /// Scheduler tick (engine-lifetime counter) the span was issued in.
+    pub tick: u64,
+}
+
+impl TraceSpan {
+    pub fn dur_s(&self) -> f64 {
+        self.end_s - self.start_s
+    }
+}
+
+/// Bounded in-memory span ring. When full, the oldest spans are dropped
+/// (and counted) — the ring always holds the most recent window, which
+/// is what a trace viewer wants.
+#[derive(Debug)]
+pub struct Tracer {
+    enabled: bool,
+    capacity: usize,
+    spans: VecDeque<TraceSpan>,
+    dropped: u64,
+}
+
+impl Tracer {
+    /// The no-op tracer: `record` is a single branch, nothing allocates.
+    pub fn disabled() -> Self {
+        Tracer { enabled: false, capacity: 0, spans: VecDeque::new(), dropped: 0 }
+    }
+
+    pub fn enabled(capacity: usize) -> Self {
+        Tracer {
+            enabled: true,
+            capacity: capacity.max(1),
+            spans: VecDeque::new(),
+            dropped: 0,
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Record a reservation the engine just made on the timeline.
+    #[inline]
+    pub fn record(
+        &mut self,
+        kind: SpanKind,
+        span: Span,
+        session: u64,
+        layer: Option<usize>,
+        tick: u64,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        // zero-duration reservations (e.g. an empty transfer) carry no
+        // information and would only clutter the viewer
+        if span.end <= span.start {
+            return;
+        }
+        if self.spans.len() == self.capacity {
+            self.spans.pop_front();
+            self.dropped += 1;
+        }
+        self.spans.push_back(TraceSpan {
+            kind,
+            start_s: span.start,
+            end_s: span.end,
+            session,
+            layer,
+            tick,
+        });
+    }
+
+    pub fn len(&self) -> usize {
+        self.spans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+
+    /// Spans evicted by the ring bound (oldest-first).
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    pub fn spans(&self) -> impl Iterator<Item = &TraceSpan> {
+        self.spans.iter()
+    }
+
+    /// Busy virtual seconds per kind, in [`SpanKind::ALL`] order (kinds
+    /// with no spans report 0.0).
+    pub fn kind_totals(&self) -> Vec<(SpanKind, f64)> {
+        let mut acc: BTreeMap<SpanKind, f64> = BTreeMap::new();
+        for s in &self.spans {
+            *acc.entry(s.kind).or_insert(0.0) += s.dur_s();
+        }
+        SpanKind::ALL
+            .iter()
+            .map(|k| (*k, acc.get(k).copied().unwrap_or(0.0)))
+            .collect()
+    }
+
+    /// `table2_throughput`-style per-kind breakdown: spans, busy
+    /// seconds, and share of the stream's total busy time.
+    pub fn breakdown_table(&self) -> Table {
+        let mut n: BTreeMap<SpanKind, u64> = BTreeMap::new();
+        for s in &self.spans {
+            *n.entry(s.kind).or_insert(0) += 1;
+        }
+        let totals = self.kind_totals();
+        let gpu_total: f64 =
+            totals.iter().filter(|(k, _)| !k.is_transfer()).map(|(_, v)| v).sum();
+        let link_total: f64 =
+            totals.iter().filter(|(k, _)| k.is_transfer()).map(|(_, v)| v).sum();
+        let mut t = Table::new(&["kind", "stream", "spans", "busy_s", "share"]);
+        for (kind, busy) in totals {
+            let (stream, stream_total) = if kind.is_transfer() {
+                ("link", link_total)
+            } else {
+                ("gpu", gpu_total)
+            };
+            let share = if stream_total > 0.0 { busy / stream_total } else { 0.0 };
+            t.row(vec![
+                kind.label().to_string(),
+                stream.to_string(),
+                n.get(&kind).copied().unwrap_or(0).to_string(),
+                format!("{busy:.6}"),
+                format!("{:.1}%", share * 100.0),
+            ]);
+        }
+        t
+    }
+
+    /// Export the ring as Chrome trace-event JSON (`{"traceEvents":
+    /// [...]}`), loadable in Perfetto or `chrome://tracing`.
+    ///
+    /// Layout: pid 1 is the virtual GPU compute stream, pid 2 the
+    /// virtual PCIe link; tid is the owning session, so each session's
+    /// work reads as one horizontal track per resource. Events are
+    /// `ph:"X"` complete events with `ts`/`dur` in microseconds of
+    /// virtual time; `args` carries the layer and tick.
+    pub fn chrome_trace(&self) -> Json {
+        const PID_GPU: usize = 1;
+        const PID_LINK: usize = 2;
+        let mut events: Vec<Json> = vec![
+            Json::obj(vec![
+                ("ph", "M".into()),
+                ("pid", PID_GPU.into()),
+                ("name", "process_name".into()),
+                ("args", Json::obj(vec![("name", "GPU compute (virtual)".into())])),
+            ]),
+            Json::obj(vec![
+                ("ph", "M".into()),
+                ("pid", PID_LINK.into()),
+                ("name", "process_name".into()),
+                ("args", Json::obj(vec![("name", "PCIe link (virtual)".into())])),
+            ]),
+        ];
+        for s in &self.spans {
+            let pid = if s.kind.is_transfer() { PID_LINK } else { PID_GPU };
+            let mut args = vec![("tick", Json::from(s.tick as i64))];
+            if let Some(layer) = s.layer {
+                args.push(("layer", layer.into()));
+            }
+            events.push(Json::obj(vec![
+                ("ph", "X".into()),
+                ("name", s.kind.label().into()),
+                ("cat", if s.kind.is_transfer() { "transfer" } else { "compute" }.into()),
+                ("pid", pid.into()),
+                ("tid", Json::from(s.session as i64)),
+                ("ts", (s.start_s * 1e6).into()),
+                ("dur", (s.dur_s() * 1e6).into()),
+                ("args", Json::obj(args)),
+            ]));
+        }
+        Json::obj(vec![
+            ("traceEvents", Json::Arr(events)),
+            ("displayTimeUnit", "ms".into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(start: f64, end: f64) -> Span {
+        Span { start, end }
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let mut t = Tracer::disabled();
+        t.record(SpanKind::Attention, span(0.0, 1.0), 1, Some(0), 0);
+        assert!(t.is_empty());
+        assert!(!t.is_enabled());
+        assert_eq!(t.dropped(), 0);
+    }
+
+    #[test]
+    fn ring_drops_oldest_when_full() {
+        let mut t = Tracer::enabled(2);
+        t.record(SpanKind::Embed, span(0.0, 1.0), 1, None, 0);
+        t.record(SpanKind::Gate, span(1.0, 2.0), 1, Some(0), 0);
+        t.record(SpanKind::LmHead, span(2.0, 3.0), 1, None, 0);
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.dropped(), 1);
+        let kinds: Vec<SpanKind> = t.spans().map(|s| s.kind).collect();
+        assert_eq!(kinds, vec![SpanKind::Gate, SpanKind::LmHead]);
+    }
+
+    #[test]
+    fn zero_duration_spans_are_skipped() {
+        let mut t = Tracer::enabled(8);
+        t.record(SpanKind::DemandLoad, span(1.0, 1.0), 1, Some(0), 0);
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn kind_totals_cover_all_kinds() {
+        let mut t = Tracer::enabled(8);
+        t.record(SpanKind::Attention, span(0.0, 2.0), 1, Some(0), 0);
+        t.record(SpanKind::Attention, span(2.0, 3.0), 1, Some(1), 0);
+        t.record(SpanKind::DemandLoad, span(0.0, 4.0), 1, Some(0), 0);
+        let totals = t.kind_totals();
+        assert_eq!(totals.len(), SpanKind::ALL.len());
+        let get = |k: SpanKind| totals.iter().find(|(x, _)| *x == k).unwrap().1;
+        assert!((get(SpanKind::Attention) - 3.0).abs() < 1e-12);
+        assert!((get(SpanKind::DemandLoad) - 4.0).abs() < 1e-12);
+        assert_eq!(get(SpanKind::SpecPrefetch), 0.0);
+    }
+
+    #[test]
+    fn chrome_trace_roundtrips_and_separates_streams() {
+        let mut t = Tracer::enabled(8);
+        t.record(SpanKind::ExpertCompute, span(0.0, 1.5), 7, Some(3), 2);
+        t.record(SpanKind::SpecPrefetch, span(0.5, 1.0), 7, Some(4), 2);
+        let text = t.chrome_trace().to_string();
+        let parsed = Json::parse(&text).expect("chrome trace must be valid JSON");
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        // 2 metadata events + 2 spans
+        assert_eq!(events.len(), 4);
+        let compute = events
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("expert_compute"))
+            .unwrap();
+        assert_eq!(compute.get("pid").unwrap().as_i64(), Some(1));
+        assert_eq!(compute.get("tid").unwrap().as_i64(), Some(7));
+        assert_eq!(compute.get("dur").unwrap().as_f64(), Some(1.5e6));
+        let prefetch = events
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("spec_prefetch"))
+            .unwrap();
+        assert_eq!(prefetch.get("pid").unwrap().as_i64(), Some(2));
+        assert_eq!(
+            prefetch.get("args").unwrap().get("layer").unwrap().as_usize(),
+            Some(4)
+        );
+    }
+
+    #[test]
+    fn breakdown_table_renders_every_kind() {
+        let mut t = Tracer::enabled(8);
+        t.record(SpanKind::Attention, span(0.0, 1.0), 1, Some(0), 0);
+        let r = t.breakdown_table().render();
+        for kind in SpanKind::ALL {
+            assert!(r.contains(kind.label()), "missing {}", kind.label());
+        }
+    }
+
+    #[test]
+    fn resources_match_kind_class() {
+        for kind in SpanKind::ALL {
+            match kind {
+                SpanKind::DemandLoad
+                | SpanKind::SpecPrefetch
+                | SpanKind::KvResume
+                | SpanKind::PrefixSeed
+                | SpanKind::TierReload => assert!(kind.is_transfer()),
+                _ => assert!(!kind.is_transfer()),
+            }
+        }
+    }
+}

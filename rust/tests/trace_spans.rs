@@ -1,0 +1,261 @@
+//! Integration: virtual-timeline span tracing against the real engine.
+//! Requires `make artifacts` (skips cleanly otherwise).
+//!
+//! Tracing is observation-only, so the contracts are equivalences and
+//! accounting identities:
+//! * tracing on produces bit-identical logits and an identical virtual
+//!   timeline to tracing off, at width 1 and width 4 (batched);
+//! * the attributed GPU spans plus the recorded stall time tile a
+//!   request's virtual wall time exactly — no unattributed gaps, no
+//!   double-counted overlap;
+//! * the Chrome trace export round-trips through the JSON parser with
+//!   demand loads distinguishable from speculative prefetches;
+//! * the coordinator's done event carries the per-request breakdown
+//!   exactly when tracing is on.
+
+use std::path::{Path, PathBuf};
+
+use moe_offload::config::{
+    HardwareProfile, OffloadPolicy, QuantScheme, ServingConfig, SimScale,
+};
+use moe_offload::coordinator::{collect_events, Coordinator, Event, Request};
+use moe_offload::engine::{MoeEngine, Session};
+use moe_offload::harness;
+use moe_offload::util::json::Json;
+use moe_offload::Result;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() && dir.join("weights.npz").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn serving(sessions: usize, trace: bool) -> ServingConfig {
+    ServingConfig {
+        policy: OffloadPolicy::Full { cache_k: 2, spec_n: 2 },
+        expert_quant: QuantScheme::Hqq { bits: 3 },
+        attn_quant: QuantScheme::Hqq { bits: 4 },
+        sim_scale: SimScale::Tiny,
+        max_concurrent_sessions: sessions,
+        trace,
+        ..Default::default()
+    }
+}
+
+fn make_engine(dir: &Path, sessions: usize, trace: bool) -> Result<MoeEngine> {
+    harness::build_engine_with_serving(dir, &serving(sessions, trace), HardwareProfile::rtx3060())
+}
+
+fn toks(s: &str) -> Vec<u32> {
+    s.bytes().map(|b| b as u32).collect()
+}
+
+fn row_bits(row: &[f32]) -> Vec<u32> {
+    row.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Prefill + decode a fixed stream on a fresh session; return every
+/// logits row's bit pattern, the final virtual time, and the session.
+fn drive_one(
+    engine: &mut MoeEngine,
+    prompt: &[u32],
+    stream: &[u32],
+) -> (Vec<Vec<u32>>, u64, Session) {
+    let mut sess = engine.new_session().unwrap();
+    let logits = engine.prefill(&mut sess, prompt).unwrap();
+    let mut out = vec![row_bits(logits.row(prompt.len() - 1))];
+    for &t in stream {
+        out.push(row_bits(&engine.decode_step(&mut sess, t).unwrap()));
+    }
+    (out, engine.timeline.now().to_bits(), sess)
+}
+
+#[test]
+fn tracing_is_byte_identical_at_width_1() {
+    let Some(dir) = artifacts_dir() else { return };
+    let prompt = toks("what is a mixture of experts model");
+    let stream = toks("tracing must not change it");
+
+    let mut off = make_engine(&dir, 1, false).unwrap();
+    let (off_bits, off_now, _off_sess) = drive_one(&mut off, &prompt, &stream);
+    assert!(off.tracer.is_empty(), "a disabled tracer must record nothing");
+
+    let mut on = make_engine(&dir, 1, true).unwrap();
+    let (on_bits, on_now, _on_sess) = drive_one(&mut on, &prompt, &stream);
+    assert!(!on.tracer.is_empty(), "an enabled tracer must record spans");
+
+    assert_eq!(off_bits, on_bits, "tracing changed logits bits");
+    assert_eq!(off_now, on_now, "tracing moved the virtual timeline");
+}
+
+#[test]
+fn tracing_is_byte_identical_at_width_4_batched() {
+    let Some(dir) = artifacts_dir() else { return };
+    let streams: Vec<Vec<u32>> = [
+        "four decode streams in layer",
+        "lockstep through the engine s",
+        "batched tick so the tracer se",
+        "es shared and per session wor",
+    ]
+    .iter()
+    .map(|s| toks(s))
+    .collect();
+    let ticks = streams[0].len();
+
+    let run = |trace: bool| -> (Vec<Vec<Vec<u32>>>, u64) {
+        let mut engine = make_engine(&dir, 4, trace).unwrap();
+        let mut sessions: Vec<Session> =
+            (0..4).map(|_| engine.new_session().unwrap()).collect();
+        let mut out = vec![Vec::new(); 4];
+        for t in 0..ticks {
+            let tick_toks: Vec<u32> = (0..4).map(|i| streams[i][t]).collect();
+            let mut refs: Vec<&mut Session> = sessions.iter_mut().collect();
+            for (i, slot) in engine
+                .decode_batch(&mut refs, &tick_toks)
+                .unwrap()
+                .into_iter()
+                .enumerate()
+            {
+                out[i].push(row_bits(&slot.unwrap()));
+            }
+        }
+        (out, engine.timeline.now().to_bits())
+    };
+
+    let (off_bits, off_now) = run(false);
+    let (on_bits, on_now) = run(true);
+    assert_eq!(off_bits, on_bits, "tracing changed batched logits bits");
+    assert_eq!(off_now, on_now, "tracing moved the batched virtual timeline");
+}
+
+#[test]
+fn attributed_spans_tile_request_virtual_time() {
+    let Some(dir) = artifacts_dir() else { return };
+    let prompt = toks("attribute every virtual second");
+    let stream = toks("to compute or to a stall");
+
+    let mut engine = make_engine(&dir, 1, true).unwrap();
+    let (_bits, _now, sess) = drive_one(&mut engine, &prompt, &stream);
+
+    // every span this single-session run produced belongs to the session
+    for s in engine.tracer.spans() {
+        assert_eq!(s.session, sess.id, "unattributed span: {:?}", s.kind);
+        assert!(s.end_s > s.start_s, "empty span survived: {:?}", s.kind);
+    }
+
+    // the decode/prefill front advances only by GPU compute and by
+    // stalling on transfers, so attributed GPU span time + recorded
+    // stall time must tile the request's virtual wall time exactly
+    let gpu_s: f64 = engine
+        .tracer
+        .spans()
+        .filter(|s| !s.kind.is_transfer())
+        .map(|s| s.dur_s())
+        .sum();
+    let stall_s: f64 = sess.run.prefill_stall_s
+        + sess.run.tokens.iter().map(|t| t.stall_s).sum::<f64>();
+    let wall_s: f64 =
+        sess.run.prefill_sim_s + sess.run.tokens.iter().map(|t| t.sim_s).sum::<f64>();
+    assert!(
+        (gpu_s + stall_s - wall_s).abs() <= 1e-9 * wall_s.max(1.0),
+        "attribution gap: gpu {gpu_s} + stall {stall_s} != wall {wall_s}"
+    );
+
+    // transfers overlap compute, so the full transfer time is at least
+    // the stalled share of it
+    let transfer_s: f64 = sess.run.prefill_transfer_s
+        + sess.run.tokens.iter().map(|t| t.transfer_s).sum::<f64>();
+    assert!(
+        transfer_s + 1e-12 >= stall_s,
+        "stall {stall_s} exceeds issued transfer time {transfer_s}"
+    );
+}
+
+#[test]
+fn chrome_trace_round_trips_and_distinguishes_transfer_causes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let prompt = toks("export the ring as a chrome trace");
+    let stream = toks("with spec prefetch and demand loads");
+
+    let mut engine = make_engine(&dir, 1, true).unwrap();
+    let _ = drive_one(&mut engine, &prompt, &stream);
+
+    let text = engine.tracer.chrome_trace().to_string();
+    let doc = Json::parse(&text).expect("exported trace must re-parse");
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("traceEvents array");
+
+    let mut names = Vec::new();
+    for ev in events {
+        let ph = ev.get("ph").and_then(Json::as_str).unwrap();
+        if ph != "X" {
+            continue;
+        }
+        let pid = ev.get("pid").and_then(Json::as_usize).unwrap();
+        assert!(pid == 1 || pid == 2, "unknown resource stream pid {pid}");
+        let cat = ev.get("cat").and_then(Json::as_str).unwrap();
+        assert_eq!(cat == "transfer", pid == 2, "cat/pid stream mismatch");
+        assert!(ev.get("dur").and_then(Json::as_f64).unwrap() > 0.0);
+        names.push(ev.get("name").and_then(Json::as_str).unwrap().to_string());
+    }
+    // the whole point of cause attribution: a blocking demand load and a
+    // hidden speculative prefetch are different lanes, not one blob
+    assert!(names.iter().any(|n| n == "demand_load"), "no demand_load spans");
+    assert!(names.iter().any(|n| n == "spec_prefetch"), "no spec_prefetch spans");
+    assert!(names.iter().any(|n| n == "attention"), "no attention spans");
+}
+
+#[test]
+fn breakdown_rides_the_done_event_only_when_tracing() {
+    let Some(dir) = artifacts_dir() else { return };
+
+    let run = |trace: bool| -> Event {
+        let dir = dir.clone();
+        let coord = Coordinator::new(
+            move || {
+                harness::build_engine_with_serving(
+                    &dir,
+                    &serving(2, trace),
+                    HardwareProfile::rtx3060(),
+                )
+            },
+            7,
+        );
+        let mut req = Request::new("trace this request end to end");
+        req.chat = false;
+        req.max_tokens = 8;
+        let events = collect_events(coord.submit(req));
+        events
+            .into_iter()
+            .find(|e| matches!(e, Event::Done { .. } | Event::Error { .. }))
+            .expect("request must finish")
+    };
+
+    match run(false) {
+        Event::Done { breakdown, .. } => {
+            assert!(breakdown.is_none(), "untraced done event grew a breakdown");
+        }
+        other => panic!("expected done, got {other:?}"),
+    }
+
+    match run(true) {
+        Event::Done { breakdown, queue_wait_s, .. } => {
+            let b = breakdown.expect("traced done event must carry a breakdown");
+            assert!((b.queue_s - queue_wait_s).abs() < 1e-12);
+            assert!(b.prefill_compute_s > 0.0, "prefill compute must be attributed");
+            assert!(b.decode_compute_s > 0.0, "decode compute must be attributed");
+            assert!(b.stall_s >= 0.0 && b.transfer_s >= 0.0);
+            assert!(
+                b.transfer_hidden_s <= b.transfer_s + 1e-12,
+                "hidden transfer time cannot exceed issued transfer time"
+            );
+        }
+        other => panic!("expected done, got {other:?}"),
+    }
+}
