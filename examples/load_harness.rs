@@ -1,0 +1,69 @@
+//! Trace-replay load harness: replay the three built-in workload
+//! profiles (bursty Poisson, multi-turn chat with shared prefixes,
+//! long-context RAG) against the serving coordinator, report per-profile
+//! TTFT/TPOT percentile SLO attainment plus the span ring's bottleneck
+//! attribution and what-if speedup projections, and write the whole
+//! report as `BENCH_8.json` at the repo root.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example load_harness
+//! MOE_BENCH_SMOKE=1 cargo run --release --example load_harness  # tiny run
+//! ```
+
+use moe_offload::config::HardwareProfile;
+use moe_offload::harness;
+use moe_offload::load;
+use moe_offload::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let dir = match harness::artifacts_dir() {
+        Ok(d) => d,
+        Err(e) => {
+            // skip cleanly (and leave BENCH_8.json untouched) so the
+            // example is runnable in a checkout without built artifacts
+            println!("SKIP: {e}");
+            return Ok(());
+        }
+    };
+    let smoke = std::env::var("MOE_BENCH_SMOKE").is_ok();
+
+    let profiles = [load::bursty(smoke), load::chat(smoke), load::rag(smoke)];
+    let mut rows = Vec::new();
+    for profile in &profiles {
+        println!(
+            "replaying {} ({} requests, width {}, ~{:.0} req/s)...",
+            profile.name, profile.requests, profile.width, profile.arrival_rate_per_s
+        );
+        let report = load::run_profile(&dir, profile, HardwareProfile::rtx3060())?;
+        println!("  {}", report.summary());
+        if let Some(whatif) = report.analysis.get("whatif").and_then(Json::as_arr) {
+            for row in whatif {
+                if let (Some(s), Some(x)) = (
+                    row.get("scenario").and_then(Json::as_str),
+                    row.get("speedup").and_then(Json::as_f64),
+                ) {
+                    println!("  what-if {s}: {x:.3}x");
+                }
+            }
+        }
+        anyhow::ensure!(
+            report.requests_failed == 0,
+            "{}: {} requests failed",
+            profile.name,
+            report.requests_failed
+        );
+        rows.push(report.to_json());
+    }
+
+    let doc = Json::obj(vec![
+        ("bench", "load_harness".into()),
+        ("schema", 1i64.into()),
+        ("status", "measured".into()),
+        ("smoke", smoke.into()),
+        ("profiles", Json::arr(rows)),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_8.json");
+    std::fs::write(path, format!("{doc}\n"))?;
+    println!("wrote {path}");
+    Ok(())
+}

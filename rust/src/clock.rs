@@ -34,6 +34,18 @@ pub struct Span {
     pub end: f64,
 }
 
+impl Span {
+    pub fn dur(&self) -> f64 {
+        self.end - self.start
+    }
+
+    /// Seconds of this span falling inside `[lo, hi)` — the clipped
+    /// overlap the trace analysis sums into utilization windows.
+    pub fn overlap(&self, lo: f64, hi: f64) -> f64 {
+        (self.end.min(hi) - self.start.max(lo)).max(0.0)
+    }
+}
+
 impl Default for Timeline {
     fn default() -> Self {
         Self::new()
@@ -280,6 +292,17 @@ mod tests {
         assert!((t.gpu_busy - 5.0).abs() < 1e-12);
         assert!((t.link_busy - 2.0).abs() < 1e-12);
         assert!((t.link_utilization() - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn span_dur_and_overlap_clip() {
+        let s = Span { start: 1.0, end: 4.0 };
+        assert_eq!(s.dur(), 3.0);
+        assert_eq!(s.overlap(0.0, 10.0), 3.0); // fully inside
+        assert_eq!(s.overlap(2.0, 3.0), 1.0); // window inside span
+        assert_eq!(s.overlap(0.0, 2.0), 1.0); // clipped left
+        assert_eq!(s.overlap(3.5, 9.0), 0.5); // clipped right
+        assert_eq!(s.overlap(5.0, 9.0), 0.0); // disjoint
     }
 
     #[test]

@@ -74,6 +74,7 @@ use crate::engine::{MoeEngine, Session};
 use crate::error::{Error, Result};
 use crate::model::{ByteTokenizer, Sampler};
 use crate::telemetry::{Histogram, Metrics};
+use crate::util::json::Json;
 
 #[derive(Debug, Clone)]
 pub struct Request {
@@ -196,6 +197,10 @@ pub enum Event {
         /// Link bytes saved versus staging every transfer at the uniform
         /// base scheme, since engine start.
         link_bytes_saved: u64,
+        /// Spans the bounded trace ring dropped since engine start —
+        /// non-zero means every span-derived analysis is working from a
+        /// truncated record. Always 0 with tracing off.
+        trace_spans_dropped: u64,
         /// Per-request time breakdown — `Some` only when span tracing is
         /// on (`ServingConfig::trace`), so tracing-off serving output
         /// stays byte-identical.
@@ -226,6 +231,10 @@ impl ResponseStream {
 
 enum Work {
     Run(Request, Sender<Event>, Instant),
+    /// Trace-analysis request: the worker answers with the span ring's
+    /// critical-path/attribution/what-if report (see
+    /// [`crate::trace::analysis`]) on the provided channel.
+    Analyze(Sender<Json>),
     Shutdown,
 }
 
@@ -322,13 +331,17 @@ impl Coordinator {
                 Err(e) => {
                     // fail every queued request with the build error
                     while let Ok(work) = work_rx.recv() {
-                        if let Work::Run(req, tx, _) = work {
-                            let _ = tx.send(Event::Error {
-                                request_id: req.id,
-                                message: format!("engine init failed: {e}"),
-                            });
-                        } else {
-                            break;
+                        match work {
+                            Work::Run(req, tx, _) => {
+                                let _ = tx.send(Event::Error {
+                                    request_id: req.id,
+                                    message: format!("engine init failed: {e}"),
+                                });
+                            }
+                            // dropping the sender fails the analyze()
+                            // call explicitly instead of hanging it
+                            Work::Analyze(_) => {}
+                            Work::Shutdown => break,
                         }
                     }
                     r.store(false, Ordering::SeqCst);
@@ -355,6 +368,22 @@ impl Coordinator {
         self.metrics.inc("requests_enqueued", 1);
         let _ = self.work_tx.send(Work::Run(req, tx, Instant::now()));
         ResponseStream { request_id: id, events: rx }
+    }
+
+    /// Ask the worker for the span ring's analysis report: per-window
+    /// utilization, per-request critical paths, aggregate bottleneck
+    /// attribution, and what-if projections (see
+    /// [`crate::trace::analysis::analyze_response`]). Answered between
+    /// scheduling ticks, so the report is always a consistent snapshot.
+    /// With tracing off the response degrades to an explicit
+    /// `{"enabled": false, "error": "tracing disabled"}` object.
+    pub fn analyze(&self) -> Result<Json> {
+        let (tx, rx) = channel();
+        self.work_tx
+            .send(Work::Analyze(tx))
+            .map_err(|_| Error::Serving("engine worker is gone".into()))?;
+        rx.recv_timeout(Duration::from_secs(120))
+            .map_err(|_| Error::Serving("analyze request got no answer".into()))
     }
 
     /// Whether the engine worker is still alive.
@@ -428,6 +457,12 @@ fn scheduler_loop(
             match work {
                 Work::Run(req, tx, enqueued) => {
                     pending.push_back(Pending { req, tx, enqueued, tokens: None })
+                }
+                Work::Analyze(tx) => {
+                    let _ = tx.send(crate::trace::analysis::analyze_response(
+                        &engine.tracer,
+                        &engine.cost,
+                    ));
                 }
                 Work::Shutdown => {
                     // finish live sessions, drop anything still queued
@@ -609,6 +644,10 @@ fn scheduler_loop(
             engine.tiers.promotions,
             engine.tiers.bytes_saved(),
         );
+        // ring overflow visibility: spans silently aged out of the trace
+        // ring bias every downstream analysis, so operators must see the
+        // count (0 whenever tracing is off or the ring kept up)
+        m.set_gauge("trace_spans_dropped", engine.tracer.dropped());
         if let Some(cache) = engine.prefix.as_ref() {
             let s = cache.stats();
             m.record_prefix(
@@ -1464,6 +1503,7 @@ fn finish(m: &Metrics, engine: &mut MoeEngine, live: LiveSession, active_session
         expert_hot_hits: engine.tiers.hot_hits,
         tier_promotions: engine.tiers.promotions,
         link_bytes_saved: engine.tiers.bytes_saved(),
+        trace_spans_dropped: engine.tracer.dropped(),
         breakdown,
     });
 }

@@ -11,7 +11,8 @@
 //!     "prefix_cache_blocks":...,"prefix_cache_tokens":...,"prefix_hits":...,"prefix_misses":...,
 //!     "prefix_inserted_blocks":...,"prefix_evicted_blocks":...,"expert_loads_deduped":...,
 //!     "batched_kernel_calls":...,"batched_ticks":...,"mixed_ticks":...,"batch_occupancy":...,
-//!     "expert_hot_hits":...,"tier_promotions":...,"link_bytes_saved":...}
+//!     "expert_hot_hits":...,"tier_promotions":...,"link_bytes_saved":...,
+//!     "trace_spans_dropped":...}
 //! ```
 //!
 //! The done event carries a field for EVERY gauge the scheduler records
@@ -28,7 +29,13 @@
 //! Besides request objects, a line consisting of the bare word
 //! `metrics` returns the coordinator's full metrics registry as
 //! `{"type":"metrics","metrics":"<rendered text>"}` — a scrapeable
-//! surface (counters, gauges, histogram mean/p50/p99/count per line).
+//! surface (counters, gauges, histogram mean/p50/p99/count per line) —
+//! and a line consisting of the bare word `analyze` returns the span
+//! ring's analysis report (`crate::trace::analysis`): per-window
+//! GPU/link utilization, per-request critical paths, aggregate
+//! bottleneck attribution and what-if speedup projections, or an
+//! explicit `{"enabled":false,"error":"tracing disabled"}` when
+//! `ServingConfig::trace` is off.
 //!
 //! Each connection gets its own handler thread; the coordinator's
 //! scheduler interleaves up to `max_concurrent_sessions` requests, so
@@ -132,6 +139,7 @@ pub const GAUGE_DONE_FIELDS: &[(&str, &str)] = &[
     ("expert_hot_hits", "expert_hot_hits"),
     ("tier_promotions", "tier_promotions"),
     ("link_bytes_saved", "link_bytes_saved"),
+    ("trace_spans_dropped", "trace_spans_dropped"),
 ];
 
 /// Every per-request breakdown histogram the scheduler observes (span
@@ -187,6 +195,7 @@ pub fn event_to_json(ev: &Event) -> Json {
             expert_hot_hits,
             tier_promotions,
             link_bytes_saved,
+            trace_spans_dropped,
             breakdown,
             ..
         } => {
@@ -222,6 +231,7 @@ pub fn event_to_json(ev: &Event) -> Json {
                 ("expert_hot_hits", (*expert_hot_hits as usize).into()),
                 ("tier_promotions", (*tier_promotions as usize).into()),
                 ("link_bytes_saved", (*link_bytes_saved as usize).into()),
+                ("trace_spans_dropped", (*trace_spans_dropped as usize).into()),
             ];
             // breakdown fields ride the trace knob: absent (not zeroed)
             // when tracing is off, keeping the off-path byte-identical
@@ -263,6 +273,18 @@ fn handle_conn(stream: TcpStream, coord: &Coordinator) -> Result<()> {
         }
         if line.trim() == "metrics" {
             writeln!(writer, "{}", metrics_json(&coord.metrics))?;
+            writer.flush()?;
+            continue;
+        }
+        if line.trim() == "analyze" {
+            let reply = match coord.analyze() {
+                Ok(report) => report,
+                Err(e) => Json::obj(vec![
+                    ("type", "error".into()),
+                    ("message", Json::str(e.to_string())),
+                ]),
+            };
+            writeln!(writer, "{reply}")?;
             writer.flush()?;
             continue;
         }
@@ -345,6 +367,7 @@ mod tests {
             expert_hot_hits: 14,
             tier_promotions: 2,
             link_bytes_saved: 4096,
+            trace_spans_dropped: 3,
             breakdown: None,
         }
     }
@@ -394,6 +417,8 @@ mod tests {
         assert_eq!(j.get("expert_hot_hits").unwrap().as_usize(), Some(14));
         assert_eq!(j.get("tier_promotions").unwrap().as_usize(), Some(2));
         assert_eq!(j.get("link_bytes_saved").unwrap().as_usize(), Some(4096));
+        // ...and trace-ring overflow visibility
+        assert_eq!(j.get("trace_spans_dropped").unwrap().as_usize(), Some(3));
     }
 
     /// Gauge / done-JSON parity: drive every gauge-recording path the
@@ -417,6 +442,7 @@ mod tests {
         m.record_prefix(1, 1, 1, 1, 1, 1, 1);
         m.record_batch(1, 1, 1, 1, 1);
         m.record_tiers(1, 1, 1);
+        m.set_gauge("trace_spans_dropped", 1);
         let names = m.gauge_names();
         assert!(!names.is_empty());
         let j = event_to_json(&sample_done());

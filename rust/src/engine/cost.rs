@@ -160,6 +160,20 @@ impl CostModel {
     pub fn scale_token_time(&self, raw_s: f64) -> f64 {
         raw_s * self.layer_ratio
     }
+
+    /// Re-price a recorded transfer duration under a different link
+    /// bandwidth — `h2d_time` run backwards, for the trace-analysis
+    /// what-if replays. Only the bytes term scales; the fixed DMA/driver
+    /// latency does not, so a duration at or below the latency floor is
+    /// returned unchanged (a tiny transfer is latency-bound and a faster
+    /// link buys it nothing).
+    pub fn rescale_transfer_s(&self, dur_s: f64, bandwidth_factor: f64) -> f64 {
+        let lat = self.profile.h2d_latency_s;
+        if dur_s <= lat || bandwidth_factor <= 0.0 {
+            return dur_s;
+        }
+        lat + (dur_s - lat) / bandwidth_factor
+    }
 }
 
 #[cfg(test)]
@@ -272,6 +286,27 @@ mod tests {
         let b4 = cm.wire_bytes_of(QuantScheme::Hqq { bits: 4 });
         assert!(b2 < cm.expert_wire_bytes && cm.expert_wire_bytes < b4);
         assert!(cm.transfer_s_for(b2) < cm.transfer_s_for(b4));
+    }
+
+    #[test]
+    fn rescale_splits_latency_from_bandwidth() {
+        let cm = CostModel::new(
+            HardwareProfile::t4_colab(),
+            &model(),
+            SimScale::Mixtral,
+            QuantScheme::Hqq { bits: 4 },
+            QuantScheme::Hqq { bits: 2 },
+        );
+        let lat = cm.profile.h2d_latency_s;
+        let dur = cm.expert_transfer_s();
+        // doubling the bandwidth halves exactly the bytes term — the
+        // result is the transfer's own cost priced on a 2× link
+        let want = lat + (dur - lat) / 2.0;
+        assert!((cm.rescale_transfer_s(dur, 2.0) - want).abs() < 1e-15);
+        assert!(cm.rescale_transfer_s(dur, 2.0) > dur / 2.0, "latency floor holds");
+        // factor 1 is the identity; latency-bound transfers don't move
+        assert_eq!(cm.rescale_transfer_s(dur, 1.0), dur);
+        assert_eq!(cm.rescale_transfer_s(lat * 0.5, 2.0), lat * 0.5);
     }
 
     #[test]

@@ -100,6 +100,17 @@
 //!   [`telemetry::Metrics`] histograms, and the TCP server answers a
 //!   `metrics` line with the rendered registry. Off by default —
 //!   tracing-off output is byte-identical.
+//! * **Trace analysis + load harness** ([`trace::analysis`], [`load`]) —
+//!   the span ring turned into answers: per-window GPU/link utilization,
+//!   per-request critical paths, aggregate bottleneck attribution
+//!   (blocked on demand loads vs compute vs queue vs KV resume), and
+//!   counterfactual what-if replays through the cost model (2× link
+//!   bandwidth, infinite expert cache, speculation off) with projected
+//!   speedups — served over TCP as the `analyze` command. The [`load`]
+//!   module replays declarative workload profiles (bursty Poisson,
+//!   multi-turn chat with shared prefixes, long-context RAG) against the
+//!   coordinator and reports TTFT/TPOT percentile SLO attainment beside
+//!   that analysis (`examples/load_harness.rs` → `BENCH_8.json`).
 
 pub mod cache;
 pub mod clock;
@@ -109,6 +120,7 @@ pub mod error;
 pub mod eval;
 pub mod harness;
 pub mod kv;
+pub mod load;
 pub mod memory;
 pub mod model;
 pub mod npz;

@@ -1,0 +1,564 @@
+//! Trace-replay load harness: declarative workload profiles replayed
+//! against the [`crate::coordinator`] with per-request latency sampling
+//! and SLO-attainment reporting.
+//!
+//! A [`WorkloadProfile`] declares everything a load run needs — request
+//! count, Poisson arrival process (optionally bursty), prompt shape,
+//! scheduler knobs (width, prefix cache, chunked prefill), and the SLO
+//! targets the run is judged against. [`run_profile`] replays it:
+//! requests are submitted on the sampled arrival schedule, each finished
+//! stream contributes a client-side TTFT (`queue_wait_s + ttft_s`), a
+//! TPOT (`(wall_s - ttft_s) / (new_tokens - 1)`), and its queue wait,
+//! and the percentiles of those samples are compared against the
+//! declared targets. The engine runs with span tracing on, so the
+//! report also embeds the [`crate::trace::analysis`] output for the
+//! run: aggregate bottleneck attribution and counterfactual what-if
+//! speedups, fetched through [`crate::coordinator::Coordinator::analyze`].
+//!
+//! Three built-in profiles mirror common serving shapes:
+//! * [`bursty`] — short independent prompts on a bursty Poisson process
+//!   (phases alternate between `rate` and `rate * burst_factor`);
+//! * [`chat`] — multi-turn conversations where every turn's prompt
+//!   extends the previous one, so consecutive admissions hit the prefix
+//!   cache;
+//! * [`rag`] — long-context prompts sharing one retrieved context,
+//!   prefilled in chunks.
+//!
+//! All prompt generation is deterministic in the profile's seed, and
+//! every prompt stays well under the tiny model's 512-position window
+//! (1 byte = 1 token).
+
+use std::path::Path;
+use std::time::Duration;
+
+use crate::config::{HardwareProfile, OffloadPolicy, QuantScheme, ServingConfig, SimScale};
+use crate::coordinator::{collect_events_timeout, Coordinator, Event, Request};
+use crate::error::Result;
+use crate::harness;
+use crate::telemetry::percentile;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Per-profile latency targets, in wall seconds. Attainment is reported,
+/// never asserted — a missed SLO is a finding, not a failure.
+#[derive(Debug, Clone, Copy)]
+pub struct SloTargets {
+    pub ttft_p50_s: f64,
+    pub ttft_p99_s: f64,
+    pub tpot_p50_s: f64,
+    pub tpot_p99_s: f64,
+}
+
+/// What the prompts of a profile look like.
+#[derive(Debug, Clone, Copy)]
+pub enum PromptShape {
+    /// Independent short prompts of `min_words..=max_words` words.
+    Bursty { min_words: usize, max_words: usize },
+    /// `users` conversations of `turns` turns each; turn `t+1`'s prompt
+    /// extends turn `t`'s, so the prefix cache can seed every follow-up.
+    Chat { users: usize, turns: usize },
+    /// One shared retrieved context of roughly `context_words` words,
+    /// followed by a per-request question.
+    Rag { context_words: usize },
+}
+
+/// A declarative load-run: arrival process + prompt shape + scheduler
+/// knobs + SLO targets. See the module docs for the built-in instances.
+#[derive(Debug, Clone)]
+pub struct WorkloadProfile {
+    pub name: String,
+    /// Total requests to replay.
+    pub requests: usize,
+    /// Base Poisson arrival rate (requests per wall second).
+    pub arrival_rate_per_s: f64,
+    /// Rate multiplier during burst phases (1.0 = plain Poisson).
+    pub burst_factor: f64,
+    /// Requests per phase; phases alternate burst / calm.
+    pub burst_len: usize,
+    /// Token budget per request.
+    pub max_tokens: usize,
+    /// Continuous-batching width the coordinator runs at.
+    pub width: usize,
+    pub prefix_cache: bool,
+    pub chunked_prefill: bool,
+    pub prompt: PromptShape,
+    pub slo: SloTargets,
+    pub seed: u64,
+}
+
+/// Arrival gaps are clamped here so one unlucky exponential tail cannot
+/// stall a replay for seconds.
+const MAX_GAP_S: f64 = 0.5;
+
+/// Small word pool the deterministic prompt generator draws from.
+const WORDS: &[&str] = &[
+    "expert", "router", "cache", "layer", "token", "prefetch", "link", "batch", "prefix",
+    "decode", "memory", "offload", "gate", "tier", "stream", "model",
+];
+
+impl WorkloadProfile {
+    /// The serving configuration this profile replays against. Tracing
+    /// is always on (the report needs the span ring), and suffix
+    /// stopping is disabled so token counts depend only on the budget —
+    /// TPOT samples then measure the scheduler, not the sampler's luck.
+    pub fn serving_config(&self) -> ServingConfig {
+        ServingConfig {
+            policy: OffloadPolicy::Full { cache_k: 2, spec_n: 2 },
+            expert_quant: QuantScheme::Hqq { bits: 3 },
+            attn_quant: QuantScheme::Hqq { bits: 4 },
+            sim_scale: SimScale::Tiny,
+            max_concurrent_sessions: self.width,
+            max_new_tokens: self.max_tokens,
+            prefix_cache: self.prefix_cache,
+            chunked_prefill: self.chunked_prefill,
+            stop_suffix: String::new(),
+            trace: true,
+            ..Default::default()
+        }
+    }
+
+    /// Seconds between consecutive submissions: exponential gaps at the
+    /// phase rate, phases of `burst_len` requests alternating between
+    /// `rate * burst_factor` (burst) and `rate` (calm).
+    pub fn arrival_gaps_s(&self, r: &mut Rng) -> Vec<f64> {
+        let burst_len = self.burst_len.max(1);
+        (0..self.requests)
+            .map(|i| {
+                let bursting = (i / burst_len) % 2 == 0;
+                let rate = if bursting {
+                    self.arrival_rate_per_s * self.burst_factor.max(1e-9)
+                } else {
+                    self.arrival_rate_per_s
+                };
+                let u = r.f64();
+                (-(1.0 - u).ln() / rate.max(1e-9)).min(MAX_GAP_S)
+            })
+            .collect()
+    }
+
+    /// The `requests` prompt strings, deterministic in the seed. Chat
+    /// prompts are emitted turn-major (turn 0 of every user, then turn 1,
+    /// …) so each follow-up arrives after the turn it extends finished.
+    pub fn prompts(&self) -> Vec<String> {
+        let mut r = Rng::new(self.seed ^ 0x10ad);
+        let pick = |r: &mut Rng| WORDS[r.below(WORDS.len())];
+        match self.prompt {
+            PromptShape::Bursty { min_words, max_words } => (0..self.requests)
+                .map(|_| {
+                    let n = min_words + r.below(max_words.saturating_sub(min_words) + 1);
+                    let words: Vec<&str> = (0..n.max(1)).map(|_| pick(&mut r)).collect();
+                    format!("explain {}", words.join(" "))
+                })
+                .collect(),
+            PromptShape::Chat { users, turns } => {
+                // per-user transcripts; turn t's prompt is a strict
+                // prefix of turn t+1's, which is what the prefix cache
+                // keys on
+                let mut transcripts: Vec<String> = (0..users.max(1))
+                    .map(|u| format!("system: be brief. user {u} asks:\n"))
+                    .collect();
+                let mut out = Vec::with_capacity(self.requests);
+                'outer: for t in 0..turns.max(1) {
+                    for tr in transcripts.iter_mut() {
+                        tr.push_str(&format!("q{t}: about {}?\n", pick(&mut r)));
+                        out.push(tr.clone());
+                        if out.len() == self.requests {
+                            break 'outer;
+                        }
+                    }
+                }
+                while out.len() < self.requests {
+                    out.push(transcripts[out.len() % transcripts.len()].clone());
+                }
+                out
+            }
+            PromptShape::Rag { context_words } => {
+                let ctx: Vec<&str> = (0..context_words.max(1)).map(|_| pick(&mut r)).collect();
+                let ctx = format!("context: {}.\n", ctx.join(" "));
+                (0..self.requests)
+                    .map(|_| format!("{ctx}question: what about {}?\n", pick(&mut r)))
+                    .collect()
+            }
+        }
+    }
+}
+
+/// Bursty short-prompt traffic: independent requests, phases alternating
+/// between 3x and 1x the base arrival rate.
+pub fn bursty(smoke: bool) -> WorkloadProfile {
+    WorkloadProfile {
+        name: "bursty".into(),
+        requests: if smoke { 6 } else { 24 },
+        arrival_rate_per_s: 16.0,
+        burst_factor: 3.0,
+        burst_len: if smoke { 2 } else { 6 },
+        max_tokens: 24,
+        width: 4,
+        prefix_cache: false,
+        chunked_prefill: false,
+        prompt: PromptShape::Bursty { min_words: 2, max_words: 8 },
+        slo: SloTargets {
+            ttft_p50_s: 2.0,
+            ttft_p99_s: 8.0,
+            tpot_p50_s: 0.5,
+            tpot_p99_s: 2.0,
+        },
+        seed: 11,
+    }
+}
+
+/// Multi-turn chat with shared prefixes: every follow-up turn extends
+/// its conversation's transcript, exercising the prefix cache.
+pub fn chat(smoke: bool) -> WorkloadProfile {
+    let (users, turns) = if smoke { (2, 2) } else { (4, 4) };
+    WorkloadProfile {
+        name: "chat".into(),
+        requests: users * turns,
+        arrival_rate_per_s: 8.0,
+        burst_factor: 1.0,
+        burst_len: users,
+        max_tokens: 16,
+        width: 2,
+        prefix_cache: true,
+        chunked_prefill: false,
+        prompt: PromptShape::Chat { users, turns },
+        slo: SloTargets {
+            ttft_p50_s: 2.0,
+            ttft_p99_s: 8.0,
+            tpot_p50_s: 0.5,
+            tpot_p99_s: 2.0,
+        },
+        seed: 13,
+    }
+}
+
+/// Long-context RAG traffic: one shared retrieved context ahead of every
+/// question, prefilled in chunks so live decodes keep streaming.
+pub fn rag(smoke: bool) -> WorkloadProfile {
+    WorkloadProfile {
+        name: "rag".into(),
+        requests: if smoke { 3 } else { 12 },
+        arrival_rate_per_s: 6.0,
+        burst_factor: 1.0,
+        burst_len: 4,
+        max_tokens: 16,
+        width: 2,
+        prefix_cache: false,
+        chunked_prefill: true,
+        prompt: PromptShape::Rag { context_words: 40 },
+        slo: SloTargets {
+            ttft_p50_s: 4.0,
+            ttft_p99_s: 12.0,
+            tpot_p50_s: 0.5,
+            tpot_p99_s: 2.0,
+        },
+        seed: 17,
+    }
+}
+
+/// One finished replay: the raw latency samples plus the span-ring
+/// analysis the coordinator returned for the run.
+#[derive(Debug, Clone)]
+pub struct ProfileReport {
+    pub name: String,
+    pub requests: usize,
+    pub requests_ok: usize,
+    pub requests_failed: usize,
+    /// Client-side time to first token: queue wait + admission-to-token.
+    pub ttft_s: Vec<f64>,
+    /// Time per output token after the first.
+    pub tpot_s: Vec<f64>,
+    pub queue_s: Vec<f64>,
+    pub slo: SloTargets,
+    /// [`crate::trace::analysis::analyze_response`] output for the run.
+    pub analysis: Json,
+}
+
+impl ProfileReport {
+    /// The BENCH_8 row for this profile: sample percentiles beside their
+    /// targets with per-percentile attainment booleans, plus the run's
+    /// bottleneck attribution and what-if projections.
+    pub fn to_json(&self) -> Json {
+        let ttft_p50 = percentile(&self.ttft_s, 0.50);
+        let ttft_p99 = percentile(&self.ttft_s, 0.99);
+        let tpot_p50 = percentile(&self.tpot_s, 0.50);
+        let tpot_p99 = percentile(&self.tpot_s, 0.99);
+        let attribution = self.analysis.get("attribution").cloned().unwrap_or(Json::Null);
+        let whatif = self.analysis.get("whatif").cloned().unwrap_or(Json::Null);
+        Json::obj(vec![
+            ("profile", Json::str(&self.name)),
+            ("requests", self.requests.into()),
+            ("requests_ok", self.requests_ok.into()),
+            ("requests_failed", self.requests_failed.into()),
+            ("ttft_p50_s", ttft_p50.into()),
+            ("ttft_p99_s", ttft_p99.into()),
+            ("ttft_p50_target_s", self.slo.ttft_p50_s.into()),
+            ("ttft_p99_target_s", self.slo.ttft_p99_s.into()),
+            ("ttft_p50_attained", (ttft_p50 <= self.slo.ttft_p50_s).into()),
+            ("ttft_p99_attained", (ttft_p99 <= self.slo.ttft_p99_s).into()),
+            ("tpot_p50_s", tpot_p50.into()),
+            ("tpot_p99_s", tpot_p99.into()),
+            ("tpot_p50_target_s", self.slo.tpot_p50_s.into()),
+            ("tpot_p99_target_s", self.slo.tpot_p99_s.into()),
+            ("tpot_p50_attained", (tpot_p50 <= self.slo.tpot_p50_s).into()),
+            ("tpot_p99_attained", (tpot_p99 <= self.slo.tpot_p99_s).into()),
+            ("queue_p50_s", percentile(&self.queue_s, 0.50).into()),
+            ("queue_p99_s", percentile(&self.queue_s, 0.99).into()),
+            ("attribution", attribution),
+            ("whatif", whatif),
+        ])
+    }
+
+    /// One human-readable line per run, for the harness console output.
+    pub fn summary(&self) -> String {
+        let mark = |attained: bool| if attained { "ok" } else { "MISS" };
+        let ttft_p50 = percentile(&self.ttft_s, 0.50);
+        let ttft_p99 = percentile(&self.ttft_s, 0.99);
+        let tpot_p50 = percentile(&self.tpot_s, 0.50);
+        let tpot_p99 = percentile(&self.tpot_s, 0.99);
+        format!(
+            "{}: {}/{} ok | ttft p50 {:.3}s ({}) p99 {:.3}s ({}) | tpot p50 {:.4}s ({}) p99 {:.4}s ({})",
+            self.name,
+            self.requests_ok,
+            self.requests,
+            ttft_p50,
+            mark(ttft_p50 <= self.slo.ttft_p50_s),
+            ttft_p99,
+            mark(ttft_p99 <= self.slo.ttft_p99_s),
+            tpot_p50,
+            mark(tpot_p50 <= self.slo.tpot_p50_s),
+            tpot_p99,
+            mark(tpot_p99 <= self.slo.tpot_p99_s),
+        )
+    }
+}
+
+/// Replay one profile against a fresh coordinator built from the
+/// artifacts in `dir`: submit on the sampled arrival schedule, drain
+/// every stream, fetch the span-ring analysis, shut down, and report.
+pub fn run_profile(
+    dir: &Path,
+    profile: &WorkloadProfile,
+    hw: HardwareProfile,
+) -> Result<ProfileReport> {
+    let serving = profile.serving_config();
+    let engine_dir = dir.to_path_buf();
+    let coord = Coordinator::new(
+        move || harness::build_engine_with_serving(&engine_dir, &serving, hw),
+        profile.seed,
+    );
+
+    let mut r = Rng::new(profile.seed);
+    let gaps = profile.arrival_gaps_s(&mut r);
+    let prompts = profile.prompts();
+    let mut streams = Vec::with_capacity(prompts.len());
+    for (prompt, gap) in prompts.into_iter().zip(gaps) {
+        std::thread::sleep(Duration::from_secs_f64(gap));
+        let mut req = Request::new(prompt);
+        req.max_tokens = profile.max_tokens;
+        req.chat = false;
+        streams.push(coord.submit(req));
+    }
+
+    let mut report = ProfileReport {
+        name: profile.name.clone(),
+        requests: profile.requests,
+        requests_ok: 0,
+        requests_failed: 0,
+        ttft_s: Vec::new(),
+        tpot_s: Vec::new(),
+        queue_s: Vec::new(),
+        slo: profile.slo,
+        analysis: Json::Null,
+    };
+    for stream in &streams {
+        let mut finished = false;
+        for ev in collect_events_timeout(stream, Duration::from_secs(300)) {
+            match ev {
+                Event::Done { wall_s, queue_wait_s, ttft_s, new_tokens, .. } => {
+                    report.requests_ok += 1;
+                    report.ttft_s.push(queue_wait_s + ttft_s);
+                    let decode_tokens = new_tokens.saturating_sub(1).max(1) as f64;
+                    report.tpot_s.push((wall_s - ttft_s).max(0.0) / decode_tokens);
+                    report.queue_s.push(queue_wait_s);
+                    finished = true;
+                }
+                Event::Error { .. } => {
+                    report.requests_failed += 1;
+                    finished = true;
+                }
+                Event::Token { .. } => {}
+            }
+        }
+        if !finished {
+            report.requests_failed += 1;
+        }
+    }
+
+    // the analysis must be fetched before shutdown — it runs on the
+    // worker thread against the live engine's span ring
+    report.analysis = coord.analyze()?;
+    coord.shutdown();
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gaps_are_deterministic_positive_and_bounded() {
+        let p = bursty(false);
+        let a = p.arrival_gaps_s(&mut Rng::new(p.seed));
+        let b = p.arrival_gaps_s(&mut Rng::new(p.seed));
+        assert_eq!(a.len(), p.requests);
+        assert_eq!(a, b, "same seed must reproduce the schedule");
+        assert!(a.iter().all(|&g| g.is_finite() && (0.0..=MAX_GAP_S).contains(&g)));
+    }
+
+    #[test]
+    fn burst_phases_arrive_faster_on_average() {
+        // with a strong burst factor and many samples, mean gap in the
+        // burst phases must come out below the calm phases
+        let p = WorkloadProfile {
+            requests: 2000,
+            burst_len: 10,
+            burst_factor: 10.0,
+            ..bursty(false)
+        };
+        let gaps = p.arrival_gaps_s(&mut Rng::new(1));
+        let (mut fast, mut slow) = (Vec::new(), Vec::new());
+        for (i, g) in gaps.iter().enumerate() {
+            if (i / p.burst_len) % 2 == 0 {
+                fast.push(*g);
+            } else {
+                slow.push(*g);
+            }
+        }
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        assert!(mean(&fast) < mean(&slow), "burst phases must be denser");
+    }
+
+    #[test]
+    fn prompts_fit_the_tiny_context_window() {
+        // ByteTokenizer: 1 byte = 1 token; ModelConfig::tiny has 512
+        // positions. Prompt + budget must always fit.
+        for p in [bursty(false), chat(false), rag(false)] {
+            let prompts = p.prompts();
+            assert_eq!(prompts.len(), p.requests, "{}", p.name);
+            for text in &prompts {
+                assert!(
+                    text.len() + p.max_tokens < 512,
+                    "{}: prompt of {} bytes + {} budget overflows the window",
+                    p.name,
+                    text.len(),
+                    p.max_tokens
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn chat_turns_extend_their_transcript() {
+        let p = chat(false);
+        let (users, turns) = match p.prompt {
+            PromptShape::Chat { users, turns } => (users, turns),
+            _ => unreachable!(),
+        };
+        let prompts = p.prompts();
+        // turn-major emission: request (t * users + u) is user u's turn t,
+        // and each later turn starts with the previous one
+        for u in 0..users {
+            for t in 1..turns {
+                let prev = &prompts[(t - 1) * users + u];
+                let cur = &prompts[t * users + u];
+                assert!(
+                    cur.starts_with(prev.as_str()),
+                    "user {u} turn {t} must extend turn {}",
+                    t - 1
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rag_prompts_share_their_context() {
+        let prompts = rag(false).prompts();
+        let ctx_end = prompts[0].find("question:").expect("question marker");
+        let ctx = &prompts[0][..ctx_end];
+        assert!(ctx.len() > 100, "rag context should dominate the prompt");
+        assert!(prompts.iter().all(|p| p.starts_with(ctx)));
+    }
+
+    #[test]
+    fn serving_config_always_traces_and_never_suffix_stops() {
+        for p in [bursty(true), chat(true), rag(true)] {
+            let s = p.serving_config();
+            assert!(s.trace, "{}: analysis needs the span ring", p.name);
+            assert!(s.stop_suffix.is_empty(), "{}: token counts must be budget-driven", p.name);
+            assert_eq!(s.max_concurrent_sessions, p.width);
+            assert_eq!(s.prefix_cache, p.prefix_cache);
+            assert_eq!(s.chunked_prefill, p.chunked_prefill);
+            assert!(s.validate().is_ok());
+        }
+    }
+
+    #[test]
+    fn report_row_schema_and_attainment() {
+        let report = ProfileReport {
+            name: "unit".into(),
+            requests: 3,
+            requests_ok: 2,
+            requests_failed: 1,
+            ttft_s: vec![0.1, 0.3],
+            tpot_s: vec![0.01, 0.02],
+            queue_s: vec![0.0, 0.2],
+            slo: SloTargets {
+                ttft_p50_s: 0.2,
+                ttft_p99_s: 0.25,
+                tpot_p50_s: 1.0,
+                tpot_p99_s: 1.0,
+            },
+            analysis: Json::obj(vec![
+                ("attribution", Json::obj(vec![("compute", 1.0.into())])),
+                ("whatif", Json::arr(vec![])),
+            ]),
+        };
+        let row = report.to_json();
+        assert_eq!(row.get("profile").and_then(Json::as_str), Some("unit"));
+        assert_eq!(row.get("requests_ok").and_then(Json::as_usize), Some(2));
+        assert_eq!(row.get("requests_failed").and_then(Json::as_usize), Some(1));
+        // nearest-rank on [0.1, 0.3]: p50 = 0.1 <= 0.2 target, p99 = 0.3 > 0.25
+        assert_eq!(row.get("ttft_p50_attained").and_then(Json::as_bool), Some(true));
+        assert_eq!(row.get("ttft_p99_attained").and_then(Json::as_bool), Some(false));
+        assert_eq!(row.get("tpot_p99_attained").and_then(Json::as_bool), Some(true));
+        // percentiles are monotone in q by construction
+        let p50 = row.get("ttft_p50_s").and_then(Json::as_f64).unwrap();
+        let p99 = row.get("ttft_p99_s").and_then(Json::as_f64).unwrap();
+        assert!(p50 <= p99);
+        // the analysis rides along
+        assert!(row.get("attribution").and_then(|a| a.get("compute")).is_some());
+        assert!(row.get("whatif").and_then(Json::as_arr).is_some());
+        // and the console line renders both attained and missed marks
+        let line = report.summary();
+        assert!(line.contains("2/3 ok") && line.contains("MISS") && line.contains("ok)"));
+    }
+
+    #[test]
+    fn missing_analysis_degrades_to_null_fields() {
+        let report = ProfileReport {
+            name: "unit".into(),
+            requests: 0,
+            requests_ok: 0,
+            requests_failed: 0,
+            ttft_s: vec![],
+            tpot_s: vec![],
+            queue_s: vec![],
+            slo: bursty(true).slo,
+            analysis: Json::Null,
+        };
+        let row = report.to_json();
+        assert_eq!(row.get("attribution"), Some(&Json::Null));
+        assert_eq!(row.get("whatif"), Some(&Json::Null));
+    }
+}

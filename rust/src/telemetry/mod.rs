@@ -271,6 +271,24 @@ impl Metrics {
     }
 }
 
+/// Exact nearest-rank percentile over raw samples, `q` in `[0, 1]` —
+/// the load harness's SLO reports quote these instead of
+/// [`Histogram::quantile`] because bucket boundaries would round a
+/// p99-vs-target comparison in whichever direction the bucket edge
+/// fell. Empty input returns 0.0; the result is always one of the
+/// samples, and is monotone in `q` (`percentile(xs, 0.5) <=
+/// percentile(xs, 0.99)`).
+pub fn percentile(samples: &[f64], q: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(f64::total_cmp);
+    let q = q.clamp(0.0, 1.0);
+    let rank = ((q * sorted.len() as f64).ceil() as usize).max(1);
+    sorted[rank.min(sorted.len()) - 1]
+}
+
 /// Fixed-width table printer for experiment binaries.
 pub struct Table {
     pub header: Vec<String>,
@@ -467,6 +485,23 @@ mod tests {
         let r = m.render();
         assert!(r.contains("tokens 5"));
         assert!(r.contains("latency_mean"));
+    }
+
+    #[test]
+    fn percentile_nearest_rank_edges() {
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[3.0], 0.0), 3.0);
+        assert_eq!(percentile(&[3.0], 1.0), 3.0);
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.5), 50.0);
+        assert_eq!(percentile(&xs, 0.99), 99.0);
+        assert_eq!(percentile(&xs, 1.0), 100.0);
+        // unsorted input sorts internally; result is always a sample
+        let ys = [5.0, 1.0, 9.0, 3.0];
+        assert_eq!(percentile(&ys, 0.5), 3.0);
+        assert!(ys.contains(&percentile(&ys, 0.75)));
+        // monotone in q
+        assert!(percentile(&ys, 0.5) <= percentile(&ys, 0.99));
     }
 
     #[test]

@@ -1,0 +1,650 @@
+//! Post-hoc analysis over the span ring: where did the time go, and
+//! what would fixing it buy?
+//!
+//! Four questions, all answered from the recorded [`TraceSpan`]s alone
+//! (the ring is the single source of truth — nothing here re-runs the
+//! engine):
+//!
+//! - **Utilization**: per-window GPU / link busy fractions across the
+//!   trace horizon ([`utilization_windows`]) — where the streams sat
+//!   idle.
+//! - **Critical path**: for each session, the chain of spans its decode
+//!   front actually advanced through ([`critical_paths`]) — compute,
+//!   blocking transfers, and the scheduler gaps between them. The chain
+//!   sum never exceeds the session's span window (asserted by property
+//!   test and against real engine runs in `tests/trace_spans.rs`).
+//! - **Attribution**: aggregate fractions of session wall time spent in
+//!   compute vs. blocked on demand loads vs. KV/prefix staging vs.
+//!   waiting for a turn ([`attribution`]) — the fractions sum to 1.
+//! - **What-if**: counterfactual replays of the recorded spans through
+//!   a [`CostModel`]-aware discrete-event rebuild ([`replay`]): double
+//!   the link bandwidth (only the bytes term of a transfer shrinks —
+//!   latency is latency), make the expert cache infinite (expert
+//!   traffic vanishes), or turn speculation off (prefetches become
+//!   demand loads). Each scenario reports a projected makespan and the
+//!   speedup against the *baseline replay* of the same spans, so model
+//!   error divides out of the ratio.
+//!
+//! The coordinator surfaces all of it through the `analyze` TCP command
+//! ([`analyze_response`]); the load harness embeds the same report in
+//! its per-profile SLO rows (`rust/src/load/`).
+
+use std::collections::BTreeMap;
+
+use crate::clock::{Resource, Span, Timeline};
+use crate::engine::cost::CostModel;
+use crate::util::json::Json;
+
+use super::{SpanKind, TraceSpan, Tracer};
+
+/// GPU / link busy fractions over one slice of the trace horizon.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct UtilWindow {
+    pub start_s: f64,
+    pub end_s: f64,
+    /// Fraction of the window the GPU stream was reserved (≤ 1: per-
+    /// resource reservations never overlap).
+    pub gpu_util: f64,
+    pub link_util: f64,
+}
+
+/// Slice the trace horizon into `windows` equal slices and sum each
+/// resource's span overlap into per-window busy fractions. Empty input
+/// (or a zero-length horizon) yields no windows.
+pub fn utilization_windows(spans: &[TraceSpan], windows: usize) -> Vec<UtilWindow> {
+    if spans.is_empty() || windows == 0 {
+        return Vec::new();
+    }
+    let lo = spans.iter().map(|s| s.start_s).fold(f64::INFINITY, f64::min);
+    let hi = spans.iter().map(|s| s.end_s).fold(f64::NEG_INFINITY, f64::max);
+    if !(hi > lo) {
+        return Vec::new();
+    }
+    let w = (hi - lo) / windows as f64;
+    let mut out: Vec<UtilWindow> = (0..windows)
+        .map(|i| UtilWindow {
+            start_s: lo + i as f64 * w,
+            end_s: lo + (i + 1) as f64 * w,
+            gpu_util: 0.0,
+            link_util: 0.0,
+        })
+        .collect();
+    for s in spans {
+        let span = Span { start: s.start_s, end: s.end_s };
+        for win in out.iter_mut() {
+            let ov = span.overlap(win.start_s, win.end_s);
+            if ov <= 0.0 {
+                continue;
+            }
+            match s.kind.resource() {
+                Resource::Gpu => win.gpu_util += ov,
+                Resource::Link => win.link_util += ov,
+            }
+        }
+    }
+    for win in out.iter_mut() {
+        win.gpu_util = (win.gpu_util / w).min(1.0);
+        win.link_util = (win.link_util / w).min(1.0);
+    }
+    out
+}
+
+/// One session's critical path: the span chain its decode front actually
+/// advanced through, split by what each segment was doing. The exact
+/// decomposition is `window_s = compute_s + demand_blocked_s +
+/// kv_blocked_s + sched_wait_s` — overlapped span time is clipped to the
+/// front, so `path_s` (the first three) can never exceed `window_s`, and
+/// at width 1 it equals the request's virtual wall time (the same
+/// identity `tests/trace_spans.rs` asserts for the breakdown).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RequestPath {
+    pub session: u64,
+    /// Spans that contributed to the chain (fully-overlapped spans drop).
+    pub chain: usize,
+    /// Front-advancing GPU compute seconds.
+    pub compute_s: f64,
+    /// Seconds the front sat blocked on expert traffic (demand loads and
+    /// tier reloads).
+    pub demand_blocked_s: f64,
+    /// Seconds the front sat blocked on KV staging (preempt/resume swaps
+    /// and prefix-cache seeds).
+    pub kv_blocked_s: f64,
+    /// Gaps inside the session's window where nothing of its own ran —
+    /// with concurrent sessions, the time it waited for a scheduling
+    /// turn on the shared streams.
+    pub sched_wait_s: f64,
+    /// First span start → last span end (speculative prefetches
+    /// excluded: nothing ever waits on them).
+    pub window_s: f64,
+    /// `compute_s + demand_blocked_s + kv_blocked_s` — the attributed
+    /// chain itself, ≤ `window_s` by construction.
+    pub path_s: f64,
+}
+
+/// Walk each session's spans in start order and attribute every second
+/// its front advanced. Speculative prefetches are excluded up front:
+/// they ride under compute by design, so only the *demand* tail of
+/// expert traffic can appear on a critical path.
+pub fn critical_paths(spans: &[TraceSpan]) -> Vec<RequestPath> {
+    let mut by_session: BTreeMap<u64, Vec<&TraceSpan>> = BTreeMap::new();
+    for s in spans {
+        if s.kind == SpanKind::SpecPrefetch {
+            continue;
+        }
+        by_session.entry(s.session).or_default().push(s);
+    }
+    let mut out = Vec::with_capacity(by_session.len());
+    for (session, mut list) in by_session {
+        list.sort_by(|a, b| {
+            a.start_s.total_cmp(&b.start_s).then(a.end_s.total_cmp(&b.end_s))
+        });
+        let first = list[0].start_s;
+        let mut front = first;
+        let mut last_end = first;
+        let (mut compute, mut demand, mut kv, mut chain) = (0.0, 0.0, 0.0, 0usize);
+        for s in list {
+            last_end = last_end.max(s.end_s);
+            // only the part past the front advanced it; spans the front
+            // already passed (hidden under an earlier blocking wait)
+            // contribute nothing
+            let c = s.end_s - front.max(s.start_s);
+            if c <= 0.0 {
+                continue;
+            }
+            chain += 1;
+            match s.kind {
+                SpanKind::DemandLoad | SpanKind::TierReload => demand += c,
+                SpanKind::KvResume | SpanKind::PrefixSeed => kv += c,
+                _ => compute += c,
+            }
+            front = s.end_s;
+        }
+        let window_s = last_end - first;
+        let path_s = compute + demand + kv;
+        out.push(RequestPath {
+            session,
+            chain,
+            compute_s: compute,
+            demand_blocked_s: demand,
+            kv_blocked_s: kv,
+            sched_wait_s: (window_s - path_s).max(0.0),
+            window_s,
+            path_s,
+        });
+    }
+    out
+}
+
+/// Aggregate bottleneck attribution: what fraction of total session wall
+/// time (Σ window) went to compute, demand-loaded expert traffic, KV
+/// staging, and waiting for a scheduling turn. The four fractions sum to
+/// exactly 1 whenever any time was recorded (all zeros otherwise).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Attribution {
+    pub compute_frac: f64,
+    pub demand_load_frac: f64,
+    pub kv_resume_frac: f64,
+    pub queue_frac: f64,
+}
+
+impl Attribution {
+    pub fn sum(&self) -> f64 {
+        self.compute_frac + self.demand_load_frac + self.kv_resume_frac + self.queue_frac
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("compute", self.compute_frac.into()),
+            ("demand_load", self.demand_load_frac.into()),
+            ("kv_resume", self.kv_resume_frac.into()),
+            ("queue", self.queue_frac.into()),
+        ])
+    }
+}
+
+pub fn attribution(paths: &[RequestPath]) -> Attribution {
+    let total: f64 = paths.iter().map(|p| p.window_s).sum();
+    if total <= 0.0 {
+        return Attribution::default();
+    }
+    Attribution {
+        compute_frac: paths.iter().map(|p| p.compute_s).sum::<f64>() / total,
+        demand_load_frac: paths.iter().map(|p| p.demand_blocked_s).sum::<f64>() / total,
+        kv_resume_frac: paths.iter().map(|p| p.kv_blocked_s).sum::<f64>() / total,
+        queue_frac: paths.iter().map(|p| p.sched_wait_s).sum::<f64>() / total,
+    }
+}
+
+/// Counterfactual scenarios for [`replay`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WhatIf {
+    /// The recorded spans rebuilt as-is — the denominator every scenario
+    /// is compared against, so cost-model error divides out.
+    Baseline,
+    /// Link bandwidth doubled: each transfer's bytes term halves, its
+    /// fixed DMA/driver latency does not ([`CostModel::rescale_transfer_s`]).
+    DoubleLink,
+    /// Every expert always resident: demand loads, tier reloads and
+    /// speculative prefetches vanish from the link entirely (KV and
+    /// prefix traffic stays — it is not expert weight traffic).
+    InfiniteExpertCache,
+    /// Speculative prefetching disabled: every prefetched expert is
+    /// instead fetched on demand, blocking its session's front.
+    NoSpeculation,
+}
+
+impl WhatIf {
+    /// The counterfactuals (everything but the baseline denominator).
+    pub const SCENARIOS: [WhatIf; 3] =
+        [WhatIf::DoubleLink, WhatIf::InfiniteExpertCache, WhatIf::NoSpeculation];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            WhatIf::Baseline => "baseline",
+            WhatIf::DoubleLink => "link_2x",
+            WhatIf::InfiniteExpertCache => "infinite_expert_cache",
+            WhatIf::NoSpeculation => "speculation_off",
+        }
+    }
+}
+
+/// Rebuild the recorded spans as a fresh discrete-event schedule under a
+/// scenario and return the projected makespan (latest session front).
+///
+/// The rebuild replays spans in recorded start order onto a fresh
+/// [`Timeline`] with one front per session: GPU spans start at
+/// max(gpu-free, front) and advance their session's front; blocking link
+/// spans (demand loads, tier reloads, KV swaps, prefix seeds) start at
+/// max(link-free, front) and advance it; speculative prefetches are
+/// issued at link-free and advance nothing — exactly the engine's own
+/// scheduling rules, which is why the baseline replay reconstructs the
+/// recorded schedule and the ratio to it isolates the scenario's effect.
+pub fn replay(spans: &[TraceSpan], cost: &CostModel, scenario: WhatIf) -> f64 {
+    let mut order: Vec<&TraceSpan> = spans.iter().collect();
+    order.sort_by(|a, b| {
+        a.start_s.total_cmp(&b.start_s).then(a.end_s.total_cmp(&b.end_s))
+    });
+    let mut tl = Timeline::new();
+    let mut fronts: BTreeMap<u64, f64> = BTreeMap::new();
+    for s in order {
+        let front = fronts.entry(s.session).or_insert(0.0);
+        match s.kind.resource() {
+            Resource::Gpu => {
+                let sp = tl.reserve(Resource::Gpu, s.dur_s(), *front);
+                *front = sp.end;
+            }
+            Resource::Link => {
+                if scenario == WhatIf::InfiniteExpertCache
+                    && matches!(
+                        s.kind,
+                        SpanKind::DemandLoad | SpanKind::TierReload | SpanKind::SpecPrefetch
+                    )
+                {
+                    continue;
+                }
+                let dur = if scenario == WhatIf::DoubleLink {
+                    cost.rescale_transfer_s(s.dur_s(), 2.0)
+                } else {
+                    s.dur_s()
+                };
+                let blocking = s.kind != SpanKind::SpecPrefetch
+                    || scenario == WhatIf::NoSpeculation;
+                let not_before = if blocking { *front } else { 0.0 };
+                let sp = tl.reserve(Resource::Link, dur, not_before);
+                if blocking {
+                    *front = sp.end;
+                }
+            }
+        }
+    }
+    fronts.values().fold(0.0, |a, &b| a.max(b))
+}
+
+/// One scenario's projection against the baseline replay.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WhatIfRow {
+    pub scenario: WhatIf,
+    pub baseline_s: f64,
+    pub projected_s: f64,
+    /// `baseline_s / projected_s` — > 1 means the scenario helps.
+    pub speedup: f64,
+}
+
+impl WhatIfRow {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("scenario", self.scenario.label().into()),
+            ("baseline_s", self.baseline_s.into()),
+            ("projected_s", self.projected_s.into()),
+            ("speedup", self.speedup.into()),
+        ])
+    }
+}
+
+/// Replay every counterfactual in [`WhatIf::SCENARIOS`].
+pub fn whatif_rows(spans: &[TraceSpan], cost: &CostModel) -> Vec<WhatIfRow> {
+    let baseline_s = replay(spans, cost, WhatIf::Baseline);
+    WhatIf::SCENARIOS
+        .iter()
+        .map(|&scenario| {
+            let projected_s = replay(spans, cost, scenario);
+            WhatIfRow {
+                scenario,
+                baseline_s,
+                projected_s,
+                speedup: if projected_s > 0.0 { baseline_s / projected_s } else { 1.0 },
+            }
+        })
+        .collect()
+}
+
+/// Number of utilization windows the canned reports use.
+pub const DEFAULT_UTIL_WINDOWS: usize = 12;
+
+/// The full analysis as one JSON object: utilization windows, per-request
+/// critical paths, aggregate attribution, and what-if projections.
+pub fn report(spans: &[TraceSpan], cost: &CostModel, windows: usize) -> Json {
+    let paths = critical_paths(spans);
+    let attr = attribution(&paths);
+    Json::obj(vec![
+        (
+            "utilization",
+            Json::arr(utilization_windows(spans, windows).iter().map(|w| {
+                Json::obj(vec![
+                    ("start_s", w.start_s.into()),
+                    ("end_s", w.end_s.into()),
+                    ("gpu_util", w.gpu_util.into()),
+                    ("link_util", w.link_util.into()),
+                ])
+            })),
+        ),
+        (
+            "requests",
+            Json::arr(paths.iter().map(|p| {
+                Json::obj(vec![
+                    ("session", (p.session as usize).into()),
+                    ("chain", p.chain.into()),
+                    ("compute_s", p.compute_s.into()),
+                    ("demand_blocked_s", p.demand_blocked_s.into()),
+                    ("kv_blocked_s", p.kv_blocked_s.into()),
+                    ("sched_wait_s", p.sched_wait_s.into()),
+                    ("window_s", p.window_s.into()),
+                    ("path_s", p.path_s.into()),
+                ])
+            })),
+        ),
+        ("attribution", attr.to_json()),
+        ("whatif", Json::arr(whatif_rows(spans, cost).iter().map(WhatIfRow::to_json))),
+    ])
+}
+
+/// The `analyze` TCP command's response. With tracing off there is
+/// nothing to analyze and the response says so explicitly instead of
+/// returning an empty report.
+pub fn analyze_response(tracer: &Tracer, cost: &CostModel) -> Json {
+    if !tracer.is_enabled() {
+        return Json::obj(vec![
+            ("type", "analyze".into()),
+            ("enabled", false.into()),
+            ("error", "tracing disabled".into()),
+        ]);
+    }
+    let spans: Vec<TraceSpan> = tracer.spans().copied().collect();
+    let mut obj = BTreeMap::new();
+    obj.insert("type".to_string(), Json::from("analyze"));
+    obj.insert("enabled".to_string(), Json::from(true));
+    obj.insert("spans".to_string(), Json::from(tracer.len()));
+    obj.insert("spans_dropped".to_string(), Json::from(tracer.dropped() as usize));
+    if let Json::Obj(fields) = report(&spans, cost, DEFAULT_UTIL_WINDOWS) {
+        obj.extend(fields);
+    }
+    Json::Obj(obj)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{HardwareProfile, ModelConfig, QuantScheme, SimScale};
+    use crate::util::prop::{check, ensure};
+
+    fn ts(kind: SpanKind, start_s: f64, end_s: f64, session: u64) -> TraceSpan {
+        TraceSpan { kind, start_s, end_s, session, layer: None, tick: 0 }
+    }
+
+    fn cost() -> CostModel {
+        CostModel::new(
+            HardwareProfile::rtx3060(),
+            &ModelConfig::tiny(),
+            SimScale::Tiny,
+            QuantScheme::Hqq { bits: 4 },
+            QuantScheme::Hqq { bits: 3 },
+        )
+    }
+
+    #[test]
+    fn critical_path_attributes_blocking_time_and_skips_spec() {
+        let spans = vec![
+            ts(SpanKind::Attention, 0.0, 1.0, 1),
+            ts(SpanKind::DemandLoad, 1.0, 3.0, 1),
+            ts(SpanKind::ExpertCompute, 3.0, 4.0, 1),
+            // hidden prefetch: never on the path, never in the window
+            ts(SpanKind::SpecPrefetch, 0.0, 10.0, 1),
+        ];
+        let paths = critical_paths(&spans);
+        assert_eq!(paths.len(), 1);
+        let p = &paths[0];
+        assert_eq!(p.session, 1);
+        assert_eq!(p.chain, 3);
+        assert!((p.compute_s - 2.0).abs() < 1e-12);
+        assert!((p.demand_blocked_s - 2.0).abs() < 1e-12);
+        assert_eq!(p.kv_blocked_s, 0.0);
+        assert!((p.window_s - 4.0).abs() < 1e-12);
+        assert!((p.path_s - 4.0).abs() < 1e-12);
+        assert_eq!(p.sched_wait_s, 0.0);
+    }
+
+    #[test]
+    fn critical_path_clips_overlap_and_counts_gaps_as_sched_wait() {
+        // the demand load overlaps the compute span: only its tail past
+        // the front counts; the [4,6] gap before the last span is time
+        // the session owned nothing — scheduler wait
+        let spans = vec![
+            ts(SpanKind::Attention, 0.0, 2.0, 7),
+            ts(SpanKind::DemandLoad, 1.0, 3.0, 7),
+            ts(SpanKind::ExpertCompute, 6.0, 7.0, 7),
+        ];
+        let p = &critical_paths(&spans)[0];
+        assert!((p.compute_s - 3.0).abs() < 1e-12);
+        assert!((p.demand_blocked_s - 1.0).abs() < 1e-12);
+        assert!((p.window_s - 7.0).abs() < 1e-12);
+        assert!((p.sched_wait_s - 3.0).abs() < 1e-12);
+        assert!(p.path_s <= p.window_s);
+    }
+
+    #[test]
+    fn fully_hidden_span_drops_from_the_chain() {
+        let spans = vec![
+            ts(SpanKind::KvResume, 0.0, 5.0, 2),
+            // entirely under the resume wait: contributes nothing
+            ts(SpanKind::Attention, 1.0, 2.0, 2),
+        ];
+        let p = &critical_paths(&spans)[0];
+        assert_eq!(p.chain, 1);
+        assert!((p.kv_blocked_s - 5.0).abs() < 1e-12);
+        assert_eq!(p.compute_s, 0.0);
+    }
+
+    #[test]
+    fn attribution_fractions_sum_to_one_and_split_by_cause() {
+        let spans = vec![
+            ts(SpanKind::Attention, 0.0, 1.0, 1),
+            ts(SpanKind::DemandLoad, 1.0, 2.0, 1),
+            ts(SpanKind::KvResume, 2.0, 3.0, 1),
+            ts(SpanKind::LmHead, 5.0, 6.0, 1), // 2s sched gap
+        ];
+        let a = attribution(&critical_paths(&spans));
+        assert!((a.sum() - 1.0).abs() < 1e-12);
+        assert!((a.compute_frac - 2.0 / 6.0).abs() < 1e-12);
+        assert!((a.demand_load_frac - 1.0 / 6.0).abs() < 1e-12);
+        assert!((a.kv_resume_frac - 1.0 / 6.0).abs() < 1e-12);
+        assert!((a.queue_frac - 2.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn attribution_of_nothing_is_all_zero() {
+        let a = attribution(&critical_paths(&[]));
+        assert_eq!(a.sum(), 0.0);
+    }
+
+    #[test]
+    fn utilization_windows_measure_overlap_per_resource() {
+        let spans = vec![
+            ts(SpanKind::Attention, 0.0, 1.0, 1),
+            ts(SpanKind::DemandLoad, 0.0, 2.0, 1),
+        ];
+        let w = utilization_windows(&spans, 2);
+        assert_eq!(w.len(), 2);
+        assert!((w[0].gpu_util - 1.0).abs() < 1e-12);
+        assert!((w[0].link_util - 1.0).abs() < 1e-12);
+        assert_eq!(w[1].gpu_util, 0.0);
+        assert!((w[1].link_util - 1.0).abs() < 1e-12);
+        assert!(utilization_windows(&[], 4).is_empty());
+    }
+
+    #[test]
+    fn baseline_replay_reconstructs_a_serial_schedule() {
+        let spans = vec![
+            ts(SpanKind::Attention, 0.0, 1.0, 1),
+            ts(SpanKind::DemandLoad, 1.0, 3.0, 1),
+            ts(SpanKind::ExpertCompute, 3.0, 4.0, 1),
+        ];
+        let cm = cost();
+        assert!((replay(&spans, &cm, WhatIf::Baseline) - 4.0).abs() < 1e-12);
+        // all expert traffic gone: the two compute spans run back to back
+        assert!(
+            (replay(&spans, &cm, WhatIf::InfiniteExpertCache) - 2.0).abs() < 1e-12
+        );
+        // 2× link: the demand load's bytes term halves, latency stays
+        let lat = cm.profile.h2d_latency_s;
+        let want = 2.0 + lat + (2.0 - lat) / 2.0;
+        assert!((replay(&spans, &cm, WhatIf::DoubleLink) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn no_speculation_turns_prefetches_into_blocking_loads() {
+        let spans = vec![
+            ts(SpanKind::SpecPrefetch, 0.0, 2.0, 1),
+            ts(SpanKind::Attention, 0.0, 3.0, 1),
+            ts(SpanKind::ExpertCompute, 3.0, 4.0, 1),
+        ];
+        let cm = cost();
+        // hidden under compute: the prefetch costs nothing
+        assert!((replay(&spans, &cm, WhatIf::Baseline) - 4.0).abs() < 1e-12);
+        // forced on demand it serializes ahead of the compute chain
+        assert!((replay(&spans, &cm, WhatIf::NoSpeculation) - 6.0).abs() < 1e-12);
+        let rows = whatif_rows(&spans, &cm);
+        let spec_off =
+            rows.iter().find(|r| r.scenario == WhatIf::NoSpeculation).unwrap();
+        assert!(spec_off.speedup < 1.0, "losing speculation must not speed up");
+    }
+
+    #[test]
+    fn analyze_response_degrades_explicitly_without_tracing() {
+        let j = analyze_response(&Tracer::disabled(), &cost());
+        assert_eq!(j.get("type").unwrap().as_str(), Some("analyze"));
+        assert_eq!(j.get("enabled").unwrap().as_bool(), Some(false));
+        assert_eq!(j.get("error").unwrap().as_str(), Some("tracing disabled"));
+        assert!(j.get("attribution").is_none());
+    }
+
+    #[test]
+    fn analyze_response_carries_the_full_report() {
+        let mut tr = Tracer::enabled(64);
+        tr.record(
+            SpanKind::Attention,
+            crate::clock::Span { start: 0.0, end: 1.0 },
+            1,
+            Some(0),
+            1,
+        );
+        tr.record(
+            SpanKind::DemandLoad,
+            crate::clock::Span { start: 1.0, end: 2.0 },
+            1,
+            Some(0),
+            1,
+        );
+        let j = analyze_response(&tr, &cost());
+        assert_eq!(j.get("enabled").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("spans").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("spans_dropped").unwrap().as_usize(), Some(0));
+        assert!(j.get("attribution").unwrap().get("compute").is_some());
+        assert_eq!(j.get("requests").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(j.get("whatif").unwrap().as_arr().unwrap().len(), 3);
+        // the envelope must survive the line protocol round trip
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("type").unwrap().as_str(), Some("analyze"));
+    }
+
+    /// Randomized span soups: the structural identities must hold for
+    /// ARBITRARY inputs, not just engine-shaped ones — path ≤ window,
+    /// fractions sum to 1, and the what-if replays move in the only
+    /// direction their scenario allows.
+    #[test]
+    fn prop_path_attribution_and_whatif_identities() {
+        let cm = cost();
+        check(
+            "analysis-identities",
+            200,
+            |r| {
+                let n = r.below(40);
+                (0..n)
+                    .map(|_| {
+                        let start = r.f64() * 10.0;
+                        let dur = 1e-6 + r.f64() * 2.0;
+                        ts(
+                            SpanKind::ALL[r.below(SpanKind::ALL.len())],
+                            start,
+                            start + dur,
+                            r.below(3) as u64,
+                        )
+                    })
+                    .collect::<Vec<_>>()
+            },
+            |spans| {
+                let paths = critical_paths(spans);
+                for p in &paths {
+                    ensure(p.path_s <= p.window_s + 1e-9, "path exceeds window")?;
+                    ensure(p.sched_wait_s >= 0.0, "negative sched wait")?;
+                    ensure(
+                        (p.compute_s + p.demand_blocked_s + p.kv_blocked_s - p.path_s)
+                            .abs()
+                            < 1e-9,
+                        "path components do not sum",
+                    )?;
+                }
+                let a = attribution(&paths);
+                let total: f64 = paths.iter().map(|p| p.window_s).sum();
+                if total > 0.0 {
+                    ensure((a.sum() - 1.0).abs() < 1e-9, "fractions do not sum to 1")?;
+                } else {
+                    ensure(a.sum() == 0.0, "empty attribution must be zero")?;
+                }
+                let base = replay(spans, &cm, WhatIf::Baseline);
+                ensure(
+                    replay(spans, &cm, WhatIf::DoubleLink) <= base + 1e-9,
+                    "a faster link slowed the replay down",
+                )?;
+                ensure(
+                    replay(spans, &cm, WhatIf::InfiniteExpertCache) <= base + 1e-9,
+                    "an infinite cache slowed the replay down",
+                )?;
+                ensure(
+                    replay(spans, &cm, WhatIf::NoSpeculation) >= base - 1e-9,
+                    "losing speculation sped the replay up",
+                )?;
+                Ok(())
+            },
+        );
+    }
+}

@@ -16,11 +16,18 @@
 //! - [`Tracer::kind_totals`] / [`Tracer::breakdown_table`] aggregate
 //!   busy seconds per kind for `table2_throughput`-style terminal
 //!   reports.
+//! - [`analysis`] turns the ring into answers: per-window utilization,
+//!   per-request critical paths, aggregate bottleneck attribution, and
+//!   counterfactual what-if replays (2× link, infinite expert cache,
+//!   speculation off) — the coordinator's `analyze` command and the
+//!   load harness's SLO reports are built on it.
 //!
 //! Tracing is opt-in via `ServingConfig::trace`. A disabled tracer
 //! ([`Tracer::disabled`]) never allocates and every `record` call is a
 //! branch on a bool — the engine's timing and output are byte-identical
 //! with tracing on or off; only observability differs.
+
+pub mod analysis;
 
 use std::collections::BTreeMap;
 use std::collections::VecDeque;

@@ -21,7 +21,9 @@ use moe_offload::config::{
 use moe_offload::coordinator::{collect_events, Coordinator, Event, Request};
 use moe_offload::engine::{MoeEngine, Session};
 use moe_offload::harness;
+use moe_offload::trace::analysis::{attribution, critical_paths};
 use moe_offload::util::json::Json;
+use moe_offload::util::rng::Rng;
 use moe_offload::Result;
 
 fn artifacts_dir() -> Option<PathBuf> {
@@ -209,6 +211,102 @@ fn chrome_trace_round_trips_and_distinguishes_transfer_causes() {
     assert!(names.iter().any(|n| n == "demand_load"), "no demand_load spans");
     assert!(names.iter().any(|n| n == "spec_prefetch"), "no spec_prefetch spans");
     assert!(names.iter().any(|n| n == "attention"), "no attention spans");
+}
+
+#[test]
+fn critical_paths_bounded_by_wall_under_random_knobs() {
+    let Some(dir) = artifacts_dir() else { return };
+
+    // the analysis contract must hold for ANY scheduler shape, not just
+    // the configs the other tests pin: randomize width, offload policy,
+    // and batched-vs-sequential decode, then check that every session's
+    // critical path fits inside its own virtual wall time and that the
+    // aggregate attribution fractions tile exactly
+    for case in 0..4u64 {
+        let mut r = Rng::new(0xc4a7 + case);
+        let width = 1 + r.below(4);
+        let policy = match r.below(3) {
+            0 => OffloadPolicy::Full { cache_k: 2, spec_n: 2 },
+            1 => OffloadPolicy::LruOnly { cache_k: 2 },
+            _ => OffloadPolicy::OnDemand,
+        };
+        let batched = r.below(2) == 0;
+        let serving = ServingConfig {
+            policy,
+            expert_quant: QuantScheme::Hqq { bits: 3 },
+            attn_quant: QuantScheme::Hqq { bits: 4 },
+            sim_scale: SimScale::Tiny,
+            max_concurrent_sessions: width,
+            batched_decode: batched,
+            trace: true,
+            ..Default::default()
+        };
+        let mut engine =
+            harness::build_engine_with_serving(&dir, &serving, HardwareProfile::rtx3060())
+                .unwrap();
+
+        let mut sessions: Vec<Session> =
+            (0..width).map(|_| engine.new_session().unwrap()).collect();
+        for (i, sess) in sessions.iter_mut().enumerate() {
+            let prompt = toks(&format!("random knobs case {case} session {i}"));
+            engine.prefill(sess, &prompt).unwrap();
+        }
+        let ticks = 6;
+        let streams: Vec<Vec<u32>> = (0..width)
+            .map(|i| toks(&format!("decode stream {i} tokens"))[..ticks].to_vec())
+            .collect();
+        if batched && width >= 2 {
+            for t in 0..ticks {
+                let tick_toks: Vec<u32> = (0..width).map(|i| streams[i][t]).collect();
+                let mut refs: Vec<&mut Session> = sessions.iter_mut().collect();
+                engine.decode_batch(&mut refs, &tick_toks).unwrap();
+            }
+        } else {
+            for t in 0..ticks {
+                for (i, sess) in sessions.iter_mut().enumerate() {
+                    engine.decode_step(sess, streams[i][t]).unwrap();
+                }
+            }
+        }
+
+        let spans: Vec<_> = engine.tracer.spans().copied().collect();
+        assert!(!spans.is_empty(), "case {case}: traced run recorded no spans");
+        let paths = critical_paths(&spans);
+        assert_eq!(
+            paths.len(),
+            width,
+            "case {case}: every session must get a critical path"
+        );
+        for p in &paths {
+            let sess = sessions
+                .iter()
+                .find(|s| s.id == p.session)
+                .unwrap_or_else(|| panic!("case {case}: path for unknown session {}", p.session));
+            let wall: f64 = sess.run.prefill_sim_s
+                + sess.run.tokens.iter().map(|t| t.sim_s).sum::<f64>();
+            assert!(
+                p.path_s <= p.window_s * (1.0 + 1e-9) + 1e-12,
+                "case {case} session {}: path {} exceeds window {}",
+                p.session,
+                p.path_s,
+                p.window_s
+            );
+            assert!(
+                p.path_s <= wall * (1.0 + 1e-9) + 1e-12,
+                "case {case} session {} (width {width}, batched {batched}): \
+                 critical path {} exceeds virtual wall {}",
+                p.session,
+                p.path_s,
+                wall
+            );
+        }
+        let a = attribution(&paths);
+        assert!(
+            (a.sum() - 1.0).abs() < 1e-9,
+            "case {case}: attribution fractions sum to {} != 1",
+            a.sum()
+        );
+    }
 }
 
 #[test]
