@@ -378,7 +378,9 @@ fn main() {
                     for ev in s.events.iter() {
                         match ev {
                             Event::Token { .. } => stamps.push(std::time::Instant::now()),
-                            Event::Done { .. } | Event::Error { .. } => break,
+                            Event::Done { .. } | Event::Error { .. } | Event::Failed { .. } => {
+                                break
+                            }
                         }
                     }
                     stamps
@@ -393,7 +395,9 @@ fn main() {
                     long_ttft = ttft_s;
                     break;
                 }
-                Event::Error { message, .. } => panic!("long request failed: {message}"),
+                Event::Error { message, .. } | Event::Failed { message, .. } => {
+                    panic!("long request failed: {message}")
+                }
                 Event::Token { .. } => {}
             }
         }

@@ -1,6 +1,7 @@
 //! Serving / offloading policy configuration.
 
 use crate::error::{Error, Result};
+use crate::fault::FaultPlan;
 use crate::quant::tier::TierPolicy;
 
 /// Weight quantization scheme (per weight class).
@@ -226,6 +227,25 @@ pub struct ServingConfig {
     /// Ring capacity in spans while `trace` is on; the oldest spans are
     /// dropped (and counted) once full. Inert while `trace` is off.
     pub trace_span_capacity: usize,
+    /// Deterministic fault injection (see [`crate::fault`]): seeded
+    /// transient transfer failures, link brownouts, corrupt expert
+    /// payloads and KV-swap faults at the virtual-hardware seams, with
+    /// bounded-backoff recovery charged to the timeline. Disabled by
+    /// default — off is byte-identical serving, and the plan's other
+    /// fields are inert (never validated) while off.
+    pub faults: FaultPlan,
+    /// How long a client-facing control wait (e.g. the `analyze`
+    /// command's reply) may block before surfacing a typed
+    /// [`Error::Timeout`]. Replaces the historical hard-coded 120 s;
+    /// always validated (finite, > 0) — there is no off switch, a
+    /// serving thread must never wait forever.
+    pub request_timeout_s: f64,
+    /// Default per-request deadline in wall seconds, measured from
+    /// enqueue. The scheduler checks it at tick boundaries and cancels
+    /// over-deadline requests with a typed `Event::Failed`; a request's
+    /// own `deadline_s` overrides this default. `None` (default) means
+    /// no deadline.
+    pub deadline_s: Option<f64>,
 }
 
 impl Default for ServingConfig {
@@ -258,6 +278,10 @@ impl Default for ServingConfig {
             trace: false,
             // ~64 spans/token at tiny geometry -> roughly a 1k-token window
             trace_span_capacity: 65536,
+            faults: FaultPlan::default(),
+            // preserves the coordinator's historical hard-coded wait
+            request_timeout_s: 120.0,
+            deadline_s: None,
         }
     }
 }
@@ -380,6 +404,24 @@ impl ServingConfig {
                      is ~64 bytes resident; limit {})",
                     self.trace_span_capacity,
                     1 << 24
+                )));
+            }
+        }
+        // fault knobs follow the tier idiom: FaultPlan::validate is a
+        // no-op while the plan is disabled
+        self.faults.validate()?;
+        // the control-wait timeout has no off switch: a serving thread
+        // must never be configured to wait forever (or not at all)
+        if !self.request_timeout_s.is_finite() || self.request_timeout_s <= 0.0 {
+            return Err(Error::Config(format!(
+                "request_timeout_s must be finite and > 0, got {}",
+                self.request_timeout_s
+            )));
+        }
+        if let Some(d) = self.deadline_s {
+            if !d.is_finite() || d <= 0.0 {
+                return Err(Error::Config(format!(
+                    "deadline_s must be finite and > 0 when set, got {d}"
                 )));
             }
         }
@@ -665,6 +707,63 @@ mod tests {
             inert.validate().is_ok(),
             "inert trace knobs must not block a trace-off deployment"
         );
+    }
+
+    #[test]
+    fn fault_knob_defaults_and_validation() {
+        let d = ServingConfig::default();
+        assert!(!d.faults.enabled, "fault injection is opt-in");
+
+        let bad = ServingConfig {
+            faults: FaultPlan { transfer_fail_p: 2.0, ..FaultPlan::transient_smoke(1) },
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
+        let ok = ServingConfig {
+            faults: FaultPlan::transient_smoke(1),
+            ..Default::default()
+        };
+        assert!(ok.validate().is_ok());
+    }
+
+    #[test]
+    fn fault_knobs_are_inert_when_off() {
+        // invalid values behind the off switch must not reject the
+        // config (same rule every opt-in knob family follows)
+        let inert = ServingConfig {
+            faults: FaultPlan {
+                enabled: false,
+                transfer_fail_p: f64::NAN,
+                max_retries: 0,
+                backoff_base_s: -1.0,
+                ..FaultPlan::default()
+            },
+            ..Default::default()
+        };
+        assert!(
+            inert.validate().is_ok(),
+            "inert fault knobs must not block a faults-off deployment"
+        );
+    }
+
+    #[test]
+    fn timeout_and_deadline_knob_validation() {
+        let d = ServingConfig::default();
+        assert_eq!(d.request_timeout_s, 120.0, "default preserves the legacy wait");
+        assert_eq!(d.deadline_s, None, "no deadline by default");
+
+        for bad in [0.0, -5.0, f64::NAN, f64::INFINITY] {
+            let c = ServingConfig { request_timeout_s: bad, ..Default::default() };
+            assert!(c.validate().is_err(), "request_timeout_s {bad} must reject");
+            let c = ServingConfig { deadline_s: Some(bad), ..Default::default() };
+            assert!(c.validate().is_err(), "deadline_s {bad} must reject");
+        }
+        let ok = ServingConfig {
+            request_timeout_s: 1.5,
+            deadline_s: Some(30.0),
+            ..Default::default()
+        };
+        assert!(ok.validate().is_ok());
     }
 
     #[test]

@@ -85,6 +85,12 @@ pub struct Request {
     pub top_p: f32,
     /// Chat-format the prompt with the training template.
     pub chat: bool,
+    /// Wall-clock completion deadline in seconds, measured from enqueue
+    /// (it covers queue wait AND serving). `None` falls back to the
+    /// `ServingConfig::deadline_s` default; both `None` disables
+    /// enforcement. The scheduler checks at tick boundaries and cancels
+    /// an over-deadline request with a typed [`Event::Failed`].
+    pub deadline_s: Option<f64>,
 }
 
 impl Request {
@@ -96,6 +102,7 @@ impl Request {
             temperature: 1.0,
             top_p: 1.0,
             chat: true,
+            deadline_s: None,
         }
     }
 }
@@ -201,12 +208,30 @@ pub enum Event {
         /// non-zero means every span-derived analysis is working from a
         /// truncated record. Always 0 with tracing off.
         trace_spans_dropped: u64,
+        /// Total injected faults since engine start (all types; 0 with
+        /// `ServingConfig::faults` off).
+        faults_injected: u64,
+        /// Total transient expert-transfer retries (failed attempts that
+        /// recovered via backoff) since engine start.
+        transfer_retries: u64,
+        /// Total requests that terminated with an error or a typed
+        /// failure since engine start.
+        requests_failed: u64,
+        /// Total requests cancelled for exceeding their deadline since
+        /// engine start (a subset of `requests_failed`).
+        deadline_cancellations: u64,
         /// Per-request time breakdown — `Some` only when span tracing is
         /// on (`ServingConfig::trace`), so tracing-off serving output
         /// stays byte-identical.
         breakdown: Option<Breakdown>,
     },
     Error { request_id: u64, message: String },
+    /// Typed terminal failure: an injected fatal fault, a fault-degraded
+    /// session that could not recover, or a deadline cancellation.
+    /// Exactly one request fails per event — neighbors in the same
+    /// batched tick are untouched — and the client sees a structured
+    /// terminal instead of a dropped stream or a panic.
+    Failed { request_id: u64, message: String },
 }
 
 /// Handle returned to submitters: stream of events for their request.
@@ -222,6 +247,7 @@ impl ResponseStream {
             match ev {
                 Event::Done { text, .. } => return Ok(text),
                 Event::Error { message, .. } => return Err(Error::Serving(message)),
+                Event::Failed { message, .. } => return Err(Error::Serving(message)),
                 Event::Token { .. } => {}
             }
         }
@@ -300,6 +326,10 @@ struct LiveSession {
     admit_seq: u64,
     /// How many times this session has been swapped out (runaway guard).
     preempt_count: u32,
+    /// Wall-clock instant this request must finish by (enqueue time +
+    /// its effective deadline), `None` when no deadline applies. Checked
+    /// at tick boundaries; preempted sessions keep theirs.
+    deadline_at: Option<Instant>,
 }
 
 /// The coordinator: owns the engine worker thread.
@@ -308,6 +338,11 @@ pub struct Coordinator {
     next_id: AtomicU64,
     pub metrics: Arc<Metrics>,
     running: Arc<AtomicBool>,
+    /// `ServingConfig::request_timeout_s` as `f64` bits, published by
+    /// the worker once the engine is built — it bounds client-facing
+    /// waits like [`Coordinator::analyze`]. Until the engine exists,
+    /// readers see the config default (120 s).
+    request_timeout_s: Arc<AtomicU64>,
     worker: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -323,8 +358,10 @@ impl Coordinator {
         let (work_tx, work_rx) = channel::<Work>();
         let metrics = Arc::new(Metrics::new());
         let running = Arc::new(AtomicBool::new(true));
+        let request_timeout_s = Arc::new(AtomicU64::new(120.0f64.to_bits()));
         let m = Arc::clone(&metrics);
         let r = Arc::clone(&running);
+        let t = Arc::clone(&request_timeout_s);
         let worker = std::thread::spawn(move || {
             let mut engine = match make_engine() {
                 Ok(e) => e,
@@ -348,6 +385,7 @@ impl Coordinator {
                     return;
                 }
             };
+            t.store(engine.request_timeout_s.to_bits(), Ordering::SeqCst);
             scheduler_loop(&mut engine, &work_rx, seed, &m);
             r.store(false, Ordering::SeqCst);
         });
@@ -356,6 +394,7 @@ impl Coordinator {
             next_id: AtomicU64::new(1),
             metrics,
             running,
+            request_timeout_s,
             worker: Some(worker),
         }
     }
@@ -382,8 +421,16 @@ impl Coordinator {
         self.work_tx
             .send(Work::Analyze(tx))
             .map_err(|_| Error::Serving("engine worker is gone".into()))?;
-        rx.recv_timeout(Duration::from_secs(120))
-            .map_err(|_| Error::Serving("analyze request got no answer".into()))
+        // the wait is bounded by ServingConfig::request_timeout_s (not a
+        // hard-coded constant): validate() guarantees it finite and > 0,
+        // which from_secs_f64 requires
+        let timeout_s = f64::from_bits(self.request_timeout_s.load(Ordering::SeqCst));
+        rx.recv_timeout(Duration::from_secs_f64(timeout_s)).map_err(|_| {
+            Error::Timeout(format!(
+                "analyze request got no answer within {timeout_s}s \
+                 (ServingConfig::request_timeout_s)"
+            ))
+        })
     }
 
     /// Whether the engine worker is still alive.
@@ -530,7 +577,28 @@ fn scheduler_loop(
             }
         }
 
-        // 3) admit new requests while a width slot and KV blocks allow
+        // 3) fail queued requests whose deadline already passed — an
+        // over-deadline request must not consume a width slot and a
+        // prefill just to be cancelled at its first tick. One rotation
+        // through the deque preserves FIFO order; with no deadlines
+        // configured every entry falls through untouched.
+        for _ in 0..pending.len() {
+            let p = pending.pop_front().unwrap();
+            let over = effective_deadline_s(engine, &p.req)
+                .is_some_and(|d| p.enqueued.elapsed().as_secs_f64() >= d);
+            if over {
+                m.inc("requests_failed", 1);
+                m.inc("deadline_cancellations", 1);
+                let _ = p.tx.send(Event::Failed {
+                    request_id: p.req.id,
+                    message: "deadline exceeded before admission".into(),
+                });
+            } else {
+                pending.push_back(p);
+            }
+        }
+
+        // 4) admit new requests while a width slot and KV blocks allow
         while !pending.is_empty() && preempted.is_empty() && active.len() < max_sessions {
             // coarse pre-gate: the byte tokenizer yields at least
             // prompt.len() tokens, so when the pool clearly can't take
@@ -631,6 +699,72 @@ fn scheduler_loop(
                 }
             }
         }
+
+        // 5) tick-boundary robustness pass, BEFORE the tick dispatch
+        // touches any shared state: cancel over-deadline sessions with a
+        // typed Failed event, then consult the fault injector's
+        // per-session pre-gate — a degraded or failed session simply
+        // drops out of this tick's batch, never poisoning it. Both
+        // checks are no-ops in a default (no-deadline, faults-off) build.
+        for _ in 0..preempted.len() {
+            let live = preempted.pop_front().unwrap();
+            if deadline_passed(&live) {
+                fail_deadline(m, live);
+            } else {
+                preempted.push_back(live);
+            }
+        }
+        for _ in 0..active.len() {
+            let mut live = active.pop_front().unwrap();
+            if deadline_passed(&live) {
+                // the session (and its KV blocks) free on drop;
+                // neighbors keep decoding undisturbed
+                fail_deadline(m, live);
+                continue;
+            }
+            match engine.fault_gate(live.id) {
+                None => active.push_back(live),
+                Some(Error::FaultTransient(msg)) => {
+                    // retry budget exhausted: degrade through the
+                    // existing preempt/requeue path — the session swaps
+                    // out and resumes bit-identically once re-admitted
+                    if live.preempt_count >= MAX_PREEMPTIONS_PER_SESSION {
+                        m.inc("requests_failed", 1);
+                        let _ = live.tx.send(Event::Failed {
+                            request_id: live.id,
+                            message: format!(
+                                "session degraded {MAX_PREEMPTIONS_PER_SESSION} \
+                                 times without completing: {msg}"
+                            ),
+                        });
+                        continue;
+                    }
+                    match engine.preempt_session(&mut live.sess) {
+                        Ok(()) => {
+                            live.preempt_count += 1;
+                            preempted.push_back(live);
+                        }
+                        Err(e) => {
+                            m.inc("requests_failed", 1);
+                            let _ = live.tx.send(Event::Failed {
+                                request_id: live.id,
+                                message: format!("fault degradation failed: {e}"),
+                            });
+                        }
+                    }
+                }
+                Some(e) => {
+                    // fatal injected fault: exactly this request fails,
+                    // with a typed event instead of a panic
+                    m.inc("requests_failed", 1);
+                    let _ = live.tx.send(Event::Failed {
+                        request_id: live.id,
+                        message: e.to_string(),
+                    });
+                }
+            }
+        }
+
         m.set_gauge("active_sessions", active.len() as u64);
         let kv = engine.kv_pool.stats();
         m.record_kv_pool(
@@ -643,6 +777,13 @@ fn scheduler_loop(
             engine.tiers.hot_hits,
             engine.tiers.promotions,
             engine.tiers.bytes_saved(),
+        );
+        let fs = engine.fault_stats();
+        m.record_faults(
+            fs.injected,
+            fs.transfer_retries,
+            m.counter("requests_failed"),
+            m.counter("deadline_cancellations"),
         );
         // ring overflow visibility: spans silently aged out of the trace
         // ring bias every downstream analysis, so operators must see the
@@ -668,7 +809,7 @@ fn scheduler_loop(
             continue;
         }
 
-        // 4) one scheduling tick: exactly one decode step per live
+        // 6) one scheduling tick: exactly one decode step per live
         // decoding session, plus — with chunked prefill — at most one
         // prompt chunk of the oldest admission still prefilling.
         // Batched mode advances them together through decode_batch /
@@ -1120,6 +1261,47 @@ fn advance_prefill(
     }
 }
 
+/// The deadline that applies to `req`, in wall seconds from its enqueue
+/// time: the request's own `deadline_s` wins over the
+/// `ServingConfig::deadline_s` default. Client-supplied values are
+/// sanitized here (non-finite or non-positive ⇒ ignored) — `Request`
+/// fields arrive from the wire unvalidated, and
+/// `Duration::from_secs_f64` panics on garbage.
+fn effective_deadline_s(engine: &MoeEngine, req: &Request) -> Option<f64> {
+    req.deadline_s
+        .filter(|d| d.is_finite() && *d > 0.0)
+        .or(engine.default_deadline_s)
+}
+
+/// The wall-clock instant an admitted request must finish by. `started`
+/// is the admission instant and `queue_wait_s` what the request already
+/// spent queued, so the deadline is anchored at ENQUEUE time — a request
+/// cannot buy more lifetime by waiting longer.
+fn deadline_at(
+    engine: &MoeEngine,
+    req: &Request,
+    started: Instant,
+    queue_wait_s: f64,
+) -> Option<Instant> {
+    let d = effective_deadline_s(engine, req)?;
+    Some(started + Duration::from_secs_f64((d - queue_wait_s).max(0.0)))
+}
+
+fn deadline_passed(live: &LiveSession) -> bool {
+    live.deadline_at.is_some_and(|d| Instant::now() >= d)
+}
+
+/// Cancel an over-deadline session with a typed [`Event::Failed`]. The
+/// session — and its KV blocks — free on drop; nothing else is touched.
+fn fail_deadline(m: &Metrics, live: LiveSession) {
+    m.inc("requests_failed", 1);
+    m.inc("deadline_cancellations", 1);
+    let _ = live.tx.send(Event::Failed {
+        request_id: live.id,
+        message: "request deadline exceeded".into(),
+    });
+}
+
 /// How often one session may be swapped out before the scheduler gives up
 /// on it — a pure runaway guard; normal preemption churn stays far below.
 const MAX_PREEMPTIONS_PER_SESSION: u32 = 64;
@@ -1264,6 +1446,7 @@ fn admit(
     admit_seq: u64,
 ) -> std::result::Result<Option<LiveSession>, AdmitRefusal> {
     let started = Instant::now();
+    let deadline = deadline_at(engine, &req, started, queue_wait_s);
     let (prompt_tokens, budget, mut sess, mut sampler) =
         match open_session(engine, tokenizer, &req, tokens, base_seed) {
             Ok(x) => x,
@@ -1302,6 +1485,7 @@ fn admit(
         ttft_s,
         admit_seq,
         preempt_count: 0,
+        deadline_at: deadline,
     }))
 }
 
@@ -1327,6 +1511,7 @@ fn admit_chunked(
     admit_seq: u64,
 ) -> std::result::Result<Option<LiveSession>, AdmitRefusal> {
     let started = Instant::now();
+    let deadline = deadline_at(engine, &req, started, queue_wait_s);
     let (prompt_tokens, budget, mut sess, sampler) =
         match open_session(engine, tokenizer, &req, tokens, base_seed) {
             Ok(x) => x,
@@ -1355,6 +1540,7 @@ fn admit_chunked(
         ttft_s: 0.0,
         admit_seq,
         preempt_count: 0,
+        deadline_at: deadline,
         phase: Phase::Prefilling { prompt: prompt_tokens, fed: reused },
     }))
 }
@@ -1504,6 +1690,10 @@ fn finish(m: &Metrics, engine: &mut MoeEngine, live: LiveSession, active_session
         tier_promotions: engine.tiers.promotions,
         link_bytes_saved: engine.tiers.bytes_saved(),
         trace_spans_dropped: engine.tracer.dropped(),
+        faults_injected: engine.fault_stats().injected,
+        transfer_retries: engine.fault_stats().transfer_retries,
+        requests_failed: m.counter("requests_failed"),
+        deadline_cancellations: m.counter("deadline_cancellations"),
         breakdown,
     });
 }
@@ -1520,7 +1710,10 @@ pub fn collect_events_timeout(stream: &ResponseStream, timeout: Duration) -> Vec
         }
         match stream.events.recv_timeout(deadline - now) {
             Ok(ev) => {
-                let done = matches!(ev, Event::Done { .. } | Event::Error { .. });
+                let done = matches!(
+                    ev,
+                    Event::Done { .. } | Event::Error { .. } | Event::Failed { .. }
+                );
                 out.push(ev);
                 if done {
                     break;

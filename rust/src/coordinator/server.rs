@@ -12,7 +12,8 @@
 //!     "prefix_inserted_blocks":...,"prefix_evicted_blocks":...,"expert_loads_deduped":...,
 //!     "batched_kernel_calls":...,"batched_ticks":...,"mixed_ticks":...,"batch_occupancy":...,
 //!     "expert_hot_hits":...,"tier_promotions":...,"link_bytes_saved":...,
-//!     "trace_spans_dropped":...}
+//!     "trace_spans_dropped":...,"faults_injected":...,"transfer_retries":...,
+//!     "requests_failed":...,"deadline_cancellations":...}
 //! ```
 //!
 //! The done event carries a field for EVERY gauge the scheduler records
@@ -109,6 +110,11 @@ pub fn parse_request(line: &str) -> Result<Request> {
     if let Some(c) = v.get("chat").and_then(Json::as_bool) {
         req.chat = c;
     }
+    if let Some(d) = v.get("deadline_s").and_then(Json::as_f64) {
+        // sanitized again at the scheduler (non-finite/non-positive are
+        // ignored there), so a hostile value can't panic the worker
+        req.deadline_s = Some(d);
+    }
     Ok(req)
 }
 
@@ -140,6 +146,10 @@ pub const GAUGE_DONE_FIELDS: &[(&str, &str)] = &[
     ("tier_promotions", "tier_promotions"),
     ("link_bytes_saved", "link_bytes_saved"),
     ("trace_spans_dropped", "trace_spans_dropped"),
+    ("faults_injected", "faults_injected"),
+    ("transfer_retries", "transfer_retries"),
+    ("requests_failed", "requests_failed"),
+    ("deadline_cancellations", "deadline_cancellations"),
 ];
 
 /// Every per-request breakdown histogram the scheduler observes (span
@@ -196,6 +206,10 @@ pub fn event_to_json(ev: &Event) -> Json {
             tier_promotions,
             link_bytes_saved,
             trace_spans_dropped,
+            faults_injected,
+            transfer_retries,
+            requests_failed,
+            deadline_cancellations,
             breakdown,
             ..
         } => {
@@ -232,6 +246,10 @@ pub fn event_to_json(ev: &Event) -> Json {
                 ("tier_promotions", (*tier_promotions as usize).into()),
                 ("link_bytes_saved", (*link_bytes_saved as usize).into()),
                 ("trace_spans_dropped", (*trace_spans_dropped as usize).into()),
+                ("faults_injected", (*faults_injected as usize).into()),
+                ("transfer_retries", (*transfer_retries as usize).into()),
+                ("requests_failed", (*requests_failed as usize).into()),
+                ("deadline_cancellations", (*deadline_cancellations as usize).into()),
             ];
             // breakdown fields ride the trace knob: absent (not zeroed)
             // when tracing is off, keeping the off-path byte-identical
@@ -247,6 +265,13 @@ pub fn event_to_json(ev: &Event) -> Json {
         }
         Event::Error { message, .. } => Json::obj(vec![
             ("type", "error".into()),
+            ("message", Json::str(message.clone())),
+        ]),
+        // typed terminal failure (injected fatal fault, exhausted
+        // degradation, or deadline cancellation) — distinct from "error"
+        // so clients can tell policy-failed requests from malformed ones
+        Event::Failed { message, .. } => Json::obj(vec![
+            ("type", "failed".into()),
             ("message", Json::str(message.clone())),
         ]),
     }
@@ -292,7 +317,10 @@ fn handle_conn(stream: TcpStream, coord: &Coordinator) -> Result<()> {
             Ok(req) => {
                 let resp = coord.submit(req);
                 for ev in resp.events.iter() {
-                    let done = matches!(ev, Event::Done { .. } | Event::Error { .. });
+                    let done = matches!(
+                        ev,
+                        Event::Done { .. } | Event::Error { .. } | Event::Failed { .. }
+                    );
                     writeln!(writer, "{}", event_to_json(&ev))?;
                     if done {
                         break;
@@ -368,6 +396,10 @@ mod tests {
             tier_promotions: 2,
             link_bytes_saved: 4096,
             trace_spans_dropped: 3,
+            faults_injected: 7,
+            transfer_retries: 4,
+            requests_failed: 1,
+            deadline_cancellations: 1,
             breakdown: None,
         }
     }
@@ -419,6 +451,28 @@ mod tests {
         assert_eq!(j.get("link_bytes_saved").unwrap().as_usize(), Some(4096));
         // ...and trace-ring overflow visibility
         assert_eq!(j.get("trace_spans_dropped").unwrap().as_usize(), Some(3));
+        // ...and the fault-injection / resilience counters
+        assert_eq!(j.get("faults_injected").unwrap().as_usize(), Some(7));
+        assert_eq!(j.get("transfer_retries").unwrap().as_usize(), Some(4));
+        assert_eq!(j.get("requests_failed").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("deadline_cancellations").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn failed_event_serializes_typed() {
+        let j = event_to_json(&Event::Failed {
+            request_id: 3,
+            message: "request deadline exceeded".into(),
+        });
+        assert_eq!(j.get("type").unwrap().as_str(), Some("failed"));
+        assert!(j.get("message").unwrap().as_str().unwrap().contains("deadline"));
+    }
+
+    #[test]
+    fn parse_request_reads_deadline() {
+        let r = parse_request(r#"{"prompt":"hi","deadline_s":2.5}"#).unwrap();
+        assert_eq!(r.deadline_s, Some(2.5));
+        assert_eq!(parse_request(r#"{"prompt":"hi"}"#).unwrap().deadline_s, None);
     }
 
     /// Gauge / done-JSON parity: drive every gauge-recording path the
@@ -443,6 +497,7 @@ mod tests {
         m.record_batch(1, 1, 1, 1, 1);
         m.record_tiers(1, 1, 1);
         m.set_gauge("trace_spans_dropped", 1);
+        m.record_faults(1, 1, 1, 1);
         let names = m.gauge_names();
         assert!(!names.is_empty());
         let j = event_to_json(&sample_done());

@@ -45,9 +45,10 @@ use crate::cache::manager::{CacheEvent, CacheManager};
 use crate::clock::Timeline;
 use crate::config::{HardwareProfile, Manifest, OffloadPolicy, ServingConfig};
 use crate::error::{Error, Result};
+use crate::fault::{FaultInjector, FaultStats};
 use crate::kv::KvPool;
 use crate::memory::copy_engine::{CopyEngine, TransferTicket};
-use crate::memory::device::DeviceMemory;
+use crate::memory::device::{DeviceExpert, DeviceMemory};
 use crate::memory::host::ExpertId;
 use crate::model::{ModelWeights, Sampler};
 use crate::prefix::PrefixCache;
@@ -250,6 +251,20 @@ pub struct MoeEngine {
     /// their next demand staging is a [`SpanKind::TierReload`], not a
     /// plain demand-load. Entries clear on the next staging or hit.
     tier_reload_pending: HashSet<ExpertId>,
+    /// Deterministic fault injector (see [`crate::fault`]) — seeded from
+    /// `ServingConfig::faults`. Inert (every call is a branch on a bool)
+    /// unless the plan is enabled; the scheduler consults
+    /// [`Self::fault_gate`] at tick boundaries and the staging / KV-swap
+    /// seams charge recovery to the timeline themselves.
+    faults: FaultInjector,
+    /// `ServingConfig::request_timeout_s`, mirrored here so the
+    /// coordinator's client-facing waits can bound themselves without
+    /// re-threading the whole serving config.
+    pub request_timeout_s: f64,
+    /// `ServingConfig::deadline_s`: the default per-request completion
+    /// deadline the scheduler enforces when a request carries none of
+    /// its own. `None` (the default) disables enforcement.
+    pub default_deadline_s: Option<f64>,
 }
 
 impl MoeEngine {
@@ -424,12 +439,30 @@ impl MoeEngine {
             tick: 0,
             span_sess: 0,
             tier_reload_pending: HashSet::new(),
+            faults: FaultInjector::new(&serving.faults),
+            request_timeout_s: serving.request_timeout_s,
+            default_deadline_s: serving.deadline_s,
         })
     }
 
     /// The scheduler tick most recently begun (span attribution).
     pub fn current_tick(&self) -> u64 {
         self.tick
+    }
+
+    /// Lifetime fault-injection counters (all zero with faults off).
+    pub fn fault_stats(&self) -> FaultStats {
+        self.faults.stats()
+    }
+
+    /// Tick-boundary fault pre-gate for `session` (see
+    /// [`FaultInjector::gate`]). The scheduler calls this once per live
+    /// session per tick, BEFORE the session's step touches any shared
+    /// state: [`Error::FaultTransient`] degrades the session through the
+    /// existing preempt/requeue path, [`Error::FaultFatal`] fails exactly
+    /// that request. Always `None` with faults off.
+    pub fn fault_gate(&mut self, session: u64) -> Option<Error> {
+        self.faults.gate(session)
     }
 
     /// Open a fresh session (virgin paged KV — zero blocks committed —
@@ -492,9 +525,9 @@ impl MoeEngine {
     pub fn preempt_session(&mut self, sess: &mut Session) -> Result<()> {
         let bytes = sess.kv.swap_out()?;
         if bytes > 0 {
-            let span = self
-                .timeline
-                .transfer(self.cost.kv_swap_s(bytes), self.timeline.now());
+            let swap_s = self.cost.kv_swap_s(bytes);
+            self.charge_kv_swap_faults(swap_s, sess.id);
+            let span = self.timeline.transfer(swap_s, self.timeline.now());
             self.tracer
                 .record(SpanKind::KvResume, span, sess.id, None, self.tick);
             self.timeline.wait_until(span.end);
@@ -521,14 +554,32 @@ impl MoeEngine {
             Err(e) => return Err(e),
         };
         if bytes > 0 {
-            let span = self
-                .timeline
-                .transfer(self.cost.kv_swap_s(bytes), self.timeline.now());
+            let swap_s = self.cost.kv_swap_s(bytes);
+            self.charge_kv_swap_faults(swap_s, sess.id);
+            let span = self.timeline.transfer(swap_s, self.timeline.now());
             self.tracer
                 .record(SpanKind::KvResume, span, sess.id, None, self.tick);
             self.timeline.wait_until(span.end);
         }
         Ok(())
+    }
+
+    /// Charge any injected KV swap/resume failures ahead of a
+    /// `swap_s`-second swap: the retry run (failed attempts + backoff
+    /// from [`FaultInjector::kv_swap`]) burns link time as a
+    /// [`SpanKind::FaultRetry`] span, and the real swap transfer then
+    /// queues behind it — so `wait_until` on the swap's own span stalls
+    /// the session through the recovery too. No-op with faults off.
+    fn charge_kv_swap_faults(&mut self, swap_s: f64, sess: u64) {
+        if !self.faults.enabled() {
+            return;
+        }
+        let extra = self.faults.kv_swap(swap_s);
+        if extra > 0.0 {
+            let span = self.timeline.transfer(extra, self.timeline.now());
+            self.tracer
+                .record(SpanKind::FaultRetry, span, sess, None, self.tick);
+        }
     }
 
     // ---------------------------------------------------------------------
@@ -1796,6 +1847,7 @@ impl MoeEngine {
         for e in 0..self.weights.cfg.n_experts {
             let id = ExpertId::new(l, e);
             let (t_s, t_bytes) = self.expert_stage_cost(id);
+            let t_s = self.fault_transfer_s(t_s, l);
             let span = self.timeline.transfer(t_s, self.timeline.now());
             self.tracer
                 .record(SpanKind::DemandLoad, span, self.span_sess, Some(l), self.tick);
@@ -1804,8 +1856,7 @@ impl MoeEngine {
             tstats.stall_s += self.timeline.now() - before;
             tstats.transfer_s += t_s;
             tstats.bytes_transferred += t_bytes;
-            let ticket = self.copy.submit(id);
-            let (_, de) = self.copy.wait(ticket)?;
+            let de = self.stage_verified(id, t_s, l)?;
             self.cache.insert_loaded(id, de)?;
             tstats.misses += 1;
         }
@@ -1831,6 +1882,70 @@ impl MoeEngine {
         self.tiers.uniform_bytes += self.cost.expert_wire_bytes;
         self.tiers.actual_bytes += t_bytes;
         (t_s, t_bytes)
+    }
+
+    /// Apply the fault plan to one expert-staging transfer of `t_s`
+    /// seconds: the retry run from [`FaultInjector::transfer`] (failed
+    /// attempts + exponential backoff) burns link time ahead of the real
+    /// copy as a [`SpanKind::FaultRetry`] span — the real transfer then
+    /// queues behind it, so a blocking demand load stalls through the
+    /// recovery too while a speculative prefetch merely lands later.
+    /// Returns the duration of the eventually-successful attempt
+    /// (brownout episodes stretch it). With faults off: `t_s`, no draws.
+    fn fault_transfer_s(&mut self, t_s: f64, layer: usize) -> f64 {
+        if !self.faults.enabled() {
+            return t_s;
+        }
+        let out = self.faults.transfer(t_s);
+        if out.extra_s > 0.0 {
+            let span = self.timeline.transfer(out.extra_s, self.timeline.now());
+            self.tracer
+                .record(SpanKind::FaultRetry, span, self.span_sess, Some(layer), self.tick);
+        }
+        t_s * out.slowdown
+    }
+
+    /// Run `id` through the copy engine and, when faults are enabled,
+    /// verify the staged payload against the pool's build-time checksum
+    /// — with the injector deciding whether this copy "read" corrupt. A
+    /// corrupt read re-stages (the host-side source is intact, so the
+    /// re-read comes back clean), charging the re-copy + backoff to the
+    /// link as a [`SpanKind::FaultRetry`] span that blocks the demand
+    /// front. The loop is bounded by the retry budget purely as a
+    /// belt-and-braces against `corrupt_p = 1` plans.
+    fn stage_verified(&mut self, id: ExpertId, t_s: f64, layer: usize) -> Result<DeviceExpert> {
+        let ticket = self.copy.submit(id)?;
+        let (_, mut de) = self.copy.wait(ticket)?;
+        if !self.faults.enabled() {
+            return Ok(de);
+        }
+        let mut restage = 0;
+        while restage < self.faults.max_retries() && !self.staged_copy_clean(id) {
+            let cost = self.faults.restage_cost_s(t_s, restage);
+            let span = self.timeline.transfer(cost, self.timeline.now());
+            self.tracer
+                .record(SpanKind::FaultRetry, span, self.span_sess, Some(layer), self.tick);
+            self.timeline.wait_until(span.end);
+            let ticket = self.copy.submit(id)?;
+            de = self.copy.wait(ticket)?.1;
+            restage += 1;
+        }
+        Ok(de)
+    }
+
+    /// Post-copy checksum verification: recompute the staged payload's
+    /// checksum against the pool's build-time value, with the injector
+    /// deciding whether this particular copy "read" corrupt. The injected
+    /// draw happens FIRST so the fault stream advances identically
+    /// whatever the real comparison says.
+    fn staged_copy_clean(&mut self, id: ExpertId) -> bool {
+        let injected = self.faults.corrupt();
+        let pool = &self.weights.experts;
+        let verified = match (pool.expected_checksum(id), pool.get(id)) {
+            (Ok(want), Ok(host)) => host.payload_checksum() == want,
+            _ => false,
+        };
+        !injected && verified
     }
 
     /// Online tier adaptation (see [`crate::quant::tier`]): every
@@ -1942,6 +2057,7 @@ impl MoeEngine {
             CacheEvent::Miss(_) => {
                 let reload = self.tier_reload_pending.remove(&id);
                 let (t_s, t_bytes) = self.expert_stage_cost(id);
+                let t_s = self.fault_transfer_s(t_s, id.layer as usize);
                 let span = self.timeline.transfer(t_s, self.timeline.now());
                 self.tracer.record(
                     if reload { SpanKind::TierReload } else { SpanKind::DemandLoad },
@@ -1956,8 +2072,7 @@ impl MoeEngine {
                 tstats.transfer_s += t_s;
                 tstats.bytes_transferred += t_bytes;
                 tstats.misses += 1;
-                let ticket = self.copy.submit(id);
-                let (_, de) = self.copy.wait(ticket)?;
+                let de = self.stage_verified(id, t_s, id.layer as usize)?;
                 self.cache.insert_loaded(id, de)?;
             }
         }
@@ -2044,6 +2159,10 @@ impl MoeEngine {
                 }
             }
             let (t_s, t_bytes) = self.expert_stage_cost(id);
+            // speculative transfers ride the same faulty link: the retry
+            // run delays this (and every later) transfer but never blocks
+            // the decode front — the claim site waits on `span.end`
+            let t_s = self.fault_transfer_s(t_s, layer);
             let span = self.timeline.transfer(t_s, self.timeline.now());
             // a speculative issue supersedes any pending re-tier reload
             self.tier_reload_pending.remove(&id);
@@ -2056,7 +2175,7 @@ impl MoeEngine {
             );
             tstats.transfer_s += t_s;
             tstats.bytes_transferred += t_bytes;
-            let ticket = self.copy.submit(id);
+            let ticket = self.copy.submit(id)?;
             self.in_flight.insert(id, InFlight { ticket, ready_at: span.end });
             self.spec_queue.push_back(id);
         }

@@ -33,6 +33,31 @@ pub enum Error {
     #[error("kv pool exhausted: {0}")]
     KvPoolExhausted(String),
 
+    /// An injected (or, in principle, real) fault whose bounded retries
+    /// were exhausted but which does not poison the session's state.
+    /// The scheduler reacts structurally, like `KvPoolExhausted`: the
+    /// affected session is preempted and requeued, the rest of the
+    /// batched tick proceeds untouched.
+    #[error("transient fault (retries exhausted): {0}")]
+    FaultTransient(String),
+
+    /// An injected unrecoverable fault. The scheduler fails exactly the
+    /// affected request with a typed `Event::Failed` — never a panic,
+    /// never the whole batch.
+    #[error("fatal fault: {0}")]
+    FaultFatal(String),
+
+    /// The request exceeded its deadline (`Request::deadline_s`
+    /// or the `ServingConfig::deadline_s` default). Enforced by the
+    /// scheduler at tick boundaries; cancels only the late request.
+    #[error("deadline exceeded: {0}")]
+    DeadlineExceeded(String),
+
+    /// A client-facing wait (e.g. the `analyze` command's reply
+    /// channel) outran `ServingConfig::request_timeout_s`.
+    #[error("timeout: {0}")]
+    Timeout(String),
+
     #[error("serving error: {0}")]
     Serving(String),
 

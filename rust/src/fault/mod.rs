@@ -1,0 +1,605 @@
+//! Deterministic fault injection at the virtual-hardware seams.
+//!
+//! The engine models hardware the paper's target environment actually
+//! misbehaves on — a consumer PCIe link, host RAM under pressure, a
+//! desktop GPU — so the failure model is injected exactly where that
+//! hardware sits in the virtual machine: transient H2D transfer
+//! failures and link-bandwidth *brownout* episodes at the copy-engine
+//! staging seams, corrupt expert payloads out of `HostExpertPool`
+//! (caught by the per-expert checksum verified at staging), and KV
+//! swap/resume failures on the preempt path.
+//!
+//! Everything is seeded and deterministic: a [`FaultPlan`] plus the
+//! engine's own deterministic execution fully determine every injected
+//! fault. The injector's RNG is private to it — sampling streams never
+//! see a fault draw — which is what makes the transparency property
+//! testable: under a *transient-only* plan (failure/corruption/brownout
+//! rates set, escalation rates zero) per-session output is bit-identical
+//! to the fault-free run; only the virtual timeline (and the `fault_retry`
+//! trace spans charging the recovery cost) move.
+//!
+//! Fault severities, and who reacts:
+//!
+//! - **Transient, recovered in place** ([`FaultInjector::transfer`],
+//!   [`FaultInjector::kv_swap`], [`FaultInjector::corrupt`]): the seam
+//!   retries with bounded exponential backoff and always succeeds within
+//!   `max_retries`. The failed attempts + backoff are charged to the
+//!   link as [`crate::trace::SpanKind::FaultRetry`] spans, so recovery
+//!   cost is measurable, and counted in [`FaultStats`].
+//! - **Transient, retry budget exhausted** ([`FaultInjector::gate`]
+//!   returning [`Error::FaultTransient`]): decided at the *tick-boundary
+//!   pre-gate*, before the session's step has touched any shared state,
+//!   precisely so a mid-tick batched staging never has to unwind — the
+//!   scheduler degrades the session through the existing preempt/requeue
+//!   path (bit-identical on resume) and the rest of the batch proceeds
+//!   untouched.
+//! - **Fatal** ([`Error::FaultFatal`], also from the pre-gate): the
+//!   scheduler fails exactly that request with a typed `Event::Failed`;
+//!   no panic, no batch poisoning. `fatal_at_gate` targets the Nth gate
+//!   check deterministically for drills and tests.
+//!
+//! `ServingConfig::faults` carries the plan; `enabled: false` (the
+//! default) is byte-identical to a build without this module — every
+//! injector call is a branch on a bool, asserted bitwise like every
+//! other serving knob.
+
+use crate::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// Declarative, seeded chaos plan. All rates are per *opportunity*
+/// (staging attempt, swap, or session-step gate check — see each field),
+/// all in `[0, 1]`. With `enabled: false` the plan is inert regardless
+/// of the other fields, and `validate` accepts anything.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Master switch. Off ⇒ byte-identical serving, zero overhead.
+    pub enabled: bool,
+    /// Seed for the injector's private RNG stream.
+    pub seed: u64,
+    /// Per-attempt probability that an expert H2D transfer fails
+    /// transiently (recovers within `max_retries`; the failed attempt +
+    /// backoff is charged to the link).
+    pub transfer_fail_p: f64,
+    /// Per-copy probability the staged expert payload reads corrupt —
+    /// the per-expert checksum catches it at staging and the copy is
+    /// re-staged (one extra attempt charge).
+    pub corrupt_p: f64,
+    /// Per-swap probability that a KV swap/resume transfer fails
+    /// transiently (recovers like `transfer_fail_p`).
+    pub kv_fail_p: f64,
+    /// Per-session-step probability that a transient fault exhausts its
+    /// retry budget: the session degrades through preempt/requeue.
+    /// Decided at the tick-boundary gate so the batch is never poisoned.
+    pub exhaust_p: f64,
+    /// Per-session-step probability of an unrecoverable fault: exactly
+    /// that request fails with a typed event.
+    pub fatal_p: f64,
+    /// Deterministically fail the Nth (0-based, engine-lifetime) gate
+    /// check fatally — precise targeting for chaos drills and tests.
+    pub fatal_at_gate: Option<u64>,
+    /// Retry budget per faulted operation (≥ 1 when any transient rate
+    /// is set — a budget of 0 would make every transient fault fatal,
+    /// which is what `fatal_p` is for).
+    pub max_retries: u32,
+    /// First backoff wait in virtual seconds; doubles per retry.
+    pub backoff_base_s: f64,
+    /// Backoff ceiling in virtual seconds.
+    pub backoff_cap_s: f64,
+    /// Per-transfer probability that a link brownout episode starts.
+    pub brownout_p: f64,
+    /// Transfers an episode lasts once started.
+    pub brownout_len: u32,
+    /// Transfer-duration multiplier during an episode (≥ 1).
+    pub brownout_slowdown: f64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            enabled: false,
+            seed: 0xFA17,
+            transfer_fail_p: 0.0,
+            corrupt_p: 0.0,
+            kv_fail_p: 0.0,
+            exhaust_p: 0.0,
+            fatal_p: 0.0,
+            fatal_at_gate: None,
+            max_retries: 3,
+            backoff_base_s: 2e-3,
+            backoff_cap_s: 0.25,
+            brownout_p: 0.0,
+            brownout_len: 8,
+            brownout_slowdown: 4.0,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// A transient-only smoke plan: every recoverable fault type fires,
+    /// nothing escalates — serving output must stay bit-identical while
+    /// `transfer_retries` climbs. The chaos workload profile and the CI
+    /// smoke step both run this shape.
+    pub fn transient_smoke(seed: u64) -> Self {
+        FaultPlan {
+            enabled: true,
+            seed,
+            transfer_fail_p: 0.15,
+            corrupt_p: 0.05,
+            kv_fail_p: 0.10,
+            brownout_p: 0.05,
+            ..FaultPlan::default()
+        }
+    }
+
+    /// Checked only when `enabled` — garbage behind the off switch must
+    /// not reject an otherwise valid config (the knob idiom every other
+    /// `ServingConfig` feature follows).
+    pub fn validate(&self) -> Result<()> {
+        if !self.enabled {
+            return Ok(());
+        }
+        for (name, p) in [
+            ("faults.transfer_fail_p", self.transfer_fail_p),
+            ("faults.corrupt_p", self.corrupt_p),
+            ("faults.kv_fail_p", self.kv_fail_p),
+            ("faults.exhaust_p", self.exhaust_p),
+            ("faults.fatal_p", self.fatal_p),
+            ("faults.brownout_p", self.brownout_p),
+        ] {
+            if !p.is_finite() || !(0.0..=1.0).contains(&p) {
+                return Err(Error::Config(format!(
+                    "{name} must be a probability in [0, 1], got {p}"
+                )));
+            }
+        }
+        let transient = self.transfer_fail_p > 0.0
+            || self.corrupt_p > 0.0
+            || self.kv_fail_p > 0.0;
+        if transient && self.max_retries == 0 {
+            return Err(Error::Config(
+                "faults.max_retries must be >= 1 when a transient rate is set \
+                 (use faults.fatal_p for unrecoverable faults)"
+                    .into(),
+            ));
+        }
+        if !self.backoff_base_s.is_finite() || self.backoff_base_s <= 0.0 {
+            return Err(Error::Config(format!(
+                "faults.backoff_base_s must be finite and > 0, got {}",
+                self.backoff_base_s
+            )));
+        }
+        if !self.backoff_cap_s.is_finite() || self.backoff_cap_s < self.backoff_base_s {
+            return Err(Error::Config(format!(
+                "faults.backoff_cap_s must be finite and >= backoff_base_s \
+                 ({}), got {}",
+                self.backoff_base_s, self.backoff_cap_s
+            )));
+        }
+        if self.brownout_p > 0.0 {
+            if self.brownout_len == 0 {
+                return Err(Error::Config(
+                    "faults.brownout_len must be >= 1 when brownout_p > 0".into(),
+                ));
+            }
+            if !self.brownout_slowdown.is_finite() || self.brownout_slowdown < 1.0 {
+                return Err(Error::Config(format!(
+                    "faults.brownout_slowdown must be finite and >= 1, got {}",
+                    self.brownout_slowdown
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Running injection/recovery counters, drained into telemetry gauges
+/// and the `done` event by the coordinator.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Every fault injected, all types.
+    pub injected: u64,
+    /// Failed expert-transfer attempts that were retried.
+    pub transfer_retries: u64,
+    /// Corrupt expert payloads caught by the staging checksum.
+    pub corruptions: u64,
+    /// Failed KV swap/resume attempts that were retried.
+    pub kv_retries: u64,
+    /// Brownout episodes started.
+    pub brownouts: u64,
+    /// Pre-gate escalations to `Error::FaultTransient` (retry budget
+    /// exhausted; session degraded through preempt/requeue).
+    pub exhausted: u64,
+    /// Pre-gate escalations to `Error::FaultFatal` (request failed).
+    pub fatal: u64,
+}
+
+/// What the transfer seam must charge for one (eventually successful)
+/// staging: `retries` failed attempts worth `extra_s` of link time, and
+/// a `slowdown` multiplier on the successful attempt itself (brownout).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TransferOutcome {
+    pub retries: u32,
+    pub extra_s: f64,
+    pub slowdown: f64,
+}
+
+impl TransferOutcome {
+    const CLEAN: TransferOutcome =
+        TransferOutcome { retries: 0, extra_s: 0.0, slowdown: 1.0 };
+}
+
+/// The seeded injector the engine owns. All methods are O(retries) and
+/// branch out immediately when the plan is disabled.
+#[derive(Debug, Clone)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    rng: Rng,
+    /// Transfers left in the current brownout episode.
+    brownout_left: u32,
+    /// Engine-lifetime count of gate checks (for `fatal_at_gate`).
+    gate_checks: u64,
+    stats: FaultStats,
+}
+
+impl FaultInjector {
+    pub fn new(plan: &FaultPlan) -> Self {
+        FaultInjector {
+            rng: Rng::new(plan.seed),
+            plan: plan.clone(),
+            brownout_left: 0,
+            gate_checks: 0,
+            stats: FaultStats::default(),
+        }
+    }
+
+    /// An injector that never injects — what a disabled plan builds.
+    pub fn disabled() -> Self {
+        FaultInjector::new(&FaultPlan::default())
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.plan.enabled
+    }
+
+    pub fn stats(&self) -> FaultStats {
+        self.stats
+    }
+
+    /// The plan's per-operation retry budget.
+    pub fn max_retries(&self) -> u32 {
+        self.plan.max_retries
+    }
+
+    /// Link seconds one corrupt-read re-stage costs: the re-copy attempt
+    /// plus the backoff for the (0-based) `restage`-th retry.
+    pub fn restage_cost_s(&self, attempt_cost_s: f64, restage: u32) -> f64 {
+        attempt_cost_s + self.backoff_s(restage)
+    }
+
+    /// Exponential backoff for the i-th (0-based) failed attempt.
+    fn backoff_s(&self, attempt: u32) -> f64 {
+        let exp = attempt.min(52); // 2^52 < f64 mantissa; beyond it the cap rules anyway
+        (self.plan.backoff_base_s * (1u64 << exp) as f64).min(self.plan.backoff_cap_s)
+    }
+
+    /// Draw the retry run for one transient-faultable operation: the
+    /// number of consecutive failed attempts (clamped to the budget —
+    /// the seam always recovers; exhaustion is the gate's job) and the
+    /// link seconds they burn, each failure costing one attempt plus
+    /// its backoff wait.
+    fn retry_run(&mut self, fail_p: f64, attempt_cost_s: f64) -> (u32, f64) {
+        if fail_p <= 0.0 {
+            return (0, 0.0);
+        }
+        let mut retries = 0u32;
+        let mut extra_s = 0.0;
+        while retries < self.plan.max_retries && self.rng.f64() < fail_p {
+            extra_s += attempt_cost_s + self.backoff_s(retries);
+            retries += 1;
+        }
+        (retries, extra_s)
+    }
+
+    /// Transfer seam (expert staging): advance the brownout state, then
+    /// draw the transient-failure retry run. The returned charge always
+    /// ends in success — escalation never happens mid-staging.
+    pub fn transfer(&mut self, attempt_cost_s: f64) -> TransferOutcome {
+        if !self.plan.enabled {
+            return TransferOutcome::CLEAN;
+        }
+        if self.brownout_left == 0
+            && self.plan.brownout_p > 0.0
+            && self.rng.f64() < self.plan.brownout_p
+        {
+            self.brownout_left = self.plan.brownout_len;
+            self.stats.brownouts += 1;
+            self.stats.injected += 1;
+        }
+        let slowdown = if self.brownout_left > 0 {
+            self.brownout_left -= 1;
+            self.plan.brownout_slowdown
+        } else {
+            1.0
+        };
+        let (retries, extra_s) =
+            self.retry_run(self.plan.transfer_fail_p, attempt_cost_s * slowdown);
+        self.stats.transfer_retries += retries as u64;
+        self.stats.injected += retries as u64;
+        TransferOutcome { retries, extra_s, slowdown }
+    }
+
+    /// Checksum-verification seam: does this staged copy read corrupt?
+    /// The caller re-stages on `true` (charging one more attempt); the
+    /// host-side source is intact, so the retry reads clean bytes.
+    pub fn corrupt(&mut self) -> bool {
+        if !self.plan.enabled || self.plan.corrupt_p <= 0.0 {
+            return false;
+        }
+        let hit = self.rng.f64() < self.plan.corrupt_p;
+        if hit {
+            self.stats.corruptions += 1;
+            self.stats.injected += 1;
+        }
+        hit
+    }
+
+    /// KV swap/resume seam: extra link seconds of transient-failure
+    /// recovery to charge (0.0 = clean swap).
+    pub fn kv_swap(&mut self, attempt_cost_s: f64) -> f64 {
+        if !self.plan.enabled {
+            return 0.0;
+        }
+        let (retries, extra_s) = self.retry_run(self.plan.kv_fail_p, attempt_cost_s);
+        self.stats.kv_retries += retries as u64;
+        self.stats.injected += retries as u64;
+        extra_s
+    }
+
+    /// Tick-boundary pre-gate, called once per session-step BEFORE the
+    /// step touches any shared state. `Some(err)` means the step must
+    /// not run: `FaultTransient` degrades the session via preempt/
+    /// requeue, `FaultFatal` fails the request. Deciding here — not
+    /// mid-staging — is what keeps a faulted session from poisoning the
+    /// batched tick it shares with healthy ones.
+    pub fn gate(&mut self, session: u64) -> Option<Error> {
+        if !self.plan.enabled {
+            return None;
+        }
+        let n = self.gate_checks;
+        self.gate_checks += 1;
+        if self.plan.fatal_at_gate == Some(n) {
+            self.stats.fatal += 1;
+            self.stats.injected += 1;
+            return Some(Error::FaultFatal(format!(
+                "injected fatal fault at gate check {n} (session {session})"
+            )));
+        }
+        if self.plan.fatal_p > 0.0 && self.rng.f64() < self.plan.fatal_p {
+            self.stats.fatal += 1;
+            self.stats.injected += 1;
+            return Some(Error::FaultFatal(format!(
+                "injected fatal fault (session {session})"
+            )));
+        }
+        if self.plan.exhaust_p > 0.0 && self.rng.f64() < self.plan.exhaust_p {
+            self.stats.exhausted += 1;
+            self.stats.injected += 1;
+            return Some(Error::FaultTransient(format!(
+                "injected retry-budget exhaustion (session {session})"
+            )));
+        }
+        None
+    }
+}
+
+/// Streaming FNV-1a — the per-copy checksum computed once at pool build
+/// ([`crate::memory::host::HostExpertPool`] records one per packed
+/// expert copy) and re-verified at staging when faults are enabled. Not
+/// cryptographic; it only has to catch the corruption model
+/// (flipped/garbled payload bytes), cheaply, without materializing the
+/// payload as one contiguous buffer.
+#[derive(Debug, Clone, Copy)]
+pub struct Checksum(u64);
+
+impl Checksum {
+    pub fn new() -> Self {
+        Checksum(0xcbf29ce484222325)
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100000001b3);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Checksum {
+    fn default() -> Self {
+        Checksum::new()
+    }
+}
+
+/// One-shot [`Checksum`] over a single buffer.
+pub fn checksum(bytes: &[u8]) -> u64 {
+    let mut h = Checksum::new();
+    h.update(bytes);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn transient_plan() -> FaultPlan {
+        FaultPlan::transient_smoke(99)
+    }
+
+    #[test]
+    fn default_plan_is_off_and_valid() {
+        let p = FaultPlan::default();
+        assert!(!p.enabled);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn garbage_behind_the_off_switch_still_validates() {
+        let p = FaultPlan {
+            enabled: false,
+            transfer_fail_p: f64::NAN,
+            backoff_base_s: -1.0,
+            brownout_slowdown: 0.0,
+            ..FaultPlan::default()
+        };
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn enabled_plan_rejects_bad_fields() {
+        let bad = [
+            FaultPlan { transfer_fail_p: 1.5, ..transient_plan() },
+            FaultPlan { corrupt_p: -0.1, ..transient_plan() },
+            FaultPlan { fatal_p: f64::NAN, ..transient_plan() },
+            FaultPlan { max_retries: 0, ..transient_plan() },
+            FaultPlan { backoff_base_s: 0.0, ..transient_plan() },
+            FaultPlan { backoff_cap_s: 1e-9, ..transient_plan() },
+            FaultPlan { brownout_len: 0, ..transient_plan() },
+            FaultPlan { brownout_slowdown: 0.5, ..transient_plan() },
+        ];
+        for p in bad {
+            assert!(p.validate().is_err(), "{p:?} should not validate");
+        }
+        transient_plan().validate().unwrap();
+    }
+
+    #[test]
+    fn disabled_injector_is_free_and_clean() {
+        let mut inj = FaultInjector::disabled();
+        assert!(!inj.enabled());
+        for _ in 0..64 {
+            assert_eq!(inj.transfer(1.0), TransferOutcome::CLEAN);
+            assert!(!inj.corrupt());
+            assert_eq!(inj.kv_swap(1.0), 0.0);
+            assert!(inj.gate(1).is_none());
+        }
+        assert_eq!(inj.stats(), FaultStats::default());
+    }
+
+    #[test]
+    fn same_plan_same_seed_same_faults() {
+        let plan = FaultPlan {
+            exhaust_p: 0.05,
+            fatal_p: 0.01,
+            ..transient_plan()
+        };
+        let mut a = FaultInjector::new(&plan);
+        let mut b = FaultInjector::new(&plan);
+        for i in 0..500 {
+            assert_eq!(a.transfer(0.01), b.transfer(0.01));
+            assert_eq!(a.corrupt(), b.corrupt());
+            assert_eq!(a.kv_swap(0.02), b.kv_swap(0.02));
+            assert_eq!(
+                a.gate(i).map(|e| e.to_string()),
+                b.gate(i).map(|e| e.to_string())
+            );
+        }
+        assert_eq!(a.stats(), b.stats());
+        assert!(a.stats().injected > 0, "smoke plan must actually inject");
+    }
+
+    #[test]
+    fn retries_are_bounded_and_charged() {
+        let plan = FaultPlan {
+            enabled: true,
+            transfer_fail_p: 1.0, // every attempt fails → always hits the budget
+            max_retries: 3,
+            ..FaultPlan::default()
+        };
+        let mut inj = FaultInjector::new(&plan);
+        let out = inj.transfer(0.5);
+        assert_eq!(out.retries, 3);
+        assert_eq!(out.slowdown, 1.0);
+        // 3 failed attempts + backoffs 2ms, 4ms, 8ms
+        let want = 3.0 * 0.5 + 2e-3 + 4e-3 + 8e-3;
+        assert!((out.extra_s - want).abs() < 1e-12, "{}", out.extra_s);
+        assert_eq!(inj.stats().transfer_retries, 3);
+    }
+
+    #[test]
+    fn backoff_respects_the_cap() {
+        let plan = FaultPlan {
+            enabled: true,
+            kv_fail_p: 1.0,
+            max_retries: 20,
+            backoff_base_s: 1e-3,
+            backoff_cap_s: 4e-3,
+            ..FaultPlan::default()
+        };
+        let mut inj = FaultInjector::new(&plan);
+        let extra = inj.kv_swap(0.0);
+        // 1, 2, 4 ms then capped at 4 ms for the remaining 17 retries
+        let want = 1e-3 + 2e-3 + 18.0 * 4e-3;
+        assert!((extra - want).abs() < 1e-12, "{extra}");
+        assert_eq!(inj.stats().kv_retries, 20);
+    }
+
+    #[test]
+    fn brownout_episodes_have_the_declared_length() {
+        let plan = FaultPlan {
+            enabled: true,
+            brownout_p: 1.0, // an episode starts the moment the last ends
+            brownout_len: 4,
+            brownout_slowdown: 3.0,
+            ..FaultPlan::default()
+        };
+        let mut inj = FaultInjector::new(&plan);
+        for _ in 0..8 {
+            assert_eq!(inj.transfer(1.0).slowdown, 3.0);
+        }
+        assert_eq!(inj.stats().brownouts, 2);
+    }
+
+    #[test]
+    fn fatal_at_gate_targets_exactly_one_check() {
+        let plan = FaultPlan {
+            enabled: true,
+            fatal_at_gate: Some(2),
+            ..FaultPlan::default()
+        };
+        let mut inj = FaultInjector::new(&plan);
+        assert!(inj.gate(7).is_none());
+        assert!(inj.gate(8).is_none());
+        match inj.gate(9) {
+            Some(Error::FaultFatal(msg)) => assert!(msg.contains("session 9")),
+            other => panic!("expected FaultFatal, got {other:?}"),
+        }
+        assert!(inj.gate(7).is_none());
+        assert_eq!(inj.stats().fatal, 1);
+    }
+
+    #[test]
+    fn exhaustion_surfaces_as_transient() {
+        let plan =
+            FaultPlan { enabled: true, exhaust_p: 1.0, ..FaultPlan::default() };
+        let mut inj = FaultInjector::new(&plan);
+        assert!(matches!(inj.gate(1), Some(Error::FaultTransient(_))));
+        assert_eq!(inj.stats().exhausted, 1);
+    }
+
+    #[test]
+    fn checksum_catches_any_single_byte_flip() {
+        let payload: Vec<u8> = (0..255u8).collect();
+        let clean = checksum(&payload);
+        for i in 0..payload.len() {
+            let mut bad = payload.clone();
+            bad[i] ^= 0x40;
+            assert_ne!(checksum(&bad), clean, "flip at {i} undetected");
+        }
+        assert_eq!(checksum(&payload), clean);
+        assert_ne!(checksum(&[]), checksum(&[0]));
+    }
+}

@@ -118,6 +118,7 @@ pub mod config;
 pub mod engine;
 pub mod error;
 pub mod eval;
+pub mod fault;
 pub mod harness;
 pub mod kv;
 pub mod load;

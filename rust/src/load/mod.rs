@@ -34,6 +34,7 @@ use std::time::Duration;
 use crate::config::{HardwareProfile, OffloadPolicy, QuantScheme, ServingConfig, SimScale};
 use crate::coordinator::{collect_events_timeout, Coordinator, Event, Request};
 use crate::error::Result;
+use crate::fault::FaultPlan;
 use crate::harness;
 use crate::telemetry::percentile;
 use crate::util::json::Json;
@@ -84,6 +85,10 @@ pub struct WorkloadProfile {
     pub prompt: PromptShape,
     pub slo: SloTargets,
     pub seed: u64,
+    /// Seeded fault-injection plan the replay runs under (see
+    /// [`crate::fault`]). Disabled for every profile except [`chaos`],
+    /// keeping their replays byte-identical to a fault-free build.
+    pub faults: FaultPlan,
 }
 
 /// Arrival gaps are clamped here so one unlucky exponential tail cannot
@@ -113,6 +118,7 @@ impl WorkloadProfile {
             chunked_prefill: self.chunked_prefill,
             stop_suffix: String::new(),
             trace: true,
+            faults: self.faults.clone(),
             ..Default::default()
         }
     }
@@ -204,6 +210,7 @@ pub fn bursty(smoke: bool) -> WorkloadProfile {
             tpot_p99_s: 2.0,
         },
         seed: 11,
+        faults: FaultPlan::default(),
     }
 }
 
@@ -229,6 +236,7 @@ pub fn chat(smoke: bool) -> WorkloadProfile {
             tpot_p99_s: 2.0,
         },
         seed: 13,
+        faults: FaultPlan::default(),
     }
 }
 
@@ -253,6 +261,31 @@ pub fn rag(smoke: bool) -> WorkloadProfile {
             tpot_p99_s: 2.0,
         },
         seed: 17,
+        faults: FaultPlan::default(),
+    }
+}
+
+/// Chaos traffic: the bursty arrival shape replayed under a seeded
+/// transient-only fault plan — transfer failures, payload corruption,
+/// KV-swap faults and link brownouts all fire, nothing escalates. Every
+/// request must still finish (transient faults are recoverable by
+/// construction) while `faults_injected` / `transfer_retries` climb and
+/// the SLO rows absorb the recovery cost. This is the profile the chaos
+/// harness reports into `BENCH_9.json` and the CI chaos smoke runs.
+pub fn chaos(smoke: bool) -> WorkloadProfile {
+    WorkloadProfile {
+        name: "chaos".into(),
+        seed: 23,
+        faults: FaultPlan::transient_smoke(0xC4A05),
+        // recovery time (retries + brownouts) pushes tails well past the
+        // clean bursty targets; the chaos SLO is "degraded, not down"
+        slo: SloTargets {
+            ttft_p50_s: 4.0,
+            ttft_p99_s: 16.0,
+            tpot_p50_s: 1.0,
+            tpot_p99_s: 4.0,
+        },
+        ..bursty(smoke)
     }
 }
 
@@ -270,6 +303,12 @@ pub struct ProfileReport {
     pub tpot_s: Vec<f64>,
     pub queue_s: Vec<f64>,
     pub slo: SloTargets,
+    /// Faults injected during the run (engine-lifetime; 0 faults-off).
+    pub faults_injected: u64,
+    /// Transient transfer retries charged to the virtual link.
+    pub transfer_retries: u64,
+    /// Requests cancelled for exceeding their deadline.
+    pub deadline_cancellations: u64,
     /// [`crate::trace::analysis::analyze_response`] output for the run.
     pub analysis: Json,
 }
@@ -304,6 +343,9 @@ impl ProfileReport {
             ("tpot_p99_attained", (tpot_p99 <= self.slo.tpot_p99_s).into()),
             ("queue_p50_s", percentile(&self.queue_s, 0.50).into()),
             ("queue_p99_s", percentile(&self.queue_s, 0.99).into()),
+            ("faults_injected", (self.faults_injected as usize).into()),
+            ("transfer_retries", (self.transfer_retries as usize).into()),
+            ("deadline_cancellations", (self.deadline_cancellations as usize).into()),
             ("attribution", attribution),
             ("whatif", whatif),
         ])
@@ -369,6 +411,9 @@ pub fn run_profile(
         tpot_s: Vec::new(),
         queue_s: Vec::new(),
         slo: profile.slo,
+        faults_injected: 0,
+        transfer_retries: 0,
+        deadline_cancellations: 0,
         analysis: Json::Null,
     };
     for stream in &streams {
@@ -383,7 +428,7 @@ pub fn run_profile(
                     report.queue_s.push(queue_wait_s);
                     finished = true;
                 }
-                Event::Error { .. } => {
+                Event::Error { .. } | Event::Failed { .. } => {
                     report.requests_failed += 1;
                     finished = true;
                 }
@@ -398,6 +443,11 @@ pub fn run_profile(
     // the analysis must be fetched before shutdown — it runs on the
     // worker thread against the live engine's span ring
     report.analysis = coord.analyze()?;
+    // fault/resilience counters: published as gauges every scheduler
+    // tick, so the last recorded values are the run's lifetime totals
+    report.faults_injected = coord.metrics.gauge("faults_injected");
+    report.transfer_retries = coord.metrics.gauge("transfer_retries");
+    report.deadline_cancellations = coord.metrics.gauge("deadline_cancellations");
     coord.shutdown();
     Ok(report)
 }
@@ -491,8 +541,27 @@ mod tests {
     }
 
     #[test]
+    fn chaos_profile_is_transient_only_and_validates() {
+        let p = chaos(true);
+        assert!(p.faults.enabled, "chaos must actually inject");
+        // transient-only: nothing may escalate to degradation or a
+        // fatal, or the bit-transparency contract breaks
+        assert_eq!(p.faults.exhaust_p, 0.0);
+        assert_eq!(p.faults.fatal_p, 0.0);
+        assert_eq!(p.faults.fatal_at_gate, None);
+        assert!(p.faults.transfer_fail_p > 0.0);
+        let s = p.serving_config();
+        assert!(s.faults.enabled, "the plan must reach the engine config");
+        assert!(s.validate().is_ok());
+        // the other profiles stay fault-free
+        for clean in [bursty(true), chat(true), rag(true)] {
+            assert!(!clean.serving_config().faults.enabled, "{}", clean.name);
+        }
+    }
+
+    #[test]
     fn serving_config_always_traces_and_never_suffix_stops() {
-        for p in [bursty(true), chat(true), rag(true)] {
+        for p in [bursty(true), chat(true), rag(true), chaos(true)] {
             let s = p.serving_config();
             assert!(s.trace, "{}: analysis needs the span ring", p.name);
             assert!(s.stop_suffix.is_empty(), "{}: token counts must be budget-driven", p.name);
@@ -519,6 +588,9 @@ mod tests {
                 tpot_p50_s: 1.0,
                 tpot_p99_s: 1.0,
             },
+            faults_injected: 5,
+            transfer_retries: 3,
+            deadline_cancellations: 1,
             analysis: Json::obj(vec![
                 ("attribution", Json::obj(vec![("compute", 1.0.into())])),
                 ("whatif", Json::arr(vec![])),
@@ -528,6 +600,9 @@ mod tests {
         assert_eq!(row.get("profile").and_then(Json::as_str), Some("unit"));
         assert_eq!(row.get("requests_ok").and_then(Json::as_usize), Some(2));
         assert_eq!(row.get("requests_failed").and_then(Json::as_usize), Some(1));
+        assert_eq!(row.get("faults_injected").and_then(Json::as_usize), Some(5));
+        assert_eq!(row.get("transfer_retries").and_then(Json::as_usize), Some(3));
+        assert_eq!(row.get("deadline_cancellations").and_then(Json::as_usize), Some(1));
         // nearest-rank on [0.1, 0.3]: p50 = 0.1 <= 0.2 target, p99 = 0.3 > 0.25
         assert_eq!(row.get("ttft_p50_attained").and_then(Json::as_bool), Some(true));
         assert_eq!(row.get("ttft_p99_attained").and_then(Json::as_bool), Some(false));
@@ -555,6 +630,9 @@ mod tests {
             tpot_s: vec![],
             queue_s: vec![],
             slo: bursty(true).slo,
+            faults_injected: 0,
+            transfer_retries: 0,
+            deadline_cancellations: 0,
             analysis: Json::Null,
         };
         let row = report.to_json();

@@ -40,16 +40,19 @@ impl Semaphore {
         Semaphore { permits: Mutex::new(n), cv: Condvar::new() }
     }
 
+    // a poisoned permit count is still a valid count — a panicking
+    // holder only ever observed it, so recover the inner value instead
+    // of cascading the panic into the serving thread
     fn acquire(&self) {
-        let mut p = self.permits.lock().unwrap();
+        let mut p = self.permits.lock().unwrap_or_else(|e| e.into_inner());
         while *p == 0 {
-            p = self.cv.wait(p).unwrap();
+            p = self.cv.wait(p).unwrap_or_else(|e| e.into_inner());
         }
         *p -= 1;
     }
 
     fn release(&self) {
-        *self.permits.lock().unwrap() += 1;
+        *self.permits.lock().unwrap_or_else(|e| e.into_inner()) += 1;
         self.cv.notify_one();
     }
 }
@@ -83,7 +86,7 @@ impl CopyEngine {
             let staging = Arc::clone(&staging);
             handles.push(std::thread::spawn(move || loop {
                 let job = {
-                    let rx = job_rx.lock().unwrap();
+                    let rx = job_rx.lock().unwrap_or_else(|e| e.into_inner());
                     rx.recv()
                 };
                 match job {
@@ -113,16 +116,18 @@ impl CopyEngine {
     }
 
     /// Submit a staging job; blocks only if all `b` staging buffers are in
-    /// flight (back-pressure, like the paper's shared buffers).
-    pub fn submit(&mut self, id: ExpertId) -> TransferTicket {
+    /// flight (back-pressure, like the paper's shared buffers). Errors —
+    /// instead of panicking the serving thread — if the worker pool died,
+    /// so the scheduler can fail the one affected request and keep going.
+    pub fn submit(&mut self, id: ExpertId) -> Result<TransferTicket> {
         self.staging.acquire();
         let ticket = TransferTicket(self.next_ticket);
         self.next_ticket += 1;
         self.staged_jobs += 1;
         self.job_tx
             .send(Job::Stage { ticket, id })
-            .expect("copy engine workers dead");
-        ticket
+            .map_err(|_| Error::Engine("copy engine workers dead".into()))?;
+        Ok(ticket)
     }
 
     /// Non-blocking drain of finished jobs into the ready set.
@@ -206,7 +211,7 @@ mod tests {
     #[test]
     fn stages_and_completes() {
         let mut ce = CopyEngine::new(pool(), 4, 2);
-        let t = ce.submit(ExpertId::new(0, 1));
+        let t = ce.submit(ExpertId::new(0, 1)).unwrap();
         let (id, expert) = ce.wait(t).unwrap();
         assert_eq!(id, ExpertId::new(0, 1));
         assert!(expert.is_quant());
@@ -216,7 +221,7 @@ mod tests {
     fn many_inflight_with_bounded_staging() {
         let mut ce = CopyEngine::new(pool(), 2, 2);
         let tickets: Vec<_> = (0..6)
-            .map(|i| ce.submit(ExpertId::new(i % 2, i % 3)))
+            .map(|i| ce.submit(ExpertId::new(i % 2, i % 3)).unwrap())
             .collect();
         for t in tickets {
             ce.wait(t).unwrap();
@@ -227,14 +232,14 @@ mod tests {
     #[test]
     fn unknown_expert_reports_error() {
         let mut ce = CopyEngine::new(pool(), 2, 1);
-        let t = ce.submit(ExpertId::new(9, 9));
+        let t = ce.submit(ExpertId::new(9, 9)).unwrap();
         assert!(ce.wait(t).is_err());
     }
 
     #[test]
     fn try_claim_nonblocking() {
         let mut ce = CopyEngine::new(pool(), 2, 1);
-        let t = ce.submit(ExpertId::new(1, 2));
+        let t = ce.submit(ExpertId::new(1, 2)).unwrap();
         // eventually claimable without wait()
         let mut claimed = None;
         for _ in 0..1000 {

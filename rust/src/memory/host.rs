@@ -19,6 +19,7 @@ use std::sync::RwLock;
 
 use crate::config::{ModelConfig, QuantScheme};
 use crate::error::{Error, Result};
+use crate::fault::Checksum;
 use crate::quant::hqq::{self, HqqConfig, QuantizedMatrix};
 use crate::quant::tier::{Tier, TierPolicy};
 use crate::tensor::Tensor;
@@ -82,6 +83,35 @@ impl HostExpert {
             }
         }
     }
+
+    /// FNV-1a over this copy's packed payload — recorded once per packed
+    /// copy at pool build and re-verified at staging when fault
+    /// injection is enabled (see [`crate::fault`]). Walks the buffers in
+    /// place; nothing is materialized.
+    pub fn payload_checksum(&self) -> u64 {
+        let mut h = Checksum::new();
+        match self {
+            HostExpert::Fp { w1, w3, w2 } => {
+                for t in [w1, w3, w2] {
+                    for v in &t.data {
+                        h.update(&v.to_le_bytes());
+                    }
+                }
+            }
+            HostExpert::Quant { w1, w3, w2 } => {
+                for m in [w1, w3, w2] {
+                    h.update(&m.packed);
+                    for v in &m.scale {
+                        h.update(&v.to_le_bytes());
+                    }
+                    for v in &m.zero {
+                        h.update(&v.to_le_bytes());
+                    }
+                }
+            }
+        }
+        h.finish()
+    }
 }
 
 /// Pack one expert's raw f32 matrices at `scheme`.
@@ -116,6 +146,10 @@ struct TierStore {
     hot: Option<BTreeMap<ExpertId, HostExpert>>,
     /// Cold-scheme copies; `None` when the cold scheme equals the base.
     cold: Option<BTreeMap<ExpertId, HostExpert>>,
+    /// Build-time payload checksums of the hot/cold copies (same
+    /// `None`-means-shared convention as the copies themselves).
+    hot_sums: Option<BTreeMap<ExpertId, u64>>,
+    cold_sums: Option<BTreeMap<ExpertId, u64>>,
     /// Current tier per expert (unlisted = Warm).
     current: RwLock<BTreeMap<ExpertId, Tier>>,
 }
@@ -126,6 +160,10 @@ pub struct HostExpertPool {
     pub scheme: QuantScheme,
     /// Base-scheme packed copies (every expert's Warm variant).
     pub experts: BTreeMap<ExpertId, HostExpert>,
+    /// Build-time payload checksum of every base copy — the reference
+    /// the engine verifies staged copies against when fault injection
+    /// is enabled.
+    checksums: BTreeMap<ExpertId, u64>,
     cfg: ModelConfig,
     /// Per-tier variants; `None` = uniform pool (tiers disabled).
     tiers: Option<TierStore>,
@@ -142,13 +180,17 @@ impl HostExpertPool {
         mut get_weights: impl FnMut(usize, usize) -> Result<(Tensor, Tensor, Tensor)>,
     ) -> Result<Self> {
         let mut experts = BTreeMap::new();
+        let mut checksums = BTreeMap::new();
         for layer in 0..cfg.n_layers {
             for expert in 0..cfg.n_experts {
                 let (w1, w3, w2) = get_weights(layer, expert)?;
-                experts.insert(ExpertId::new(layer, expert), pack_expert(cfg, scheme, &w1, &w3, &w2)?);
+                let id = ExpertId::new(layer, expert);
+                let packed = pack_expert(cfg, scheme, &w1, &w3, &w2)?;
+                checksums.insert(id, packed.payload_checksum());
+                experts.insert(id, packed);
             }
         }
-        Ok(HostExpertPool { scheme, experts, cfg: cfg.clone(), tiers: None })
+        Ok(HostExpertPool { scheme, experts, checksums, cfg: cfg.clone(), tiers: None })
     }
 
     /// Build a TIERED pool: base-scheme copies for every expert plus one
@@ -167,29 +209,41 @@ impl HostExpertPool {
             return Self::build(cfg, scheme, get_weights);
         }
         let mut experts = BTreeMap::new();
+        let mut checksums = BTreeMap::new();
         let mut hot = (policy.hot != scheme).then(BTreeMap::new);
         let mut cold = (policy.cold != scheme).then(BTreeMap::new);
+        let mut hot_sums = hot.as_ref().map(|_| BTreeMap::new());
+        let mut cold_sums = cold.as_ref().map(|_| BTreeMap::new());
         for layer in 0..cfg.n_layers {
             for expert in 0..cfg.n_experts {
                 let (w1, w3, w2) = get_weights(layer, expert)?;
                 let id = ExpertId::new(layer, expert);
-                experts.insert(id, pack_expert(cfg, scheme, &w1, &w3, &w2)?);
+                let packed = pack_expert(cfg, scheme, &w1, &w3, &w2)?;
+                checksums.insert(id, packed.payload_checksum());
+                experts.insert(id, packed);
                 if let Some(m) = hot.as_mut() {
-                    m.insert(id, pack_expert(cfg, policy.hot, &w1, &w3, &w2)?);
+                    let packed = pack_expert(cfg, policy.hot, &w1, &w3, &w2)?;
+                    hot_sums.as_mut().unwrap().insert(id, packed.payload_checksum());
+                    m.insert(id, packed);
                 }
                 if let Some(m) = cold.as_mut() {
-                    m.insert(id, pack_expert(cfg, policy.cold, &w1, &w3, &w2)?);
+                    let packed = pack_expert(cfg, policy.cold, &w1, &w3, &w2)?;
+                    cold_sums.as_mut().unwrap().insert(id, packed.payload_checksum());
+                    m.insert(id, packed);
                 }
             }
         }
         Ok(HostExpertPool {
             scheme,
             experts,
+            checksums,
             cfg: cfg.clone(),
             tiers: Some(TierStore {
                 policy: *policy,
                 hot,
                 cold,
+                hot_sums,
+                cold_sums,
                 current: RwLock::new(BTreeMap::new()),
             }),
         })
@@ -210,9 +264,18 @@ impl HostExpertPool {
 
     /// The expert's current tier (Warm for uniform pools).
     pub fn tier_of(&self, id: ExpertId) -> Tier {
+        // a poisoned assignment map is still a valid map (writers only
+        // ever insert/remove whole entries) — recover it rather than
+        // cascading a staging thread's panic into the serving thread
         self.tiers
             .as_ref()
-            .and_then(|t| t.current.read().unwrap().get(&id).copied())
+            .and_then(|t| {
+                t.current
+                    .read()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .get(&id)
+                    .copied()
+            })
             .unwrap_or(Tier::Warm)
     }
 
@@ -221,7 +284,7 @@ impl HostExpertPool {
     /// any device copy staged at the old tier's precision.
     pub fn set_tier(&self, id: ExpertId, tier: Tier) -> Tier {
         let Some(store) = self.tiers.as_ref() else { return Tier::Warm };
-        let mut cur = store.current.write().unwrap();
+        let mut cur = store.current.write().unwrap_or_else(|e| e.into_inner());
         if tier == Tier::Warm {
             cur.remove(&id).unwrap_or(Tier::Warm)
         } else {
@@ -249,6 +312,24 @@ impl HostExpertPool {
             },
         };
         map.get(&id)
+            .ok_or_else(|| Error::Engine(format!("no host expert {id}")))
+    }
+
+    /// The build-time payload checksum of the copy [`Self::get`] would
+    /// serve right now (i.e. at the expert's CURRENT tier) — what the
+    /// engine verifies a staged copy against when fault injection is
+    /// enabled.
+    pub fn expected_checksum(&self, id: ExpertId) -> Result<u64> {
+        let map = match self.tiers.as_ref() {
+            None => &self.checksums,
+            Some(store) => match self.tier_of(id) {
+                Tier::Warm => &self.checksums,
+                Tier::Hot => store.hot_sums.as_ref().unwrap_or(&self.checksums),
+                Tier::Cold => store.cold_sums.as_ref().unwrap_or(&self.checksums),
+            },
+        };
+        map.get(&id)
+            .copied()
             .ok_or_else(|| Error::Engine(format!("no host expert {id}")))
     }
 
@@ -386,6 +467,39 @@ mod tests {
 
         // only the re-tiered expert changed; its sibling still serves warm
         assert_eq!(pool.transfer_bytes_of(ExpertId::new(0, 0)).unwrap(), warm);
+    }
+
+    #[test]
+    fn build_checksums_match_served_copies() {
+        let pool = build_pool(QuantScheme::Hqq { bits: 3 });
+        for (&id, e) in &pool.experts {
+            assert_eq!(pool.expected_checksum(id).unwrap(), e.payload_checksum());
+        }
+        // distinct experts hash differently (corruption across copies
+        // would be caught too)
+        let a = pool.expected_checksum(ExpertId::new(0, 0)).unwrap();
+        let b = pool.expected_checksum(ExpertId::new(0, 1)).unwrap();
+        assert_ne!(a, b);
+        assert!(pool.expected_checksum(ExpertId::new(9, 9)).is_err());
+    }
+
+    #[test]
+    fn tiered_checksums_follow_the_current_tier() {
+        let pool = build_tiered_pool(&TierPolicy::hot_cold());
+        let id = ExpertId::new(0, 1);
+        let warm = pool.expected_checksum(id).unwrap();
+        assert_eq!(warm, pool.get(id).unwrap().payload_checksum());
+
+        pool.set_tier(id, Tier::Hot);
+        let hot = pool.expected_checksum(id).unwrap();
+        assert_eq!(hot, pool.get(id).unwrap().payload_checksum());
+        assert_ne!(hot, warm, "4-bit copy must hash differently from 3-bit");
+
+        pool.set_tier(id, Tier::Cold);
+        assert_eq!(
+            pool.expected_checksum(id).unwrap(),
+            pool.get(id).unwrap().payload_checksum()
+        );
     }
 
     #[test]

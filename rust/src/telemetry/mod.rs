@@ -92,21 +92,26 @@ impl Metrics {
         Self::default()
     }
 
+    // Every lock below recovers from poisoning instead of propagating
+    // the panic: a poisoned map is still a valid map (holders only ever
+    // make whole-entry changes), and the metrics registry must never be
+    // the thing that takes the serving thread down.
     pub fn inc(&self, name: &str, by: u64) {
-        *self.counters.lock().unwrap().entry(name.to_string()).or_insert(0) += by;
+        let mut c = self.counters.lock().unwrap_or_else(|e| e.into_inner());
+        *c.entry(name.to_string()).or_insert(0) += by;
     }
 
     pub fn counter(&self, name: &str) -> u64 {
-        *self.counters.lock().unwrap().get(name).unwrap_or(&0)
+        *self.counters.lock().unwrap_or_else(|e| e.into_inner()).get(name).unwrap_or(&0)
     }
 
     /// Set a point-in-time gauge (e.g. `active_sessions`).
     pub fn set_gauge(&self, name: &str, v: u64) {
-        self.gauges.lock().unwrap().insert(name.to_string(), v);
+        self.gauges.lock().unwrap_or_else(|e| e.into_inner()).insert(name.to_string(), v);
     }
 
     pub fn gauge(&self, name: &str) -> u64 {
-        *self.gauges.lock().unwrap().get(name).unwrap_or(&0)
+        *self.gauges.lock().unwrap_or_else(|e| e.into_inner()).get(name).unwrap_or(&0)
     }
 
     /// Record the KV block pool's occupancy gauges in one shot
@@ -115,7 +120,7 @@ impl Metrics {
     /// rendered metrics always show current pool pressure next to
     /// `active_sessions`.
     pub fn record_kv_pool(&self, total: u64, free: u64, in_use: u64, preemptions: u64) {
-        let mut g = self.gauges.lock().unwrap();
+        let mut g = self.gauges.lock().unwrap_or_else(|e| e.into_inner());
         g.insert("kv_blocks_total".to_string(), total);
         g.insert("kv_blocks_free".to_string(), free);
         g.insert("kv_blocks_in_use".to_string(), in_use);
@@ -139,7 +144,7 @@ impl Metrics {
         inserted_blocks: u64,
         evicted_blocks: u64,
     ) {
-        let mut g = self.gauges.lock().unwrap();
+        let mut g = self.gauges.lock().unwrap_or_else(|e| e.into_inner());
         g.insert("prefix_cache_blocks".to_string(), blocks);
         g.insert("prefix_cache_tokens".to_string(), tokens);
         g.insert("prefix_hits".to_string(), hits);
@@ -163,7 +168,7 @@ impl Metrics {
         loads_deduped: u64,
         mixed_ticks: u64,
     ) {
-        let mut g = self.gauges.lock().unwrap();
+        let mut g = self.gauges.lock().unwrap_or_else(|e| e.into_inner());
         g.insert("batch_occupancy".to_string(), occupancy);
         g.insert("batched_ticks".to_string(), ticks);
         g.insert("batched_kernel_calls".to_string(), kernel_calls);
@@ -177,17 +182,38 @@ impl Metrics {
     /// (`crate::engine::TierStats`), mirroring [`Self::record_batch`].
     /// All zero for uniform (tiers-off) deployments.
     pub fn record_tiers(&self, hot_hits: u64, promotions: u64, bytes_saved: u64) {
-        let mut g = self.gauges.lock().unwrap();
+        let mut g = self.gauges.lock().unwrap_or_else(|e| e.into_inner());
         g.insert("expert_hot_hits".to_string(), hot_hits);
         g.insert("tier_promotions".to_string(), promotions);
         g.insert("link_bytes_saved".to_string(), bytes_saved);
+    }
+
+    /// Record the fault-injection / resilience gauges in one shot
+    /// (`faults_injected` / `transfer_retries` / `requests_failed` /
+    /// `deadline_cancellations`) — the scheduler calls this every tick
+    /// from the engine's lifetime `FaultStats`
+    /// (`crate::fault::FaultStats`) plus its own failure counters,
+    /// mirroring [`Self::record_tiers`]. All zero in a default
+    /// (faults-off, no-deadline) deployment.
+    pub fn record_faults(
+        &self,
+        injected: u64,
+        transfer_retries: u64,
+        failed: u64,
+        deadline_cancelled: u64,
+    ) {
+        let mut g = self.gauges.lock().unwrap_or_else(|e| e.into_inner());
+        g.insert("faults_injected".to_string(), injected);
+        g.insert("transfer_retries".to_string(), transfer_retries);
+        g.insert("requests_failed".to_string(), failed);
+        g.insert("deadline_cancellations".to_string(), deadline_cancelled);
     }
 
     /// Every gauge name currently recorded — the done-event parity test
     /// enumerates these to lock gauges and the server's `done` schema
     /// together (see `coordinator::server::GAUGE_DONE_FIELDS`).
     pub fn gauge_names(&self) -> Vec<String> {
-        self.gauges.lock().unwrap().keys().cloned().collect()
+        self.gauges.lock().unwrap_or_else(|e| e.into_inner()).keys().cloned().collect()
     }
 
     /// Every histogram name currently recorded — the breakdown parity
@@ -195,7 +221,7 @@ impl Metrics {
     /// histograms and the server's `done` schema together (see
     /// `coordinator::server::BREAKDOWN_DONE_FIELDS`).
     pub fn histogram_names(&self) -> Vec<String> {
-        self.histograms.lock().unwrap().keys().cloned().collect()
+        self.histograms.lock().unwrap_or_else(|e| e.into_inner()).keys().cloned().collect()
     }
 
     pub fn observe(&self, name: &str, v: f64) {
@@ -252,13 +278,13 @@ impl Metrics {
 
     pub fn render(&self) -> String {
         let mut out = String::new();
-        for (k, v) in self.counters.lock().unwrap().iter() {
+        for (k, v) in self.counters.lock().unwrap_or_else(|e| e.into_inner()).iter() {
             out.push_str(&format!("{k} {v}\n"));
         }
-        for (k, v) in self.gauges.lock().unwrap().iter() {
+        for (k, v) in self.gauges.lock().unwrap_or_else(|e| e.into_inner()).iter() {
             out.push_str(&format!("{k} {v}\n"));
         }
-        for (k, h) in self.histograms.lock().unwrap().iter() {
+        for (k, h) in self.histograms.lock().unwrap_or_else(|e| e.into_inner()).iter() {
             out.push_str(&format!(
                 "{k}_mean {:.6}\n{k}_p50 {:.6}\n{k}_p99 {:.6}\n{k}_count {}\n",
                 h.mean(),
@@ -463,6 +489,17 @@ mod tests {
         assert_eq!(m.gauge("tier_promotions"), 3);
         assert_eq!(m.gauge("link_bytes_saved"), 9000);
         assert!(m.render().contains("link_bytes_saved 9000"));
+    }
+
+    #[test]
+    fn fault_gauges_record_together() {
+        let m = Metrics::new();
+        m.record_faults(9, 6, 2, 1);
+        assert_eq!(m.gauge("faults_injected"), 9);
+        assert_eq!(m.gauge("transfer_retries"), 6);
+        assert_eq!(m.gauge("requests_failed"), 2);
+        assert_eq!(m.gauge("deadline_cancellations"), 1);
+        assert!(m.render().contains("transfer_retries 6"));
     }
 
     #[test]

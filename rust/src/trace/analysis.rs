@@ -103,8 +103,8 @@ pub struct RequestPath {
     pub chain: usize,
     /// Front-advancing GPU compute seconds.
     pub compute_s: f64,
-    /// Seconds the front sat blocked on expert traffic (demand loads and
-    /// tier reloads).
+    /// Seconds the front sat blocked on expert traffic (demand loads,
+    /// tier reloads, and fault-retry recovery).
     pub demand_blocked_s: f64,
     /// Seconds the front sat blocked on KV staging (preempt/resume swaps
     /// and prefix-cache seeds).
@@ -153,7 +153,9 @@ pub fn critical_paths(spans: &[TraceSpan]) -> Vec<RequestPath> {
             }
             chain += 1;
             match s.kind {
-                SpanKind::DemandLoad | SpanKind::TierReload => demand += c,
+                SpanKind::DemandLoad | SpanKind::TierReload | SpanKind::FaultRetry => {
+                    demand += c
+                }
                 SpanKind::KvResume | SpanKind::PrefixSeed => kv += c,
                 _ => compute += c,
             }
@@ -277,7 +279,10 @@ pub fn replay(spans: &[TraceSpan], cost: &CostModel, scenario: WhatIf) -> f64 {
                 if scenario == WhatIf::InfiniteExpertCache
                     && matches!(
                         s.kind,
-                        SpanKind::DemandLoad | SpanKind::TierReload | SpanKind::SpecPrefetch
+                        SpanKind::DemandLoad
+                            | SpanKind::TierReload
+                            | SpanKind::SpecPrefetch
+                            | SpanKind::FaultRetry
                     )
                 {
                     continue;

@@ -65,12 +65,16 @@ pub enum SpanKind {
     PrefixSeed,
     /// Expert re-fetched after an adaptive re-tier dropped it (link).
     TierReload,
+    /// Link time burned by an injected-fault retry: the failed attempt
+    /// plus its exponential backoff, charged so recovery cost is
+    /// visible on the timeline (link).
+    FaultRetry,
 }
 
 impl SpanKind {
     /// Every kind, compute first — iteration order for reports and the
     /// CI completeness check.
-    pub const ALL: [SpanKind; 10] = [
+    pub const ALL: [SpanKind; 11] = [
         SpanKind::Embed,
         SpanKind::Attention,
         SpanKind::Gate,
@@ -81,6 +85,7 @@ impl SpanKind {
         SpanKind::KvResume,
         SpanKind::PrefixSeed,
         SpanKind::TierReload,
+        SpanKind::FaultRetry,
     ];
 
     pub fn label(&self) -> &'static str {
@@ -95,6 +100,7 @@ impl SpanKind {
             SpanKind::KvResume => "kv_resume",
             SpanKind::PrefixSeed => "prefix_seed",
             SpanKind::TierReload => "tier_reload",
+            SpanKind::FaultRetry => "fault_retry",
         }
     }
 
@@ -110,7 +116,8 @@ impl SpanKind {
             | SpanKind::SpecPrefetch
             | SpanKind::KvResume
             | SpanKind::PrefixSeed
-            | SpanKind::TierReload => Resource::Link,
+            | SpanKind::TierReload
+            | SpanKind::FaultRetry => Resource::Link,
         }
     }
 
@@ -408,7 +415,8 @@ mod tests {
                 | SpanKind::SpecPrefetch
                 | SpanKind::KvResume
                 | SpanKind::PrefixSeed
-                | SpanKind::TierReload => assert!(kind.is_transfer()),
+                | SpanKind::TierReload
+                | SpanKind::FaultRetry => assert!(kind.is_transfer()),
                 _ => assert!(!kind.is_transfer()),
             }
         }

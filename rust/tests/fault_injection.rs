@@ -1,0 +1,262 @@
+//! Integration: deterministic fault injection + resilient serving
+//! against the real engine. Requires `make artifacts` (skips cleanly
+//! otherwise); the injector's pure draw/backoff logic is covered by
+//! always-on unit tests in `rust/src/fault/`, the plan knobs in
+//! `rust/src/config/serving.rs`.
+//!
+//! The contracts here are the chaos properties the tentpole promises:
+//! * faults OFF (the default, and an explicitly disabled plan carrying
+//!   garbage rates) is byte-identical to the fault-free scheduler —
+//!   token bits AND virtual timeline, at widths 1 and 4;
+//! * a transient-only plan recovers invisibly: per-session output is
+//!   bit-identical to the fault-free run while `transfer_retries` and
+//!   `faults_injected` climb (recovery is charged to the timeline, not
+//!   to the bytes);
+//! * a fatal fault fails exactly one request with a typed event — no
+//!   panic, no batch poisoning, other sessions' outputs unchanged;
+//! * a missed deadline cancels that request, typed, and counts it;
+//! * a client disconnect mid-stream cancels the session and returns its
+//!   KV blocks to the pool.
+
+use std::path::{Path, PathBuf};
+
+use moe_offload::config::{
+    HardwareProfile, OffloadPolicy, QuantScheme, ServingConfig, SimScale,
+};
+use moe_offload::coordinator::{collect_events, Coordinator, Event, Request};
+use moe_offload::fault::FaultPlan;
+use moe_offload::harness;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() && dir.join("weights.npz").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn serving(width: usize) -> ServingConfig {
+    ServingConfig {
+        policy: OffloadPolicy::Full { cache_k: 2, spec_n: 2 },
+        expert_quant: QuantScheme::Hqq { bits: 3 },
+        attn_quant: QuantScheme::Hqq { bits: 4 },
+        sim_scale: SimScale::Tiny,
+        max_concurrent_sessions: width,
+        ..Default::default()
+    }
+}
+
+fn mk(prompt: &str, max_tokens: usize) -> Request {
+    let mut r = Request::new(prompt);
+    r.chat = false;
+    r.max_tokens = max_tokens;
+    r
+}
+
+/// Per-request outcome of one workload replay: the final text and the
+/// virtual-timeline throughput (bit-exact f64), or the typed failure.
+type Outcome = std::result::Result<(String, u64), String>;
+
+/// Run `requests` through a fresh coordinator built from `cfg`; returns
+/// one [`Outcome`] per request (submit order) plus the coordinator for
+/// metric assertions.
+fn run_workload(
+    dir: &Path,
+    cfg: ServingConfig,
+    requests: Vec<Request>,
+) -> (Vec<Outcome>, Coordinator) {
+    let dir2 = dir.to_path_buf();
+    let coord = Coordinator::new(
+        move || harness::build_engine_with_serving(&dir2, &cfg, HardwareProfile::rtx3060()),
+        7,
+    );
+    let streams: Vec<_> = requests.into_iter().map(|r| coord.submit(r)).collect();
+    let outcomes = streams
+        .into_iter()
+        .map(|s| {
+            collect_events(s)
+                .iter()
+                .find_map(|ev| match ev {
+                    Event::Done { text, tokens_per_s_sim, .. } => {
+                        Some(Ok((text.clone(), tokens_per_s_sim.to_bits())))
+                    }
+                    Event::Error { message, .. } | Event::Failed { message, .. } => {
+                        Some(Err(message.clone()))
+                    }
+                    _ => None,
+                })
+                .expect("stream must terminate")
+        })
+        .collect();
+    (outcomes, coord)
+}
+
+fn prompts() -> Vec<Request> {
+    vec![
+        mk("what is a mixture of experts model", 10),
+        mk("explain expert offloading", 12),
+        mk("how does speculative expert loading work", 8),
+        mk("what is perplexity", 10),
+    ]
+}
+
+#[test]
+fn faults_off_is_byte_identical_at_widths_1_and_4() {
+    let Some(dir) = artifacts_dir() else { return };
+    for width in [1usize, 4] {
+        let (baseline, _) = run_workload(&dir, serving(width), prompts());
+
+        // a DISABLED plan carrying aggressive rates must be inert: the
+        // master switch gates every draw, so bits and timeline match
+        let mut noisy = serving(width);
+        noisy.faults = FaultPlan {
+            enabled: false,
+            transfer_fail_p: 0.9,
+            corrupt_p: 0.9,
+            kv_fail_p: 0.9,
+            brownout_p: 0.9,
+            ..FaultPlan::default()
+        };
+        let (gated, coord) = run_workload(&dir, noisy, prompts());
+
+        assert_eq!(baseline, gated, "disabled plan changed bits or timeline (width {width})");
+        assert_eq!(coord.metrics.gauge("faults_injected"), 0);
+        assert_eq!(coord.metrics.gauge("transfer_retries"), 0);
+        assert_eq!(coord.metrics.counter("requests_failed"), 0);
+    }
+}
+
+#[test]
+fn transient_only_plan_is_bit_transparent_with_retries() {
+    let Some(dir) = artifacts_dir() else { return };
+    let width = 4;
+    let (clean, _) = run_workload(&dir, serving(width), prompts());
+
+    let mut chaotic = serving(width);
+    chaotic.faults = FaultPlan::transient_smoke(0xC4A05);
+    let (faulted, coord) = run_workload(&dir, chaotic, prompts());
+
+    // transient recovery is charged to the virtual link, never to the
+    // bytes: texts match bit-for-bit even though the timeline moved
+    let texts = |outcomes: &[Outcome], what: &str| -> Vec<String> {
+        outcomes
+            .iter()
+            .map(|o| o.as_ref().unwrap_or_else(|e| panic!("{what} run failed: {e}")).0.clone())
+            .collect()
+    };
+    let clean_texts = texts(&clean, "clean");
+    let fault_texts = texts(&faulted, "transient-only");
+    assert_eq!(clean_texts, fault_texts, "transient faults leaked into token bits");
+
+    assert!(coord.metrics.gauge("faults_injected") > 0, "plan enabled but injected nothing");
+    assert!(coord.metrics.gauge("transfer_retries") > 0, "retry path never exercised");
+    assert_eq!(coord.metrics.counter("requests_failed"), 0, "transient-only plan failed a request");
+}
+
+#[test]
+fn fatal_fault_fails_exactly_one_request() {
+    let Some(dir) = artifacts_dir() else { return };
+    // width 1 pins the victim: the first admitted session owns gate #0
+    let (clean, _) = run_workload(&dir, serving(1), prompts());
+
+    let mut cfg = serving(1);
+    cfg.faults = FaultPlan {
+        enabled: true,
+        fatal_at_gate: Some(0),
+        ..FaultPlan::default()
+    };
+    let (outcomes, coord) = run_workload(&dir, cfg, prompts());
+
+    let failed: Vec<_> = outcomes.iter().enumerate().filter(|(_, o)| o.is_err()).collect();
+    assert_eq!(failed.len(), 1, "fatal fault must fail exactly one request: {outcomes:?}");
+    assert_eq!(failed[0].0, 0, "gate #0 belongs to the first admitted session");
+    assert_eq!(coord.metrics.counter("requests_failed"), 1);
+
+    // survivors are untouched — same bits as the fault-free run
+    for (i, (c, f)) in clean.iter().zip(outcomes.iter()).enumerate().skip(1) {
+        let c = c.as_ref().expect("clean run must succeed");
+        let f = f.as_ref().unwrap_or_else(|e| panic!("survivor {i} failed: {e}"));
+        assert_eq!(c.0, f.0, "survivor {i} text changed");
+    }
+}
+
+#[test]
+fn missed_deadline_cancels_typed_and_counted() {
+    let Some(dir) = artifacts_dir() else { return };
+    // per-request deadline overrides the (unset) config default; a
+    // nanosecond budget has always expired by the first tick boundary
+    let mut doomed = mk("what is a mixture of experts model", 10);
+    doomed.deadline_s = Some(1e-9);
+    let fine = mk("explain expert offloading", 8);
+
+    let (outcomes, coord) = run_workload(&dir, serving(2), vec![doomed, fine]);
+
+    let err = outcomes[0].as_ref().expect_err("nanosecond deadline must cancel");
+    assert!(err.contains("deadline"), "failure must name the deadline: {err}");
+    let ok = outcomes[1].as_ref().expect("undeadlined request must finish");
+    assert!(!ok.0.is_empty());
+
+    let cancelled = coord.metrics.counter("deadline_cancellations");
+    assert!(cancelled >= 1);
+    assert!(coord.metrics.counter("requests_failed") >= cancelled);
+    // the gauge mirrors the counter at every tick boundary
+    assert_eq!(coord.metrics.gauge("deadline_cancellations"), cancelled);
+}
+
+#[test]
+fn client_disconnect_mid_stream_cancels_and_returns_kv() {
+    let Some(dir) = artifacts_dir() else { return };
+    // no early stop: the abandoned request would otherwise finish on
+    // its own before the dropped stream is noticed
+    let mut cfg = serving(2);
+    cfg.stop_suffix = String::new();
+
+    // reference: the probe request alone — its Done carries the pool
+    // occupancy at finish, i.e. just its own live blocks (stop_suffix
+    // is off, so the probe always generates exactly max_tokens and its
+    // block count is independent of which token bits it sampled)
+    let dir1 = dir.to_path_buf();
+    let cfg1 = cfg.clone();
+    let coord1 = Coordinator::new(
+        move || harness::build_engine_with_serving(&dir1, &cfg1, HardwareProfile::rtx3060()),
+        7,
+    );
+    let clean_in_use = collect_events(coord1.submit(mk("what is perplexity", 8)))
+        .iter()
+        .find_map(|ev| match ev {
+            Event::Done { kv_blocks_in_use, .. } => Some(*kv_blocks_in_use),
+            _ => None,
+        })
+        .expect("clean probe must finish");
+
+    let dir2 = dir.to_path_buf();
+    let coord = Coordinator::new(
+        move || harness::build_engine_with_serving(&dir2, &cfg, HardwareProfile::rtx3060()),
+        7,
+    );
+    // abandon a long request immediately: every token send fails, the
+    // scheduler reclaims the slot at its next step
+    let abandoned = coord.submit(mk("explain expert offloading", 64));
+    drop(abandoned);
+    let probe = coord.submit(mk("what is perplexity", 8));
+
+    let (text, in_use) = collect_events(probe)
+        .iter()
+        .find_map(|ev| match ev {
+            Event::Done { text, kv_blocks_in_use, .. } => Some((text.clone(), *kv_blocks_in_use)),
+            Event::Error { message, .. } | Event::Failed { message, .. } => {
+                panic!("probe failed: {message}")
+            }
+            _ => None,
+        })
+        .expect("probe must finish");
+
+    assert_eq!(coord.metrics.counter("requests_cancelled"), 1, "disconnect must cancel");
+    assert_eq!(coord.metrics.counter("requests_failed"), 0, "disconnect is not a failure");
+    assert!(!text.is_empty());
+    // the cancelled session's KV blocks are back in the pool: the probe
+    // sees exactly the occupancy it sees when it runs alone
+    assert_eq!(in_use, clean_in_use, "cancelled session leaked KV blocks");
+}

@@ -79,7 +79,9 @@ fn coordinator_streams_token_events() {
                 saw_done = true;
                 break;
             }
-            Event::Error { message, .. } => panic!("unexpected error: {message}"),
+            Event::Error { message, .. } | Event::Failed { message, .. } => {
+                panic!("unexpected error: {message}")
+            }
         }
     }
     assert!(saw_done);
