@@ -122,6 +122,12 @@ pub enum SimScale {
     Mixtral,
 }
 
+/// Upper bound on [`ServingConfig::request_timeout_s`] (one day). An
+/// operator value above ~1.8e19 s would panic `Duration::from_secs_f64`
+/// on the client-facing thread; anything past a day is a config typo
+/// anyway, so validation rejects it long before the panic range.
+pub const MAX_REQUEST_TIMEOUT_S: f64 = 86_400.0;
+
 #[derive(Debug, Clone)]
 pub struct ServingConfig {
     pub policy: OffloadPolicy,
@@ -237,8 +243,10 @@ pub struct ServingConfig {
     /// How long a client-facing control wait (e.g. the `analyze`
     /// command's reply) may block before surfacing a typed
     /// [`Error::Timeout`]. Replaces the historical hard-coded 120 s;
-    /// always validated (finite, > 0) — there is no off switch, a
-    /// serving thread must never wait forever.
+    /// always validated (finite, in (0, [`MAX_REQUEST_TIMEOUT_S`]]) —
+    /// there is no off switch, a serving thread must never wait
+    /// forever, and the cap keeps the value convertible to a
+    /// `Duration` without panicking.
     pub request_timeout_s: f64,
     /// Default per-request deadline in wall seconds, measured from
     /// enqueue. The scheduler checks it at tick boundaries and cancels
@@ -411,10 +419,15 @@ impl ServingConfig {
         // no-op while the plan is disabled
         self.faults.validate()?;
         // the control-wait timeout has no off switch: a serving thread
-        // must never be configured to wait forever (or not at all)
-        if !self.request_timeout_s.is_finite() || self.request_timeout_s <= 0.0 {
+        // must never be configured to wait forever (or not at all). The
+        // upper bound keeps the value safely inside Duration::from_secs_f64
+        // range (which panics around 1.8e19 s) with a day as the sane cap.
+        if !self.request_timeout_s.is_finite()
+            || self.request_timeout_s <= 0.0
+            || self.request_timeout_s > MAX_REQUEST_TIMEOUT_S
+        {
             return Err(Error::Config(format!(
-                "request_timeout_s must be finite and > 0, got {}",
+                "request_timeout_s must be finite and in (0, {MAX_REQUEST_TIMEOUT_S}], got {}",
                 self.request_timeout_s
             )));
         }
@@ -758,6 +771,15 @@ mod tests {
             let c = ServingConfig { deadline_s: Some(bad), ..Default::default() };
             assert!(c.validate().is_err(), "deadline_s {bad} must reject");
         }
+        // finite-but-huge values overflow Duration::from_secs_f64 — the
+        // validator's cap must catch them before the conversion can panic
+        let c = ServingConfig { request_timeout_s: 1e20, ..Default::default() };
+        assert!(c.validate().is_err(), "request_timeout_s past the cap must reject");
+        let c = ServingConfig {
+            request_timeout_s: MAX_REQUEST_TIMEOUT_S,
+            ..Default::default()
+        };
+        assert!(c.validate().is_ok(), "the cap itself is a legal value");
         let ok = ServingConfig {
             request_timeout_s: 1.5,
             deadline_s: Some(30.0),

@@ -422,10 +422,13 @@ impl Coordinator {
             .send(Work::Analyze(tx))
             .map_err(|_| Error::Serving("engine worker is gone".into()))?;
         // the wait is bounded by ServingConfig::request_timeout_s (not a
-        // hard-coded constant): validate() guarantees it finite and > 0,
-        // which from_secs_f64 requires
+        // hard-coded constant): validate() guarantees it finite, > 0 and
+        // ≤ MAX_REQUEST_TIMEOUT_S; the fallible conversion is belt-and-
+        // braces so an unvalidated value still can't panic this thread
         let timeout_s = f64::from_bits(self.request_timeout_s.load(Ordering::SeqCst));
-        rx.recv_timeout(Duration::from_secs_f64(timeout_s)).map_err(|_| {
+        let timeout = Duration::try_from_secs_f64(timeout_s)
+            .unwrap_or(Duration::from_secs(86_400));
+        rx.recv_timeout(timeout).map_err(|_| {
             Error::Timeout(format!(
                 "analyze request got no answer within {timeout_s}s \
                  (ServingConfig::request_timeout_s)"
@@ -506,6 +509,12 @@ fn scheduler_loop(
                     pending.push_back(Pending { req, tx, enqueued, tokens: None })
                 }
                 Work::Analyze(tx) => {
+                    // the per-tick gauge mirror (step 5) runs AFTER this
+                    // drain, so refresh the fault gauges first — a caller
+                    // reading gauges once analyze() returns must not miss
+                    // the final tick's injected/retry counts
+                    let fs = engine.fault_stats();
+                    m.record_faults(fs.injected, fs.transfer_retries);
                     let _ = tx.send(crate::trace::analysis::analyze_response(
                         &engine.tracer,
                         &engine.cost,
@@ -779,12 +788,7 @@ fn scheduler_loop(
             engine.tiers.bytes_saved(),
         );
         let fs = engine.fault_stats();
-        m.record_faults(
-            fs.injected,
-            fs.transfer_retries,
-            m.counter("requests_failed"),
-            m.counter("deadline_cancellations"),
-        );
+        m.record_faults(fs.injected, fs.transfer_retries);
         // ring overflow visibility: spans silently aged out of the trace
         // ring bias every downstream analysis, so operators must see the
         // count (0 whenever tracing is off or the ring kept up)
@@ -1276,7 +1280,10 @@ fn effective_deadline_s(engine: &MoeEngine, req: &Request) -> Option<f64> {
 /// The wall-clock instant an admitted request must finish by. `started`
 /// is the admission instant and `queue_wait_s` what the request already
 /// spent queued, so the deadline is anchored at ENQUEUE time — a request
-/// cannot buy more lifetime by waiting longer.
+/// cannot buy more lifetime by waiting longer. Finite-but-huge wire
+/// values (e.g. 1e20, which passes the sign/finiteness sanitization)
+/// overflow `Duration`/`Instant` arithmetic, so they degrade to "no
+/// deadline" here instead of panicking the engine worker.
 fn deadline_at(
     engine: &MoeEngine,
     req: &Request,
@@ -1284,7 +1291,8 @@ fn deadline_at(
     queue_wait_s: f64,
 ) -> Option<Instant> {
     let d = effective_deadline_s(engine, req)?;
-    Some(started + Duration::from_secs_f64((d - queue_wait_s).max(0.0)))
+    let dur = Duration::try_from_secs_f64((d - queue_wait_s).max(0.0)).ok()?;
+    started.checked_add(dur)
 }
 
 fn deadline_passed(live: &LiveSession) -> bool {

@@ -441,13 +441,15 @@ pub fn run_profile(
     }
 
     // the analysis must be fetched before shutdown — it runs on the
-    // worker thread against the live engine's span ring
+    // worker thread against the live engine's span ring. Answering it
+    // also refreshes the fault gauges, so the reads below see the final
+    // tick's totals (the per-tick mirror alone lags one iteration);
+    // deadline_cancellations is a plain counter, incremented by the
+    // worker before it answers, so it needs no such refresh
     report.analysis = coord.analyze()?;
-    // fault/resilience counters: published as gauges every scheduler
-    // tick, so the last recorded values are the run's lifetime totals
     report.faults_injected = coord.metrics.gauge("faults_injected");
     report.transfer_retries = coord.metrics.gauge("transfer_retries");
-    report.deadline_cancellations = coord.metrics.gauge("deadline_cancellations");
+    report.deadline_cancellations = coord.metrics.counter("deadline_cancellations");
     coord.shutdown();
     Ok(report)
 }

@@ -122,11 +122,15 @@ impl CopyEngine {
     pub fn submit(&mut self, id: ExpertId) -> Result<TransferTicket> {
         self.staging.acquire();
         let ticket = TransferTicket(self.next_ticket);
+        if self.job_tx.send(Job::Stage { ticket, id }).is_err() {
+            // nothing was staged: hand the permit back so repeated
+            // submits against a dead pool keep erroring here instead of
+            // deadlocking in acquire() once the permits run out
+            self.staging.release();
+            return Err(Error::Engine("copy engine workers dead".into()));
+        }
         self.next_ticket += 1;
         self.staged_jobs += 1;
-        self.job_tx
-            .send(Job::Stage { ticket, id })
-            .map_err(|_| Error::Engine("copy engine workers dead".into()))?;
         Ok(ticket)
     }
 

@@ -188,25 +188,19 @@ impl Metrics {
         g.insert("link_bytes_saved".to_string(), bytes_saved);
     }
 
-    /// Record the fault-injection / resilience gauges in one shot
-    /// (`faults_injected` / `transfer_retries` / `requests_failed` /
-    /// `deadline_cancellations`) — the scheduler calls this every tick
-    /// from the engine's lifetime `FaultStats`
-    /// (`crate::fault::FaultStats`) plus its own failure counters,
-    /// mirroring [`Self::record_tiers`]. All zero in a default
-    /// (faults-off, no-deadline) deployment.
-    pub fn record_faults(
-        &self,
-        injected: u64,
-        transfer_retries: u64,
-        failed: u64,
-        deadline_cancelled: u64,
-    ) {
+    /// Record the fault-injection gauges in one shot (`faults_injected`
+    /// / `transfer_retries`) — the scheduler calls this every tick from
+    /// the engine's lifetime `FaultStats` (`crate::fault::FaultStats`),
+    /// mirroring [`Self::record_tiers`]. The failure-side siblings
+    /// (`requests_failed` / `deadline_cancellations`) are plain counters
+    /// and deliberately NOT mirrored here: a same-named gauge would make
+    /// `render()` emit two lines per name whose values can disagree
+    /// between a counter increment and the next tick's mirror. Both
+    /// gauges are zero in a faults-off deployment.
+    pub fn record_faults(&self, injected: u64, transfer_retries: u64) {
         let mut g = self.gauges.lock().unwrap_or_else(|e| e.into_inner());
         g.insert("faults_injected".to_string(), injected);
         g.insert("transfer_retries".to_string(), transfer_retries);
-        g.insert("requests_failed".to_string(), failed);
-        g.insert("deadline_cancellations".to_string(), deadline_cancelled);
     }
 
     /// Every gauge name currently recorded — the done-event parity test
@@ -494,12 +488,34 @@ mod tests {
     #[test]
     fn fault_gauges_record_together() {
         let m = Metrics::new();
-        m.record_faults(9, 6, 2, 1);
+        m.record_faults(9, 6);
         assert_eq!(m.gauge("faults_injected"), 9);
         assert_eq!(m.gauge("transfer_retries"), 6);
-        assert_eq!(m.gauge("requests_failed"), 2);
-        assert_eq!(m.gauge("deadline_cancellations"), 1);
         assert!(m.render().contains("transfer_retries 6"));
+    }
+
+    /// The failure counters must never gain gauge mirrors: render()
+    /// would emit two lines with the same metric name whose values can
+    /// disagree between the counter increment and the next tick's
+    /// mirror (every rendered name must be unique).
+    #[test]
+    fn failure_counters_have_no_gauge_mirrors() {
+        let m = Metrics::new();
+        m.inc("requests_failed", 2);
+        m.inc("deadline_cancellations", 1);
+        m.record_faults(9, 6);
+        for name in ["requests_failed", "deadline_cancellations"] {
+            assert!(
+                !m.gauge_names().iter().any(|n| n == name),
+                "{name} must stay a counter, not a gauge"
+            );
+            let rendered = m.render();
+            assert_eq!(
+                rendered.lines().filter(|l| l.starts_with(&format!("{name} "))).count(),
+                1,
+                "{name} must render exactly once"
+            );
+        }
     }
 
     #[test]

@@ -14,7 +14,9 @@
 //!   to the bytes);
 //! * a fatal fault fails exactly one request with a typed event — no
 //!   panic, no batch poisoning, other sessions' outputs unchanged;
-//! * a missed deadline cancels that request, typed, and counts it;
+//! * a missed deadline cancels that request, typed, and counts it — and
+//!   an oversized wire deadline (finite but past `Duration` range)
+//!   degrades to "no deadline" instead of panicking the worker;
 //! * a client disconnect mid-stream cancels the session and returns its
 //!   KV blocks to the pool.
 
@@ -201,8 +203,31 @@ fn missed_deadline_cancels_typed_and_counted() {
     let cancelled = coord.metrics.counter("deadline_cancellations");
     assert!(cancelled >= 1);
     assert!(coord.metrics.counter("requests_failed") >= cancelled);
-    // the gauge mirrors the counter at every tick boundary
-    assert_eq!(coord.metrics.gauge("deadline_cancellations"), cancelled);
+    // counters only — a same-named gauge mirror would render duplicate
+    // metric lines (see telemetry::failure_counters_have_no_gauge_mirrors)
+    assert_eq!(coord.metrics.gauge("deadline_cancellations"), 0);
+}
+
+#[test]
+fn oversized_deadline_degrades_to_no_deadline_not_a_panic() {
+    let Some(dir) = artifacts_dir() else { return };
+    // finite, positive, passes the sign/finiteness sanitization — but
+    // overflows Duration::from_secs_f64 (~1.8e19 s) and Instant + Duration
+    // well before that. A hostile client can put this on the wire
+    // verbatim; it must behave as "no deadline", not crash the worker.
+    let mut huge = mk("what is a mixture of experts model", 10);
+    huge.deadline_s = Some(1e20);
+    let fine = mk("explain expert offloading", 8);
+
+    let (outcomes, coord) = run_workload(&dir, serving(2), vec![huge, fine]);
+
+    for (i, o) in outcomes.iter().enumerate() {
+        let ok = o.as_ref().unwrap_or_else(|e| panic!("request {i} failed: {e}"));
+        assert!(!ok.0.is_empty(), "request {i} produced no text");
+    }
+    assert!(coord.is_running(), "engine worker died on an oversized deadline");
+    assert_eq!(coord.metrics.counter("deadline_cancellations"), 0);
+    assert_eq!(coord.metrics.counter("requests_failed"), 0);
 }
 
 #[test]
