@@ -1,8 +1,10 @@
 //! Span-trace export: drive a workload that exercises every [`SpanKind`]
 //! — prefill, decode, speculative prefetch, adaptive re-tier reloads, a
-//! KV preempt/resume round-trip, and a prefix-cache seeded admission —
-//! then dump the span ring as Chrome trace-event JSON and print the
-//! per-kind time breakdown.
+//! KV preempt/resume round-trip, a prefix-cache seeded admission, and
+//! (via a transient-only fault plan) injected-fault retries — then dump
+//! the span ring as Chrome trace-event JSON, with the expert flight
+//! recorder's residency/hit-rate counter tracks riding underneath, and
+//! print the per-kind time breakdown.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example trace_export
@@ -16,6 +18,7 @@
 //! much link time the compute front actually hid.
 
 use moe_offload::config::{HardwareProfile, OffloadPolicy, QuantScheme, ServingConfig, SimScale};
+use moe_offload::fault::FaultPlan;
 use moe_offload::harness;
 use moe_offload::model::{ByteTokenizer, Sampler};
 use moe_offload::quant::TierPolicy;
@@ -34,6 +37,14 @@ fn main() -> anyhow::Result<()> {
         // re-tiering and the trace shows tier_reload transfers
         expert_tiers: TierPolicy { adapt_interval: 8, ..TierPolicy::hot_cold() },
         trace: true,
+        // transient-only faults (recoverable by construction — output
+        // stays bit-identical) so the trace shows fault_retry recovery
+        // time on the link; the raised failure rate makes the short run
+        // trip retries reliably
+        faults: FaultPlan { transfer_fail_p: 0.35, ..FaultPlan::transient_smoke(7) },
+        // flight recorder on: its residency / hit-rate samples become
+        // ph:"C" counter tracks in the exported trace
+        expert_obs: true,
         ..Default::default()
     };
     let mut engine =
@@ -77,11 +88,22 @@ fn main() -> anyhow::Result<()> {
     anyhow::ensure!(reused > 0, "prefix cache did not seed the second session");
     anyhow::ensure!(totals.len() == SpanKind::ALL.len());
 
+    // fold the recorder's pending events and take a final counter
+    // sample so the exported tracks cover the whole drive
+    engine.obs_tick();
+    let counters = engine.obs.chrome_counter_events();
+    anyhow::ensure!(!counters.is_empty(), "flight recorder produced no counter samples");
+
     let out = std::env::var("TRACE_OUT").unwrap_or_else(|_| "trace.json".to_string());
-    std::fs::write(&out, engine.tracer.chrome_trace().to_string())?;
+    std::fs::write(
+        &out,
+        engine.tracer.chrome_trace_with_counters(&counters).to_string(),
+    )?;
     println!(
-        "wrote {} spans ({} dropped) to {out} — load it at https://ui.perfetto.dev",
+        "wrote {} spans + {} counter samples ({} dropped) to {out} — load it at \
+         https://ui.perfetto.dev",
         engine.tracer.len(),
+        counters.len(),
         engine.tracer.dropped(),
     );
     Ok(())

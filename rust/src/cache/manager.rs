@@ -49,6 +49,9 @@ pub struct CacheStats {
     pub evictions: u64,
     /// per-layer (hits, uses)
     pub per_layer: Vec<(u64, u64)>,
+    /// Per-layer speculation quality (paper Fig 2: recall/precision vary
+    /// strongly by depth). Merges element-wise into the aggregate `spec`.
+    pub spec_per_layer: Vec<SpeculativeStats>,
 }
 
 impl CacheStats {
@@ -70,6 +73,27 @@ pub enum CacheEvent {
     Miss(ExpertId),
 }
 
+/// One flight-recorder log entry: a residency-affecting cache transition,
+/// appended (only while [`CacheManager::set_obs_log`] is on) for the
+/// engine to drain into [`crate::obs::ExpertObs`]. `Evict` is a
+/// *consequence* of the measured cache size (LRU victim, spec-buffer
+/// shed, transient release) and is excluded from the counterfactual
+/// replay stream; `Drop` is an exogenous forced drop (tier
+/// invalidation) that the simulator replays at every cache size.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheLog {
+    /// Routed demand use and its measured outcome.
+    Use(CacheEvent),
+    /// Demand-loaded residency established ([`CacheManager::insert_loaded`]).
+    Insert(ExpertId),
+    /// Speculative residency established (redundant inserts excluded).
+    SpecInsert(ExpertId),
+    /// Bookkeeping eviction — LRU victim, spec shed, or transient free.
+    Evict(ExpertId),
+    /// Forced drop everywhere ([`CacheManager::drop_expert`]).
+    Drop(ExpertId),
+}
+
 pub struct CacheManager {
     layers: Vec<LruSet<u16>>,
     /// Unclaimed speculative loads, oldest first (bounded by spec_cap).
@@ -85,6 +109,11 @@ pub struct CacheManager {
     /// machinery compares this against the expert's current tier to
     /// catch stale-precision copies after a promotion/demotion.
     resident_bits: BTreeMap<ExpertId, u8>,
+    /// Flight-recorder log, appended only while `obs_log` is on (off:
+    /// every push site is a branch on a bool and the Vec never
+    /// allocates). The engine drains it with [`Self::take_obs_log`].
+    obs_log: Vec<CacheLog>,
+    obs_log_on: bool,
     pub device: DeviceMemory,
     pub stats: CacheStats,
 }
@@ -98,8 +127,32 @@ impl CacheManager {
             pinned: HashSet::new(),
             deferred_evict: Vec::new(),
             resident_bits: BTreeMap::new(),
+            obs_log: Vec::new(),
+            obs_log_on: false,
             device,
-            stats: CacheStats { per_layer: vec![(0, 0); n_layers], ..Default::default() },
+            stats: CacheStats {
+                per_layer: vec![(0, 0); n_layers],
+                spec_per_layer: vec![SpeculativeStats::default(); n_layers],
+                ..Default::default()
+            },
+        }
+    }
+
+    /// Turn the flight-recorder log on/off (off by default; the engine
+    /// enables it when `ServingConfig::expert_obs` is set).
+    pub fn set_obs_log(&mut self, on: bool) {
+        self.obs_log_on = on;
+    }
+
+    /// Drain the pending flight-recorder log (empty while logging is off).
+    pub fn take_obs_log(&mut self) -> Vec<CacheLog> {
+        std::mem::take(&mut self.obs_log)
+    }
+
+    #[inline]
+    fn log(&mut self, ev: CacheLog) {
+        if self.obs_log_on {
+            self.obs_log.push(ev);
         }
     }
 
@@ -123,7 +176,7 @@ impl CacheManager {
     pub fn on_demand_use(&mut self, id: ExpertId) -> CacheEvent {
         let li = id.layer as usize;
         self.stats.per_layer[li].1 += 1;
-        match self.lookup(id) {
+        let ev = match self.lookup(id) {
             Lookup::InCache => {
                 self.layers[li].touch(id.expert);
                 self.stats.hits += 1;
@@ -137,6 +190,7 @@ impl CacheManager {
                 self.layers[li].count_use(id.expert, true);
                 self.insert_into_layer(id);
                 self.stats.spec.useful += 1;
+                self.stats.spec_per_layer[li].useful += 1;
                 // a spec hit avoided a miss; count as hit for hit-ratio of
                 // the *combined* system but track separately too
                 self.stats.hits += 1;
@@ -147,9 +201,12 @@ impl CacheManager {
                 self.layers[li].count_use(id.expert, false);
                 self.stats.misses += 1;
                 self.stats.spec.missed += 1;
+                self.stats.spec_per_layer[li].missed += 1;
                 CacheEvent::Miss(id)
             }
-        }
+        };
+        self.log(CacheLog::Use(ev));
+        ev
     }
 
     /// Install a demand-loaded expert (after the transfer completed).
@@ -158,6 +215,7 @@ impl CacheManager {
         let bits = e.quant_bits();
         self.device.insert(id, e)?;
         self.resident_bits.insert(id, bits);
+        self.log(CacheLog::Insert(id));
         self.insert_into_layer(id);
         Ok(())
     }
@@ -165,14 +223,17 @@ impl CacheManager {
     /// Install a speculatively loaded expert into the shared buffers.
     /// Oldest unclaimed speculative entry is dropped when full.
     pub fn insert_speculative(&mut self, id: ExpertId, e: DeviceExpert) -> Result<()> {
+        let li = id.layer as usize;
         if self.lookup(id) != Lookup::Absent {
             self.stats.spec.redundant += 1;
+            self.stats.spec_per_layer[li].redundant += 1;
             return Ok(());
         }
         while self.spec_resident.len() >= self.spec_cap.max(1) {
             if let Some(old) = self.spec_resident.pop_front() {
                 self.evict_or_defer(old);
                 self.stats.evictions += 1;
+                self.log(CacheLog::Evict(old));
             }
         }
         self.ensure_headroom()?;
@@ -181,6 +242,8 @@ impl CacheManager {
         self.resident_bits.insert(id, bits);
         self.spec_resident.push_back(id);
         self.stats.spec.issued += 1;
+        self.stats.spec_per_layer[li].issued += 1;
+        self.log(CacheLog::SpecInsert(id));
         Ok(())
     }
 
@@ -190,6 +253,7 @@ impl CacheManager {
         let li = id.layer as usize;
         if self.layers[li].capacity() == 0 && !self.spec_resident.contains(&id) {
             self.evict_or_defer(id);
+            self.log(CacheLog::Evict(id));
         }
     }
 
@@ -199,6 +263,7 @@ impl CacheManager {
         if let Some(evicted) = self.layers[li].insert(id.expert) {
             self.evict_or_defer(ExpertId { layer: id.layer, expert: evicted });
             self.stats.evictions += 1;
+            self.log(CacheLog::Evict(ExpertId { layer: id.layer, expert: evicted }));
         }
     }
 
@@ -210,6 +275,7 @@ impl CacheManager {
                 Some(old) => {
                     self.evict_or_defer(old);
                     self.stats.evictions += 1;
+                    self.log(CacheLog::Evict(old));
                 }
                 None => break, // let device.insert surface the OOM
             }
@@ -290,6 +356,7 @@ impl CacheManager {
             self.stats.evictions += 1;
         }
         self.resident_bits.remove(&id);
+        self.log(CacheLog::Drop(id));
     }
 
     /// Lifetime per-expert (hits, routed uses) aggregated from every
@@ -530,6 +597,75 @@ mod tests {
         let counts = m.expert_counters();
         assert!(counts.contains(&(id(0, 1), 1, 2)), "{counts:?}");
         assert!(counts.contains(&(id(1, 3), 0, 1)), "{counts:?}");
+    }
+
+    #[test]
+    fn spec_stats_split_per_layer() {
+        let mut m = mgr(1, 4, 16);
+        m.insert_speculative(id(0, 1), dummy()).unwrap(); // layer 0 issued
+        m.insert_speculative(id(0, 1), dummy()).unwrap(); // layer 0 redundant
+        m.insert_speculative(id(1, 2), dummy()).unwrap(); // layer 1 issued
+        m.on_demand_use(id(0, 1)); // layer 0 useful
+        m.on_demand_use(id(1, 5)); // layer 1 missed
+        assert_eq!(m.stats.spec_per_layer[0].issued, 1);
+        assert_eq!(m.stats.spec_per_layer[0].redundant, 1);
+        assert_eq!(m.stats.spec_per_layer[0].useful, 1);
+        assert_eq!(m.stats.spec_per_layer[1].issued, 1);
+        assert_eq!(m.stats.spec_per_layer[1].missed, 1);
+        // the per-layer split merges back into the aggregate exactly
+        let mut merged = SpeculativeStats::default();
+        for s in &m.stats.spec_per_layer {
+            merged.merge(s);
+        }
+        assert_eq!(merged.issued, m.stats.spec.issued);
+        assert_eq!(merged.redundant, m.stats.spec.redundant);
+        assert_eq!(merged.useful, m.stats.spec.useful);
+        assert_eq!(merged.missed, m.stats.spec.missed);
+    }
+
+    #[test]
+    fn obs_log_is_off_by_default_and_records_when_on() {
+        let mut m = mgr(1, 4, 16);
+        m.on_demand_use(id(0, 1));
+        m.insert_loaded(id(0, 1), dummy()).unwrap();
+        assert!(m.take_obs_log().is_empty(), "logging is opt-in");
+
+        m.set_obs_log(true);
+        m.on_demand_use(id(0, 1)); // hit
+        m.insert_speculative(id(0, 2), dummy()).unwrap();
+        m.on_demand_use(id(0, 2)); // spec hit: promotes, LRU-evicts (0,1)
+        m.drop_expert(id(0, 2));
+        let log = m.take_obs_log();
+        assert_eq!(
+            log,
+            vec![
+                CacheLog::Use(CacheEvent::Hit(id(0, 1))),
+                CacheLog::SpecInsert(id(0, 2)),
+                // the promotion's bookkeeping eviction lands before the
+                // Use entry (on_demand_use logs its outcome last)
+                CacheLog::Evict(id(0, 1)),
+                CacheLog::Use(CacheEvent::SpecHit(id(0, 2))),
+                CacheLog::Drop(id(0, 2)),
+            ]
+        );
+        assert!(m.take_obs_log().is_empty(), "take drains the log");
+    }
+
+    #[test]
+    fn obs_log_covers_spec_shed_and_headroom_paths() {
+        let mut m = mgr(1, 1, 16); // spec buffer holds one entry
+        m.set_obs_log(true);
+        m.insert_speculative(id(0, 1), dummy()).unwrap();
+        m.insert_speculative(id(0, 2), dummy()).unwrap(); // sheds (0,1)
+        let log = m.take_obs_log();
+        assert_eq!(
+            log,
+            vec![
+                CacheLog::SpecInsert(id(0, 1)),
+                CacheLog::Evict(id(0, 1)),
+                CacheLog::SpecInsert(id(0, 2)),
+            ]
+        );
     }
 
     #[test]

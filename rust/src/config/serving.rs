@@ -254,6 +254,22 @@ pub struct ServingConfig {
     /// own `deadline_s` overrides this default. `None` (default) means
     /// no deadline.
     pub deadline_s: Option<f64>,
+    /// Expert-flow observability (see [`crate::obs`]): a per-(layer,
+    /// expert) flight recorder fed from the cache manager and copy
+    /// engine — routed uses, hits/misses, demand vs speculative loads,
+    /// prefetches used/wasted, evictions, virtual-time-weighted
+    /// residency, wire bytes per quant tier — plus the recorded access
+    /// stream the counterfactual cache-curve simulator replays. Off by
+    /// default — a disabled recorder never allocates and every record
+    /// call is a branch on a bool, so off is byte-identical serving
+    /// (same inertness contract as `trace`).
+    pub expert_obs: bool,
+    /// Per-layer cap on recorded access-stream events while
+    /// `expert_obs` is on; once a layer's stream is full, further
+    /// events are dropped (and counted) and the simulator's exact
+    /// anchor guarantee is withdrawn for that run. Inert while
+    /// `expert_obs` is off.
+    pub expert_obs_event_capacity: usize,
 }
 
 impl Default for ServingConfig {
@@ -290,6 +306,10 @@ impl Default for ServingConfig {
             // preserves the coordinator's historical hard-coded wait
             request_timeout_s: 120.0,
             deadline_s: None,
+            expert_obs: false,
+            // ~24 bytes/event resident; 1M events per layer covers far
+            // more decode steps than any testbed run issues
+            expert_obs_event_capacity: 1 << 20,
         }
     }
 }
@@ -411,6 +431,24 @@ impl ServingConfig {
                     "trace_span_capacity {} is unreasonably large (each span \
                      is ~64 bytes resident; limit {})",
                     self.trace_span_capacity,
+                    1 << 24
+                )));
+            }
+        }
+        // expert-observability knobs are inert while the recorder is off
+        if self.expert_obs {
+            if self.expert_obs_event_capacity == 0 {
+                return Err(Error::Config(
+                    "expert_obs_event_capacity must be >= 1 with expert_obs on — a \
+                     zero-event stream could never anchor the simulator"
+                        .into(),
+                ));
+            }
+            if self.expert_obs_event_capacity > 1 << 24 {
+                return Err(Error::Config(format!(
+                    "expert_obs_event_capacity {} is unreasonably large (each \
+                     event is ~24 bytes resident per layer; limit {})",
+                    self.expert_obs_event_capacity,
                     1 << 24
                 )));
             }
@@ -719,6 +757,43 @@ mod tests {
         assert!(
             inert.validate().is_ok(),
             "inert trace knobs must not block a trace-off deployment"
+        );
+    }
+
+    #[test]
+    fn expert_obs_knob_defaults_and_validation() {
+        let d = ServingConfig::default();
+        assert!(!d.expert_obs, "expert observability is opt-in");
+        assert!(d.expert_obs_event_capacity > 0);
+
+        let zero_stream = ServingConfig {
+            expert_obs: true,
+            expert_obs_event_capacity: 0,
+            ..Default::default()
+        };
+        assert!(zero_stream.validate().is_err());
+        let huge_stream = ServingConfig {
+            expert_obs: true,
+            expert_obs_event_capacity: (1 << 24) + 1,
+            ..Default::default()
+        };
+        assert!(huge_stream.validate().is_err());
+        let ok = ServingConfig { expert_obs: true, ..Default::default() };
+        assert!(ok.validate().is_ok());
+    }
+
+    #[test]
+    fn expert_obs_knobs_are_inert_when_off() {
+        // invalid values behind the off switch must not reject the
+        // config (same rule every opt-in knob family follows)
+        let inert = ServingConfig {
+            expert_obs: false,
+            expert_obs_event_capacity: 0,
+            ..Default::default()
+        };
+        assert!(
+            inert.validate().is_ok(),
+            "inert expert-obs knobs must not block an obs-off deployment"
         );
     }
 

@@ -220,6 +220,14 @@ pub enum Event {
         /// Total requests cancelled for exceeding their deadline since
         /// engine start (a subset of `requests_failed`).
         deadline_cancellations: u64,
+        /// Aggregate speculative-prefetch recall in basis points since
+        /// engine start: the share of routed experts speculation had
+        /// already staged (paper Fig. 2). 0 until anything was routed.
+        spec_recall_bp: u64,
+        /// Aggregate speculative-prefetch precision in basis points
+        /// since engine start: the share of issued prefetches that were
+        /// actually used. 0 until anything was issued.
+        spec_precision_bp: u64,
         /// Per-request time breakdown — `Some` only when span tracing is
         /// on (`ServingConfig::trace`), so tracing-off serving output
         /// stays byte-identical.
@@ -261,6 +269,10 @@ enum Work {
     /// critical-path/attribution/what-if report (see
     /// [`crate::trace::analysis`]) on the provided channel.
     Analyze(Sender<Json>),
+    /// Expert flight-recorder request: the worker answers with the
+    /// per-(layer, expert) counters, prefetch-quality gauges and
+    /// counterfactual cache curves (see [`crate::obs`]).
+    Experts(Sender<Json>),
     Shutdown,
 }
 
@@ -375,9 +387,11 @@ impl Coordinator {
                                     message: format!("engine init failed: {e}"),
                                 });
                             }
-                            // dropping the sender fails the analyze()
-                            // call explicitly instead of hanging it
+                            // dropping the sender fails the analyze()/
+                            // experts() call explicitly instead of
+                            // hanging it
                             Work::Analyze(_) => {}
+                            Work::Experts(_) => {}
                             Work::Shutdown => break,
                         }
                     }
@@ -431,6 +445,30 @@ impl Coordinator {
         rx.recv_timeout(timeout).map_err(|_| {
             Error::Timeout(format!(
                 "analyze request got no answer within {timeout_s}s \
+                 (ServingConfig::request_timeout_s)"
+            ))
+        })
+    }
+
+    /// Ask the worker for the expert flight recorder's report:
+    /// per-(layer, expert) use/hit/load/eviction counters,
+    /// virtual-time-weighted residency, wire bytes by tier, per-layer
+    /// prefetch-quality gauges, and the counterfactual LRU/OPT cache
+    /// curves (see [`crate::obs`]). Answered between scheduling ticks,
+    /// so the snapshot is consistent. With `ServingConfig::expert_obs`
+    /// off the response degrades to an explicit `{"enabled": false,
+    /// "error": "expert observability disabled"}` object.
+    pub fn experts(&self) -> Result<Json> {
+        let (tx, rx) = channel();
+        self.work_tx
+            .send(Work::Experts(tx))
+            .map_err(|_| Error::Serving("engine worker is gone".into()))?;
+        let timeout_s = f64::from_bits(self.request_timeout_s.load(Ordering::SeqCst));
+        let timeout = Duration::try_from_secs_f64(timeout_s)
+            .unwrap_or(Duration::from_secs(86_400));
+        rx.recv_timeout(timeout).map_err(|_| {
+            Error::Timeout(format!(
+                "experts request got no answer within {timeout_s}s \
                  (ServingConfig::request_timeout_s)"
             ))
         })
@@ -519,6 +557,20 @@ fn scheduler_loop(
                         &engine.tracer,
                         &engine.cost,
                     ));
+                }
+                Work::Experts(tx) => {
+                    // same freshness rule as analyze(): refresh the
+                    // prefetch-quality gauges before answering, so a
+                    // caller reading gauges once experts() returns sees
+                    // the final tick's recall/precision
+                    m.record_spec(
+                        crate::obs::to_bp(engine.cache.stats.spec.recall()),
+                        crate::obs::to_bp(engine.cache.stats.spec.precision()),
+                    );
+                    // experts_report drains the manager's pending log
+                    // first, so the snapshot includes everything up to
+                    // the last completed tick
+                    let _ = tx.send(engine.experts_report());
                 }
                 Work::Shutdown => {
                     // finish live sessions, drop anything still queued
@@ -789,6 +841,18 @@ fn scheduler_loop(
         );
         let fs = engine.fault_stats();
         m.record_faults(fs.injected, fs.transfer_retries);
+        // prefetch quality (paper Fig 2): recall = share of routed
+        // experts speculation had staged, precision = share of issued
+        // prefetches that were used. Recorded unconditionally — both
+        // read 0 until speculation has issued/used anything.
+        m.record_spec(
+            crate::obs::to_bp(engine.cache.stats.spec.recall()),
+            crate::obs::to_bp(engine.cache.stats.spec.precision()),
+        );
+        // flight-recorder tick: fold the manager's event log and sample
+        // the residency/hit-rate counter tracks (branch-on-a-bool when
+        // expert_obs is off)
+        engine.obs_tick();
         // ring overflow visibility: spans silently aged out of the trace
         // ring bias every downstream analysis, so operators must see the
         // count (0 whenever tracing is off or the ring kept up)
@@ -1702,6 +1766,8 @@ fn finish(m: &Metrics, engine: &mut MoeEngine, live: LiveSession, active_session
         transfer_retries: engine.fault_stats().transfer_retries,
         requests_failed: m.counter("requests_failed"),
         deadline_cancellations: m.counter("deadline_cancellations"),
+        spec_recall_bp: crate::obs::to_bp(engine.cache.stats.spec.recall()),
+        spec_precision_bp: crate::obs::to_bp(engine.cache.stats.spec.precision()),
         breakdown,
     });
 }

@@ -36,7 +36,13 @@
 //! GPU/link utilization, per-request critical paths, aggregate
 //! bottleneck attribution and what-if speedup projections, or an
 //! explicit `{"enabled":false,"error":"tracing disabled"}` when
-//! `ServingConfig::trace` is off.
+//! `ServingConfig::trace` is off. A bare `experts` line returns the
+//! expert flight recorder's report (`crate::obs`): per-(layer, expert)
+//! use/hit/load/eviction counters, virtual-time-weighted residency,
+//! wire bytes by tier, per-layer prefetch quality, and counterfactual
+//! LRU/OPT cache curves — or the same explicit
+//! `{"enabled":false,"error":"expert observability disabled"}`
+//! degradation when `ServingConfig::expert_obs` is off.
 //!
 //! Each connection gets its own handler thread; the coordinator's
 //! scheduler interleaves up to `max_concurrent_sessions` requests, so
@@ -149,6 +155,8 @@ pub const GAUGE_DONE_FIELDS: &[(&str, &str)] = &[
     ("trace_spans_dropped", "trace_spans_dropped"),
     ("faults_injected", "faults_injected"),
     ("transfer_retries", "transfer_retries"),
+    ("spec_recall_bp", "spec_recall_bp"),
+    ("spec_precision_bp", "spec_precision_bp"),
     // requests_failed / deadline_cancellations are counters, not gauges
     // (a same-named gauge mirror would duplicate their render() lines);
     // the done event reads them straight off the counters, so they are
@@ -213,6 +221,8 @@ pub fn event_to_json(ev: &Event) -> Json {
             transfer_retries,
             requests_failed,
             deadline_cancellations,
+            spec_recall_bp,
+            spec_precision_bp,
             breakdown,
             ..
         } => {
@@ -253,6 +263,8 @@ pub fn event_to_json(ev: &Event) -> Json {
                 ("transfer_retries", (*transfer_retries as usize).into()),
                 ("requests_failed", (*requests_failed as usize).into()),
                 ("deadline_cancellations", (*deadline_cancellations as usize).into()),
+                ("spec_recall_bp", (*spec_recall_bp as usize).into()),
+                ("spec_precision_bp", (*spec_precision_bp as usize).into()),
             ];
             // breakdown fields ride the trace knob: absent (not zeroed)
             // when tracing is off, keeping the off-path byte-identical
@@ -306,6 +318,18 @@ fn handle_conn(stream: TcpStream, coord: &Coordinator) -> Result<()> {
         }
         if line.trim() == "analyze" {
             let reply = match coord.analyze() {
+                Ok(report) => report,
+                Err(e) => Json::obj(vec![
+                    ("type", "error".into()),
+                    ("message", Json::str(e.to_string())),
+                ]),
+            };
+            writeln!(writer, "{reply}")?;
+            writer.flush()?;
+            continue;
+        }
+        if line.trim() == "experts" {
+            let reply = match coord.experts() {
                 Ok(report) => report,
                 Err(e) => Json::obj(vec![
                     ("type", "error".into()),
@@ -403,6 +427,8 @@ mod tests {
             transfer_retries: 4,
             requests_failed: 1,
             deadline_cancellations: 1,
+            spec_recall_bp: 7500,
+            spec_precision_bp: 6000,
             breakdown: None,
         }
     }
@@ -459,6 +485,9 @@ mod tests {
         assert_eq!(j.get("transfer_retries").unwrap().as_usize(), Some(4));
         assert_eq!(j.get("requests_failed").unwrap().as_usize(), Some(1));
         assert_eq!(j.get("deadline_cancellations").unwrap().as_usize(), Some(1));
+        // ...and the prefetch-quality gauges (paper Fig. 2)
+        assert_eq!(j.get("spec_recall_bp").unwrap().as_usize(), Some(7500));
+        assert_eq!(j.get("spec_precision_bp").unwrap().as_usize(), Some(6000));
     }
 
     #[test]
@@ -501,6 +530,7 @@ mod tests {
         m.record_tiers(1, 1, 1);
         m.set_gauge("trace_spans_dropped", 1);
         m.record_faults(1, 1);
+        m.record_spec(1, 1);
         let names = m.gauge_names();
         assert!(!names.is_empty());
         let j = event_to_json(&sample_done());

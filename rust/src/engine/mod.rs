@@ -239,6 +239,13 @@ pub struct MoeEngine {
     /// `ServingConfig::trace` opted the deployment in; tracing never
     /// changes timing or tokens, only what is observable.
     pub tracer: Tracer,
+    /// Expert-flow flight recorder (see [`crate::obs`]): per-(layer,
+    /// expert) counters + the replayable access stream behind the
+    /// counterfactual cache curves. Disabled (a no-op, and the cache
+    /// manager's log stays off) unless `ServingConfig::expert_obs`
+    /// opted the deployment in; recording never changes timing or
+    /// tokens, only what is observable.
+    pub obs: crate::obs::ExpertObs,
     /// Engine-lifetime tick counter for span attribution: one tick per
     /// `decode_step` / batched / mixed tick / prefill call.
     tick: u64,
@@ -375,12 +382,13 @@ impl MoeEngine {
                 serving.prefix_cache_tokens,
             )
         });
-        let cache = CacheManager::new(
+        let mut cache = CacheManager::new(
             cfg.n_layers,
             serving.policy.cache_k(),
             serving.staging_buffers,
             device,
         );
+        cache.set_obs_log(serving.expert_obs);
         let copy = CopyEngine::new(Arc::clone(&weights.experts), serving.staging_buffers, 2);
         let lits = StaticLits::new(&weights)?;
         // static tier seeding from gate statistics: layer l's router
@@ -436,6 +444,15 @@ impl MoeEngine {
             } else {
                 Tracer::disabled()
             },
+            obs: if serving.expert_obs {
+                crate::obs::ExpertObs::enabled(
+                    cfg.n_layers,
+                    cfg.n_experts,
+                    serving.expert_obs_event_capacity,
+                )
+            } else {
+                crate::obs::ExpertObs::disabled()
+            },
             tick: 0,
             span_sess: 0,
             tier_reload_pending: HashSet::new(),
@@ -482,6 +499,9 @@ impl MoeEngine {
     /// Sessions are unaffected — their KV caches live in [`Session`].
     pub fn drop_expert_cache(&mut self) {
         self.drain_in_flight();
+        // fold any pending flight-recorder entries before the manager
+        // (and its log) is replaced
+        self.obs_drain();
         // non-expert bytes = reserved + the KV pool carve; split the
         // carve back out so the rebuilt device keeps it pinned
         let non_expert = self.cache.device.used_bytes()
@@ -502,7 +522,58 @@ impl MoeEngine {
                 self.expert_slot_bytes,
             ),
         );
+        // the rebuilt manager starts with logging off — restore it, and
+        // mark the measured-counter restart in the recorded streams so
+        // the simulator's anchor survives the cold restart
+        self.cache.set_obs_log(self.obs.is_enabled());
+        self.obs.on_cache_reset(self.timeline.now());
         self.expert_lits.clear();
+    }
+
+    /// Fold the cache manager's pending flight-recorder log into the
+    /// expert observer (no-op with `expert_obs` off — the manager's log
+    /// is off too, so there is never anything to drain).
+    fn obs_drain(&mut self) {
+        if self.obs.is_enabled() {
+            let log = self.cache.take_obs_log();
+            self.obs.apply_log(&log, self.timeline.now());
+        }
+    }
+
+    /// Scheduler-tick hook: drain pending flight-recorder events and
+    /// record one counter-track sample (expert residency + cumulative
+    /// hit rate) at the current virtual time. No-op with `expert_obs`
+    /// off.
+    pub fn obs_tick(&mut self) {
+        if !self.obs.is_enabled() {
+            return;
+        }
+        self.obs_drain();
+        let resident = self.cache.device.resident_count();
+        let (h, m) = (self.cache.stats.hits, self.cache.stats.misses);
+        self.obs.sample(self.timeline.now(), resident, h, m);
+    }
+
+    /// The `experts` TCP command's payload: the per-(layer, expert)
+    /// flight recorder, per-layer prefetch quality and the
+    /// counterfactual cache curves — or the explicit `disabled`
+    /// degradation when `expert_obs` is off.
+    pub fn experts_report(&mut self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        if !self.obs.is_enabled() {
+            return Json::obj(vec![
+                ("type", "experts".into()),
+                ("enabled", false.into()),
+                ("error", "expert observability disabled".into()),
+            ]);
+        }
+        self.obs_drain();
+        self.obs.report(
+            &self.cache.stats,
+            self.cache.cache_k(),
+            self.timeline.now(),
+            (self.copy.staged_jobs, self.copy.demand_jobs, self.copy.spec_jobs),
+        )
     }
 
     fn drain_in_flight(&mut self) {
@@ -1847,6 +1918,10 @@ impl MoeEngine {
         for e in 0..self.weights.cfg.n_experts {
             let id = ExpertId::new(l, e);
             let (t_s, t_bytes) = self.expert_stage_cost(id);
+            if self.obs.is_enabled() {
+                let tier = self.weights.experts.tier_of(id);
+                self.obs.on_wire(id, tier, t_bytes);
+            }
             let t_s = self.fault_transfer_s(t_s, l);
             let span = self.timeline.transfer(t_s, self.timeline.now());
             self.tracer
@@ -1860,6 +1935,7 @@ impl MoeEngine {
             self.cache.insert_loaded(id, de)?;
             tstats.misses += 1;
         }
+        self.obs_drain();
         Ok(())
     }
 
@@ -2006,6 +2082,7 @@ impl MoeEngine {
                 }
             }
         }
+        self.obs_drain();
     }
 
     /// Make `id` resident, classifying hit / spec-hit / miss and advancing
@@ -2057,6 +2134,10 @@ impl MoeEngine {
             CacheEvent::Miss(_) => {
                 let reload = self.tier_reload_pending.remove(&id);
                 let (t_s, t_bytes) = self.expert_stage_cost(id);
+                if self.obs.is_enabled() {
+                    let tier = self.weights.experts.tier_of(id);
+                    self.obs.on_wire(id, tier, t_bytes);
+                }
                 let t_s = self.fault_transfer_s(t_s, id.layer as usize);
                 let span = self.timeline.transfer(t_s, self.timeline.now());
                 self.tracer.record(
@@ -2076,6 +2157,7 @@ impl MoeEngine {
                 self.cache.insert_loaded(id, de)?;
             }
         }
+        self.obs_drain();
         Ok(())
     }
 
@@ -2159,6 +2241,10 @@ impl MoeEngine {
                 }
             }
             let (t_s, t_bytes) = self.expert_stage_cost(id);
+            if self.obs.is_enabled() {
+                let tier = self.weights.experts.tier_of(id);
+                self.obs.on_wire(id, tier, t_bytes);
+            }
             // speculative transfers ride the same faulty link: the retry
             // run delays this (and every later) transfer but never blocks
             // the decode front — the claim site waits on `span.end`
@@ -2175,10 +2261,11 @@ impl MoeEngine {
             );
             tstats.transfer_s += t_s;
             tstats.bytes_transferred += t_bytes;
-            let ticket = self.copy.submit(id)?;
+            let ticket = self.copy.submit_speculative(id)?;
             self.in_flight.insert(id, InFlight { ticket, ready_at: span.end });
             self.spec_queue.push_back(id);
         }
+        self.obs_drain();
         Ok(())
     }
 

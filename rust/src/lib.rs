@@ -125,6 +125,7 @@ pub mod load;
 pub mod memory;
 pub mod model;
 pub mod npz;
+pub mod obs;
 pub mod prefix;
 pub mod quant;
 pub mod runtime;

@@ -66,6 +66,11 @@ pub struct CopyEngine {
     /// Completions drained but not yet claimed by the engine.
     ready: HashMap<TransferTicket, (ExpertId, DeviceExpert)>,
     pub staged_jobs: u64,
+    /// Jobs submitted on the blocking demand path (includes fault
+    /// re-stages and naive layer streaming). `demand + spec == staged`.
+    pub demand_jobs: u64,
+    /// Jobs submitted by speculative prefetch.
+    pub spec_jobs: u64,
 }
 
 impl CopyEngine {
@@ -112,6 +117,8 @@ impl CopyEngine {
             next_ticket: 0,
             ready: HashMap::new(),
             staged_jobs: 0,
+            demand_jobs: 0,
+            spec_jobs: 0,
         }
     }
 
@@ -120,6 +127,17 @@ impl CopyEngine {
     /// instead of panicking the serving thread — if the worker pool died,
     /// so the scheduler can fail the one affected request and keep going.
     pub fn submit(&mut self, id: ExpertId) -> Result<TransferTicket> {
+        self.submit_kind(id, false)
+    }
+
+    /// [`Self::submit`] for speculative prefetches — identical staging,
+    /// separate lifetime counter (the expert flight recorder splits link
+    /// work by cause).
+    pub fn submit_speculative(&mut self, id: ExpertId) -> Result<TransferTicket> {
+        self.submit_kind(id, true)
+    }
+
+    fn submit_kind(&mut self, id: ExpertId, spec: bool) -> Result<TransferTicket> {
         self.staging.acquire();
         let ticket = TransferTicket(self.next_ticket);
         if self.job_tx.send(Job::Stage { ticket, id }).is_err() {
@@ -131,6 +149,11 @@ impl CopyEngine {
         }
         self.next_ticket += 1;
         self.staged_jobs += 1;
+        if spec {
+            self.spec_jobs += 1;
+        } else {
+            self.demand_jobs += 1;
+        }
         Ok(ticket)
     }
 
@@ -231,6 +254,21 @@ mod tests {
             ce.wait(t).unwrap();
         }
         assert_eq!(ce.staged_jobs, 6);
+    }
+
+    #[test]
+    fn job_counters_split_by_cause() {
+        let mut ce = CopyEngine::new(pool(), 4, 2);
+        let a = ce.submit(ExpertId::new(0, 1)).unwrap();
+        let b = ce.submit_speculative(ExpertId::new(0, 2)).unwrap();
+        let c = ce.submit_speculative(ExpertId::new(1, 0)).unwrap();
+        for t in [a, b, c] {
+            ce.wait(t).unwrap();
+        }
+        assert_eq!(ce.staged_jobs, 3);
+        assert_eq!(ce.demand_jobs, 1);
+        assert_eq!(ce.spec_jobs, 2);
+        assert_eq!(ce.demand_jobs + ce.spec_jobs, ce.staged_jobs);
     }
 
     #[test]

@@ -203,6 +203,18 @@ impl Metrics {
         g.insert("transfer_retries".to_string(), transfer_retries);
     }
 
+    /// Record the prefetch-quality gauges in one shot (`spec_recall_bp`
+    /// / `spec_precision_bp`, basis points — the paper's Figure-2
+    /// quantities, from the cache manager's aggregate
+    /// `SpeculativeStats`) — the scheduler calls this every tick,
+    /// mirroring [`Self::record_faults`]. Both read 0 until speculation
+    /// has issued and resolved anything.
+    pub fn record_spec(&self, recall_bp: u64, precision_bp: u64) {
+        let mut g = self.gauges.lock().unwrap_or_else(|e| e.into_inner());
+        g.insert("spec_recall_bp".to_string(), recall_bp);
+        g.insert("spec_precision_bp".to_string(), precision_bp);
+    }
+
     /// Every gauge name currently recorded — the done-event parity test
     /// enumerates these to lock gauges and the server's `done` schema
     /// together (see `coordinator::server::GAUGE_DONE_FIELDS`).
@@ -492,6 +504,15 @@ mod tests {
         assert_eq!(m.gauge("faults_injected"), 9);
         assert_eq!(m.gauge("transfer_retries"), 6);
         assert!(m.render().contains("transfer_retries 6"));
+    }
+
+    #[test]
+    fn spec_gauges_record_together() {
+        let m = Metrics::new();
+        m.record_spec(7500, 6000);
+        assert_eq!(m.gauge("spec_recall_bp"), 7500);
+        assert_eq!(m.gauge("spec_precision_bp"), 6000);
+        assert!(m.render().contains("spec_recall_bp 7500"));
     }
 
     /// The failure counters must never gain gauge mirrors: render()

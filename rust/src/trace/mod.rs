@@ -279,6 +279,14 @@ impl Tracer {
     /// `ph:"X"` complete events with `ts`/`dur` in microseconds of
     /// virtual time; `args` carries the layer and tick.
     pub fn chrome_trace(&self) -> Json {
+        self.chrome_trace_with_counters(&[])
+    }
+
+    /// [`Self::chrome_trace`] plus caller-supplied `ph:"C"` counter
+    /// events (e.g. the expert flight recorder's residency / hit-rate
+    /// tracks) appended to the same `traceEvents` array, so gauges
+    /// render as stacked counter tracks under the span streams.
+    pub fn chrome_trace_with_counters(&self, counters: &[Json]) -> Json {
         const PID_GPU: usize = 1;
         const PID_LINK: usize = 2;
         let mut events: Vec<Json> = vec![
@@ -312,6 +320,7 @@ impl Tracer {
                 ("args", Json::obj(args)),
             ]));
         }
+        events.extend(counters.iter().cloned());
         Json::obj(vec![
             ("traceEvents", Json::Arr(events)),
             ("displayTimeUnit", "ms".into()),
@@ -395,6 +404,32 @@ mod tests {
             prefetch.get("args").unwrap().get("layer").unwrap().as_usize(),
             Some(4)
         );
+    }
+
+    #[test]
+    fn counter_events_append_after_spans() {
+        let mut t = Tracer::enabled(8);
+        t.record(SpanKind::ExpertCompute, span(0.0, 1.0), 1, Some(0), 0);
+        let counter = Json::obj(vec![
+            ("ph", "C".into()),
+            ("pid", 2usize.into()),
+            ("name", "expert_residency".into()),
+            ("ts", 0.0.into()),
+            ("args", Json::obj(vec![("resident", 3usize.into())])),
+        ]);
+        let out = t.chrome_trace_with_counters(&[counter]);
+        let events = out.get("traceEvents").unwrap().as_arr().unwrap();
+        // 2 metadata + 1 span + 1 counter
+        assert_eq!(events.len(), 4);
+        let last = events.last().unwrap();
+        assert_eq!(last.get("ph").and_then(Json::as_str), Some("C"));
+        assert_eq!(
+            last.get("args").unwrap().get("resident").unwrap().as_usize(),
+            Some(3)
+        );
+        // plain chrome_trace is unchanged: metadata + span only
+        let plain = t.chrome_trace();
+        assert_eq!(plain.get("traceEvents").unwrap().as_arr().unwrap().len(), 3);
     }
 
     #[test]

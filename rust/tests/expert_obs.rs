@@ -1,0 +1,312 @@
+//! Integration: expert-flow observability against the real engine.
+//! Requires `make artifacts` (skips cleanly otherwise).
+//!
+//! The flight recorder is observation-only, so the contracts are
+//! equivalences and exact replay identities:
+//! * `expert_obs` on produces bit-identical logits and an identical
+//!   virtual timeline to off, at width 1 and width 4 (batched), with
+//!   transient faults AND adaptive tiers enabled — the recorder rides
+//!   the hardest path without perturbing it;
+//! * the anchoring invariant: replaying the recorded per-layer expert
+//!   access stream through simulated LRU at the engine's ACTUAL
+//!   `cache_k` reproduces the measured per-layer hit/miss counts
+//!   exactly, on a real width-4 serving run with prefix cache and
+//!   tiers on;
+//! * the counterfactual curves are monotone in k and the clairvoyant
+//!   OPT bound dominates LRU at every size;
+//! * the coordinator's `experts` report degrades to an explicit
+//!   disabled object when the knob is off.
+
+use std::path::{Path, PathBuf};
+
+use moe_offload::config::{
+    HardwareProfile, OffloadPolicy, QuantScheme, ServingConfig, SimScale,
+};
+use moe_offload::coordinator::{collect_events, Coordinator, Event, Request};
+use moe_offload::engine::{MoeEngine, Session};
+use moe_offload::fault::FaultPlan;
+use moe_offload::harness;
+use moe_offload::quant::TierPolicy;
+use moe_offload::util::json::Json;
+use moe_offload::Result;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() && dir.join("weights.npz").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+/// The hard path: faults and adaptive tiers on, so the recorder sees
+/// retries, re-stages and exogenous tier drops — and must not perturb
+/// any of them.
+fn serving(sessions: usize, expert_obs: bool) -> ServingConfig {
+    ServingConfig {
+        policy: OffloadPolicy::Full { cache_k: 2, spec_n: 2 },
+        expert_quant: QuantScheme::Hqq { bits: 3 },
+        attn_quant: QuantScheme::Hqq { bits: 4 },
+        sim_scale: SimScale::Tiny,
+        max_concurrent_sessions: sessions,
+        expert_tiers: TierPolicy { adapt_interval: 8, ..TierPolicy::hot_cold() },
+        faults: FaultPlan::transient_smoke(11),
+        expert_obs,
+        ..Default::default()
+    }
+}
+
+fn make_engine(dir: &Path, sessions: usize, expert_obs: bool) -> Result<MoeEngine> {
+    harness::build_engine_with_serving(
+        dir,
+        &serving(sessions, expert_obs),
+        HardwareProfile::rtx3060(),
+    )
+}
+
+fn toks(s: &str) -> Vec<u32> {
+    s.bytes().map(|b| b as u32).collect()
+}
+
+fn row_bits(row: &[f32]) -> Vec<u32> {
+    row.iter().map(|x| x.to_bits()).collect()
+}
+
+fn drive_one(
+    engine: &mut MoeEngine,
+    prompt: &[u32],
+    stream: &[u32],
+) -> (Vec<Vec<u32>>, u64) {
+    let mut sess = engine.new_session().unwrap();
+    let logits = engine.prefill(&mut sess, prompt).unwrap();
+    let mut out = vec![row_bits(logits.row(prompt.len() - 1))];
+    for &t in stream {
+        out.push(row_bits(&engine.decode_step(&mut sess, t).unwrap()));
+    }
+    (out, engine.timeline.now().to_bits())
+}
+
+#[test]
+fn expert_obs_is_byte_identical_at_width_1() {
+    let Some(dir) = artifacts_dir() else { return };
+    let prompt = toks("what is a mixture of experts model");
+    let stream = toks("the recorder must not change it");
+
+    let mut off = make_engine(&dir, 1, false).unwrap();
+    let (off_bits, off_now) = drive_one(&mut off, &prompt, &stream);
+    assert!(!off.obs.is_enabled(), "obs off must stay disabled");
+    assert_eq!(off.obs.stream_dropped(), 0);
+
+    let mut on = make_engine(&dir, 1, true).unwrap();
+    let (on_bits, on_now) = drive_one(&mut on, &prompt, &stream);
+    assert!(on.obs.is_enabled());
+    on.obs_tick();
+    assert!(
+        on.obs.streams().iter().any(|s| !s.is_empty()),
+        "an enabled recorder must capture access streams"
+    );
+
+    assert_eq!(off_bits, on_bits, "expert_obs changed logits bits");
+    assert_eq!(off_now, on_now, "expert_obs moved the virtual timeline");
+}
+
+#[test]
+fn expert_obs_is_byte_identical_at_width_4_batched() {
+    let Some(dir) = artifacts_dir() else { return };
+    let streams: Vec<Vec<u32>> = [
+        "four decode streams in layer",
+        "lockstep through the engine s",
+        "batched tick so the recorder ",
+        "sees shared and pinned expert",
+    ]
+    .iter()
+    .map(|s| toks(s))
+    .collect();
+    let ticks = streams[0].len();
+
+    let run = |expert_obs: bool| -> (Vec<Vec<Vec<u32>>>, u64) {
+        let mut engine = make_engine(&dir, 4, expert_obs).unwrap();
+        let mut sessions: Vec<Session> =
+            (0..4).map(|_| engine.new_session().unwrap()).collect();
+        let mut out = vec![Vec::new(); 4];
+        for t in 0..ticks {
+            let tick_toks: Vec<u32> = (0..4).map(|i| streams[i][t]).collect();
+            let mut refs: Vec<&mut Session> = sessions.iter_mut().collect();
+            for (i, slot) in engine
+                .decode_batch(&mut refs, &tick_toks)
+                .unwrap()
+                .into_iter()
+                .enumerate()
+            {
+                out[i].push(row_bits(&slot.unwrap()));
+            }
+            engine.obs_tick(); // a no-op branch with obs off
+        }
+        (out, engine.timeline.now().to_bits())
+    };
+
+    let (off_bits, off_now) = run(false);
+    let (on_bits, on_now) = run(true);
+    assert_eq!(off_bits, on_bits, "expert_obs changed batched logits bits");
+    assert_eq!(off_now, on_now, "expert_obs moved the batched virtual timeline");
+}
+
+fn curve_hits(report: &Json, name: &str) -> Vec<(usize, u64, u64)> {
+    report
+        .get("curves")
+        .and_then(|c| c.get(name))
+        .and_then(Json::as_arr)
+        .unwrap_or_else(|| panic!("report missing curves.{name}"))
+        .iter()
+        .map(|p| {
+            (
+                p.get("k").and_then(Json::as_usize).unwrap(),
+                p.get("hits").and_then(Json::as_f64).unwrap() as u64,
+                p.get("misses").and_then(Json::as_f64).unwrap() as u64,
+            )
+        })
+        .collect()
+}
+
+/// The tentpole invariant on a REAL serving run: width 4, prefix cache,
+/// adaptive tiers and transient faults all on — simulated LRU at the
+/// engine's actual cache_k must reproduce the measured counters exactly,
+/// and the counterfactual curves must be monotone with OPT dominating.
+#[test]
+fn cache_curves_anchor_to_measured_counters_on_real_serving() {
+    let Some(dir) = artifacts_dir() else { return };
+    let dir2 = dir.clone();
+    let coord = Coordinator::new(
+        move || -> Result<MoeEngine> {
+            let mut cfg = serving(4, true);
+            cfg.prefix_cache = true;
+            harness::build_engine_with_serving(&dir2, &cfg, HardwareProfile::rtx3060())
+        },
+        13,
+    );
+
+    let prompts = [
+        "what is a mixture of experts model",
+        "what is a mixture of experts model and why offload",
+        "explain how an LRU cache works",
+        "explain how speculative loading works",
+        "what is a mixture of experts model", // prefix-cache warm repeat
+        "explain how an LRU cache works",
+    ];
+    let streams: Vec<_> = prompts
+        .iter()
+        .map(|p| {
+            let mut req = Request::new(*p);
+            req.max_tokens = 12;
+            req.temperature = 0.9;
+            coord.submit(req)
+        })
+        .collect();
+    let mut done_spec = None;
+    for stream in streams {
+        for ev in collect_events(stream) {
+            match ev {
+                Event::Done { spec_recall_bp, spec_precision_bp, .. } => {
+                    done_spec = Some((spec_recall_bp, spec_precision_bp));
+                }
+                Event::Error { message, .. } | Event::Failed { message, .. } => {
+                    panic!("request failed under transient-only faults: {message}")
+                }
+                Event::Token { .. } => {}
+            }
+        }
+    }
+
+    let report = coord.experts().unwrap();
+    assert_eq!(report.get("type").and_then(Json::as_str), Some("experts"));
+    assert_eq!(report.get("enabled").and_then(Json::as_bool), Some(true));
+    assert!(
+        !report.get("experts").and_then(Json::as_arr).unwrap().is_empty(),
+        "flight recorder saw no expert activity"
+    );
+    assert_eq!(
+        report.get("stream_dropped").and_then(Json::as_f64),
+        Some(0.0),
+        "event stream overflowed — anchor would be vacuous"
+    );
+
+    // --- the anchor: simulated == measured, exactly
+    let measured = report.get("curves").and_then(|c| c.get("measured")).unwrap();
+    assert_eq!(
+        measured.get("anchored").and_then(Json::as_bool),
+        Some(true),
+        "simulated LRU at cache_k diverged from measured counters: {measured}"
+    );
+    let k = measured.get("k").and_then(Json::as_usize).unwrap();
+    assert_eq!(k, 2, "engine ran cache_k=2");
+    assert_eq!(
+        measured.get("sim_hits").and_then(Json::as_f64),
+        measured.get("hits").and_then(Json::as_f64),
+    );
+    assert_eq!(
+        measured.get("sim_misses").and_then(Json::as_f64),
+        measured.get("misses").and_then(Json::as_f64),
+    );
+
+    // --- curve properties on the real stream
+    let lru = curve_hits(&report, "lru");
+    let opt = curve_hits(&report, "opt");
+    assert_eq!(lru.len(), opt.len());
+    assert!(!lru.is_empty());
+    for w in lru.windows(2) {
+        assert!(w[1].1 >= w[0].1, "LRU curve not monotone at k={}", w[1].0);
+    }
+    for w in opt.windows(2) {
+        assert!(w[1].1 >= w[0].1, "OPT curve not monotone at k={}", w[1].0);
+    }
+    for (l, o) in lru.iter().zip(&opt) {
+        assert!(o.1 >= l.1, "OPT below LRU at k={}", l.0);
+        assert_eq!(l.1 + l.2, o.1 + o.2, "curves disagree on total uses at k={}", l.0);
+    }
+    // the measured point sits ON the LRU curve
+    let point = lru.iter().find(|(pk, _, _)| *pk == k).unwrap();
+    assert_eq!(
+        Some(point.1 as f64),
+        measured.get("sim_hits").and_then(Json::as_f64)
+    );
+
+    // --- per-layer prefetch-quality gauges surfaced everywhere: report,
+    // done event, and the metrics registry agree on the aggregate
+    let per_layer = report.get("per_layer").and_then(Json::as_arr).unwrap();
+    assert!(!per_layer.is_empty());
+    for row in per_layer {
+        assert!(row.get("spec_recall_bp").is_some());
+        assert!(row.get("spec_precision_bp").is_some());
+    }
+    let (recall_bp, precision_bp) = done_spec.expect("a done event");
+    assert_eq!(coord.metrics.gauge("spec_recall_bp"), recall_bp);
+    assert_eq!(coord.metrics.gauge("spec_precision_bp"), precision_bp);
+    assert!(recall_bp <= 10_000 && precision_bp <= 10_000);
+
+    // the report round-trips through the line protocol
+    let parsed = Json::parse(&report.to_string()).unwrap();
+    assert_eq!(parsed.get("enabled").and_then(Json::as_bool), Some(true));
+}
+
+#[test]
+fn experts_report_degrades_explicitly_when_disabled() {
+    let Some(dir) = artifacts_dir() else { return };
+    let dir2 = dir.clone();
+    let coord = Coordinator::new(move || make_engine(&dir2, 1, false), 17);
+    let mut req = Request::new("one tiny request");
+    req.max_tokens = 4;
+    collect_events(coord.submit(req));
+
+    let report = coord.experts().unwrap();
+    assert_eq!(report.get("type").and_then(Json::as_str), Some("experts"));
+    assert_eq!(report.get("enabled").and_then(Json::as_bool), Some(false));
+    assert!(
+        report
+            .get("error")
+            .and_then(Json::as_str)
+            .unwrap()
+            .contains("disabled"),
+        "disabled report must say why"
+    );
+}
